@@ -1,0 +1,63 @@
+//! Figure 4 / Appendix A.6.3 pipeline: train a small CAST model on the
+//! Image task, then render which pixels each surrogate-token cluster
+//! claims, per layer — the foreground/background separation analysis.
+//!
+//!     cargo run --release --example cluster_visualization -- [--steps 150]
+//!
+//! Outputs to viz_out/: input.pgm, layer{i}_clusters.ppm (one color per
+//! cluster), layer{i}_cluster{c}_scores.pgm (A_g heatmaps).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use cast::analysis;
+use cast::data;
+use cast::runtime::{Engine, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::cli::Args;
+use cast::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    // SA Top-K + 8 clusters, matching the paper's Figure-4 setup.
+    let dir = PathBuf::from(args.str("dir", "artifacts/image_cast_sa_n1024_b8_c8_k128"));
+    let manifest =
+        Manifest::load(&dir).context("image artifact missing — run `make artifacts`")?;
+    let engine = Engine::cpu()?;
+
+    let steps = args.usize("steps", 150);
+    println!("training {} for {steps} steps before visualizing ...", manifest.key);
+    let cfg = TrainConfig {
+        steps,
+        schedule: Schedule::Warmup { lr: args.f32("lr", 2e-3), warmup: steps / 10 },
+        eval_batches: 4,
+        log_every: 25,
+        ..Default::default()
+    };
+    let meta_batch = manifest.meta.batch;
+    let meta_seq = manifest.meta.seq_len;
+    let task = manifest.meta.task.clone();
+    let mut trainer = Trainer::new(engine.clone(), manifest, cfg, 0)?;
+    let report = trainer.run()?;
+    println!("trained: final loss {:.4}", report.final_train_loss);
+
+    let gen = data::task(&task)?;
+    let mut rng = Rng::new(args.u64("seed", 1234));
+    let batch = data::make_batch(gen.as_ref(), &mut rng, meta_batch, meta_seq);
+    let out = PathBuf::from(args.str("out", "viz_out"));
+    let files = analysis::visualize_image_clusters(
+        &engine,
+        &trainer.manifest,
+        &trainer.state,
+        &batch.tokens,
+        args.usize("index", 0),
+        &out,
+    )?;
+    println!("wrote {} images to {}/ :", files.len(), out.display());
+    for f in files.iter().take(6) {
+        println!("  {}", f.display());
+    }
+    println!("  ... (open .ppm/.pgm with any netpbm viewer)");
+    Ok(())
+}

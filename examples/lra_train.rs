@@ -1,0 +1,79 @@
+//! End-to-end driver: train CAST on real LRA workloads and log the loss
+//! curve — the full-system validation run recorded in EXPERIMENTS.md.
+//!
+//! Trains the scaled ListOps and Image presets (built by `make artifacts`)
+//! for a few hundred steps each, evaluating on a held-out stream, and
+//! writes loss curves to `runs/<key>.json` + a markdown summary.
+//!
+//!     cargo run --release --example lra_train -- [--steps 300] [--tasks listops,image]
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use cast::runtime::{Engine, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::cli::Args;
+
+const RUNS: &[(&str, &str)] = &[
+    ("listops", "artifacts/listops_cast_topk_n256_b8_c8_k32"),
+    ("image", "artifacts/image_cast_topk_n1024_b8_c8_k128"),
+    ("image_vanilla", "artifacts/image_vanilla_n1024_b8"),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let steps = args.usize("steps", 300);
+    let want: Vec<String> = args
+        .str("tasks", "listops,image,image_vanilla")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    std::fs::create_dir_all("runs")?;
+    let engine = Engine::cpu()?;
+
+    let mut summary = String::from("| run | steps | first loss | final loss | train acc | eval acc | steps/s |\n|---|---|---|---|---|---|---|\n");
+    for (name, dir) in RUNS {
+        if !want.iter().any(|w| w == name) {
+            continue;
+        }
+        let manifest = Manifest::load(&PathBuf::from(dir))
+            .with_context(|| format!("{dir} missing — run `make artifacts`"))?;
+        println!("=== training {name}: {} for {steps} steps ===", manifest.key);
+        let cfg = TrainConfig {
+            steps,
+            schedule: Schedule::WarmupCosine {
+                lr: args.f32("lr", 2e-3),
+                warmup: steps / 10,
+                total: steps,
+                floor: 1e-4,
+            },
+            seed: args.u64("seed", 0),
+            eval_every: (steps / 4).max(1),
+            eval_batches: 8,
+            data_workers: 3,
+            queue_depth: 6,
+            log_every: 20,
+            checkpoint: Some(PathBuf::from(format!("runs/{name}.ckpt"))),
+        };
+        let key = manifest.key.clone();
+        let mut trainer = Trainer::new(engine.clone(), manifest, cfg, 0)?;
+        let report = trainer.run()?;
+        report.history.save_json(&PathBuf::from(format!("runs/{name}.json")))?;
+        report.history.save_csv(&PathBuf::from(format!("runs/{name}.csv")))?;
+        let first = report.history.steps.first().map(|r| r.loss).unwrap_or(f32::NAN);
+        summary.push_str(&format!(
+            "| {key} | {steps} | {first:.4} | {:.4} | {:.3} | {} | {:.3} |\n",
+            report.final_train_loss,
+            report.final_train_acc,
+            report
+                .best_eval_acc
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            report.steps_per_sec,
+        ));
+    }
+    std::fs::write("runs/summary.md", &summary)?;
+    println!("\n{summary}\nwritten to runs/summary.md");
+    Ok(())
+}

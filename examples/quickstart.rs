@@ -1,0 +1,64 @@
+//! Quickstart: load a prebuilt CAST artifact, run inference, run a few
+//! training steps — the 60-second tour of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use cast::data;
+use cast::model::ModelState;
+use cast::runtime::{Engine, HostTensor, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Artifacts are produced once by `make artifacts` (python AOT);
+    //    at run time everything is rust + PJRT.
+    let dir = PathBuf::from("artifacts/text_cast_topk_n64_b2_c4_k16");
+    let manifest = Manifest::load(&dir)
+        .context("tiny artifact missing — run `make artifacts` first")?;
+    println!(
+        "loaded {}: task={} variant={} seq={} Nc={} kappa={}",
+        manifest.key,
+        manifest.meta.task,
+        manifest.meta.variant,
+        manifest.meta.seq_len,
+        manifest.meta.n_c,
+        manifest.meta.kappa
+    );
+
+    // 2. Initialize parameters by executing the `init` artifact.
+    let engine = Engine::cpu()?;
+    let state = ModelState::init(&engine, &manifest, 42)?;
+    println!("initialized {} tensors ({} parameters)", state.n_params(), state.total_elems());
+
+    // 3. Inference: synthesize a batch and run `predict`.
+    let gen = data::task(&manifest.meta.task)?;
+    let mut rng = Rng::new(0);
+    let batch = data::make_batch(gen.as_ref(), &mut rng, manifest.meta.batch, manifest.meta.seq_len);
+    let predict = engine.load_hlo(&manifest.hlo_path("predict")?)?;
+    let mut inputs: Vec<HostTensor> = state.params.clone();
+    inputs.push(batch.tokens.clone());
+    let logits = predict.run(&inputs)?;
+    println!("logits: {:?} -> {:?}", logits[0].shape, logits[0].as_f32()?);
+
+    // 4. Training: a handful of steps through the `train_step` artifact.
+    let cfg = TrainConfig {
+        steps: 10,
+        schedule: Schedule::Warmup { lr: 1e-3, warmup: 3 },
+        log_every: 2,
+        eval_batches: 2,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(engine, manifest, cfg, 42)?;
+    let report = trainer.run()?;
+    println!(
+        "10 steps done: loss {:.4} -> {:.4}, {:.2} steps/s",
+        report.history.steps.first().map(|r| r.loss).unwrap_or(f32::NAN),
+        report.final_train_loss,
+        report.steps_per_sec
+    );
+    Ok(())
+}

@@ -1,0 +1,292 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest.json.
+
+This is the ONLY place python executes in the system; everything it emits
+is loaded by the rust coordinator via ``HloModuleProto::from_text_file``.
+Per config key (``ModelConfig.key()``) the artifact directory contains:
+
+  init.hlo.txt        (seed u32[])                          -> (param_0..P)
+  train_step.hlo.txt  (P params, P m, P v, step, lr, tokens, labels)
+                                                            -> (P params', P m', P v', step', loss, acc)
+  predict.hlo.txt     (P params, tokens)                    -> (logits,)
+  predict_ag.hlo.txt  (P params, tokens)                    -> (A_g[L,B,N,Nc],)   [cast only]
+  manifest.json       flattened-IO description (names/shapes/dtypes) + config
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Usage (from python/):
+  python -m compile.aot --task text --variant cast_topk --seq 1024 --batch 4
+  python -m compile.aot --suite default          # everything the Makefile needs
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .configs import ModelConfig, preset, tiny
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32", jnp.uint32.dtype: "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _token_spec(cfg: ModelConfig):
+    shape = (cfg.batch, 2, cfg.seq_len) if cfg.dual else (cfg.batch, cfg.seq_len)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_fns(cfg: ModelConfig):
+    """The flat-list-interface functions that get lowered."""
+    key0 = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg), key0)
+    treedef = jax.tree_util.tree_structure(shapes)
+    flat_shapes = jax.tree_util.tree_leaves(shapes)
+    names = model.param_names(shapes)
+
+    def unflatten(flat):
+        return jax.tree_util.tree_unflatten(treedef, list(flat))
+
+    n_p = len(flat_shapes)
+
+    def init_fn(seed):
+        params = model.init(jax.random.PRNGKey(seed), cfg)
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    def train_fn(*args):
+        p = unflatten(args[:n_p])
+        m = unflatten(args[n_p : 2 * n_p])
+        v = unflatten(args[2 * n_p : 3 * n_p])
+        step, lr, tokens, labels = args[3 * n_p :]
+        p2, m2, v2, step2, loss, acc = train.train_step(
+            p, m, v, step, lr, tokens, labels, cfg, names=names
+        )
+        return (
+            tuple(jax.tree_util.tree_leaves(p2))
+            + tuple(jax.tree_util.tree_leaves(m2))
+            + tuple(jax.tree_util.tree_leaves(v2))
+            + (step2, loss, acc)
+        )
+
+    def predict_fn(*args):
+        p = unflatten(args[:n_p])
+        logits = model.forward(p, args[n_p], cfg)
+        # Variants that do not touch every parameter at inference (e.g. the
+        # LSH baseline ties Q/K and never reads W_k) would otherwise get
+        # their unused args pruned by the MLIR->HLO conversion; tie all
+        # params in so every artifact shares the flat input contract.
+        tie = sum(jnp.sum(a) * 0.0 for a in args[:n_p])
+        return (logits + tie,)
+
+    def predict_ag_fn(*args):
+        p = unflatten(args[:n_p])
+        ags = model.forward_ag(p, args[n_p], cfg)
+        # A_g does not depend on the classifier head; tie every parameter
+        # into the output so the MLIR->HLO conversion keeps the full
+        # argument list and rust can feed the same flat param vector to
+        # every artifact.
+        tie = sum(jnp.sum(a) * 0.0 for a in args[:n_p])
+        return (ags + tie,)
+
+    return init_fn, train_fn, predict_fn, predict_ag_fn, flat_shapes, names
+
+
+def manifest(cfg: ModelConfig, flat_shapes, names, files) -> dict:
+    tok = _token_spec(cfg)
+    return {
+        "config": dataclasses.asdict(cfg),
+        "key": cfg.key(),
+        "n_params": len(flat_shapes),
+        "params": [
+            {
+                "name": n,
+                "shape": list(s.shape),
+                "dtype": DTYPE_NAMES.get(s.dtype, str(s.dtype)),
+            }
+            for n, s in zip(names, flat_shapes)
+        ],
+        "tokens": {"shape": list(tok.shape), "dtype": "s32"},
+        "labels": {"shape": [cfg.batch], "dtype": "s32"},
+        "n_classes": cfg.n_classes,
+        "files": files,
+    }
+
+
+def build(cfg: ModelConfig, out_root: str, what=("init", "train_step", "predict"), force=False) -> str:
+    """Lower the requested artifact set for ``cfg``.  Returns the out dir.
+
+    Skips work when manifest.json already exists with the same config and
+    all requested files are present (makes ``make artifacts`` a no-op).
+    """
+    out_dir = os.path.join(out_root, cfg.key())
+    man_path = os.path.join(out_dir, "manifest.json")
+    wanted = list(what)
+    if cfg.is_cast and "predict_ag" not in wanted and "predict" in wanted and not cfg.dual:
+        wanted.append("predict_ag")
+    if not force and os.path.exists(man_path):
+        try:
+            old = json.load(open(man_path))
+            have = all(
+                os.path.exists(os.path.join(out_dir, f"{w}.hlo.txt")) for w in wanted
+            )
+            if old.get("config") == dataclasses.asdict(cfg) and have:
+                print(f"[aot] up-to-date: {out_dir}")
+                return out_dir
+        except Exception:
+            pass
+
+    os.makedirs(out_dir, exist_ok=True)
+    init_fn, train_fn, predict_fn, predict_ag_fn, flat_shapes, names = build_fns(cfg)
+    n_p = len(flat_shapes)
+    tok = _token_spec(cfg)
+    lab = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files = {}
+
+    def emit(name, fn, example_args):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        print(f"[aot] lowering {cfg.key()}/{name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        files[name] = f"{name}.hlo.txt"
+        print(f"[aot]   wrote {len(text)} chars")
+
+    if "init" in wanted:
+        emit("init", init_fn, [jax.ShapeDtypeStruct((), jnp.uint32)])
+    if "train_step" in wanted:
+        emit(
+            "train_step",
+            train_fn,
+            list(flat_shapes) * 3 + [scalar, scalar, tok, lab],
+        )
+    if "predict" in wanted:
+        emit("predict", predict_fn, list(flat_shapes) + [tok])
+    if "predict_ag" in wanted and cfg.is_cast and not cfg.dual:
+        emit("predict_ag", predict_ag_fn, list(flat_shapes) + [tok])
+
+    with open(man_path, "w") as f:
+        json.dump(manifest(cfg, flat_shapes, names, files), f, indent=1)
+    print(f"[aot] manifest -> {man_path}")
+    return out_dir
+
+
+# ---------------------------------------------------------------------------
+# suites: the artifact sets the Makefile / benches expect
+# ---------------------------------------------------------------------------
+
+
+def suite_default(out_root: str, force=False):
+    """Small, fast-to-build set: quickstart + end-to-end example configs."""
+    cfgs = [
+        # end-to-end training examples (scaled presets, CPU-sized)
+        preset("listops", "cast_topk", seq_len=256, batch=8, scale=0.5, n_c=8),
+        preset("image", "cast_topk", seq_len=1024, batch=8, scale=0.5, n_c=8),
+        preset("image", "cast_sa", seq_len=1024, batch=8, scale=0.5, n_c=8),
+        preset("image", "vanilla", seq_len=1024, batch=8, scale=0.5),
+        # tiny smoke config used by rust integration tests
+        tiny("cast_topk"),
+        tiny("cast_sa"),
+        tiny("vanilla"),
+        tiny("local"),
+        tiny("lsh"),
+        tiny("cast_sa", causal=True),  # decoder extension (§5.5)
+    ]
+    for c in cfgs:
+        build(c, out_root, force=force)
+
+
+def suite_efficiency(out_root: str, force=False):
+    """Table 1 / Table 5: Text task at 1K..4K, kappa=200, CAST vs vanilla."""
+    for seq in (1024, 2048, 3072, 4096):
+        for variant in ("cast_topk", "cast_sa", "vanilla"):
+            kw = dict(n_c=max(2, seq // 200), kappa=200) if variant != "vanilla" else {}
+            cfg = preset("text", variant, seq_len=seq, batch=2, scale=0.5, **kw)
+            build(cfg, out_root, what=("init", "train_step", "predict"), force=force)
+
+
+def suite_ablation(out_root: str, force=False):
+    """Figure 3: cluster-size sweep on Text + Image, both mechanisms."""
+    for task, seq in (("text", 2048), ("image", 1024)):
+        for kappa in (32, 64, 128, 256, 512):
+            n_c = max(2, seq // kappa)
+            for variant in ("cast_topk", "cast_sa"):
+                cfg = preset(
+                    task, variant, seq_len=seq, batch=2, scale=0.5, n_c=n_c, kappa=kappa
+                )
+                build(cfg, out_root, what=("init", "train_step"), force=force)
+
+
+def suite_lra(out_root: str, force=False):
+    """Table 2: one CAST + one vanilla config per LRA task (scaled)."""
+    seqs = {"listops": 512, "text": 1024, "retrieval": 512, "image": 1024, "pathfinder": 1024}
+    for task, seq in seqs.items():
+        for variant in ("cast_topk", "cast_sa", "vanilla"):
+            cfg = preset(task, variant, seq_len=seq, batch=8, scale=0.5)
+            build(cfg, out_root, what=("init", "train_step", "predict"), force=force)
+
+
+SUITES = {
+    "default": suite_default,
+    "efficiency": suite_efficiency,
+    "ablation": suite_ablation,
+    "lra": suite_lra,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--suite", choices=sorted(SUITES), default=None)
+    ap.add_argument("--task", default="text")
+    ap.add_argument("--variant", default="cast_topk")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--nc", type=int, default=None)
+    ap.add_argument("--kappa", type=int, default=None)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.suite:
+        SUITES[args.suite](args.out_root, force=args.force)
+        return
+
+    if args.tiny:
+        cfg = tiny(args.variant, use_pallas=not args.no_pallas)
+    else:
+        cfg = preset(
+            args.task,
+            args.variant,
+            seq_len=args.seq,
+            batch=args.batch,
+            scale=args.scale,
+            n_c=args.nc,
+            kappa=args.kappa,
+            use_pallas=not args.no_pallas,
+        )
+    build(cfg, args.out_root, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

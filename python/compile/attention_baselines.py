@@ -1,0 +1,114 @@
+"""Baseline attention layers the paper compares against.
+
+* ``vanilla``: the original O(N^2) multi-head self-attention
+  (Vaswani et al., 2017) — the denominator of every relative number in
+  Table 1 / Table 5.
+* ``local``: LRA's Local Attention (Luong et al., 2015 windowing): the
+  sequence is chunked into non-overlapping windows of ``cfg.window`` and
+  full attention runs within each window.  No cross-window flow — the
+  failure mode CAST's cluster summaries exist to fix.
+* ``lsh``: Reformer-style LSH attention (Kitaev et al., 2020), the paper's
+  main *clustering* comparator (§2, Appendix A.6.4): shared query/key
+  representation, random-rotation hashing into Nc buckets, tokens sorted
+  by bucket and chunked into fixed-size blocks, attention within blocks.
+  Static random clustering directions — exactly the thing CAST's
+  *learnable* surrogate tokens replace — and no cluster summaries, so no
+  cross-bucket information flow.
+
+All variants share the CAST layer's projection structure so parameter
+counts are comparable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+from .kernels import ref as kernel_ref
+
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d
+    return {
+        "wq": layers.dense_init(ks[0], d, d),
+        "wk": layers.dense_init(ks[1], d, d),
+        "wv": layers.dense_init(ks[2], d, d),
+        "wo": layers.dense_init(ks[3], d, d),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    b, n, _ = x.shape
+    h, d_h = cfg.h, cfg.d_h
+    q = layers.dense(p["wq"], x).reshape(b, n, h, d_h)
+    k = layers.dense(p["wk"], x).reshape(b, n, h, d_h)
+    v = layers.dense(p["wv"], x).reshape(b, n, h, d_h)
+    return q, k, v
+
+
+def apply_vanilla(p, x, cfg: ModelConfig):
+    b, n, d = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    out = kernel_ref.full_attention_ref(q, k, v).reshape(b, n, d)
+    return layers.dense(p["wo"], out)
+
+
+def apply_local(p, x, cfg: ModelConfig):
+    b, n, d = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    out = kernel_ref.local_attention_ref(q, k, v, cfg.window).reshape(b, n, d)
+    return layers.dense(p["wo"], out)
+
+
+def lsh_buckets(qk: jax.Array, n_buckets: int, seed: int = 0) -> jax.Array:
+    """Reformer hashing: argmax over [xR ; -xR] rotations.
+
+    qk: (B, N, d) shared query-key representation -> (B, N) bucket ids in
+    [0, n_buckets).  The rotation matrix is a fixed pseudorandom constant
+    (Reformer re-draws per batch; a fixed draw keeps the artifact
+    deterministic and changes nothing about the comparison).
+    """
+    d = qk.shape[-1]
+    rot = jax.random.normal(jax.random.PRNGKey(seed), (d, max(1, n_buckets // 2)))
+    h = qk @ rot  # (B, N, n_buckets//2)
+    h = jnp.concatenate([h, -h], axis=-1)  # (B, N, n_buckets)
+    return jnp.argmax(h, axis=-1).astype(jnp.int32)
+
+
+def apply_lsh(p, x, cfg: ModelConfig):
+    """LSH attention: hash, sort by bucket, chunk, attend within chunks.
+
+    Shares W_q as the query-key projection (Reformer ties Q and K); V and
+    the output projection are as in the other baselines.  Chunk size is
+    ``cfg.kappa`` so efficiency is directly comparable to CAST at equal
+    cluster size.
+    """
+    from . import clustering
+
+    b, n, d = x.shape
+    h, d_h = cfg.h, cfg.d_h
+    qk = layers.dense(p["wq"], x)  # shared query-key representation
+    v = layers.dense(p["wv"], x)
+    buckets = lsh_buckets(jax.lax.stop_gradient(qk), cfg.n_c)  # (B, N)
+
+    # sort tokens by bucket (stable), chunk into kappa-sized blocks
+    order = clustering.argsort_desc(-buckets.astype(jnp.float32))  # ascending
+    qk_s = jnp.take_along_axis(qk, order[..., None], axis=1)
+    v_s = jnp.take_along_axis(v, order[..., None], axis=1)
+    kappa = min(cfg.kappa, n)
+    pad = (-n) % kappa
+    if pad:
+        qk_s = jnp.pad(qk_s, ((0, 0), (0, pad), (0, 0)))
+        v_s = jnp.pad(v_s, ((0, 0), (0, pad), (0, 0)))
+    m = qk_s.shape[1]
+    qh = qk_s.reshape(b, m, h, d_h)
+    vh = v_s.reshape(b, m, h, d_h)
+    out = kernel_ref.local_attention_ref(qh, qh, vh, kappa).reshape(b, m, d)
+    out = out[:, :n]
+    # un-sort back to sequence order
+    inv = clustering.argsort_desc(-order.astype(jnp.float32))
+    out = jnp.take_along_axis(out, inv[..., None], axis=1)
+    return layers.dense(p["wo"], out)

@@ -1,0 +1,151 @@
+"""L2: the full multi-head CAST attention layer (paper §3.2–3.3).
+
+Pipeline per layer (B = batch, N = tokens, h = heads, Nc = clusters,
+kappa = cluster size, d_h = d/h):
+
+  1. Q,K,V projections (eq. 1)                                (B,N,h,d_h)
+  2. Surrogate similarities A_q, A_k (eq. 6)                  (B,N,h,Nc)
+  3. Gate phi = X W_phi + b; affinity
+       A_g = sigm(phi) * f2(sum_h A_q) + (1-sigm(phi)) * f2(sum_h A_k)
+  4. Clustering G over A_g (Top-K / SA Top-K)  -> idx (B,Nc,kappa)
+  5. Fused kernel (L1): R_intra (eq. 3) + R_inter (eq. 4) per cluster/head
+  6. Combination (eq. 5):
+       A_sum  = f3(A_q_raw ⊙ softplus1(phi) / tau_q)          (B,N,Nc)
+       R      = G^{-1}(A_g, A_intra ⊙ R_intra) + (A_sum⊙(1-M)) R_inter
+  7. Output projection W_o.
+
+The clustering *indices* are shared across heads (eq. 6 sums similarities
+over heads before f2), so one gather serves all h heads — this is what the
+kernel's folded (B*Nc*h) grid exploits.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import clustering, layers
+from .configs import ModelConfig
+from .kernels import cast_kernel
+from .kernels import ref as kernel_ref
+
+
+def init(key, cfg: ModelConfig):
+    """Parameters of one CAST layer."""
+    ks = jax.random.split(key, 6)
+    d, h, d_h, n_c = cfg.d, cfg.h, cfg.d_h, cfg.n_c
+    return {
+        "wq": layers.dense_init(ks[0], d, d),
+        "wk": layers.dense_init(ks[1], d, d),
+        "wv": layers.dense_init(ks[2], d, d),
+        "wo": layers.dense_init(ks[3], d, d),
+        # surrogate tokens S (Nc, h, d_h): the learnable cluster directions
+        "s": jax.random.normal(ks[4], (n_c, h, d_h), jnp.float32) / math.sqrt(d_h),
+        "phi": layers.dense_init(ks[5], d, 1),
+    }
+
+
+def affinities(p, x, cfg: ModelConfig):
+    """Steps 1–3: projections, surrogate similarities, gate, affinity A_g.
+
+    Returns (q, k, v, a_q, a_k, a_q_raw, phi, a_g).
+    """
+    b, n, _ = x.shape
+    h, d_h = cfg.h, cfg.d_h
+    q = layers.dense(p["wq"], x).reshape(b, n, h, d_h)
+    k = layers.dense(p["wk"], x).reshape(b, n, h, d_h)
+    v = layers.dense(p["wv"], x).reshape(b, n, h, d_h)
+
+    a_q = jnp.einsum("bnhd,chd->bnhc", q, p["s"])  # (B,N,h,Nc)
+    a_k = jnp.einsum("bnhd,chd->bnhc", k, p["s"])
+    phi = layers.dense(p["phi"], x)  # (B,N,1)
+
+    a_q_raw = a_q.sum(axis=2)  # (B,N,Nc) head-summed similarities
+    a_k_raw = a_k.sum(axis=2)
+    gate = jax.nn.sigmoid(phi)  # (B,N,1)
+    f2 = lambda t: kernel_ref.attn_weights(t, cfg.attn_fn)
+    a_g = gate * f2(a_q_raw) + (1.0 - gate) * f2(a_k_raw)  # (B,N,Nc)
+    return q, k, v, a_q, a_k, a_q_raw, phi, a_g
+
+
+def apply(p, x, cfg: ModelConfig, return_ag: bool = False):
+    """Full CAST attention layer.  x: (B,N,d) -> (B,N,d)."""
+    b, n, d = x.shape
+    h, d_h, n_c, kappa = cfg.h, cfg.d_h, cfg.n_c, cfg.kappa
+    tau_s = math.sqrt(d_h)  # surrogate-similarity temperature (tau_q = tau_k)
+
+    q, k, v, a_q, a_k, a_q_raw, phi, a_g = affinities(p, x, cfg)
+
+    # ---- step 4: clustering ------------------------------------------
+    idx, valid, member = clustering.cluster(a_g, kappa, cfg.clustering)
+
+    g_of = lambda t: clustering.gather(idx, t)  # (B,N,...) -> (B,Nc,kappa,...)
+    q_g, k_g, v_g = g_of(q), g_of(k), g_of(v)  # (B,Nc,kappa,h,d_h)
+
+    # ---- eq. 4 weights: A_inter = G(A_g, A_k ⊙ softplus1(-phi) / tau_k),
+    # taking each cluster's own column.  §Perf L2-1: gather the own column
+    # directly via take_along_axis on a (B,Nc,h,N) transpose instead of
+    # materializing the full (B,Nc,kappa,h,Nc) cluster gather and slicing
+    # its diagonal — an Nc-fold smaller intermediate.
+    w_all = a_k * layers.softplus1(-phi)[..., None] / tau_s  # (B,N,h,Nc)
+    w_t = jnp.transpose(w_all, (0, 3, 2, 1))  # (B,Nc,h,N)
+    w_inter = jnp.moveaxis(
+        jnp.take_along_axis(w_t, idx[:, :, None, :], axis=3), 2, 3
+    )  # (B,Nc,kappa,h)
+
+    # ---- step 5: fused kernel over folded grid ------------------------
+    fold = lambda t: jnp.moveaxis(t, 3, 2).reshape(b * n_c * h, kappa, d_h)
+    q_f, k_f, v_f = fold(q_g), fold(k_g), fold(v_g)
+    w_f = jnp.moveaxis(w_inter, 3, 2).reshape(b * n_c * h, kappa)
+    valid_f = jnp.broadcast_to(valid[:, :, None, :], (b, n_c, h, kappa)).reshape(
+        b * n_c * h, kappa
+    )
+    if cfg.causal:
+        # Decoder extension (paper §5.5): causal masking inside clusters by
+        # original position; no summaries (they would leak future tokens).
+        pos = clustering.gather(idx, jnp.broadcast_to(
+            jnp.arange(n, dtype=jnp.float32)[None, :], (b, n)
+        ))  # (B,Nc,kappa)
+        pos_f = jnp.broadcast_to(pos[:, :, None, :], (b, n_c, h, kappa)).reshape(
+            b * n_c * h, kappa
+        )
+        causal_core = (
+            cast_kernel.cast_core_causal
+            if cfg.use_pallas
+            else (lambda *a: kernel_ref.cast_core_causal_ref(*a))
+        )
+        r_intra_f = causal_core(q_f, k_f, v_f, pos_f, valid_f, cfg.attn_fn)
+        r_inter_f = jnp.zeros((b * n_c * h, d_h), q_f.dtype)
+    else:
+        core = cast_kernel.cast_core if cfg.use_pallas else cast_kernel.cast_core_reference
+        r_intra_f, r_inter_f = core(q_f, k_f, v_f, w_f, valid_f, cfg.attn_fn)
+    # unfold: (B,Nc,h,kappa,d_h) -> (B,Nc,kappa,h*d_h)
+    r_intra = jnp.moveaxis(r_intra_f.reshape(b, n_c, h, kappa, d_h), 2, 3).reshape(
+        b, n_c, kappa, d
+    )
+    r_inter = r_inter_f.reshape(b, n_c, h * d_h)  # (B,Nc,d)
+
+    # ---- step 6: combination (eq. 5) ----------------------------------
+    a_sum = kernel_ref.attn_weights(
+        a_q_raw * layers.softplus1(phi) / tau_s, cfg.attn_fn
+    )  # (B,N,Nc)
+
+    # intra weights: each clustered occurrence weighted by its token's own
+    # A_sum entry for that cluster (§Perf L2-1: own-column gather again).
+    a_sum_t = jnp.swapaxes(a_sum, 1, 2)  # (B,Nc,N)
+    w_intra = jnp.take_along_axis(a_sum_t, idx, axis=2) * valid  # (B,Nc,kappa)
+    r_from_intra = clustering.scatter_add(idx, w_intra[..., None] * r_intra, n)
+
+    # inter: summaries of *other* clusters, weighted by A_sum off-membership
+    if cfg.causal:
+        r = r_from_intra  # no summaries in the causal variant
+    else:
+        a_inter = a_sum * (1.0 - member)  # (B,N,Nc)
+        r_from_inter = jnp.einsum("bnc,bcd->bnd", a_inter, r_inter)
+        r = r_from_intra + r_from_inter
+    out = layers.dense(p["wo"], r)
+    if return_ag:
+        return out, a_g
+    return out

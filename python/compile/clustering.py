@@ -1,0 +1,189 @@
+"""Clustering mechanisms G / G^{-1} for CAST (paper §3.2, Appendix A.3).
+
+Both mechanisms consume the token->cluster affinity matrix ``A_g`` of shape
+``(B, N, Nc)`` and produce:
+
+* ``idx``   int32 ``(B, Nc, kappa)`` — for each cluster, the indices of the
+            tokens assigned to it (the clustered sequence G(A_g, .)).
+* ``valid`` float32 ``(B, Nc, kappa)`` — 1.0 where the slot holds a real
+            assignment, 0.0 for padding slots (SA Top-K when Nc*kappa > N).
+* ``member`` float32 ``(B, N, Nc)`` — the paper's mask M: ``member[b,n,c]=1``
+            iff token n is assigned to cluster c.
+
+Top-K (Algorithm 1) lets a token live in 0..Nc clusters; SA Top-K
+(Algorithm 2) assigns each token to exactly one cluster, greedily in
+descending order of its best affinity, subject to per-cluster capacity.
+
+Gradients: indices are non-differentiable (as in the paper); gathers and
+scatter-adds built from them are differentiable w.r.t. the gathered values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def argsort_desc(x: jax.Array) -> jax.Array:
+    """Descending argsort along the last axis via lax.sort_key_val.
+
+    jnp.argsort in jax >= 0.6 lowers through gathers with
+    `operand_batching_dims`, which the xla_extension 0.5.1 HLO converter
+    rejects; sort_key_val lowers to a plain `sort` instruction that
+    round-trips through HLO text cleanly (DESIGN.md §Substitutions).
+    """
+    iota = lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    _, idx = lax.sort_key_val(-x, iota, dimension=x.ndim - 1)
+    return idx
+
+
+def gather(idx: jax.Array, x: jax.Array) -> jax.Array:
+    """G(A_g, X): cluster a per-token tensor.
+
+    idx: (B, Nc, kappa) int32;  x: (B, N, ...) -> (B, Nc, kappa, ...)
+    """
+    return jax.vmap(lambda i, t: t[i])(idx, x)
+
+
+def scatter_add(idx: jax.Array, values: jax.Array, n: int) -> jax.Array:
+    """G^{-1}(A_g, V): un-cluster, summing duplicate assignments.
+
+    idx: (B, Nc, kappa);  values: (B, Nc, kappa, ...) -> (B, N, ...)
+    """
+
+    def one(i, v):
+        flat_i = i.reshape(-1)
+        flat_v = v.reshape((flat_i.shape[0],) + v.shape[2:])
+        out = jnp.zeros((n,) + flat_v.shape[1:], dtype=v.dtype)
+        return out.at[flat_i].add(flat_v)
+
+    return jax.vmap(one)(idx, values)
+
+
+def membership(idx: jax.Array, valid: jax.Array, n: int) -> jax.Array:
+    """The paper's mask M (B, N, Nc) from cluster slots."""
+    b, n_c, kappa = idx.shape
+    onehot = jax.nn.one_hot(idx, n, dtype=valid.dtype)  # (B, Nc, kappa, N)
+    m = jnp.einsum("bckn,bck->bnc", onehot, valid)
+    return jnp.clip(m, 0.0, 1.0)
+
+
+def top_k_cluster(a_g: jax.Array, kappa: int):
+    """Algorithm 1: per-cluster Top-K over affinity columns.
+
+    Every cluster independently takes its ``kappa`` highest-affinity tokens;
+    a token may appear in several clusters or in none.
+    """
+    scores = jnp.swapaxes(a_g, 1, 2)  # (B, Nc, N)
+    # NOTE: sort-based top-k, not lax.top_k — the latter lowers to the
+    # `topk(..., largest=true)` HLO instruction which xla_extension 0.5.1's
+    # text parser rejects; `sort` round-trips fine (see DESIGN.md).
+    idx = argsort_desc(scores)[..., :kappa].astype(jnp.int32)
+    valid = jnp.ones(idx.shape, dtype=a_g.dtype)
+    return idx, valid
+
+
+def sa_top_k_cluster(a_g: jax.Array, kappa: int):
+    """Algorithm 2: Single-Assignment Top-K.
+
+    Tokens are visited in descending order of their best cluster affinity;
+    each is placed into its most-preferred cluster that still has capacity.
+    Faithfully sequential (a ``fori_loop`` over N tokens), which is exactly
+    why the paper's Table 1 / Figure 3 show SA Top-K to be slower.
+    """
+    n = a_g.shape[1]
+    n_c = a_g.shape[2]
+
+    def one(ag):  # ag: (N, Nc)
+        best = jnp.max(ag, axis=1)  # (N,)
+        order = argsort_desc(best)  # token visit order
+        pref = argsort_desc(ag)  # (N, Nc) cluster preference
+        slots0 = jnp.zeros((n_c, kappa), dtype=jnp.int32)
+        fill0 = jnp.zeros((n_c,), dtype=jnp.int32)
+
+        def body(r, carry):
+            slots, fill = carry
+            t = order[r]
+            avail = fill[pref[t]] < kappa  # (Nc,) in preference order
+            p = jnp.argmax(avail)  # first cluster with room
+            c = pref[t, p]
+            has_room = jnp.any(avail)
+            pos = fill[c]
+            slots = lax.cond(
+                has_room,
+                lambda s: s.at[c, pos].set(t),
+                lambda s: s,
+                slots,
+            )
+            fill = lax.cond(
+                has_room,
+                lambda f: f.at[c].add(1),
+                lambda f: f,
+                fill,
+            )
+            return slots, fill
+
+        slots, fill = lax.fori_loop(0, n, body, (slots0, fill0))
+        valid = (jnp.arange(kappa)[None, :] < fill[:, None]).astype(ag.dtype)
+        return slots, valid
+
+    idx, valid = jax.vmap(one)(a_g)
+    return idx, valid
+
+
+def causal_greedy_cluster(a_g: jax.Array, kappa: int):
+    """Causal clustering for the decoder extension (paper §5.5).
+
+    Tokens are assigned in *position* order (not affinity order): token n's
+    cluster depends only on tokens 0..n, so the assignment — not just the
+    attention — is causal.  Each token goes to its highest-affinity cluster
+    with remaining capacity; per-token affinity A_g[n] itself only reads
+    token n's own q/k/phi, so no future information enters anywhere.
+    """
+    n = a_g.shape[1]
+    n_c = a_g.shape[2]
+
+    def one(ag):  # ag: (N, Nc)
+        pref = argsort_desc(ag)  # (N, Nc) per-token cluster preference
+        slots0 = jnp.zeros((n_c, kappa), dtype=jnp.int32)
+        fill0 = jnp.zeros((n_c,), dtype=jnp.int32)
+
+        def body(t, carry):
+            slots, fill = carry
+            avail = fill[pref[t]] < kappa
+            p = jnp.argmax(avail)
+            c = pref[t, p]
+            has_room = jnp.any(avail)
+            pos = fill[c]
+            slots = lax.cond(has_room, lambda s: s.at[c, pos].set(t), lambda s: s, slots)
+            fill = lax.cond(has_room, lambda f: f.at[c].add(1), lambda f: f, fill)
+            return slots, fill
+
+        slots, fill = lax.fori_loop(0, n, body, (slots0, fill0))
+        valid = (jnp.arange(kappa)[None, :] < fill[:, None]).astype(ag.dtype)
+        return slots, valid
+
+    idx, valid = jax.vmap(one)(a_g)
+    return idx, valid
+
+
+def cluster(a_g: jax.Array, kappa: int, mechanism: str):
+    """Dispatch to the configured clustering mechanism.
+
+    Returns (idx, valid, member) — see module docstring.
+    """
+    # Indices are non-differentiable (paper §3.2); stop_gradient also keeps
+    # jax from emitting a VJP through `sort`, whose take_along_axis-based
+    # rule lowers to batched gathers the 0.5.1 HLO converter rejects.
+    a_g_ng = lax.stop_gradient(a_g)
+    if mechanism == "topk":
+        idx, valid = top_k_cluster(a_g_ng, kappa)
+    elif mechanism == "sa":
+        idx, valid = sa_top_k_cluster(a_g_ng, kappa)
+    elif mechanism == "causal":
+        idx, valid = causal_greedy_cluster(a_g_ng, kappa)
+    else:
+        raise ValueError(f"unknown clustering mechanism {mechanism!r}")
+    member = membership(idx, valid, a_g.shape[1])
+    return idx, valid, member

@@ -1,0 +1,228 @@
+"""Model / task configuration for the CAST reproduction.
+
+Single source of truth for every hyperparameter that crosses the
+python (build-time) <-> rust (run-time) boundary.  ``aot.py`` serializes a
+``ModelConfig`` into ``manifest.json`` next to each HLO artifact; the rust
+coordinator reads it back (``rust/src/runtime/artifacts.rs``).
+
+Presets mirror Table 4 of the paper (final LRA hyperparameters), with a
+``scale`` knob so the CPU testbed can run depth/width-reduced versions of
+the same shapes without touching the task definitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Optional
+
+# Attention variants lowered by aot.py.  `cast_topk` / `cast_sa` share all
+# weights and differ only in the clustering mechanism G.
+VARIANTS = ("cast_topk", "cast_sa", "vanilla", "local", "lsh")
+
+# Attention score functions supported by the intra-cluster kernel.
+ATTN_FNS = ("softmax", "laplace")
+
+NORMS = ("layer", "scale", "batch")
+
+
+@dataclass
+class ModelConfig:
+    """Everything needed to build + lower one model variant.
+
+    Field names follow the paper's nomenclature (Table 4): ``depth`` is the
+    number of transformer blocks, ``h`` heads, ``d`` attention features,
+    ``d_ff`` feedforward features, ``d_emb`` embedding features, ``n_c``
+    the number of clusters (= surrogate tokens), ``kappa`` the cluster size.
+    """
+
+    task: str = "text"
+    variant: str = "cast_topk"
+    # -- shapes --------------------------------------------------------
+    seq_len: int = 1024
+    batch: int = 4
+    vocab: int = 256
+    n_classes: int = 2
+    dual: bool = False  # Retrieval: two documents per example
+    # -- architecture (Table 4) ----------------------------------------
+    depth: int = 2
+    h: int = 2
+    d: int = 64
+    d_ff: int = 128
+    d_emb: int = 64
+    n_c: int = 8
+    kappa: int = 128  # cluster size; Top-K may oversample (n_c*kappa != N ok)
+    norm: str = "layer"
+    prenorm: bool = False
+    attn_fn: str = "softmax"
+    # local-attention baseline window (chunk) size
+    window: int = 128
+    # -- optimization ---------------------------------------------------
+    wd: float = 1e-2
+    clip: float = 1.0
+    # -- decoder extension (paper §5.5 future work) -----------------------
+    causal: bool = False
+    # -- lowering options -------------------------------------------------
+    use_pallas: bool = True
+
+    def __post_init__(self) -> None:
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if self.attn_fn not in ATTN_FNS:
+            raise ValueError(f"unknown attn_fn {self.attn_fn!r}")
+        if self.norm not in NORMS:
+            raise ValueError(f"unknown norm {self.norm!r}")
+        if self.d % self.h:
+            raise ValueError(f"d={self.d} not divisible by h={self.h}")
+        self.window = min(self.window, self.seq_len)
+        if self.variant == "local" and self.seq_len % self.window:
+            raise ValueError(
+                f"local attention needs seq_len % window == 0 "
+                f"(got {self.seq_len} % {self.window})"
+            )
+        if self.causal and self.is_cast and self.n_c * self.kappa < self.seq_len:
+            raise ValueError(
+                "causal CAST requires n_c*kappa >= seq_len (every token "
+                "must be assigned for the causal mask to cover it)"
+            )
+        if self.variant == "cast_sa" and self.n_c * self.kappa < self.seq_len:
+            raise ValueError(
+                "SA Top-K requires n_c*kappa >= seq_len so every token can "
+                f"be assigned (got {self.n_c}*{self.kappa} < {self.seq_len})"
+            )
+
+    @property
+    def d_h(self) -> int:
+        return self.d // self.h
+
+    @property
+    def is_cast(self) -> bool:
+        return self.variant.startswith("cast")
+
+    @property
+    def clustering(self) -> str:
+        if self.causal:
+            return "causal"  # position-order greedy: assignment is causal
+        return "sa" if self.variant == "cast_sa" else "topk"
+
+    def key(self) -> str:
+        """Stable artifact-directory name for this config."""
+        parts = [self.task, self.variant, f"n{self.seq_len}", f"b{self.batch}"]
+        if self.is_cast or self.variant == "lsh":
+            parts += [f"c{self.n_c}", f"k{self.kappa}"]
+        if self.variant == "local":
+            parts.append(f"w{self.window}")
+        if self.causal:
+            parts.append("causal")
+        return "_".join(parts)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "ModelConfig":
+        return ModelConfig(**json.loads(text))
+
+
+def _balanced_kappa(seq_len: int, n_c: int) -> int:
+    """kappa = N / Nc (paper §3.4's balanced relation), rounded up."""
+    return -(-seq_len // n_c)
+
+
+# ---------------------------------------------------------------------------
+# Task presets (Table 4), parameterizable by sequence length + scale.
+# ---------------------------------------------------------------------------
+
+_TABLE4 = {
+    # task: (depth, h, d, d_ff, d_emb, n_c, norm, prenorm, n_classes, vocab, dual)
+    "listops": (4, 8, 64, 128, 256, 10, "layer", False, 10, 24, False),
+    "text": (4, 4, 64, 128, 256, 20, "scale", False, 2, 256, False),
+    "retrieval": (2, 8, 256, 256, 256, 20, "layer", False, 2, 256, True),
+    "image": (2, 2, 128, 128, 256, 16, "batch", True, 10, 256, False),
+    "pathfinder": (2, 2, 32, 32, 64, 16, "batch", True, 2, 256, False),
+    "pathx": (2, 2, 32, 32, 64, 16, "batch", True, 2, 256, False),
+}
+
+_DEFAULT_SEQ = {
+    "listops": 2048,
+    "text": 4096,
+    "retrieval": 4096,
+    "image": 1024,
+    "pathfinder": 1024,
+    "pathx": 16384,
+}
+
+
+def preset(
+    task: str,
+    variant: str = "cast_topk",
+    seq_len: Optional[int] = None,
+    batch: int = 4,
+    scale: float = 1.0,
+    n_c: Optional[int] = None,
+    kappa: Optional[int] = None,
+    use_pallas: bool = True,
+) -> ModelConfig:
+    """Build a Table-4 preset, optionally width/depth-scaled by ``scale``.
+
+    ``scale`` < 1 shrinks depth/d/d_ff/d_emb proportionally (min 1 block,
+    head count preserved when divisible) so the same task runs on the CPU
+    testbed at a fraction of the FLOPs while keeping all shape *relations*
+    (the quantities the efficiency experiments measure) intact.
+    """
+    if task not in _TABLE4:
+        raise ValueError(f"unknown task {task!r}; know {sorted(_TABLE4)}")
+    depth, h, d, d_ff, d_emb, nc0, norm, prenorm, n_classes, vocab, dual = _TABLE4[task]
+    seq = seq_len or _DEFAULT_SEQ[task]
+    if scale != 1.0:
+        depth = max(1, int(round(depth * scale)))
+        d = max(h, int(round(d * scale)) // h * h)
+        d_ff = max(8, int(round(d_ff * scale)))
+        d_emb = max(8, int(round(d_emb * scale)))
+    nc = n_c or nc0
+    k = kappa or _balanced_kappa(seq, nc)
+    if variant == "cast_sa" and nc * k < seq:
+        k = _balanced_kappa(seq, nc)
+    return ModelConfig(
+        task=task,
+        variant=variant,
+        seq_len=seq,
+        batch=batch,
+        vocab=vocab,
+        n_classes=n_classes,
+        dual=dual,
+        depth=depth,
+        h=h,
+        d=d,
+        d_ff=d_ff,
+        d_emb=d_emb,
+        n_c=nc,
+        kappa=min(k, seq),
+        norm=norm,
+        prenorm=prenorm,
+        use_pallas=use_pallas,
+    )
+
+
+def tiny(variant: str = "cast_topk", **kw) -> ModelConfig:
+    """A deliberately small config for unit tests and smoke lowering."""
+    base = dict(
+        task="text",
+        variant=variant,
+        seq_len=64,
+        batch=2,
+        vocab=256,  # byte-level: must cover the text generator's range
+        n_classes=2,
+        depth=2,
+        h=2,
+        d=16,
+        d_ff=32,
+        d_emb=16,
+        n_c=4,
+        kappa=16,
+        norm="layer",
+        prenorm=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,214 @@
+"""L1: the CAST hot spot as a fused Pallas kernel.
+
+One grid step owns one (batch, cluster, head) cell — folded into a single
+leading grid axis ``G = B * Nc * h`` — and computes *both* paper equations
+that touch the clustered values:
+
+  R_intra[g] = f(Q_g K_g^T / tau) V_g      (eq. 3, attention inside the cluster)
+  R_inter[g] = f2(A_inter[g])^T V_g        (eq. 4, the cluster summary)
+
+Fusing the summary into the attention step reuses the V tile already
+resident in VMEM; a CUDA port would have needed a second kernel or a
+grid-wide reduction (see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping (estimated in DESIGN.md / EXPERIMENTS.md §Perf):
+  * VMEM per step: 3*kappa*d_h*4B (Q,K,V tiles) + kappa^2*4B (score tile)
+    + 2*kappa*4B (weights)  —  ~0.45 MB at kappa=256, d_h=64.
+  * MXU work: two kappa x d_h x kappa matmuls; kappa and d_h are chosen as
+    multiples of the 128-lane tiling in every preset.
+
+CPU execution uses ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run.  The kernel is wrapped in a
+``jax.custom_vjp`` whose backward pass is the VJP of the pure-jnp oracle
+(`ref.cast_core_ref`), so the lowered *training* graph still contains the
+Pallas forward while gradients match the oracle by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _kernel(q_ref, k_ref, v_ref, w_ref, valid_ref, ri_ref, rs_ref, *, attn_fn: str):
+    """Pallas body for one (batch*cluster*head) grid cell.
+
+    Refs carry a leading block axis of size 1:
+      q/k/v: (1, kappa, d_h);  w/valid: (1, kappa);  outputs likewise.
+    """
+    q = q_ref[0]  # (kappa, d_h)
+    k = k_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]  # (kappa,)
+    valid = valid_ref[0]
+
+    d_h = q.shape[-1]
+    inv_tau = 1.0 / math.sqrt(d_h)
+
+    # --- eq. 3: intra-cluster attention -------------------------------
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * inv_tau
+    scores = scores + (1.0 - valid)[None, :] * NEG_INF
+    if attn_fn == "softmax":
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:  # laplace (MEGA)
+        mu = math.sqrt(0.5)
+        sigma = math.sqrt(0.25 / math.pi)
+        l = 0.5 * (1.0 + jax.lax.erf((scores - mu) / (sigma * math.sqrt(2.0))))
+        p = l / jnp.maximum(jnp.sum(l, axis=-1, keepdims=True), 1e-6)
+    p = p * valid[None, :]
+    r_intra = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    ri_ref[0] = r_intra * valid[:, None]
+
+    # --- eq. 4: cluster summary, reusing the resident V tile ----------
+    wm = w + (1.0 - valid) * NEG_INF
+    if attn_fn == "softmax":
+        mw = jnp.max(wm)
+        ew = jnp.exp(wm - mw)
+        pk = ew / jnp.sum(ew)
+    else:
+        mu = math.sqrt(0.5)
+        sigma = math.sqrt(0.25 / math.pi)
+        lw = 0.5 * (1.0 + jax.lax.erf((wm - mu) / (sigma * math.sqrt(2.0))))
+        pk = lw / jnp.maximum(jnp.sum(lw), 1e-6)
+    pk = pk * valid
+    rs_ref[0] = jnp.dot(pk[None, :], v, preferred_element_type=jnp.float32)[0]
+
+
+def cast_core_pallas(q_g, k_g, v_g, w_inter, valid, attn_fn: str = "softmax"):
+    """Run the fused kernel over the folded grid.  Shapes as in ref."""
+    g, kappa, d_h = q_g.shape
+    grid = (g,)
+    blk_kd = pl.BlockSpec((1, kappa, d_h), lambda i: (i, 0, 0))
+    blk_k = pl.BlockSpec((1, kappa), lambda i: (i, 0))
+    blk_d = pl.BlockSpec((1, d_h), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, attn_fn=attn_fn),
+        grid=grid,
+        in_specs=[blk_kd, blk_kd, blk_kd, blk_k, blk_k],
+        out_specs=[blk_kd, blk_d],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, kappa, d_h), q_g.dtype),
+            jax.ShapeDtypeStruct((g, d_h), q_g.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q_g, k_g, v_g, w_inter, valid)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper: pallas forward, oracle-VJP backward.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def cast_core(q_g, k_g, v_g, w_inter, valid, attn_fn: str = "softmax"):
+    """Differentiable fused CAST core.  See module docstring."""
+    return cast_core_pallas(q_g, k_g, v_g, w_inter, valid, attn_fn)
+
+
+def _fwd(q_g, k_g, v_g, w_inter, valid, attn_fn):
+    out = cast_core_pallas(q_g, k_g, v_g, w_inter, valid, attn_fn)
+    return out, (q_g, k_g, v_g, w_inter, valid)
+
+
+def _bwd(attn_fn, residuals, cotangents):
+    q_g, k_g, v_g, w_inter, valid = residuals
+    _, vjp_fn = jax.vjp(
+        lambda a, b, c, w: ref.cast_core_ref(a, b, c, w, valid, attn_fn),
+        q_g,
+        k_g,
+        v_g,
+        w_inter,
+    )
+    dq, dk, dv, dw = vjp_fn(cotangents)
+    return dq, dk, dv, dw, None  # no gradient for `valid`
+
+
+cast_core.defvjp(_fwd, _bwd)
+
+
+def cast_core_reference(q_g, k_g, v_g, w_inter, valid, attn_fn: str = "softmax"):
+    """Alias so L2 can swap kernel<->oracle via config (use_pallas=False)."""
+    return ref.cast_core_ref(q_g, k_g, v_g, w_inter, valid, attn_fn)
+
+
+# ---------------------------------------------------------------------------
+# Causal variant (decoder extension, paper §5.5 future work).
+# ---------------------------------------------------------------------------
+
+
+def _kernel_causal(q_ref, k_ref, v_ref, pos_ref, valid_ref, ri_ref, *, attn_fn: str):
+    """Causal intra-cluster attention: slot i attends to slot j iff the
+    original sequence position pos[j] <= pos[i].  Summaries are omitted —
+    see ref.cast_core_causal_ref."""
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    pos = pos_ref[0]
+    valid = valid_ref[0]
+    d_h = q.shape[-1]
+    inv_tau = 1.0 / math.sqrt(d_h)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * inv_tau
+    causal = (pos[None, :] <= pos[:, None]).astype(scores.dtype)
+    mask = causal * valid[None, :]
+    scores = scores + (1.0 - mask) * NEG_INF
+    if attn_fn == "softmax":
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:
+        mu = math.sqrt(0.5)
+        sigma = math.sqrt(0.25 / math.pi)
+        l = 0.5 * (1.0 + jax.lax.erf((scores - mu) / (sigma * math.sqrt(2.0))))
+        p = l / jnp.maximum(jnp.sum(l, axis=-1, keepdims=True), 1e-6)
+    p = p * mask
+    ri_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32) * valid[:, None]
+
+
+def cast_core_causal_pallas(q_g, k_g, v_g, pos, valid, attn_fn: str = "softmax"):
+    g, kappa, d_h = q_g.shape
+    blk_kd = pl.BlockSpec((1, kappa, d_h), lambda i: (i, 0, 0))
+    blk_k = pl.BlockSpec((1, kappa), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_causal, attn_fn=attn_fn),
+        grid=(g,),
+        in_specs=[blk_kd, blk_kd, blk_kd, blk_k, blk_k],
+        out_specs=blk_kd,
+        out_shape=jax.ShapeDtypeStruct((g, kappa, d_h), q_g.dtype),
+        interpret=True,
+    )(q_g, k_g, v_g, pos, valid)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def cast_core_causal(q_g, k_g, v_g, pos, valid, attn_fn: str = "softmax"):
+    """Differentiable causal CAST core: pallas forward, oracle-VJP backward."""
+    return cast_core_causal_pallas(q_g, k_g, v_g, pos, valid, attn_fn)
+
+
+def _causal_fwd(q_g, k_g, v_g, pos, valid, attn_fn):
+    out = cast_core_causal_pallas(q_g, k_g, v_g, pos, valid, attn_fn)
+    return out, (q_g, k_g, v_g, pos, valid)
+
+
+def _causal_bwd(attn_fn, residuals, ct):
+    q_g, k_g, v_g, pos, valid = residuals
+    _, vjp_fn = jax.vjp(
+        lambda a, b, c: ref.cast_core_causal_ref(a, b, c, pos, valid, attn_fn),
+        q_g,
+        k_g,
+        v_g,
+    )
+    dq, dk, dv = vjp_fn(ct)
+    return dq, dk, dv, None, None
+
+
+cast_core_causal.defvjp(_causal_fwd, _causal_bwd)

@@ -1,0 +1,124 @@
+"""Pure-jnp correctness oracle for the CAST hot spot.
+
+``cast_core_ref`` is the reference semantics of the fused L1 kernel
+(``cast_kernel.cast_core``): given the *clustered* queries/keys/values plus
+the pre-activation summary weights, compute
+
+  R_intra[g] = f(Q_g K_g^T / tau) V_g          (paper eq. 3)
+  R_inter[g] = f_2(A_inter[g])^T V_g           (paper eq. 4)
+
+for every grid cell g = (batch, cluster, head) folded into one leading axis.
+Invalid (padding) slots — SA Top-K clusters that did not fill — are masked
+out of both softmaxes.
+
+This file must stay dependency-light and obviously-correct: it is what the
+hypothesis test-suite and the custom_vjp backward pass are built on.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attn_weights(scores: jax.Array, fn: str) -> jax.Array:
+    """Row-normalized attention weights for `softmax` or MEGA's `laplace`."""
+    if fn == "softmax":
+        return jax.nn.softmax(scores, axis=-1)
+    if fn == "laplace":
+        # MEGA (Ma et al., 2023) appendix: phi_laplace(x) with mu = sqrt(1/2),
+        # sigma = sqrt(1/(4*pi)), rescaled to a proper distribution row-wise.
+        mu = math.sqrt(0.5)
+        sigma = math.sqrt(0.25 / math.pi)
+        l = 0.5 * (1.0 + jax.lax.erf((scores - mu) / (sigma * math.sqrt(2.0))))
+        # rows whose every entry is masked produce 0/eps -> 0 weights
+        return l / jnp.maximum(l.sum(axis=-1, keepdims=True), 1e-6)
+    raise ValueError(f"unknown attention fn {fn!r}")
+
+
+def cast_core_ref(
+    q_g: jax.Array,  # (G, kappa, d_h)
+    k_g: jax.Array,  # (G, kappa, d_h)
+    v_g: jax.Array,  # (G, kappa, d_h)
+    w_inter: jax.Array,  # (G, kappa) pre-activation summary weights
+    valid: jax.Array,  # (G, kappa) 1.0 real slot / 0.0 padding
+    attn_fn: str = "softmax",
+):
+    """Reference for the fused intra-cluster attention + summary kernel.
+
+    Returns (r_intra (G, kappa, d_h), r_inter (G, d_h)).
+    """
+    d_h = q_g.shape[-1]
+    tau = math.sqrt(d_h)
+    scores = jnp.einsum("gkd,gld->gkl", q_g, k_g) / tau
+    mask = valid[:, None, :]  # keys masked per row
+    scores = scores + (1.0 - mask) * NEG_INF
+    p = attn_weights(scores, attn_fn)
+    p = p * mask  # laplace path: force masked keys to exactly 0
+    r_intra = jnp.einsum("gkl,gld->gkd", p, v_g)
+    # zero out rows that are themselves padding slots
+    r_intra = r_intra * valid[:, :, None]
+
+    w = w_inter + (1.0 - valid) * NEG_INF
+    pk = attn_weights(w[:, None, :], attn_fn)[:, 0, :] * valid  # (G, kappa)
+    r_inter = jnp.einsum("gk,gkd->gd", pk, v_g)
+    return r_intra, r_inter
+
+
+# ---------------------------------------------------------------------------
+# Full-layer reference (used by python/tests/test_cast_layer.py to pin the
+# composed semantics of cast_layer.py, and for vanilla-attention parity
+# checks in the limit Nc=1, kappa=N).
+# ---------------------------------------------------------------------------
+
+
+def full_attention_ref(q, k, v):
+    """Vanilla multi-head attention oracle.  q,k,v: (B, N, h, d_h)."""
+    d_h = q.shape[-1]
+    scores = jnp.einsum("bnhd,bmhd->bhnm", q, k) / math.sqrt(d_h)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhnm,bmhd->bnhd", p, v)
+
+
+def local_attention_ref(q, k, v, window: int):
+    """Chunked local attention oracle (LRA 'Local Attention' baseline).
+
+    The sequence is split into non-overlapping windows; full attention runs
+    within each window.  q,k,v: (B, N, h, d_h), N divisible by window.
+    """
+    b, n, h, d_h = q.shape
+    w = window
+    assert n % w == 0, "sequence length must be divisible by the window"
+
+    def chunk(x):
+        return x.reshape(b, n // w, w, h, d_h)
+
+    qc, kc, vc = chunk(q), chunk(k), chunk(v)
+    scores = jnp.einsum("bcnhd,bcmhd->bchnm", qc, kc) / math.sqrt(d_h)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bchnm,bcmhd->bcnhd", p, vc)
+    return out.reshape(b, n, h, d_h)
+
+
+def cast_core_causal_ref(q_g, k_g, v_g, pos, valid, attn_fn: str = "softmax"):
+    """Causal intra-cluster attention oracle (decoder extension, §5.5).
+
+    ``pos`` (G, kappa) carries each slot's original sequence position;
+    slot i may attend to slot j iff pos[j] <= pos[i].  Cluster summaries
+    are omitted in causal mode (they would leak future tokens); the layer
+    relies on intra-cluster flow only — the conservative decoder variant
+    sketched in the paper's §5.5.
+    """
+    d_h = q_g.shape[-1]
+    tau = math.sqrt(d_h)
+    scores = jnp.einsum("gkd,gld->gkl", q_g, k_g) / tau
+    causal = (pos[:, None, :] <= pos[:, :, None]).astype(scores.dtype)
+    mask = causal * valid[:, None, :]
+    scores = scores + (1.0 - mask) * NEG_INF
+    p = attn_weights(scores, attn_fn) * mask
+    r_intra = jnp.einsum("gkl,gld->gkd", p, v_g)
+    return r_intra * valid[:, :, None]

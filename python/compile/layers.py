@@ -1,0 +1,97 @@
+"""L2 building blocks shared by all model variants.
+
+Parameters are plain dicts of jnp arrays; parameter *creation* lives in
+``init_*`` functions that consume a PRNG key and return the dict.  The
+model keeps params as an ordered flat list at the AOT boundary (see
+``model.flatten_params``) so the rust side never needs pytree logic.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    """Glorot-ish scaled normal dense layer."""
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    wk, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wk, (d_in, d_out), jnp.float32) * s,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def embedding_init(key, vocab: int, d: int):
+    return {"emb": jax.random.normal(key, (vocab, d), jnp.float32) / math.sqrt(d)}
+
+
+def embedding(p, tokens):
+    return p["emb"][tokens]
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Fixed sinusoidal positional embeddings (Vaswani et al., 2017)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    half = (d + 1) // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+    return pe[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# normalization (paper Table 4: Layer / Scale / Batch)
+# ---------------------------------------------------------------------------
+
+
+def norm_init(kind: str, d: int):
+    if kind == "layer":
+        return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    if kind == "scale":
+        return {"g": jnp.ones((), jnp.float32)}
+    if kind == "batch":
+        # Substitution (DESIGN.md): running-stats batchnorm would leak state
+        # across the AOT boundary; we use a per-feature affine layernorm,
+        # which at our scale behaves equivalently for the comparisons made.
+        return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_apply(kind: str, p, x, eps: float = 1e-5):
+    if kind == "scale":
+        # ScaleNorm (Nguyen & Salazar, 2019): g * x / ||x||
+        rms = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+        return p["g"] * x * math.sqrt(x.shape[-1]) / rms
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return p["g"] * (x - mu) / jnp.sqrt(var + eps) + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# feedforward
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, d: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {"in": dense_init(k1, d, d_ff), "out": dense_init(k2, d_ff, d)}
+
+
+def ffn(p, x):
+    return dense(p["out"], jax.nn.gelu(dense(p["in"], x)))
+
+
+def softplus1(x):
+    """phi(x) = Softplus(x) + 1 (Zheng et al., 2015), used in eq. 4/5."""
+    return jax.nn.softplus(x) + 1.0

@@ -1,0 +1,158 @@
+"""L2: the encoder model every experiment runs.
+
+A standard pre/post-norm transformer encoder where the attention block is
+one of {CAST Top-K, CAST SA Top-K, vanilla, local} — CAST as a *drop-in
+replacement* for self-attention, exactly the paper's framing.
+
+Setup follows LRA / paper Appendix A.5: sinusoidal positional embeddings,
+mean-pooling over the sequence for classification features, a dual-encoder
+("two towers", shared weights) for the Retrieval task, and an extra output
+normalization when pre-normalization is used.
+
+Parameters cross the AOT boundary as a *flat ordered list* of arrays;
+``param_names`` produces the matching name list recorded in manifest.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention_baselines, cast_layer, layers
+from .configs import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    """Initialize the full parameter tree."""
+    n_keys = 3 + cfg.depth
+    ks = jax.random.split(key, n_keys)
+    attn_init = cast_layer.init if cfg.is_cast else attention_baselines.init
+
+    blocks = []
+    for i in range(cfg.depth):
+        bk = jax.random.split(ks[3 + i], 4)
+        blocks.append(
+            {
+                "attn": attn_init(bk[0], cfg),
+                "ffn": layers.ffn_init(bk[1], cfg.d, cfg.d_ff),
+                "norm1": layers.norm_init(cfg.norm, cfg.d),
+                "norm2": layers.norm_init(cfg.norm, cfg.d),
+            }
+        )
+
+    params = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab, cfg.d_emb),
+        "proj": layers.dense_init(ks[1], cfg.d_emb, cfg.d),
+        "blocks": blocks,
+        "head": _head_init(ks[2], cfg),
+    }
+    if cfg.prenorm:
+        params["out_norm"] = layers.norm_init(cfg.norm, cfg.d)
+    return params
+
+
+def _head_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    d_in = 4 * cfg.d if cfg.dual else cfg.d
+    return {
+        "fc": layers.dense_init(k1, d_in, cfg.d),
+        "out": layers.dense_init(k2, cfg.d, cfg.n_classes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_apply(p, x, cfg: ModelConfig, return_ag: bool):
+    if cfg.is_cast:
+        return cast_layer.apply(p, x, cfg, return_ag=return_ag)
+    if cfg.variant == "vanilla":
+        out = attention_baselines.apply_vanilla(p, x, cfg)
+    elif cfg.variant == "lsh":
+        out = attention_baselines.apply_lsh(p, x, cfg)
+    else:
+        out = attention_baselines.apply_local(p, x, cfg)
+    if return_ag:
+        return out, jnp.zeros((x.shape[0], x.shape[1], cfg.n_c), x.dtype)
+    return out
+
+
+def encode(params, tokens, cfg: ModelConfig, collect_ag: bool = False):
+    """tokens (B,N) int32 -> pooled features (B,d) [+ A_g (L,B,N,Nc)]."""
+    x = layers.embedding(params["embed"], tokens)  # (B,N,d_emb)
+    x = x + layers.sinusoidal_positions(cfg.seq_len, cfg.d_emb)[None]
+    x = layers.dense(params["proj"], x)  # (B,N,d)
+
+    ags = []
+    for blk in params["blocks"]:
+        if cfg.prenorm:
+            a = _attn_apply(blk["attn"], layers.norm_apply(cfg.norm, blk["norm1"], x), cfg, collect_ag)
+            if collect_ag:
+                a, ag = a
+                ags.append(ag)
+            x = x + a
+            x = x + layers.ffn(blk["ffn"], layers.norm_apply(cfg.norm, blk["norm2"], x))
+        else:
+            a = _attn_apply(blk["attn"], x, cfg, collect_ag)
+            if collect_ag:
+                a, ag = a
+                ags.append(ag)
+            x = layers.norm_apply(cfg.norm, blk["norm1"], x + a)
+            x = layers.norm_apply(cfg.norm, blk["norm2"], x + layers.ffn(blk["ffn"], x))
+    if cfg.prenorm:
+        x = layers.norm_apply(cfg.norm, params["out_norm"], x)
+
+    pooled = jnp.mean(x, axis=1)  # (B,d)
+    if collect_ag:
+        return pooled, jnp.stack(ags)  # (L,B,N,Nc)
+    return pooled
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """tokens (B,N) or (B,2,N) for dual -> logits (B,n_classes)."""
+    if cfg.dual:
+        f1 = encode(params, tokens[:, 0], cfg)
+        f2 = encode(params, tokens[:, 1], cfg)
+        feats = jnp.concatenate([f1, f2, f1 * f2, f1 - f2], axis=-1)
+    else:
+        feats = encode(params, tokens, cfg)
+    h = jax.nn.gelu(layers.dense(params["head"]["fc"], feats))
+    return layers.dense(params["head"]["out"], h)
+
+
+def forward_ag(params, tokens, cfg: ModelConfig):
+    """Return per-layer cluster affinities A_g — Figure 4 / 7–9 pipeline."""
+    assert cfg.is_cast and not cfg.dual
+    _, ags = encode(params, tokens, cfg, collect_ag=True)
+    return ags
+
+
+# ---------------------------------------------------------------------------
+# flat parameter interface (the AOT boundary)
+# ---------------------------------------------------------------------------
+
+
+def flatten(params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return flat, treedef
+
+
+def param_names(params):
+    """Names aligned with jax's tree_flatten order (sorted dict keys)."""
+    named = _name_tree(params, "")
+    flat, _ = jax.tree_util.tree_flatten(named)
+    return flat
+
+
+def _name_tree(tree, prefix):
+    if isinstance(tree, dict):
+        return {k: _name_tree(v, f"{prefix}{k}.") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_name_tree(v, f"{prefix}{i}.") for i, v in enumerate(tree))
+    return prefix.rstrip(".")

@@ -1,0 +1,88 @@
+"""L2: loss, metrics, and a hand-rolled AdamW train step.
+
+optax is unavailable offline, so the optimizer is implemented directly —
+Adam (Kingma & Ba) with decoupled weight decay and global-norm gradient
+clipping, matching the paper's Appendix A.5 setup (wd = 1e-2, clip = 1).
+
+Everything here is lowered into ONE ``train_step`` HLO: the rust trainer
+owns only raw buffers (params, m, v, step) and the learning-rate *value*,
+which is an input so L3 can run warmup/decay schedules without re-lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def loss_fn(params, tokens, labels, cfg: ModelConfig):
+    """Mean softmax cross-entropy + accuracy."""
+    logits = model.forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def _global_norm(grads):
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+
+
+def _decayable(name: str) -> bool:
+    """AdamW convention: no decay on biases, norms, or embeddings."""
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf not in ("b", "g", "emb")
+
+
+def train_step(params, m, v, step, lr, tokens, labels, cfg: ModelConfig, names=None):
+    """One AdamW update.  All pytrees share the structure of ``params``.
+
+    step: f32 scalar (Adam bias-correction counter, incremented here).
+    Returns (params', m', v', step', loss, acc).
+    """
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, tokens, labels, cfg
+    )
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip / jnp.maximum(gnorm, 1e-6))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    if names is None:
+        names = model.param_names(params)
+    names_tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), names
+    )
+
+    def upd(p, g, m_, v_, name):
+        m2 = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        if _decayable(name):
+            delta = delta + cfg.wd * p
+        return p - lr * delta, m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v, names_tree)
+    p2 = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m2 = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p2, m2, v2, t, loss, acc
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -1,0 +1,118 @@
+"""Clustering mechanism invariants (paper Algorithms 1 & 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import clustering
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_ag(seed, b, n, n_c):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, n, n_c), jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([16, 32, 64]),
+    n_c=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_topk_picks_highest_affinity(b, n, n_c, seed):
+    kappa = n // n_c
+    ag = random_ag(seed, b, n, n_c)
+    idx, valid, member = clustering.cluster(ag, kappa, "topk")
+    assert idx.shape == (b, n_c, kappa)
+    assert bool(jnp.all(valid == 1.0))
+    ag_np = np.asarray(ag)
+    idx_np = np.asarray(idx)
+    for bi in range(b):
+        for c in range(n_c):
+            chosen = set(idx_np[bi, c].tolist())
+            kth = np.sort(ag_np[bi, :, c])[-kappa]
+            for t in chosen:
+                assert ag_np[bi, t, c] >= kth - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    n=st.sampled_from([16, 32]),
+    n_c=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_sa_topk_single_assignment_partition(b, n, n_c, seed):
+    """SA Top-K with Nc*kappa == N must produce an exact partition."""
+    kappa = n // n_c
+    ag = random_ag(seed, b, n, n_c)
+    idx, valid, member = clustering.cluster(ag, kappa, "sa")
+    assert bool(jnp.all(valid == 1.0)), "all slots fill when Nc*kappa == N"
+    idx_np = np.asarray(idx)
+    for bi in range(b):
+        flat = idx_np[bi].reshape(-1)
+        assert sorted(flat.tolist()) == list(range(n)), "every token exactly once"
+    # membership mask rows sum to exactly 1
+    msum = np.asarray(member.sum(axis=2))
+    np.testing.assert_allclose(msum, 1.0, atol=1e-6)
+
+
+def test_sa_topk_greedy_priority():
+    """The single highest-affinity token gets its preferred cluster."""
+    ag = jnp.array([[[0.0, 5.0], [0.1, 0.2], [0.3, 0.1], [0.2, 0.0]]])  # (1,4,2)
+    idx, valid, _ = clustering.cluster(ag, 2, "sa")
+    # token 0 prefers cluster 1 with the globally highest score
+    assert 0 in np.asarray(idx)[0, 1].tolist()
+
+
+def test_sa_topk_capacity_respected():
+    """When one cluster dominates, overflow tokens spill to the other."""
+    n, n_c, kappa = 8, 2, 4
+    ag = jnp.zeros((1, n, n_c)).at[:, :, 0].set(1.0)  # everyone prefers cluster 0
+    idx, valid, member = clustering.cluster(ag, kappa, "sa")
+    idx_np = np.asarray(idx)[0]
+    assert len(set(idx_np[0].tolist())) == kappa
+    assert sorted(np.concatenate([idx_np[0], idx_np[1]]).tolist()) == list(range(n))
+
+
+def test_membership_matches_indices():
+    ag = random_ag(3, 2, 32, 4)
+    idx, valid, member = clustering.cluster(ag, 8, "topk")
+    m = np.asarray(member)
+    idx_np = np.asarray(idx)
+    for bi in range(2):
+        for c in range(4):
+            for t in range(32):
+                expected = 1.0 if t in idx_np[bi, c] else 0.0
+                assert m[bi, t, c] == expected
+
+
+def test_gather_scatter_roundtrip():
+    """G^{-1}(G(x)) with a partition reproduces x (sum of single copy)."""
+    b, n, n_c, kappa = 2, 16, 4, 4
+    ag = random_ag(5, b, n, n_c)
+    idx, valid, _ = clustering.cluster(ag, kappa, "sa")
+    x = jax.random.normal(jax.random.PRNGKey(9), (b, n, 3))
+    gathered = clustering.gather(idx, x)
+    assert gathered.shape == (b, n_c, kappa, 3)
+    back = clustering.scatter_add(idx, gathered, n)
+    np.testing.assert_allclose(back, x, atol=1e-6)
+
+
+def test_scatter_add_sums_duplicates():
+    """Top-K can assign one token to several clusters; G^{-1} must sum."""
+    idx = jnp.array([[[0, 1], [0, 2]]], dtype=jnp.int32)  # token 0 in both
+    vals = jnp.ones((1, 2, 2, 1))
+    out = clustering.scatter_add(idx, vals, 4)
+    np.testing.assert_allclose(np.asarray(out)[0, :, 0], [2.0, 1.0, 1.0, 0.0])
+
+
+def test_topk_padding_affinity_zero_excluded():
+    """Paper §3.2: padding with affinity 0 is never clustered when real
+    tokens have positive affinity."""
+    n, n_c, kappa = 8, 2, 2
+    ag = jnp.full((1, n, n_c), 0.0).at[:, :4, :].set(1.0)  # tokens 4..7 are "padding"
+    idx, _, _ = clustering.cluster(ag, kappa, "topk")
+    assert np.asarray(idx).max() < 4

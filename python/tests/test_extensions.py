@@ -1,0 +1,171 @@
+"""Extensions beyond the paper's evaluated scope:
+
+* LSH attention baseline (Reformer-style) — the paper's main clustering
+  comparator (§2, Appendix A.6.4).
+* Causal CAST (decoder variant) — the paper's §5.5 future work: causal
+  greedy clustering (position-order assignment) + causal intra-cluster
+  attention, no summaries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import attention_baselines, cast_layer, clustering, model, train
+from compile.configs import tiny
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# LSH baseline
+# ---------------------------------------------------------------------------
+
+
+def test_lsh_forward_and_grad():
+    cfg = tiny("lsh")
+    p = model.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 256)
+    logits = model.forward(p, tokens, cfg)
+    assert logits.shape == (2, 2)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    g = jax.grad(lambda pp: model.forward(pp, tokens, cfg).sum())(p)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree_util.tree_leaves(g))
+
+
+def test_lsh_buckets_cluster_similar_directions():
+    """Same-direction vectors hash to the same bucket; opposite vectors
+    to a different one (the LSH property CAST replaces with learning)."""
+    d = 8
+    base = jax.random.normal(jax.random.PRNGKey(2), (1, 1, d))
+    qk = jnp.concatenate([base, base * 2.0, -base], axis=1)  # (1, 3, d)
+    b = attention_baselines.lsh_buckets(qk, n_buckets=8)
+    b = np.asarray(b)[0]
+    assert b[0] == b[1], "parallel vectors must share a bucket"
+    assert b[0] != b[2], "antipodal vectors must differ"
+
+
+def test_lsh_trains():
+    cfg = tiny("lsh")
+    p = model.init(jax.random.PRNGKey(3), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 64), 0, 256)
+    labels = jnp.array([0, 1], dtype=jnp.int32)
+    m = train.zeros_like_tree(p)
+    v = train.zeros_like_tree(p)
+    step = jnp.float32(0)
+    losses = []
+    jit_step = jax.jit(
+        lambda p, m, v, s: train.train_step(p, m, v, s, jnp.float32(3e-3), tokens, labels, cfg)
+    )
+    for _ in range(10):
+        p, m, v, step, loss, _ = jit_step(p, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# Causal CAST (decoder extension)
+# ---------------------------------------------------------------------------
+
+
+def causal_setup(seed=0):
+    cfg = tiny("cast_sa", causal=True)
+    p = cast_layer.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, cfg.seq_len, cfg.d))
+    return cfg, p, x
+
+
+def test_causal_no_future_leakage():
+    """THE decoder property: output at position t is invariant to any
+    perturbation of tokens at positions > t — through clustering AND
+    attention."""
+    cfg, p, x = causal_setup()
+    out0 = cast_layer.apply(p, x, cfg)
+    for t in [20, 40, 63]:
+        x2 = x.at[0, t].add(7.0)
+        out1 = cast_layer.apply(p, x2, cfg)
+        delta = np.abs(np.asarray(out1 - out0))[0].sum(-1)
+        assert delta[:t].max() == 0.0, f"future leak at perturbation {t}"
+        assert delta[t:].max() > 0.0, "perturbation must affect its own future"
+
+
+def test_causal_clustering_is_prefix_deterministic():
+    """Token n's assignment must not change when suffix tokens change."""
+    a = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 4))
+    idx0, valid0, _ = clustering.cluster(a, 8, "causal")
+    a2 = a.at[:, 20:].add(3.0)
+    idx1, valid1, _ = clustering.cluster(a2, 8, "causal")
+
+    def assignment_of(idx, valid, token):
+        idx = np.asarray(idx)[0]
+        valid = np.asarray(valid)[0]
+        for c in range(idx.shape[0]):
+            for k in range(idx.shape[1]):
+                if valid[c, k] and idx[c, k] == token:
+                    return c
+        return -1
+
+    for t in range(20):
+        assert assignment_of(idx0, valid0, t) == assignment_of(idx1, valid1, t), t
+
+
+def test_causal_clustering_partitions_all_tokens():
+    a = jax.random.normal(jax.random.PRNGKey(6), (2, 32, 4))
+    idx, valid, member = clustering.cluster(a, 8, "causal")
+    assert bool(jnp.all(valid == 1.0))
+    for b in range(2):
+        flat = sorted(np.asarray(idx)[b].reshape(-1).tolist())
+        assert flat == list(range(32))
+
+
+def test_causal_kernel_matches_causal_ref():
+    from compile.kernels import cast_kernel, ref
+
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    g, kappa, d_h = 4, 16, 8
+    q = jax.random.normal(ks[0], (g, kappa, d_h))
+    k = jax.random.normal(ks[1], (g, kappa, d_h))
+    v = jax.random.normal(ks[2], (g, kappa, d_h))
+    pos = jax.random.permutation(ks[3], jnp.arange(g * kappa, dtype=jnp.float32)).reshape(
+        g, kappa
+    )
+    valid = jnp.ones((g, kappa)).at[0, -3:].set(0.0)
+    rp = cast_kernel.cast_core_causal_pallas(q, k, v, pos, valid)
+    rr = ref.cast_core_causal_ref(q, k, v, pos, valid)
+    np.testing.assert_allclose(rp, rr, atol=1e-5, rtol=1e-5)
+
+
+def test_causal_first_position_attends_only_itself():
+    """The globally-first position's output equals its own value row."""
+    from compile.kernels import ref
+
+    g, kappa, d_h = 1, 8, 4
+    key = jax.random.PRNGKey(8)
+    q = jax.random.normal(key, (g, kappa, d_h))
+    k = jax.random.normal(jax.random.PRNGKey(9), (g, kappa, d_h))
+    v = jax.random.normal(jax.random.PRNGKey(10), (g, kappa, d_h))
+    pos = jnp.arange(kappa, dtype=jnp.float32)[None, :]
+    valid = jnp.ones((g, kappa))
+    r = ref.cast_core_causal_ref(q, k, v, pos, valid)
+    np.testing.assert_allclose(r[0, 0], v[0, 0], atol=1e-6)
+
+
+def test_causal_model_trains():
+    cfg = tiny("cast_sa", causal=True)
+    p = model.init(jax.random.PRNGKey(11), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(12), (2, 64), 0, 256)
+    labels = jnp.array([1, 0], dtype=jnp.int32)
+    m = train.zeros_like_tree(p)
+    v = train.zeros_like_tree(p)
+    step = jnp.float32(0)
+    losses = []
+    jit_step = jax.jit(
+        lambda p, m, v, s: train.train_step(p, m, v, s, jnp.float32(3e-3), tokens, labels, cfg)
+    )
+    for _ in range(10):
+        p, m, v, step, loss, _ = jit_step(p, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))

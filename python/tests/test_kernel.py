@@ -1,0 +1,118 @@
+"""L1 correctness: the fused Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, masks, and attention functions; every case
+asserts allclose between `cast_core` (pallas, interpret=True) and
+`cast_core_ref`.  Gradients through the custom_vjp wrapper are also pinned
+to the oracle's VJP.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cast_kernel, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(key, g, kappa, d_h, pad_last=0):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (g, kappa, d_h), jnp.float32)
+    k = jax.random.normal(ks[1], (g, kappa, d_h), jnp.float32)
+    v = jax.random.normal(ks[2], (g, kappa, d_h), jnp.float32)
+    w = jax.random.normal(ks[3], (g, kappa), jnp.float32)
+    valid = jnp.ones((g, kappa), jnp.float32)
+    if pad_last:
+        valid = valid.at[:, kappa - pad_last:].set(0.0)
+    return q, k, v, w, valid
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.integers(1, 6),
+    kappa=st.sampled_from([4, 8, 16, 32]),
+    d_h=st.sampled_from([4, 8, 16]),
+    pad=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_softmax(g, kappa, d_h, pad, seed):
+    pad = min(pad, kappa - 1)
+    inputs = make_inputs(jax.random.PRNGKey(seed), g, kappa, d_h, pad)
+    ri_p, rs_p = cast_kernel.cast_core_pallas(*inputs, "softmax")
+    ri_r, rs_r = ref.cast_core_ref(*inputs, "softmax")
+    np.testing.assert_allclose(ri_p, ri_r, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(rs_p, rs_r, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    kappa=st.sampled_from([8, 16]),
+    d_h=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_laplace(kappa, d_h, seed):
+    inputs = make_inputs(jax.random.PRNGKey(seed), 3, kappa, d_h, 2)
+    ri_p, rs_p = cast_kernel.cast_core_pallas(*inputs, "laplace")
+    ri_r, rs_r = ref.cast_core_ref(*inputs, "laplace")
+    # Laplace rows whose every score sits in the erf tail normalize by a
+    # sum near the 1e-6 clamp floor, where the kernel-vs-einsum 1e-6 score
+    # drift is amplified ~1e4x.  The softmax test above pins the tight
+    # tolerance on the production path; here we bound the degenerate-row
+    # amplification instead.
+    np.testing.assert_allclose(ri_p, ri_r, atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(rs_p, rs_r, atol=2e-2, rtol=2e-2)
+
+
+def test_gradients_match_oracle_vjp():
+    inputs = make_inputs(jax.random.PRNGKey(0), 4, 16, 8, pad_last=3)
+    q, k, v, w, valid = inputs
+
+    def loss_pallas(q, k, v, w):
+        ri, rs = cast_kernel.cast_core(q, k, v, w, valid, "softmax")
+        return jnp.sum(ri * ri) + jnp.sum(rs)
+
+    def loss_ref(q, k, v, w):
+        ri, rs = ref.cast_core_ref(q, k, v, w, valid, "softmax")
+        return jnp.sum(ri * ri) + jnp.sum(rs)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(q, k, v, w)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, w)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_padding_rows_produce_zero_output():
+    q, k, v, w, valid = make_inputs(jax.random.PRNGKey(1), 2, 8, 4, pad_last=3)
+    ri, _ = cast_kernel.cast_core_pallas(q, k, v, w, valid, "softmax")
+    np.testing.assert_allclose(ri[:, -3:, :], 0.0, atol=1e-7)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Softmax attention output lies within [min(V), max(V)] per feature."""
+    q, k, v, w, valid = make_inputs(jax.random.PRNGKey(2), 3, 16, 8)
+    ri, rs = cast_kernel.cast_core_pallas(q, k, v, w, valid, "softmax")
+    vmin = jnp.min(v, axis=1, keepdims=True)
+    vmax = jnp.max(v, axis=1, keepdims=True)
+    assert bool(jnp.all(ri >= vmin - 1e-5)) and bool(jnp.all(ri <= vmax + 1e-5))
+    assert bool(jnp.all(rs >= vmin[:, 0] - 1e-5)) and bool(jnp.all(rs <= vmax[:, 0] + 1e-5))
+
+
+def test_single_token_cluster_is_identity_on_values():
+    """kappa=1: attention over one token returns exactly that value row."""
+    q, k, v, w, valid = make_inputs(jax.random.PRNGKey(3), 2, 1, 8)
+    ri, rs = cast_kernel.cast_core_pallas(q, k, v, w, valid, "softmax")
+    np.testing.assert_allclose(ri[:, 0], v[:, 0], atol=1e-6)
+    np.testing.assert_allclose(rs, v[:, 0], atol=1e-6)
+
+
+def test_kernel_is_permutation_equivariant_in_keys():
+    """Permuting (K,V) rows together leaves R_intra unchanged."""
+    q, k, v, w, valid = make_inputs(jax.random.PRNGKey(4), 1, 8, 4)
+    perm = jnp.array([3, 1, 0, 2, 7, 6, 5, 4])
+    ri1, _ = cast_kernel.cast_core_pallas(q, k, v, w, valid, "softmax")
+    ri2, _ = cast_kernel.cast_core_pallas(
+        q, k[:, perm], v[:, perm], w[:, perm], valid, "softmax"
+    )
+    np.testing.assert_allclose(ri1, ri2, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,139 @@
+"""Full model (L2): shapes, training dynamics, variant parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+from compile.configs import tiny
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup(variant="cast_topk", **kw):
+    cfg = tiny(variant, **kw)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (cfg.batch, cfg.seq_len), 0, cfg.vocab
+    )
+    labels = jnp.arange(cfg.batch, dtype=jnp.int32) % cfg.n_classes
+    return cfg, params, tokens, labels
+
+
+@pytest.mark.parametrize("variant", ["cast_topk", "cast_sa", "vanilla", "local"])
+def test_forward_shapes_all_variants(variant):
+    cfg, params, tokens, _ = setup(variant)
+    logits = model.forward(params, tokens, cfg)
+    assert logits.shape == (cfg.batch, cfg.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_dual_encoder_retrieval_shape():
+    cfg, params, _, _ = setup(dual=True, task="retrieval")
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(2), (cfg.batch, 2, cfg.seq_len), 0, cfg.vocab
+    )
+    logits = model.forward(params, tokens, cfg)
+    assert logits.shape == (cfg.batch, cfg.n_classes)
+
+
+def test_param_names_align_with_flatten_order():
+    cfg, params, _, _ = setup()
+    flat, _ = model.flatten(params)
+    names = model.param_names(params)
+    assert len(flat) == len(names)
+    assert len(set(names)) == len(names), "names must be unique"
+    # spot-check: the embedding leaf matches its name
+    i = names.index("embed.emb")
+    assert flat[i].shape == (cfg.vocab, cfg.d_emb)
+    # blocks are enumerated
+    assert any(n.startswith("blocks.0.attn.") for n in names)
+    assert any(n.startswith("blocks.1.ffn.") for n in names)
+
+
+@pytest.mark.parametrize("variant", ["cast_topk", "cast_sa", "vanilla"])
+def test_train_step_decreases_loss(variant):
+    cfg, params, tokens, labels = setup(variant)
+    m = train.zeros_like_tree(params)
+    v = train.zeros_like_tree(params)
+    step = jnp.float32(0)
+    losses = []
+    jit_step = jax.jit(
+        lambda p, m, v, s: train.train_step(
+            p, m, v, s, jnp.float32(3e-3), tokens, labels, cfg
+        )
+    )
+    for _ in range(15):
+        params, m, v, step, loss, acc = jit_step(params, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"no learning: {losses[0]:.4} -> {losses[-1]:.4}"
+    assert all(np.isfinite(losses))
+
+
+def test_adam_bias_correction_first_step_magnitude():
+    """After one step with fresh moments, update ≈ lr per coordinate."""
+    cfg, params, tokens, labels = setup()
+    m = train.zeros_like_tree(params)
+    v = train.zeros_like_tree(params)
+    lr = 1e-2
+    p2, *_ = train.train_step(
+        params, m, v, jnp.float32(0), jnp.float32(lr), tokens, labels, cfg
+    )
+    flat0, _ = model.flatten(params)
+    flat1, _ = model.flatten(p2)
+    deltas = [float(jnp.abs(a - b).max()) for a, b in zip(flat0, flat1)]
+    # with bias correction, |Δ| <= lr * (1 + wd·|p|) approximately
+    assert max(deltas) < 3 * lr, f"first-step update too large: {max(deltas)}"
+    assert max(deltas) > 0.0
+
+
+def test_gradient_clipping_bounds_update():
+    cfg, params, tokens, labels = setup()
+    cfg_clipped = tiny("cast_topk", clip=1e-6)  # aggressive clip
+    m = train.zeros_like_tree(params)
+    v = train.zeros_like_tree(params)
+    _, _, _, _, loss_a, _ = train.train_step(
+        params, m, v, jnp.float32(0), jnp.float32(1e-3), tokens, labels, cfg_clipped
+    )
+    assert bool(jnp.isfinite(loss_a))
+
+
+def test_weight_decay_excludes_norms_and_biases():
+    assert train._decayable("blocks.0.attn.wq.w")
+    assert train._decayable("blocks.0.attn.s")
+    assert not train._decayable("blocks.0.attn.wq.b")
+    assert not train._decayable("blocks.0.norm1.g")
+    assert not train._decayable("embed.emb")
+
+
+def test_forward_ag_stacks_all_layers():
+    cfg, params, tokens, _ = setup()
+    ags = model.forward_ag(params, tokens, cfg)
+    assert ags.shape == (cfg.depth, cfg.batch, cfg.seq_len, cfg.n_c)
+    np.testing.assert_allclose(np.asarray(ags.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_init_is_seed_deterministic():
+    cfg = tiny()
+    a = model.init(jax.random.PRNGKey(3), cfg)
+    b = model.init(jax.random.PRNGKey(3), cfg)
+    c = model.init(jax.random.PRNGKey(4), cfg)
+    fa, _ = model.flatten(a)
+    fb, _ = model.flatten(b)
+    fc, _ = model.flatten(c)
+    assert all(np.array_equal(x, y) for x, y in zip(fa, fb))
+    assert not all(np.array_equal(x, y) for x, y in zip(fa, fc))
+
+
+def test_prenorm_variant_runs():
+    cfg, params, tokens, _ = setup(prenorm=True, norm="batch")
+    logits = model.forward(params, tokens, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_scale_norm_variant_runs():
+    cfg, params, tokens, _ = setup(norm="scale")
+    logits = model.forward(params, tokens, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,28 @@
+//! Shared bench-harness helpers (criterion is unavailable offline; every
+//! bench is a `harness = false` main that prints its paper table).
+
+use std::path::PathBuf;
+
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("CAST_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Steps per measured config; benches honour CAST_BENCH_STEPS.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("CAST_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Graceful skip: `cargo bench` runs every bench, but the heavier suites
+/// need their artifact sets built first.
+pub fn skip(msg: &str) -> ! {
+    println!("SKIPPED: {msg}");
+    std::process::exit(0)
+}
+
+pub fn has_artifacts_matching(prefix: &str) -> bool {
+    cast::runtime::artifacts::discover(&artifacts_root())
+        .iter()
+        .any(|d| d.file_name().map(|n| n.to_string_lossy().starts_with(prefix)).unwrap_or(false))
+}

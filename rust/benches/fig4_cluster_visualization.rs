@@ -1,0 +1,57 @@
+//! Paper Figure 4 + Appendix Figures 7–9: cluster-assignment and A_g
+//! score visualizations on the Image task (8 surrogate tokens, SA Top-K).
+//!
+//! Trains briefly, then writes netpbm images under bench_out/fig4/.
+//! Build inputs first: `make artifacts` (default suite).
+
+mod bench_common;
+
+use std::path::PathBuf;
+
+use bench_common::*;
+use cast::analysis;
+use cast::data;
+use cast::runtime::{Engine, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::rng::Rng;
+
+fn main() {
+    let dir = artifacts_root().join("image_cast_sa_n1024_b8_c8_k128");
+    if !dir.join("manifest.json").exists() {
+        skip("Figure-4 artifact missing — run `make artifacts`");
+    }
+    let steps = bench_steps(80);
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let cfg = TrainConfig {
+        steps,
+        schedule: Schedule::Warmup { lr: 2e-3, warmup: steps / 10 },
+        eval_batches: 0,
+        log_every: 0,
+        ..Default::default()
+    };
+    let b = manifest.meta.batch;
+    let n = manifest.meta.seq_len;
+    let mut trainer = Trainer::new(engine.clone(), manifest, cfg, 0).expect("trainer");
+    let report = trainer.run().expect("train");
+    println!("trained {steps} steps (loss {:.4}); rendering clusters ...", report.final_train_loss);
+
+    let gen = data::task("image").expect("gen");
+    // three sample images, as in Appendix A.6.3
+    for (i, seed) in [11u64, 22, 33].iter().enumerate() {
+        let mut rng = Rng::new(*seed);
+        let batch = data::make_batch(gen.as_ref(), &mut rng, b, n);
+        let out = PathBuf::from(format!("bench_out/fig4/sample{i}"));
+        let files = analysis::visualize_image_clusters(
+            &engine,
+            &trainer.manifest,
+            &trainer.state,
+            &batch.tokens,
+            0,
+            &out,
+        )
+        .expect("viz");
+        println!("sample {i}: {} images -> {}", files.len(), out.display());
+    }
+    println!("inspect layer0 vs layer1 cluster maps: early layers cluster by position (slices), later layers by content — the paper's §5.4 observation.");
+}

@@ -1,0 +1,30 @@
+//! Paper Table 1: training steps/s and peak memory vs the vanilla
+//! Transformer on the Text task at 1K/2K/3K/4K (CAST kappa=200).
+//!
+//! Build inputs first: `make artifacts-efficiency`.  Then:
+//!     cargo bench --bench table1_train_efficiency
+//! Peak memory uses child-process isolation (VmHWM per config).
+
+mod bench_common;
+
+use bench_common::*;
+use cast::bench::efficiency_table;
+use cast::coordinator::JobKind;
+
+fn main() {
+    if !has_artifacts_matching("text_cast_topk_n1024") {
+        skip("Table-1 artifacts missing — run `make artifacts-efficiency`");
+    }
+    let steps = bench_steps(5);
+    let table = efficiency_table(
+        &artifacts_root(),
+        "text",
+        &[1024, 2048, 3072, 4096],
+        JobKind::TrainEfficiency { steps },
+        std::env::var("CAST_NO_ISOLATE").is_err(),
+        "Table 1: training efficiency relative to Transformer (Text task)",
+    )
+    .expect("table 1 run failed");
+    println!("{}", table.render());
+    println!("paper @4K: CAST(Top-K) 6.18x steps/s, 0.10x memory; CAST(SA) 2.62x, 0.10x.");
+}

@@ -1,0 +1,28 @@
+//! Paper Table 5 (Appendix A.6.1): inference steps/s and peak memory vs
+//! the vanilla Transformer, Text task @ 1K..4K.
+//!
+//! Build inputs first: `make artifacts-efficiency`.
+
+mod bench_common;
+
+use bench_common::*;
+use cast::bench::efficiency_table;
+use cast::coordinator::JobKind;
+
+fn main() {
+    if !has_artifacts_matching("text_cast_topk_n1024") {
+        skip("Table-5 artifacts missing — run `make artifacts-efficiency`");
+    }
+    let steps = bench_steps(8);
+    let table = efficiency_table(
+        &artifacts_root(),
+        "text",
+        &[1024, 2048, 3072, 4096],
+        JobKind::InferEfficiency { steps },
+        std::env::var("CAST_NO_ISOLATE").is_err(),
+        "Table 5: inference efficiency relative to Transformer (Text task)",
+    )
+    .expect("table 5 run failed");
+    println!("{}", table.render());
+    println!("paper @4K: CAST(Top-K) 6.91x steps/s, 0.081x memory.");
+}

@@ -1,0 +1,139 @@
+//! Cluster visualization (paper Figure 4, Appendix Figures 7–9).
+//!
+//! Runs the `predict_ag` artifact to extract the per-layer affinity matrix
+//! A_g ∈ (L, B, N, Nc), derives each token's cluster assignment
+//! (argmax over clusters — the Top-K limit the paper visualizes), and for
+//! image tasks renders:
+//!   * the input image (PGM),
+//!   * per-layer cluster-assignment maps (PPM, one color per cluster),
+//!   * per-layer, per-cluster A_g score heatmaps (PGM) — the
+//!     foreground/background separation evidence of §5.4.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelState;
+use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::util::pgm::{Gray, Rgb};
+
+/// A_g for one forward pass: `scores[layer][token][cluster]` for batch
+/// element `b_idx`.
+pub struct AgScores {
+    pub layers: usize,
+    pub n: usize,
+    pub n_c: usize,
+    pub scores: Vec<f32>, // (L, N, Nc) for the selected batch element
+}
+
+impl AgScores {
+    pub fn at(&self, layer: usize, token: usize, cluster: usize) -> f32 {
+        self.scores[(layer * self.n + token) * self.n_c + cluster]
+    }
+
+    /// Argmax cluster per token for a layer (first max on ties, like
+    /// numpy's argmax).
+    pub fn assignments(&self, layer: usize) -> Vec<usize> {
+        (0..self.n)
+            .map(|t| {
+                let mut arg = 0;
+                for c in 1..self.n_c {
+                    if self.at(layer, t, c) > self.at(layer, t, arg) {
+                        arg = c;
+                    }
+                }
+                arg
+            })
+            .collect()
+    }
+
+    /// One cluster's score column as an (N,) slice copy.
+    pub fn cluster_scores(&self, layer: usize, cluster: usize) -> Vec<f32> {
+        (0..self.n).map(|t| self.at(layer, t, cluster)).collect()
+    }
+}
+
+/// Execute predict_ag and pull out batch element `b_idx`.
+pub fn cluster_assignments(
+    engine: &Arc<Engine>,
+    manifest: &Manifest,
+    state: &ModelState,
+    tokens: &HostTensor,
+    b_idx: usize,
+) -> Result<AgScores> {
+    let exe = engine.load_hlo(&manifest.hlo_path("predict_ag")?)?;
+    let mut inputs: Vec<HostTensor> = state.params.clone();
+    inputs.push(tokens.clone());
+    let out = exe.run(&inputs).context("predict_ag execution")?;
+    let ag = &out[0];
+    anyhow::ensure!(ag.shape.len() == 4, "A_g shape {:?}, want (L,B,N,Nc)", ag.shape);
+    let (l, b, n, n_c) = (ag.shape[0], ag.shape[1], ag.shape[2], ag.shape[3]);
+    anyhow::ensure!(b_idx < b, "batch index {b_idx} out of range {b}");
+    let v = ag.as_f32()?;
+    let mut scores = Vec::with_capacity(l * n * n_c);
+    for layer in 0..l {
+        let base = (layer * b + b_idx) * n * n_c;
+        scores.extend_from_slice(&v[base..base + n * n_c]);
+    }
+    Ok(AgScores { layers: l, n, n_c, scores })
+}
+
+/// Full Figure-4 pipeline for an image-task model: writes
+///   input.pgm, layer{i}_clusters.ppm, layer{i}_cluster{c}_scores.pgm
+/// into `out_dir`.  Returns the list of files written.
+pub fn visualize_image_clusters(
+    engine: &Arc<Engine>,
+    manifest: &Manifest,
+    state: &ModelState,
+    tokens: &HostTensor,
+    b_idx: usize,
+    out_dir: &Path,
+) -> Result<Vec<std::path::PathBuf>> {
+    let n = manifest.meta.seq_len;
+    let side = (n as f64).sqrt() as usize;
+    anyhow::ensure!(side * side == n, "not an image task: seq_len {n} is not square");
+    std::fs::create_dir_all(out_dir)?;
+    let mut written = Vec::new();
+
+    // input image
+    let toks = tokens.as_s32()?;
+    let img: Vec<f32> = toks[b_idx * n..(b_idx + 1) * n].iter().map(|&t| t as f32).collect();
+    let p = out_dir.join("input.pgm");
+    Gray::from_f32(side, side, &img).save(&p)?;
+    written.push(p);
+
+    let ag = cluster_assignments(engine, manifest, state, tokens, b_idx)?;
+    for layer in 0..ag.layers {
+        let assign = ag.assignments(layer);
+        let p = out_dir.join(format!("layer{layer}_clusters.ppm"));
+        Rgb::from_labels(side, side, &assign).save(&p)?;
+        written.push(p);
+        for c in 0..ag.n_c {
+            let scores = ag.cluster_scores(layer, c);
+            let p = out_dir.join(format!("layer{layer}_cluster{c}_scores.pgm"));
+            Gray::from_f32(side, side, &scores).save(&p)?;
+            written.push(p);
+        }
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ag_scores_indexing_and_argmax() {
+        // 1 layer, 3 tokens, 2 clusters
+        let scores = vec![
+            0.9, 0.1, // token 0 -> cluster 0
+            0.2, 0.8, // token 1 -> cluster 1
+            0.5, 0.5, // token 2 -> tie, argmax -> 0
+        ];
+        let ag = AgScores { layers: 1, n: 3, n_c: 2, scores };
+        assert_eq!(ag.assignments(0), vec![0, 1, 0]);
+        assert_eq!(ag.cluster_scores(0, 1), vec![0.1, 0.8, 0.5]);
+        assert_eq!(ag.at(0, 1, 1), 0.8);
+    }
+}

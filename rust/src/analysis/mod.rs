@@ -1,0 +1,5 @@
+//! Post-hoc analysis of trained models (paper §5.4 + Appendix A.6.3).
+
+pub mod clusters;
+
+pub use clusters::{cluster_assignments, visualize_image_clusters};

@@ -1,0 +1,172 @@
+//! Efficiency harness: builds the paper's Table-1 / Table-5 / Figure-3
+//! measurements out of coordinator jobs, with child-process isolation for
+//! peak-memory fidelity (see `coordinator::sweep`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::sweep::{jobs_matching, Sweep};
+use crate::coordinator::{Job, JobKind, JobResult};
+use crate::runtime::Engine;
+
+use super::tables::RelativeTable;
+
+/// Run training-efficiency jobs for every artifact whose key matches
+/// `task` at the given sequence lengths and assemble the relative table.
+pub fn efficiency_table(
+    artifacts_root: &Path,
+    task: &str,
+    seq_lens: &[usize],
+    kind: JobKind,
+    isolate: bool,
+    title: &str,
+) -> Result<RelativeTable> {
+    let sweep = Sweep::new();
+    let engine = Engine::cpu()?;
+    let mut table = RelativeTable::new(title, "vanilla", seq_lens.to_vec());
+    let task_owned = task.to_string();
+    let wanted: Vec<usize> = seq_lens.to_vec();
+    let jobs = jobs_matching(
+        artifacts_root,
+        move |key| {
+            // only the efficiency-suite configs (batch 2) at the requested
+            // sequence lengths — not the tiny/LRA/ablation artifacts that
+            // share the task prefix
+            key.starts_with(&format!("{task_owned}_"))
+                && key.contains("_b2")
+                && parse_key(key).map(|(_, seq)| wanted.contains(&seq)).unwrap_or(false)
+        },
+        kind,
+        7,
+    );
+    anyhow::ensure!(
+        !jobs.is_empty(),
+        "no artifacts for task {task:?} under {artifacts_root:?} — \
+         run `make artifacts-efficiency` first"
+    );
+    for (job, res) in sweep.run_all(&engine, &jobs, isolate) {
+        let key = job.artifact_dir.file_name().unwrap().to_string_lossy().to_string();
+        match res {
+            Ok(result) => {
+                if let Some((variant, seq)) = parse_key(&key) {
+                    if seq_lens.contains(&seq) {
+                        table.insert(&variant, seq, result);
+                    }
+                }
+            }
+            Err(e) => crate::info!("skipping {key}: {e:#}"),
+        }
+    }
+    Ok(table)
+}
+
+/// Parse `(variant, seq_len)` out of an artifact key like
+/// `text_cast_topk_n2048_b2_c10_k200`.
+pub fn parse_key(key: &str) -> Option<(String, usize)> {
+    let parts: Vec<&str> = key.split('_').collect();
+    let n_pos = parts.iter().position(|p| {
+        p.starts_with('n') && p[1..].chars().all(|c| c.is_ascii_digit()) && p.len() > 1
+    })?;
+    let seq: usize = parts[n_pos][1..].parse().ok()?;
+    let variant = parts[1..n_pos].join("_");
+    Some((variant, seq))
+}
+
+/// One measured efficiency point (used by the Figure-3 bench).
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub task: String,
+    pub variant: String,
+    pub kappa: usize,
+    pub n_c: usize,
+    pub result: JobResult,
+}
+
+/// Measure every `{task}_{cast_*}` artifact whose key carries `kNNN`,
+/// returning points sorted by kappa — the Figure-3 x-axis.
+pub fn ablation_points(
+    artifacts_root: &Path,
+    task: &str,
+    steps: usize,
+    isolate: bool,
+) -> Result<Vec<AblationPoint>> {
+    let sweep = Sweep::new();
+    let engine = Engine::cpu()?;
+    let task_owned = task.to_string();
+    const SWEEP_KAPPAS: [usize; 5] = [32, 64, 128, 256, 512];
+    let jobs = jobs_matching(
+        artifacts_root,
+        move |key| {
+            key.starts_with(&format!("{task_owned}_cast"))
+                && key.contains("_b2")
+                && key
+                    .split('_')
+                    .filter(|p| p.starts_with('k'))
+                    .next_back()
+                    .and_then(|p| p[1..].parse::<usize>().ok())
+                    .map(|k| SWEEP_KAPPAS.contains(&k))
+                    .unwrap_or(false)
+        },
+        JobKind::TrainEfficiency { steps },
+        11,
+    );
+    let mut points = Vec::new();
+    for (job, res) in sweep.run_all(&engine, &jobs, isolate) {
+        let key = job.artifact_dir.file_name().unwrap().to_string_lossy().to_string();
+        let result = match res {
+            Ok(r) => r,
+            Err(e) => {
+                crate::info!("skipping {key}: {e:#}");
+                continue;
+            }
+        };
+        let (variant, _) = match parse_key(&key) {
+            Some(v) => v,
+            None => continue,
+        };
+        let kappa = field(&key, 'k');
+        let n_c = field(&key, 'c');
+        if let (Some(kappa), Some(n_c)) = (kappa, n_c) {
+            points.push(AblationPoint { task: task.to_string(), variant, kappa, n_c, result });
+        }
+    }
+    points.sort_by_key(|p| (p.variant.clone(), p.kappa));
+    Ok(points)
+}
+
+fn field(key: &str, prefix: char) -> Option<usize> {
+    key.split('_')
+        .filter(|p| p.starts_with(prefix) && p[1..].chars().all(|c| c.is_ascii_digit()) && p.len() > 1)
+        .next_back()
+        .and_then(|p| p[1..].parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_keys() {
+        assert_eq!(
+            parse_key("text_cast_topk_n2048_b2_c10_k200"),
+            Some(("cast_topk".to_string(), 2048))
+        );
+        assert_eq!(parse_key("text_vanilla_n1024_b2"), Some(("vanilla".to_string(), 1024)));
+        assert_eq!(
+            parse_key("image_cast_sa_n1024_b8_c8_k128"),
+            Some(("cast_sa".to_string(), 1024))
+        );
+        assert_eq!(parse_key("garbage"), None);
+    }
+
+    #[test]
+    fn field_extraction() {
+        let key = "text_cast_topk_n2048_b2_c10_k200";
+        assert_eq!(field(key, 'k'), Some(200));
+        assert_eq!(field(key, 'c'), Some(10));
+        assert_eq!(field(key, 'b'), Some(2));
+        assert_eq!(field(key, 'z'), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark infrastructure: the measurement harness behind every paper
+//! table/figure (`harness`), the analytic complexity model (`memmodel`),
+//! and paper-shaped report rendering (`tables`).
+
+pub mod harness;
+pub mod memmodel;
+pub mod tables;
+
+pub use harness::{ablation_points, efficiency_table, parse_key};
+pub use memmodel::{kernel_estimate, AttnShape};
+pub use tables::{AccuracyTable, RelativeTable};

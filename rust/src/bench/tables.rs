@@ -1,0 +1,190 @@
+//! Table formatting: renders benchmark results in the shape the paper
+//! prints them (relative steps/s and peak memory vs the Transformer row).
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::JobResult;
+
+/// A (variant, seq_len) → result grid with a designated baseline variant,
+/// reproducing the layout of paper Tables 1 and 5.
+pub struct RelativeTable {
+    pub title: String,
+    pub seq_lens: Vec<usize>,
+    pub baseline: String,
+    /// variant -> seq_len -> result
+    pub cells: BTreeMap<String, BTreeMap<usize, JobResult>>,
+}
+
+impl RelativeTable {
+    pub fn new(title: &str, baseline: &str, seq_lens: Vec<usize>) -> RelativeTable {
+        RelativeTable {
+            title: title.to_string(),
+            baseline: baseline.to_string(),
+            seq_lens,
+            cells: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, variant: &str, seq_len: usize, result: JobResult) {
+        self.cells.entry(variant.to_string()).or_default().insert(seq_len, result);
+    }
+
+    fn baseline_cell(&self, seq: usize) -> Option<&JobResult> {
+        self.cells.get(&self.baseline)?.get(&seq)
+    }
+
+    pub fn speed_rel(&self, variant: &str, seq: usize) -> Option<f64> {
+        let cell = self.cells.get(variant)?.get(&seq)?;
+        let base = self.baseline_cell(seq)?;
+        Some(cell.steps_per_sec / base.steps_per_sec)
+    }
+
+    pub fn mem_rel(&self, variant: &str, seq: usize) -> Option<f64> {
+        let cell = self.cells.get(variant)?.get(&seq)?;
+        let base = self.baseline_cell(seq)?;
+        if base.peak_rss_bytes == 0 {
+            return None;
+        }
+        Some(cell.peak_rss_bytes as f64 / base.peak_rss_bytes as f64)
+    }
+
+    /// Render the paper-style table: one row per variant, relative
+    /// steps/s then relative peak memory per sequence length.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n\n", self.title));
+        out.push_str("| Model |");
+        for s in &self.seq_lens {
+            out.push_str(&format!(" sps@{s} ↑ |"));
+        }
+        for s in &self.seq_lens {
+            out.push_str(&format!(" mem@{s} ↓ |"));
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        for _ in 0..self.seq_lens.len() * 2 {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for variant in self.cells.keys() {
+            out.push_str(&format!("| {variant} |"));
+            for &s in &self.seq_lens {
+                match self.speed_rel(variant, s) {
+                    Some(r) => out.push_str(&format!(" {r:.2} |")),
+                    None => out.push_str(" - |"),
+                }
+            }
+            for &s in &self.seq_lens {
+                match self.mem_rel(variant, s) {
+                    Some(r) => out.push_str(&format!(" {r:.2} |")),
+                    None => out.push_str(" - |"),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Plain accuracy table (paper Table 2 shape): task columns, model rows.
+pub struct AccuracyTable {
+    pub title: String,
+    pub tasks: Vec<String>,
+    /// model -> task -> accuracy (percent)
+    pub rows: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+impl AccuracyTable {
+    pub fn new(title: &str, tasks: &[&str]) -> AccuracyTable {
+        AccuracyTable {
+            title: title.to_string(),
+            tasks: tasks.iter().map(|s| s.to_string()).collect(),
+            rows: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, model: &str, task: &str, acc_pct: f64) {
+        self.rows.entry(model.to_string()).or_default().insert(task.to_string(), acc_pct);
+    }
+
+    pub fn average(&self, model: &str) -> Option<f64> {
+        let row = self.rows.get(model)?;
+        if row.is_empty() {
+            return None;
+        }
+        Some(row.values().sum::<f64>() / row.len() as f64)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}\n\n| Model |", self.title);
+        for t in &self.tasks {
+            out.push_str(&format!(" {t} |"));
+        }
+        out.push_str(" Avg |\n|---|");
+        for _ in 0..=self.tasks.len() {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for (model, row) in &self.rows {
+            out.push_str(&format!("| {model} |"));
+            for t in &self.tasks {
+                match row.get(t) {
+                    Some(a) => out.push_str(&format!(" {a:.2} |")),
+                    None => out.push_str(" - |"),
+                }
+            }
+            match self.average(model) {
+                Some(a) => out.push_str(&format!(" {a:.2} |\n")),
+                None => out.push_str(" - |\n"),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(sps: f64, rss: u64) -> JobResult {
+        JobResult {
+            key: "k".into(),
+            kind: "train_eff".into(),
+            steps_per_sec: sps,
+            peak_rss_bytes: rss,
+            final_loss: 0.0,
+            final_acc: 0.0,
+            eval_acc: None,
+        }
+    }
+
+    #[test]
+    fn relative_table_math() {
+        let mut t = RelativeTable::new("Table 1", "vanilla", vec![1024, 2048]);
+        t.insert("vanilla", 1024, result(1.0, 1000));
+        t.insert("vanilla", 2048, result(0.5, 4000));
+        t.insert("cast_topk", 1024, result(2.0, 400));
+        t.insert("cast_topk", 2048, result(1.5, 700));
+        assert_eq!(t.speed_rel("cast_topk", 1024), Some(2.0));
+        assert_eq!(t.speed_rel("cast_topk", 2048), Some(3.0));
+        assert_eq!(t.mem_rel("cast_topk", 1024), Some(0.4));
+        let text = t.render();
+        assert!(text.contains("| cast_topk | 2.00 | 3.00 | 0.40 |"), "{text}");
+    }
+
+    #[test]
+    fn accuracy_table_average() {
+        let mut t = AccuracyTable::new("Table 2", &["listops", "text"]);
+        t.insert("cast", "listops", 40.0);
+        t.insert("cast", "text", 60.0);
+        assert_eq!(t.average("cast"), Some(50.0));
+        assert!(t.render().contains("| cast | 40.00 | 60.00 | 50.00 |"));
+    }
+
+    #[test]
+    fn missing_cells_render_dash() {
+        let mut t = RelativeTable::new("T", "vanilla", vec![1024]);
+        t.insert("cast", 1024, result(2.0, 100));
+        assert!(t.render().contains("| cast | - | - |"));
+    }
+}

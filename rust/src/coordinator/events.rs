@@ -1,0 +1,81 @@
+//! Append-only event log shared across coordinator components; dumped as
+//! JSON next to experiment outputs so every run is auditable.
+
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub t: f64,
+    pub kind: String,
+    pub detail: String,
+}
+
+#[derive(Default)]
+pub struct EventLog {
+    events: Mutex<Vec<Event>>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn emit(&self, kind: &str, detail: impl Into<String>) {
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let e = Event { t, kind: kind.to_string(), detail: detail.into() };
+        crate::debug!("event {}: {}", e.kind, e.detail);
+        self.events.lock().unwrap().push(e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn count(&self, kind: &str) -> usize {
+        self.events.lock().unwrap().iter().filter(|e| e.kind == kind).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("t", Json::num(e.t)),
+                        ("kind", Json::str(&e.kind)),
+                        ("detail", Json::str(&e.detail)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_and_counts() {
+        let log = EventLog::new();
+        log.emit("job_start", "a");
+        log.emit("job_done", "a");
+        log.emit("job_start", "b");
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.count("job_start"), 2);
+        let j = log.to_json().to_string();
+        assert!(j.contains("job_done"));
+    }
+}

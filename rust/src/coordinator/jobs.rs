@@ -1,0 +1,144 @@
+//! Job specifications: a unit of coordinated work over one artifact
+//! directory — training run, efficiency measurement, or evaluation.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::train::{Schedule, TrainConfig};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobKind {
+    /// Train for `steps` steps, report loss/accuracy trajectory.
+    Train { steps: usize, lr: f32, warmup: usize },
+    /// Measure training throughput + peak memory (Table 1 / Fig 3 rows).
+    TrainEfficiency { steps: usize },
+    /// Measure inference throughput + peak memory (Table 5 rows).
+    InferEfficiency { steps: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub artifact_dir: PathBuf,
+    pub kind: JobKind,
+    pub seed: u64,
+}
+
+impl Job {
+    pub fn train_config(&self) -> TrainConfig {
+        match self.kind {
+            JobKind::Train { steps, lr, warmup } => TrainConfig {
+                steps,
+                schedule: Schedule::Warmup { lr, warmup },
+                seed: self.seed,
+                eval_every: 0,
+                eval_batches: 8,
+                ..Default::default()
+            },
+            JobKind::TrainEfficiency { steps } => TrainConfig {
+                steps,
+                schedule: Schedule::Constant { lr: 1e-3 },
+                seed: self.seed,
+                eval_every: 0,
+                eval_batches: 0,
+                log_every: 0,
+                ..Default::default()
+            },
+            JobKind::InferEfficiency { steps } => TrainConfig {
+                steps,
+                schedule: Schedule::Constant { lr: 0.0 },
+                seed: self.seed,
+                eval_every: 0,
+                eval_batches: steps,
+                log_every: 0,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{:?} on {}", self.kind, self.artifact_dir.display())
+    }
+}
+
+/// The outcome of a job, as aggregated by the sweep runner.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub key: String,
+    pub kind: String,
+    pub steps_per_sec: f64,
+    pub peak_rss_bytes: u64,
+    pub final_loss: f32,
+    pub final_acc: f32,
+    pub eval_acc: Option<f32>,
+}
+
+impl JobResult {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("key", Json::str(&self.key)),
+            ("kind", Json::str(&self.kind)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+            ("peak_rss_bytes", Json::num(self.peak_rss_bytes as f64)),
+            ("final_loss", Json::num(self.final_loss as f64)),
+            ("final_acc", Json::num(self.final_acc as f64)),
+        ];
+        if let Some(acc) = self.eval_acc {
+            fields.push(("eval_acc", Json::num(acc as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobResult> {
+        use anyhow::Context;
+        Ok(JobResult {
+            key: j.get("key").and_then(Json::as_str).context("key")?.to_string(),
+            kind: j.get("kind").and_then(Json::as_str).context("kind")?.to_string(),
+            steps_per_sec: j.get("steps_per_sec").and_then(Json::as_f64).context("sps")?,
+            peak_rss_bytes: j
+                .get("peak_rss_bytes")
+                .and_then(Json::as_f64)
+                .context("rss")? as u64,
+            final_loss: j.get("final_loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+            final_acc: j.get("final_acc").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+            eval_acc: j.get("eval_acc").and_then(Json::as_f64).map(|x| x as f32),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_config_from_kind() {
+        let job = Job {
+            artifact_dir: PathBuf::from("/tmp/x"),
+            kind: JobKind::Train { steps: 50, lr: 2e-3, warmup: 5 },
+            seed: 9,
+        };
+        let cfg = job.train_config();
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.schedule, Schedule::Warmup { lr: 2e-3, warmup: 5 });
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn result_json_roundtrip() {
+        let r = JobResult {
+            key: "k".into(),
+            kind: "train".into(),
+            steps_per_sec: 3.5,
+            peak_rss_bytes: 1024,
+            final_loss: 0.5,
+            final_acc: 0.9,
+            eval_acc: Some(0.8),
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let back = JobResult::from_json(&j).unwrap();
+        assert_eq!(back.key, "k");
+        assert_eq!(back.peak_rss_bytes, 1024);
+        assert_eq!(back.eval_acc, Some(0.8));
+    }
+}

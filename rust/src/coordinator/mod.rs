@@ -1,0 +1,17 @@
+//! The coordinator: job specifications, the sweep/ablation runner, and the
+//! event log.
+//!
+//! The paper's contribution lives at L1/L2 (the attention mechanism), so —
+//! per the architecture notes — L3's coordination role is the *experiment
+//! orchestrator*: it owns process lifecycle, artifact discovery, the
+//! training/benchmark job queue, per-job isolation (child processes for
+//! peak-memory fidelity), and result aggregation into the paper's tables
+//! and figures.
+
+pub mod events;
+pub mod jobs;
+pub mod sweep;
+
+pub use events::{Event, EventLog};
+pub use jobs::{Job, JobKind, JobResult};
+pub use sweep::Sweep;

@@ -1,0 +1,267 @@
+//! The sweep runner: executes job lists (hyperparameter sweeps, the
+//! Figure-3 ablation grid, the Table-1/5 efficiency rows).
+//!
+//! Two execution modes:
+//! * **in-process** — shares one PJRT engine; right for accuracy sweeps.
+//! * **isolated** — re-invokes the current binary (`cast _job …`) per job
+//!   so each measurement gets a private address space and its `VmHWM`
+//!   (peak RSS) is attributable to that config alone.  This is how the
+//!   paper's peak-memory columns are reproduced on CPU.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data;
+use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::train::{score_logits, Trainer};
+use crate::util::json::Json;
+use crate::util::Timer;
+
+use super::events::EventLog;
+use super::jobs::{Job, JobKind, JobResult};
+
+pub struct Sweep {
+    pub log: EventLog,
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sweep {
+    pub fn new() -> Sweep {
+        Sweep { log: EventLog::new() }
+    }
+
+    /// Run a job inside this process (engine shared / cached).
+    pub fn run_inprocess(&self, engine: &Arc<Engine>, job: &Job) -> Result<JobResult> {
+        self.log.emit("job_start", job.describe());
+        let manifest = Manifest::load(&job.artifact_dir)?;
+        let key = manifest.key.clone();
+        let result = match job.kind {
+            JobKind::Train { .. } | JobKind::TrainEfficiency { .. } => {
+                let mut trainer =
+                    Trainer::new(engine.clone(), manifest, job.train_config(), job.seed as u32)?;
+                let report = trainer.run()?;
+                JobResult {
+                    key,
+                    kind: kind_name(&job.kind).into(),
+                    steps_per_sec: report.steps_per_sec,
+                    peak_rss_bytes: crate::util::peak_rss_bytes().unwrap_or(0),
+                    final_loss: report.final_train_loss,
+                    final_acc: report.final_train_acc,
+                    eval_acc: report.best_eval_acc,
+                }
+            }
+            JobKind::InferEfficiency { steps } => {
+                self.infer_efficiency(engine, &manifest, steps, job.seed)?
+            }
+        };
+        self.log.emit("job_done", format!("{} {:.3} steps/s", result.key, result.steps_per_sec));
+        Ok(result)
+    }
+
+    /// Inference throughput: run `predict` over `steps` batches.
+    fn infer_efficiency(
+        &self,
+        engine: &Arc<Engine>,
+        manifest: &Manifest,
+        steps: usize,
+        seed: u64,
+    ) -> Result<JobResult> {
+        let gen = data::task(&manifest.meta.task)?;
+        let exe = engine.load_hlo(&manifest.hlo_path("predict")?)?;
+        let state = crate::model::ModelState::init(engine, manifest, seed as u32)?;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        // warmup execution (compile/caches) excluded from timing
+        let warm = data::make_batch(gen.as_ref(), &mut rng, manifest.meta.batch, manifest.meta.seq_len);
+        let mut inputs: Vec<HostTensor> = state.params.clone();
+        inputs.push(warm.tokens);
+        let _ = exe.run(&inputs)?;
+
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let timer = Timer::start();
+        for _ in 0..steps {
+            let batch =
+                data::make_batch(gen.as_ref(), &mut rng, manifest.meta.batch, manifest.meta.seq_len);
+            let mut inputs: Vec<HostTensor> = state.params.clone();
+            inputs.push(batch.tokens);
+            let out = exe.run(&inputs)?;
+            let (c, _) = score_logits(&out[0], batch.labels.as_s32()?)?;
+            correct += c;
+            total += manifest.meta.batch;
+        }
+        let secs = timer.seconds();
+        Ok(JobResult {
+            key: manifest.key.clone(),
+            kind: "infer_eff".into(),
+            steps_per_sec: steps as f64 / secs.max(1e-9),
+            peak_rss_bytes: crate::util::peak_rss_bytes().unwrap_or(0),
+            final_loss: f32::NAN,
+            final_acc: correct as f32 / total.max(1) as f32,
+            eval_acc: None,
+        })
+    }
+
+    /// Run a job in a child process for isolated peak-RSS measurement.
+    pub fn run_isolated(&self, job: &Job) -> Result<JobResult> {
+        self.log.emit("job_spawn", job.describe());
+        let exe = coordinator_binary()?;
+        let (kind, steps) = match job.kind {
+            JobKind::Train { steps, .. } => ("train", steps),
+            JobKind::TrainEfficiency { steps } => ("train_eff", steps),
+            JobKind::InferEfficiency { steps } => ("infer_eff", steps),
+        };
+        let out = std::process::Command::new(exe)
+            .args([
+                "_job",
+                "--dir",
+                job.artifact_dir.to_str().unwrap(),
+                "--kind",
+                kind,
+                "--steps",
+                &steps.to_string(),
+                "--seed",
+                &job.seed.to_string(),
+            ])
+            .output()
+            .context("spawning job child")?;
+        if !out.status.success() {
+            bail!(
+                "job child failed ({}): {}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        // last line of stdout is the result JSON
+        let line = stdout
+            .lines()
+            .rev()
+            .find(|l| l.trim_start().starts_with('{'))
+            .context("no JSON result from job child")?;
+        let parsed = Json::parse(line.trim()).context("parsing job child result")?;
+        let result = JobResult::from_json(&parsed)?;
+        self.log.emit("job_done", format!("{} (isolated)", result.key));
+        Ok(result)
+    }
+
+    /// Run all jobs; `isolate` selects child-process mode.
+    pub fn run_all(
+        &self,
+        engine: &Arc<Engine>,
+        jobs: &[Job],
+        isolate: bool,
+    ) -> Vec<(Job, Result<JobResult>)> {
+        jobs.iter()
+            .map(|job| {
+                let res = if isolate {
+                    self.run_isolated(job)
+                } else {
+                    self.run_inprocess(engine, job)
+                };
+                if let Err(e) = &res {
+                    self.log.emit("job_error", format!("{}: {e:#}", job.describe()));
+                }
+                (job.clone(), res)
+            })
+            .collect()
+    }
+}
+
+/// Resolve the `cast` coordinator binary for isolated child jobs.
+///
+/// MUST NOT blindly use `current_exe()`: when the caller is a bench/test
+/// binary, spawning itself with `_job` args would recursively re-run the
+/// whole bench (a self-replicating process chain).  Resolution order:
+/// `$CAST_BIN` override → current exe if it *is* `cast` → a `cast` file in
+/// an ancestor target directory (bench/test binaries live in
+/// `target/<profile>/deps/`, the bin one level up).
+pub fn coordinator_binary() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("CAST_BIN") {
+        let p = std::path::PathBuf::from(p);
+        anyhow::ensure!(p.is_file(), "CAST_BIN={p:?} does not exist");
+        return Ok(p);
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    if exe.file_stem().map(|s| s == "cast").unwrap_or(false) {
+        return Ok(exe);
+    }
+    for anc in exe.ancestors().skip(1) {
+        let cand = anc.join("cast");
+        if cand.is_file() {
+            return Ok(cand);
+        }
+    }
+    bail!(
+        "cannot locate the `cast` binary near {exe:?}; build it \
+         (`cargo build --release`) or set CAST_BIN"
+    )
+}
+
+pub fn kind_name(kind: &JobKind) -> &'static str {
+    match kind {
+        JobKind::Train { .. } => "train",
+        JobKind::TrainEfficiency { .. } => "train_eff",
+        JobKind::InferEfficiency { .. } => "infer_eff",
+    }
+}
+
+/// Discover jobs for every artifact directory matching a key predicate.
+pub fn jobs_matching(
+    artifacts_root: &Path,
+    pred: impl Fn(&str) -> bool,
+    kind: JobKind,
+    seed: u64,
+) -> Vec<Job> {
+    crate::runtime::artifacts::discover(artifacts_root)
+        .into_iter()
+        .filter(|dir| {
+            dir.file_name().map(|n| pred(&n.to_string_lossy())).unwrap_or(false)
+        })
+        .map(|dir| Job { artifact_dir: dir, kind: kind.clone(), seed })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_matching_filters_by_key() {
+        let root = std::env::temp_dir().join("cast_sweep_test");
+        let _ = std::fs::remove_dir_all(&root);
+        for name in ["text_cast_a", "text_vanilla_b", "image_cast_c"] {
+            let d = root.join(name);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("manifest.json"), "{}").unwrap();
+        }
+        let jobs = jobs_matching(
+            &root,
+            |k| k.starts_with("text_"),
+            JobKind::TrainEfficiency { steps: 3 },
+            0,
+        );
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs.iter().all(|j| j.artifact_dir.to_string_lossy().contains("text_")));
+    }
+}
+
+#[cfg(test)]
+mod binary_tests {
+    #[test]
+    fn coordinator_binary_never_returns_a_test_binary() {
+        // current_exe here is the unit-test binary in target/debug/deps;
+        // the resolver must either find a real `cast` bin or error —
+        // never return ourselves (which caused a self-spawning chain).
+        match super::coordinator_binary() {
+            Ok(p) => assert_eq!(p.file_stem().unwrap(), "cast", "{p:?}"),
+            Err(_) => {} // acceptable when the bin hasn't been built
+        }
+    }
+}

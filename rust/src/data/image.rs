@@ -1,0 +1,240 @@
+//! Image (sequential pixel classification): synthetic stand-in for LRA's
+//! sCIFAR task.
+//!
+//! 32x32 8-bit grayscale renders of ten procedurally drawn classes
+//! (disk, box, cross, h-stripes, v-stripes, checker, diagonal, ring,
+//! gradient blob, two-disk scene), with randomized position, size,
+//! intensity, background level, and additive noise.  The image is
+//! raster-scanned into a 1024-token sequence of pixel intensities —
+//! exactly the LRA pipeline, probing 2-D structure recovery from a 1-D
+//! serialization.
+
+use crate::util::rng::Rng;
+
+use super::{Example, TaskGen};
+
+pub const SIDE: usize = 32;
+
+#[derive(Default)]
+pub struct ImageClassify;
+
+pub struct Canvas {
+    pub side: usize,
+    pub px: Vec<f32>,
+}
+
+impl Canvas {
+    pub fn new(side: usize, bg: f32) -> Canvas {
+        Canvas { side, px: vec![bg; side * side] }
+    }
+
+    pub fn set(&mut self, x: i32, y: i32, v: f32) {
+        if x >= 0 && y >= 0 && (x as usize) < self.side && (y as usize) < self.side {
+            self.px[y as usize * self.side + x as usize] = v;
+        }
+    }
+
+    pub fn to_tokens(&self, rng: &mut Rng, noise: f32) -> Vec<i32> {
+        self.px
+            .iter()
+            .map(|&v| {
+                let n = (rng.gaussian() as f32) * noise;
+                ((v + n).clamp(0.0, 1.0) * 255.0) as i32
+            })
+            .collect()
+    }
+}
+
+fn draw_disk(c: &mut Canvas, cx: f32, cy: f32, r: f32, v: f32) {
+    for y in 0..c.side as i32 {
+        for x in 0..c.side as i32 {
+            let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+            if d2 <= r * r {
+                c.set(x, y, v);
+            }
+        }
+    }
+}
+
+fn draw_ring(c: &mut Canvas, cx: f32, cy: f32, r: f32, w: f32, v: f32) {
+    for y in 0..c.side as i32 {
+        for x in 0..c.side as i32 {
+            let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+            if (d - r).abs() <= w {
+                c.set(x, y, v);
+            }
+        }
+    }
+}
+
+fn draw_box(c: &mut Canvas, x0: i32, y0: i32, w: i32, h: i32, v: f32) {
+    for y in y0..y0 + h {
+        for x in x0..x0 + w {
+            c.set(x, y, v);
+        }
+    }
+}
+
+impl ImageClassify {
+    pub fn render(&self, rng: &mut Rng, class: usize) -> Canvas {
+        let side = SIDE;
+        let bg = 0.1 + 0.2 * rng.f32();
+        let fg = 0.7 + 0.3 * rng.f32();
+        let mut c = Canvas::new(side, bg);
+        let s = side as f32;
+        let cx = s * (0.3 + 0.4 * rng.f32());
+        let cy = s * (0.3 + 0.4 * rng.f32());
+        let r = s * (0.12 + 0.12 * rng.f32());
+        match class {
+            0 => draw_disk(&mut c, cx, cy, r, fg),
+            1 => {
+                let w = (r * 2.0) as i32;
+                draw_box(&mut c, cx as i32 - w / 2, cy as i32 - w / 2, w, w, fg);
+            }
+            2 => {
+                // cross
+                let w = (r * 2.2) as i32;
+                let t = (r * 0.5).max(1.5) as i32;
+                draw_box(&mut c, cx as i32 - w / 2, cy as i32 - t / 2, w, t.max(1), fg);
+                draw_box(&mut c, cx as i32 - t / 2, cy as i32 - w / 2, t.max(1), w, fg);
+            }
+            3 => {
+                // horizontal stripes
+                let period = rng.range(3, 6);
+                for y in 0..side {
+                    if (y / period) % 2 == 0 {
+                        for x in 0..side {
+                            c.set(x as i32, y as i32, fg);
+                        }
+                    }
+                }
+            }
+            4 => {
+                // vertical stripes
+                let period = rng.range(3, 6);
+                for x in 0..side {
+                    if (x / period) % 2 == 0 {
+                        for y in 0..side {
+                            c.set(x as i32, y as i32, fg);
+                        }
+                    }
+                }
+            }
+            5 => {
+                // checkerboard
+                let period = rng.range(3, 6);
+                for y in 0..side {
+                    for x in 0..side {
+                        if ((x / period) + (y / period)) % 2 == 0 {
+                            c.set(x as i32, y as i32, fg);
+                        }
+                    }
+                }
+            }
+            6 => {
+                // thick diagonal line
+                let t = rng.range(2, 4) as f32;
+                let up = rng.bool(0.5);
+                for y in 0..side as i32 {
+                    for x in 0..side as i32 {
+                        let d = if up { (x - y).abs() } else { (x + y - side as i32 + 1).abs() };
+                        if (d as f32) <= t {
+                            c.set(x, y, fg);
+                        }
+                    }
+                }
+            }
+            7 => draw_ring(&mut c, cx, cy, r * 1.4, (r * 0.35).max(1.0), fg),
+            8 => {
+                // radial gradient blob
+                for y in 0..side as i32 {
+                    for x in 0..side as i32 {
+                        let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+                        let v = (fg - bg) * (1.0 - (d / (2.2 * r)).min(1.0)) + bg;
+                        c.set(x, y, v);
+                    }
+                }
+            }
+            9 => {
+                // two-disk scene
+                draw_disk(&mut c, cx * 0.6, cy * 0.6, r * 0.8, fg);
+                draw_disk(&mut c, s - cx * 0.5, s - cy * 0.5, r * 0.8, fg * 0.9);
+            }
+            _ => unreachable!(),
+        }
+        c
+    }
+}
+
+impl TaskGen for ImageClassify {
+    fn name(&self) -> &'static str {
+        "image"
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn example(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        assert_eq!(seq_len, SIDE * SIDE, "image task requires seq_len = {}", SIDE * SIDE);
+        let class = rng.below(10);
+        let canvas = self.render(rng, class);
+        let tokens = canvas.to_tokens(rng, 0.03);
+        Example { tokens, tokens2: None, label: class as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn tokens_are_byte_range() {
+        let gen = ImageClassify;
+        let ex = gen.example(&mut Rng::new(1), 1024);
+        assert!(ex.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn prop_classes_visually_distinct_from_background() {
+        let gen = ImageClassify;
+        prop::check(
+            "foreground pixels exist",
+            prop::Config { cases: 50, ..Default::default() },
+            |rng| gen.example(rng, 1024),
+            |ex| {
+                // histogram spread: a degenerate render would be constant
+                let min = ex.tokens.iter().min().unwrap();
+                let max = ex.tokens.iter().max().unwrap();
+                if max - min > 60 {
+                    Ok(())
+                } else {
+                    Err(format!("image nearly constant (range {})", max - min))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn stripes_have_expected_autocorrelation() {
+        // class 3 = horizontal stripes: rows constant, columns alternate
+        let gen = ImageClassify;
+        let mut rng = Rng::new(42);
+        let c = gen.render(&mut rng, 3);
+        let row0: Vec<f32> = c.px[0..SIDE].to_vec();
+        let spread = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            - row0.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(spread < 1e-6, "row of h-stripes should be constant");
+    }
+
+    #[test]
+    #[should_panic(expected = "seq_len")]
+    fn wrong_seq_len_panics() {
+        ImageClassify.example(&mut Rng::new(1), 999);
+    }
+}

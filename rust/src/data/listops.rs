@@ -1,0 +1,245 @@
+//! ListOps (Nangia & Bowman, 2018; LRA variant): nested list operations.
+//!
+//! This task is synthetic *by construction*, so unlike the other LRA tasks
+//! we reproduce it exactly: expressions over MAX / MIN / MED / SUM_MOD with
+//! operands 0..9 and nesting, serialized to tokens, 10-way classification
+//! of the expression's value.
+//!
+//! Example (flattened):  [MAX 4 [MIN 2 8 ] 7 ]  ->  7
+//!
+//! The module also ships an independent parser/evaluator (`eval_tokens`)
+//! used by the property tests: generator output re-parsed and re-evaluated
+//! must reproduce the label.
+
+use crate::util::rng::Rng;
+
+use super::{fit, Example, TaskGen};
+
+// token ids (vocab = 24, a few reserved)
+pub const PAD: i32 = 0;
+pub const DIGIT0: i32 = 1; // digits d -> 1 + d
+pub const OP_MAX: i32 = 11;
+pub const OP_MIN: i32 = 12;
+pub const OP_MED: i32 = 13;
+pub const OP_SM: i32 = 14; // SUM_MOD
+pub const CLOSE: i32 = 15;
+pub const VOCAB: usize = 24;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf(i32),
+    Op(i32, Vec<Node>),
+}
+
+pub struct ListOps {
+    pub max_args: usize,
+    pub max_depth: usize,
+}
+
+impl Default for ListOps {
+    fn default() -> Self {
+        ListOps { max_args: 5, max_depth: 6 }
+    }
+}
+
+impl ListOps {
+    fn gen_node(&self, rng: &mut Rng, depth: usize, budget: &mut isize) -> Node {
+        // each op costs 2 tokens (open+close), each leaf 1
+        *budget -= 1;
+        let can_nest = depth < self.max_depth && *budget > 6;
+        if !can_nest || rng.bool(0.55) {
+            return Node::Leaf(rng.below(10) as i32);
+        }
+        let op = *rng.choice(&[OP_MAX, OP_MIN, OP_MED, OP_SM]);
+        *budget -= 1; // close token
+        let n_args = rng.range(2, self.max_args);
+        let args = (0..n_args).map(|_| self.gen_node(rng, depth + 1, budget)).collect();
+        Node::Op(op, args)
+    }
+}
+
+fn eval_node(n: &Node) -> i32 {
+    match n {
+        Node::Leaf(d) => *d,
+        Node::Op(op, args) => {
+            let mut vals: Vec<i32> = args.iter().map(eval_node).collect();
+            match *op {
+                OP_MAX => *vals.iter().max().unwrap(),
+                OP_MIN => *vals.iter().min().unwrap(),
+                OP_MED => {
+                    vals.sort();
+                    vals[vals.len() / 2]
+                }
+                OP_SM => vals.iter().sum::<i32>() % 10,
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+fn serialize(n: &Node, out: &mut Vec<i32>) {
+    match n {
+        Node::Leaf(d) => out.push(DIGIT0 + d),
+        Node::Op(op, args) => {
+            out.push(*op);
+            for a in args {
+                serialize(a, out);
+            }
+            out.push(CLOSE);
+        }
+    }
+}
+
+impl TaskGen for ListOps {
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+
+    fn vocab(&self) -> usize {
+        VOCAB
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn example(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        // fill roughly 60-95% of the sequence with real expression tokens
+        let target = rng.range((seq_len * 6) / 10, (seq_len * 19) / 20);
+        let mut budget = target as isize;
+        // root is always an operation (as in the original dataset)
+        let op = *rng.choice(&[OP_MAX, OP_MIN, OP_MED, OP_SM]);
+        let n_args = rng.range(2, self.max_args);
+        budget -= 2;
+        let args: Vec<Node> =
+            (0..n_args).map(|_| self.gen_node(rng, 1, &mut budget)).collect();
+        let root = Node::Op(op, args);
+        let label = eval_node(&root);
+        let mut tokens = Vec::with_capacity(seq_len);
+        serialize(&root, &mut tokens);
+        Example { tokens: fit(tokens, seq_len), tokens2: None, label }
+    }
+}
+
+/// Independent recursive-descent evaluator over serialized tokens.
+/// Returns None on malformed input (used by property tests and as the
+/// trainer's label-sanity check).
+pub fn eval_tokens(tokens: &[i32]) -> Option<i32> {
+    let mut pos = 0usize;
+    let v = parse(tokens, &mut pos)?;
+    // ignore trailing padding
+    if tokens[pos..].iter().any(|&t| t != PAD) {
+        return None;
+    }
+    Some(v)
+}
+
+fn parse(tokens: &[i32], pos: &mut usize) -> Option<i32> {
+    let t = *tokens.get(*pos)?;
+    *pos += 1;
+    match t {
+        d if (DIGIT0..DIGIT0 + 10).contains(&d) => Some(d - DIGIT0),
+        op @ (OP_MAX | OP_MIN | OP_MED | OP_SM) => {
+            let mut vals = Vec::new();
+            loop {
+                match tokens.get(*pos)? {
+                    &CLOSE => {
+                        *pos += 1;
+                        break;
+                    }
+                    _ => vals.push(parse(tokens, pos)?),
+                }
+            }
+            if vals.is_empty() {
+                return None;
+            }
+            Some(match op {
+                OP_MAX => *vals.iter().max().unwrap(),
+                OP_MIN => *vals.iter().min().unwrap(),
+                OP_MED => {
+                    vals.sort();
+                    vals[vals.len() / 2]
+                }
+                _ => vals.iter().sum::<i32>() % 10,
+            })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn hand_built_expression() {
+        // [MAX 4 [MIN 2 8] 7] = 7
+        let toks = vec![
+            OP_MAX,
+            DIGIT0 + 4,
+            OP_MIN,
+            DIGIT0 + 2,
+            DIGIT0 + 8,
+            CLOSE,
+            DIGIT0 + 7,
+            CLOSE,
+        ];
+        assert_eq!(eval_tokens(&toks), Some(7));
+    }
+
+    #[test]
+    fn med_and_summod() {
+        // [MED 1 9 5] = 5 ; [SM 7 8] = 5
+        assert_eq!(
+            eval_tokens(&[OP_MED, DIGIT0 + 1, DIGIT0 + 9, DIGIT0 + 5, CLOSE]),
+            Some(5)
+        );
+        assert_eq!(eval_tokens(&[OP_SM, DIGIT0 + 7, DIGIT0 + 8, CLOSE]), Some(5));
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert_eq!(eval_tokens(&[OP_MAX, DIGIT0]), None); // unterminated
+        assert_eq!(eval_tokens(&[CLOSE]), None);
+        assert_eq!(eval_tokens(&[OP_MAX, CLOSE]), None); // empty args
+        assert_eq!(eval_tokens(&[DIGIT0, DIGIT0]), None); // trailing token
+    }
+
+    /// Property: generator label == independent evaluator on the tokens.
+    #[test]
+    fn prop_generator_evaluator_agree() {
+        let gen = ListOps::default();
+        prop::check(
+            "listops label matches independent evaluator",
+            prop::Config { cases: 200, ..Default::default() },
+            |rng| {
+                let seq = 64 + rng.below(512);
+                let ex = gen.example(rng, seq);
+                (ex.tokens, ex.label)
+            },
+            |(tokens, label)| {
+                let stripped: Vec<i32> =
+                    tokens.iter().copied().take_while(|&t| t != PAD).collect();
+                match eval_tokens(&stripped) {
+                    Some(v) if v == *label => Ok(()),
+                    Some(v) => Err(format!("evaluator got {v}, generator said {label}")),
+                    None => Err("generator emitted unparseable tokens".into()),
+                }
+            },
+        );
+    }
+
+    /// Property: label distribution is not degenerate.
+    #[test]
+    fn label_distribution_covers_classes() {
+        let gen = ListOps::default();
+        let mut rng = Rng::new(99);
+        let mut counts = [0usize; 10];
+        for _ in 0..400 {
+            counts[gen.example(&mut rng, 256).label as usize] += 1;
+        }
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero >= 8, "label histogram too concentrated: {counts:?}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Pathfinder / Path-X: synthetic reimplementation of the Linsley et al.
+//! (2018) connectivity task used by LRA.
+//!
+//! Each image contains several *dashed* curves; two endpoint dots mark
+//! either the two ends of the SAME curve (positive) or ends of two
+//! DIFFERENT curves (negative).  Distractor curves are always present.
+//! Curves are smooth random walks (heading + bounded turn rate), rendered
+//! with a dash duty cycle; dots are small filled disks.
+//!
+//! `Pathfinder::new(32)` is the LRA Pathfinder (1024 tokens);
+//! `Pathfinder::new(128)` is Path-X (16384 tokens).
+
+use crate::util::rng::Rng;
+
+use super::{Example, TaskGen};
+
+pub struct Pathfinder {
+    pub side: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub points: Vec<(f32, f32)>,
+}
+
+impl Pathfinder {
+    pub fn new(side: usize) -> Pathfinder {
+        Pathfinder { side }
+    }
+
+    /// A smooth random walk of ~len steps staying inside the canvas.
+    pub fn curve(&self, rng: &mut Rng, len: usize) -> Curve {
+        let s = self.side as f32;
+        let margin = 2.0;
+        let mut x = margin + (s - 2.0 * margin) * rng.f32();
+        let mut y = margin + (s - 2.0 * margin) * rng.f32();
+        let mut heading = rng.f32() * std::f32::consts::TAU;
+        let step = 1.0;
+        let mut pts = Vec::with_capacity(len);
+        pts.push((x, y));
+        for _ in 0..len {
+            heading += (rng.f32() - 0.5) * 0.9; // bounded turn rate
+            let nx = x + step * heading.cos();
+            let ny = y + step * heading.sin();
+            // reflect off walls
+            if nx < margin || nx > s - margin {
+                heading = std::f32::consts::PI - heading;
+            }
+            if ny < margin || ny > s - margin {
+                heading = -heading;
+            }
+            x = (x + step * heading.cos()).clamp(margin, s - margin);
+            y = (y + step * heading.sin()).clamp(margin, s - margin);
+            pts.push((x, y));
+        }
+        Curve { points: pts }
+    }
+
+    fn render(&self, rng: &mut Rng, curves: &[Curve], dots: [(f32, f32); 2]) -> Vec<i32> {
+        let side = self.side;
+        let mut px = vec![0.06f32; side * side];
+        let mut set = |px: &mut Vec<f32>, x: f32, y: f32, v: f32| {
+            let (xi, yi) = (x.round() as i32, y.round() as i32);
+            if xi >= 0 && yi >= 0 && (xi as usize) < side && (yi as usize) < side {
+                px[yi as usize * side + xi as usize] = v;
+            }
+        };
+        // dashed curves: duty cycle ~ 3 on / 2 off
+        for curve in curves {
+            let phase = rng.below(5);
+            for (i, &(x, y)) in curve.points.iter().enumerate() {
+                if (i + phase) % 5 < 3 {
+                    set(&mut px, x, y, 0.75);
+                }
+            }
+        }
+        // endpoint dots: bright 2x2-ish disks
+        for &(dx, dy) in &dots {
+            for oy in -1..=1 {
+                for ox in -1..=1 {
+                    set(&mut px, dx + ox as f32, dy + oy as f32, 1.0);
+                }
+            }
+        }
+        px.iter()
+            .map(|&v| {
+                let n = (rng.gaussian() as f32) * 0.02;
+                ((v + n).clamp(0.0, 1.0) * 255.0) as i32
+            })
+            .collect()
+    }
+}
+
+impl TaskGen for Pathfinder {
+    fn name(&self) -> &'static str {
+        if self.side >= 128 {
+            "pathx"
+        } else {
+            "pathfinder"
+        }
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn example(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        assert_eq!(
+            seq_len,
+            self.side * self.side,
+            "pathfinder({}) requires seq_len {}",
+            self.side,
+            self.side * self.side
+        );
+        let curve_len = self.side * 3 / 2;
+        let n_distractors = 2 + rng.below(3);
+        let mut curves: Vec<Curve> =
+            (0..n_distractors + 2).map(|_| self.curve(rng, curve_len)).collect();
+        let connected = rng.bool(0.5);
+        let dots = if connected {
+            let c = &curves[0];
+            [c.points[0], *c.points.last().unwrap()]
+        } else {
+            [curves[0].points[0], *curves[1].points.last().unwrap()]
+        };
+        // randomize curve draw order so the target curve isn't special
+        let order = rng.below(curves.len());
+        curves.swap(0, order);
+        let tokens = self.render(rng, &curves, dots);
+        Example { tokens, tokens2: None, label: connected as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn curve_stays_in_bounds() {
+        let pf = Pathfinder::new(32);
+        prop::check(
+            "curve points inside canvas",
+            prop::Config { cases: 40, ..Default::default() },
+            |rng| pf.curve(rng, 64),
+            |c| {
+                for &(x, y) in &c.points {
+                    if !(0.0..32.0).contains(&x) || !(0.0..32.0).contains(&y) {
+                        return Err(format!("point ({x},{y}) out of bounds"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn renders_bright_dots() {
+        let pf = Pathfinder::new(32);
+        let ex = pf.example(&mut Rng::new(2), 1024);
+        let bright = ex.tokens.iter().filter(|&&t| t > 230).count();
+        assert!(bright >= 8, "expected endpoint dots, got {bright} bright px");
+    }
+
+    #[test]
+    fn pathx_is_16k_tokens() {
+        let pf = Pathfinder::new(128);
+        let ex = pf.example(&mut Rng::new(3), 16384);
+        assert_eq!(ex.tokens.len(), 16384);
+        assert_eq!(pf.name(), "pathx");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let pf = Pathfinder::new(32);
+        let mut rng = Rng::new(17);
+        let pos: i32 = (0..100).map(|_| pf.example(&mut rng, 1024).label).sum();
+        assert!((25..75).contains(&pos), "{pos}/100 positive");
+    }
+}

@@ -1,0 +1,151 @@
+//! Retrieval (dual-encoder document matching): synthetic stand-in for
+//! LRA's ACL Anthology citation-link task.
+//!
+//! Each "paper" is an abstract written from a latent topic's vocabulary
+//! (with a citation-key header line).  A positive pair shares the topic
+//! and cites a common key; a negative pair is drawn from two different
+//! topics.  The model must compress two ~N-char byte sequences into
+//! features whose interaction predicts relatedness — the same skill as the
+//! AAN task.  Byte-level tokens, two documents per example: (B, 2, N).
+
+use crate::util::rng::Rng;
+
+use super::{fit, Example, TaskGen};
+
+/// Topic vocabularies: disjoint content words per latent topic.
+const TOPICS: &[&[&str]] = &[
+    &["parser", "grammar", "syntax", "treebank", "constituent", "dependency", "tagger"],
+    &["embedding", "vector", "semantic", "similarity", "analogy", "corpus", "distributional"],
+    &["translation", "bilingual", "alignment", "decoder", "phrase", "fluency", "bleu"],
+    &["sentiment", "polarity", "opinion", "review", "subjective", "lexicon", "stance"],
+    &["dialogue", "utterance", "intent", "slot", "turn", "response", "conversational"],
+    &["summarization", "extractive", "abstractive", "salience", "rouge", "compression", "headline"],
+    &["speech", "acoustic", "phoneme", "transcription", "prosody", "recognizer", "audio"],
+    &["retrieval", "query", "ranking", "relevance", "index", "document", "recall"],
+];
+
+const CONNECTIVES: &[&str] = &[
+    "we propose", "we present", "results show", "in contrast to", "building on",
+    "we evaluate", "compared with", "this paper studies", "we analyze", "experiments on",
+];
+
+#[derive(Default)]
+pub struct Retrieval;
+
+impl Retrieval {
+    fn abstract_text(&self, rng: &mut Rng, topic: usize, cite: u32, approx: usize) -> String {
+        let words = TOPICS[topic];
+        let mut out = format!("anthology:{cite:08x}\n");
+        while out.len() < approx {
+            let conn = rng.choice(CONNECTIVES);
+            let a = rng.choice(words);
+            let b = rng.choice(words);
+            let noise_topic = rng.below(TOPICS.len());
+            let c = rng.choice(TOPICS[noise_topic]); // cross-topic noise
+            out.push_str(&format!("{conn} {a} {b} with {c} analysis. "));
+            if rng.bool(0.15) {
+                out.push_str(&format!("see anthology:{cite:08x}. "));
+            }
+        }
+        out
+    }
+}
+
+impl TaskGen for Retrieval {
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn dual(&self) -> bool {
+        true
+    }
+
+    fn example(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        let linked = rng.bool(0.5);
+        let topic_a = rng.below(TOPICS.len());
+        let cite_a = rng.next_u32();
+        let (topic_b, cite_b) = if linked {
+            (topic_a, cite_a)
+        } else {
+            // different topic, different citation key
+            let mut t = rng.below(TOPICS.len());
+            while t == topic_a {
+                t = rng.below(TOPICS.len());
+            }
+            (t, rng.next_u32())
+        };
+        let approx = seq_len.saturating_sub(2).max(32);
+        let doc_a = self.abstract_text(rng, topic_a, cite_a, approx);
+        let doc_b = self.abstract_text(rng, topic_b, cite_b, approx);
+        Example {
+            tokens: fit(doc_a.bytes().map(|b| b as i32).collect(), seq_len),
+            tokens2: Some(fit(doc_b.bytes().map(|b| b as i32).collect(), seq_len)),
+            label: linked as i32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn text_of(tokens: &[i32]) -> String {
+        tokens.iter().take_while(|&&t| t != 0).map(|&t| t as u8 as char).collect()
+    }
+
+    fn dominant_topic(text: &str) -> usize {
+        let mut counts = vec![0usize; TOPICS.len()];
+        for w in text.split(|c: char| !c.is_ascii_alphanumeric()) {
+            for (t, words) in TOPICS.iter().enumerate() {
+                if words.contains(&w) {
+                    counts[t] += 1;
+                }
+            }
+        }
+        counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0
+    }
+
+    #[test]
+    fn prop_positive_pairs_share_topic_and_key() {
+        let gen = Retrieval;
+        prop::check(
+            "linked docs share citation key and dominant topic",
+            prop::Config { cases: 60, ..Default::default() },
+            |rng| gen.example(rng, 1024),
+            |ex| {
+                let a = text_of(&ex.tokens);
+                let b = text_of(ex.tokens2.as_ref().unwrap());
+                let key_a = &a[..19.min(a.len())];
+                let key_b = &b[..19.min(b.len())];
+                let same_key = key_a == key_b;
+                if ex.label == 1 && !same_key {
+                    return Err(format!("positive pair, different keys: {key_a} vs {key_b}"));
+                }
+                if ex.label == 0 && same_key {
+                    return Err("negative pair, same key".into());
+                }
+                if ex.label == 1 && dominant_topic(&a) != dominant_topic(&b) {
+                    return Err("positive pair with different dominant topics".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let gen = Retrieval;
+        let mut rng = Rng::new(11);
+        let pos: i32 = (0..100).map(|_| gen.example(&mut rng, 256).label).sum();
+        assert!((25..75).contains(&pos), "{pos}/100 positive");
+    }
+}

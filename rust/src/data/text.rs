@@ -1,0 +1,219 @@
+//! Text (byte-level sentiment): synthetic stand-in for LRA's IMDb task.
+//!
+//! Documents are composed from sentence templates over positive / negative
+//! / neutral lexicons, with negators ("not", "never") flipping the polarity
+//! of the following sentiment word and distractor clauses adding noise.
+//! The label is the sign of the net (negation-adjusted) polarity, and
+//! generation enforces a margin so labels are unambiguous — the skill
+//! probed is the same as IMDb-bytes: accumulate weak sentiment evidence
+//! spread across thousands of characters.
+//!
+//! Tokens are raw bytes (vocab 256), padded with 0, as in LRA.
+
+use crate::util::rng::Rng;
+
+use super::{fit, Example, TaskGen};
+
+pub const POSITIVE: &[&str] = &[
+    "wonderful", "brilliant", "delightful", "superb", "excellent", "charming", "moving",
+    "masterful", "gorgeous", "fresh", "gripping", "hilarious", "stunning", "perfect",
+    "heartfelt", "captivating",
+];
+
+pub const NEGATIVE: &[&str] = &[
+    "dreadful", "boring", "clumsy", "awful", "terrible", "bland", "tedious", "shallow",
+    "forgettable", "stale", "painful", "lifeless", "messy", "hollow", "annoying", "dull",
+];
+
+pub const NEUTRAL: &[&str] = &[
+    "movie", "film", "plot", "scene", "actor", "camera", "script", "score", "director",
+    "pacing", "dialogue", "editing", "sequel", "character", "ending", "premise", "studio",
+    "screen", "runtime", "cast",
+];
+
+pub const NEGATORS: &[&str] = &["not", "never", "hardly"];
+
+const TEMPLATES: &[&str] = &[
+    "the {n} was {s}.",
+    "i found the {n} {s} and the {n} {s}.",
+    "critics called it {s}, a {s} piece of {n}.",
+    "its {n} felt {s} throughout.",
+    "what a {s} {n} with a {s} {n}.",
+    "the {n}, though, was {neg} {s}.",
+    "overall the {n} seemed {neg} {s} to me.",
+];
+
+const FILLER: &[&str] = &[
+    "meanwhile the {n} drifts along with the {n}.",
+    "there is a {n} about a {n} and its {n}.",
+    "the {n} shares screen time with another {n}.",
+    "somewhere in act two a {n} appears.",
+];
+
+#[derive(Default)]
+pub struct TextSentiment;
+
+impl TextSentiment {
+    /// Generate one document and its net polarity score.
+    fn compose(&self, rng: &mut Rng, approx_chars: usize) -> (String, i32) {
+        let mut out = String::with_capacity(approx_chars + 64);
+        let mut score = 0i32;
+        // choose a target label and bias word draws toward it; the *label*
+        // is still computed from the realized text so it is always correct.
+        let want_positive = rng.bool(0.5);
+        while out.len() < approx_chars {
+            let use_filler = rng.bool(0.35);
+            let template = if use_filler { *rng.choice(FILLER) } else { *rng.choice(TEMPLATES) };
+            let mut sentence = String::new();
+            let mut i = 0;
+            let bytes = template.as_bytes();
+            let mut pending_negation = false;
+            while i < bytes.len() {
+                if bytes[i] == b'{' {
+                    let end = template[i..].find('}').unwrap() + i;
+                    match &template[i + 1..end] {
+                        "n" => sentence.push_str(*rng.choice(NEUTRAL)),
+                        "neg" => {
+                            if rng.bool(0.5) {
+                                sentence.push_str(*rng.choice(NEGATORS));
+                                pending_negation = true;
+                            } else {
+                                sentence.push_str("quite");
+                            }
+                        }
+                        "s" => {
+                            let draw_positive = if rng.bool(0.72) {
+                                want_positive
+                            } else {
+                                !want_positive
+                            };
+                            let w = if draw_positive {
+                                rng.choice(POSITIVE)
+                            } else {
+                                rng.choice(NEGATIVE)
+                            };
+                            sentence.push_str(w);
+                            let mut delta = if draw_positive { 1 } else { -1 };
+                            if pending_negation {
+                                delta = -delta;
+                                pending_negation = false;
+                            }
+                            score += delta;
+                        }
+                        other => panic!("bad template slot {other:?}"),
+                    }
+                    i = end + 1;
+                } else {
+                    sentence.push(bytes[i] as char);
+                    i += 1;
+                }
+            }
+            out.push_str(&sentence);
+            out.push(' ');
+        }
+        (out, score)
+    }
+}
+
+impl TaskGen for TextSentiment {
+    fn name(&self) -> &'static str {
+        "text"
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn example(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        // resample until the margin is decisive (score 0 would be ambiguous)
+        loop {
+            let (doc, score) = self.compose(rng, seq_len.saturating_sub(2).max(16));
+            if score.abs() < 2 {
+                continue;
+            }
+            let tokens: Vec<i32> = doc.bytes().map(|b| b as i32).collect();
+            let label = if score > 0 { 1 } else { 0 };
+            return Example { tokens: fit(tokens, seq_len), tokens2: None, label };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Recompute polarity from raw text: the label must be recoverable by
+    /// an independent scorer (same negation rule).
+    pub fn score_text(text: &str) -> i32 {
+        let mut score = 0;
+        let mut negate = false;
+        for word in text.split(|c: char| !c.is_ascii_alphabetic()) {
+            if word.is_empty() {
+                continue;
+            }
+            if NEGATORS.contains(&word) {
+                negate = true;
+            } else if POSITIVE.contains(&word) {
+                score += if negate { -1 } else { 1 };
+                negate = false;
+            } else if NEGATIVE.contains(&word) {
+                score += if negate { 1 } else { -1 };
+                negate = false;
+            }
+            // negation only applies to the immediately-following sentiment
+            // word within the template, which never has an intervening
+            // sentiment word — neutral words keep the flag.
+        }
+        score
+    }
+
+    #[test]
+    fn prop_label_matches_independent_scorer() {
+        let gen = TextSentiment;
+        prop::check(
+            "text label == sign of recomputed polarity",
+            prop::Config { cases: 100, ..Default::default() },
+            |rng| gen.example(rng, 512),
+            |ex| {
+                let text: String =
+                    ex.tokens.iter().take_while(|&&t| t != 0).map(|&t| t as u8 as char).collect();
+                let s = score_text(&text);
+                // truncation can clip the last sentence; tolerate the
+                // boundary word by requiring the sign to match when the
+                // recomputed score is decisive.
+                if s == 0 {
+                    return Ok(());
+                }
+                let label = if s > 0 { 1 } else { 0 };
+                if label == ex.label {
+                    Ok(())
+                } else {
+                    Err(format!("recovered score {s} vs label {}", ex.label))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let gen = TextSentiment;
+        let mut rng = Rng::new(5);
+        let mut pos = 0;
+        for _ in 0..200 {
+            pos += gen.example(&mut rng, 256).label;
+        }
+        assert!((40..160).contains(&pos), "imbalanced: {pos}/200 positive");
+    }
+
+    #[test]
+    fn all_ascii_tokens() {
+        let gen = TextSentiment;
+        let ex = gen.example(&mut Rng::new(3), 300);
+        assert!(ex.tokens.iter().all(|&t| t < 128));
+    }
+}

@@ -1,0 +1,28 @@
+//! # CAST — Clustering self-Attention using Surrogate Tokens
+//!
+//! A three-layer reproduction of *CAST: Clustering self-Attention using
+//! Surrogate Tokens for efficient transformers* (van Engelenhoven,
+//! Strisciuglio & Talavera, 2024):
+//!
+//! * **L1** — the intra-cluster attention + cluster-summary hot spot as a
+//!   Pallas kernel (`python/compile/kernels/`), AOT-lowered.
+//! * **L2** — the full CAST encoder + baselines in JAX
+//!   (`python/compile/`), lowered once to HLO-text artifacts.
+//! * **L3** — this crate: the coordinator that generates LRA workloads,
+//!   drives training/inference through PJRT, runs every efficiency
+//!   benchmark in the paper, and renders the cluster visualizations.
+//!
+//! Python never runs at run time; artifacts are produced by
+//! `make artifacts` and the `cast` binary is self-contained after that.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod train;
+pub mod util;

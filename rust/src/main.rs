@@ -1,0 +1,273 @@
+//! `cast` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   train   --dir <artifact-dir> [--steps N --lr X --warmup N --seed S
+//!           --eval-every N --ckpt PATH --history PATH]
+//!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
+//!   bench   --table {1,5} [--task text --steps N --isolate]
+//!   sweep   --task <task> [--steps N --isolate]      (Figure-3 ablation)
+//!   viz     --dir <artifact-dir> --out <dir> [--seed S]   (Figure 4)
+//!   data    --task <task> [--n N --seq L]            (inspect generators)
+//!   inspect --dir <artifact-dir>                      (manifest summary)
+//!   memmodel [--seq N --kappa K]                      (§3.4 predictions)
+//!   _job    (internal: isolated child for peak-RSS measurement)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use cast::analysis;
+use cast::bench::{self, memmodel};
+use cast::coordinator::sweep::Sweep;
+use cast::coordinator::{Job, JobKind};
+use cast::data;
+use cast::model::{checkpoint, ModelState};
+use cast::runtime::{Engine, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::cli::Args;
+use cast::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "bench" => cmd_bench(args),
+        "sweep" => cmd_sweep(args),
+        "viz" => cmd_viz(args),
+        "data" => cmd_data(args),
+        "inspect" => cmd_inspect(args),
+        "memmodel" => cmd_memmodel(args),
+        "_job" => cmd_job(args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `cast help`"),
+    }
+}
+
+const HELP: &str = "cast — CAST reproduction coordinator
+  train | eval | bench | sweep | viz | data | inspect | memmodel
+See rust/src/main.rs header or README.md for flags.";
+
+fn artifact_dir(args: &Args) -> Result<PathBuf> {
+    let dir = args.opt_str("dir").context("--dir <artifact-dir> is required")?;
+    Ok(PathBuf::from(dir))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args)?;
+    let manifest = Manifest::load(&dir)?;
+    let cfg = TrainConfig {
+        steps: args.usize("steps", 200),
+        schedule: Schedule::Warmup {
+            lr: args.f32("lr", 1e-3),
+            warmup: args.usize("warmup", 20),
+        },
+        seed: args.u64("seed", 0),
+        eval_every: args.usize("eval-every", 0),
+        eval_batches: args.usize("eval-batches", 8),
+        data_workers: args.usize("workers", 2),
+        queue_depth: args.usize("queue", 4),
+        log_every: args.usize("log-every", 10),
+        checkpoint: args.opt_str("ckpt").map(PathBuf::from),
+    };
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
+    let report = trainer.run()?;
+    if let Some(path) = args.opt_str("history") {
+        report.history.save_json(&PathBuf::from(&path))?;
+        println!("history -> {path}");
+    }
+    println!(
+        "done: final loss {:.4}, final acc {:.3}, eval acc {:?}, {:.2} steps/s",
+        report.final_train_loss,
+        report.final_train_acc,
+        report.best_eval_acc,
+        report.steps_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args)?;
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let cfg = TrainConfig { eval_batches: args.usize("batches", 16), ..Default::default() };
+    let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
+    if let Some(ckpt) = args.opt_str("ckpt") {
+        let (state, _) = checkpoint::load(&PathBuf::from(&ckpt))?;
+        trainer.state = state;
+    }
+    let (acc, loss) = trainer.evaluate(args.usize("batches", 16))?;
+    println!("eval: acc {acc:.4} loss {loss:.4}");
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.str("artifacts", "artifacts"));
+    let table = args.usize("table", 1);
+    let task = args.str("task", "text");
+    let steps = args.usize("steps", 5);
+    let isolate = args.has("isolate");
+    let seq_lens: Vec<usize> = vec![1024, 2048, 3072, 4096];
+    let (kind, title) = match table {
+        1 => (JobKind::TrainEfficiency { steps }, "Table 1: training efficiency (rel. to Transformer)"),
+        5 => (JobKind::InferEfficiency { steps }, "Table 5: inference efficiency (rel. to Transformer)"),
+        other => bail!("unknown table {other}; know 1 and 5"),
+    };
+    let t = bench::efficiency_table(&root, &task, &seq_lens, kind, isolate, title)?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.str("artifacts", "artifacts"));
+    let task = args.str("task", "text");
+    let steps = args.usize("steps", 5);
+    let points = bench::ablation_points(&root, &task, steps, args.has("isolate"))?;
+    println!("# Figure 3 ablation ({task}): kappa vs loss / memory / steps-per-sec");
+    println!("variant,kappa,n_c,steps_per_sec,peak_rss_mb,final_loss");
+    for p in &points {
+        println!(
+            "{},{},{},{:.4},{:.1},{:.4}",
+            p.variant,
+            p.kappa,
+            p.n_c,
+            p.result.steps_per_sec,
+            p.result.peak_rss_bytes as f64 / 1e6,
+            p.result.final_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_viz(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args)?;
+    let out = PathBuf::from(args.str("out", "viz_out"));
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let state = if let Some(ckpt) = args.opt_str("ckpt") {
+        checkpoint::load(&PathBuf::from(&ckpt))?.0
+    } else {
+        ModelState::init(&engine, &manifest, args.u64("seed", 0) as u32)?
+    };
+    let gen = data::task(&manifest.meta.task)?;
+    let mut rng = Rng::new(args.u64("seed", 0) ^ 0xF19);
+    let batch = data::make_batch(gen.as_ref(), &mut rng, manifest.meta.batch, manifest.meta.seq_len);
+    let files = analysis::visualize_image_clusters(
+        &engine,
+        &manifest,
+        &state,
+        &batch.tokens,
+        args.usize("index", 0),
+        &out,
+    )?;
+    println!("wrote {} files to {}", files.len(), out.display());
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let task = args.str("task", "listops");
+    let gen = data::task(&task)?;
+    let n = args.usize("n", 3);
+    let default_seq = match task.as_str() {
+        "image" | "pathfinder" => 1024,
+        "pathx" => 16384,
+        _ => 256,
+    };
+    let seq = args.usize("seq", default_seq);
+    let mut rng = Rng::new(args.u64("seed", 0));
+    for i in 0..n {
+        let ex = gen.example(&mut rng, seq);
+        println!("--- example {i}: label {}", ex.label);
+        if task == "text" || task == "retrieval" {
+            let text: String =
+                ex.tokens.iter().take(160).map(|&t| t as u8 as char).collect();
+            println!("{text}...");
+        } else {
+            println!("{:?}...", &ex.tokens[..32.min(ex.tokens.len())]);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args)?;
+    let manifest = Manifest::load(&dir)?;
+    let m = &manifest.meta;
+    println!("key:        {}", manifest.key);
+    println!("task:       {} ({} classes, dual={})", m.task, m.n_classes, m.dual);
+    println!("variant:    {}", m.variant);
+    println!("shape:      seq {} batch {} depth {} h {} d {} d_ff {}", m.seq_len, m.batch, m.depth, m.heads, m.d, m.d_ff);
+    println!("clusters:   Nc {} kappa {}", m.n_c, m.kappa);
+    println!("params:     {} tensors, {} elems", manifest.n_params(), manifest.total_param_elems());
+    println!("artifacts:  {:?}", manifest.files.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_memmodel(args: &Args) -> Result<()> {
+    let seq = args.usize("seq", 4096);
+    let heads = args.usize("heads", 4);
+    let d = args.usize("d", 64);
+    let batch = args.usize("batch", 25);
+    println!("# analytic attention-memory model (paper §3.4), N={seq}");
+    println!("kappa,n_c,cast_bytes,vanilla_bytes,ratio,alpha");
+    for kappa in [32, 64, 128, 200, 256, 512, 1024] {
+        let n_c = seq.div_ceil(kappa).max(1);
+        let s = memmodel::AttnShape { batch, seq, heads, d, n_c, kappa };
+        println!(
+            "{kappa},{n_c},{},{},{:.4},{}",
+            s.cast_attn_bytes(),
+            s.vanilla_attn_bytes(),
+            s.memory_ratio(),
+            s.alpha()
+        );
+    }
+    println!("\n# fused-kernel TPU estimate (DESIGN.md §Hardware-Adaptation)");
+    println!("kappa,vmem_kb,flops,hbm_bytes,intensity");
+    for kappa in [128, 256, 512] {
+        let est = memmodel::kernel_estimate(kappa, d / heads);
+        println!(
+            "{kappa},{:.1},{},{},{:.1}",
+            est.vmem_bytes as f64 / 1024.0,
+            est.mxu_flops,
+            est.hbm_bytes,
+            est.arithmetic_intensity
+        );
+    }
+    Ok(())
+}
+
+/// Internal: run one job in this (child) process and print the result JSON.
+fn cmd_job(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args)?;
+    let steps = args.usize("steps", 5);
+    let seed = args.u64("seed", 7);
+    let kind = match args.str("kind", "train_eff").as_str() {
+        "train" => JobKind::Train { steps, lr: 1e-3, warmup: steps / 10 },
+        "train_eff" => JobKind::TrainEfficiency { steps },
+        "infer_eff" => JobKind::InferEfficiency { steps },
+        other => bail!("unknown job kind {other:?}"),
+    };
+    let sweep = Sweep::new();
+    let engine = Engine::cpu()?;
+    let job = Job { artifact_dir: dir, kind, seed };
+    let result = sweep.run_inprocess(&engine, &job)?;
+    println!("{}", result.to_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Checkpoint format: `CAST0001` magic, a JSON header (param specs + step),
+//! then raw little-endian f32/s32 tensor payloads in manifest order.
+//!
+//! Layout:
+//!   [8]  magic  b"CAST0001"
+//!   [8]  header length (LE u64)
+//!   [..] header JSON
+//!   [..] payloads, each tensor's bytes back-to-back (sizes from header)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{DType, HostTensor};
+use crate::util::json::Json;
+
+use super::params::ModelState;
+
+const MAGIC: &[u8; 8] = b"CAST0001";
+
+pub fn save(state: &ModelState, names: &[String], path: &Path) -> Result<()> {
+    if names.len() != state.params.len() {
+        bail!("names/params length mismatch");
+    }
+    let mut entries = Vec::new();
+    for (name, t) in names.iter().zip(&state.params) {
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("shape", Json::arr_usize(&t.shape)),
+            ("dtype", Json::str(t.dtype().name())),
+        ]));
+    }
+    let header = Json::obj(vec![
+        ("step", Json::num(state.step as f64)),
+        ("params", Json::Arr(entries)),
+    ])
+    .to_string();
+
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    // params, then adam moments (so training can resume exactly)
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group.iter() {
+            f.write_all(tensor_bytes(t))?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a CAST checkpoint (bad magic)");
+    }
+    let mut len_bytes = [0u8; 8];
+    f.read_exact(&mut len_bytes)?;
+    let header_len = u64::from_le_bytes(len_bytes) as usize;
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = Json::parse(std::str::from_utf8(&header)?)?;
+
+    let step = header.get("step").and_then(Json::as_f64).context("header step")? as f32;
+    let specs = header.get("params").and_then(Json::as_arr).context("header params")?;
+
+    let mut names = Vec::new();
+    let mut shapes: Vec<(Vec<usize>, DType)> = Vec::new();
+    for s in specs {
+        names.push(s.get("name").and_then(Json::as_str).context("name")?.to_string());
+        let shape: Vec<usize> = s
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("shape")?
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        let dtype = DType::parse(s.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+        shapes.push((shape, dtype));
+    }
+
+    let mut read_group = |f: &mut dyn Read| -> Result<Vec<HostTensor>> {
+        shapes
+            .iter()
+            .map(|(shape, dtype)| {
+                let n: usize = shape.iter().product();
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                Ok(match dtype {
+                    DType::F32 => HostTensor::f32(shape.clone(), le_f32(&buf)),
+                    DType::S32 => HostTensor::s32(shape.clone(), le_s32(&buf)),
+                    DType::U32 => {
+                        let v = le_s32(&buf).into_iter().map(|x| x as u32).collect();
+                        HostTensor::u32(shape.clone(), v)
+                    }
+                })
+            })
+            .collect()
+    };
+
+    let params = read_group(&mut f)?;
+    let m = read_group(&mut f)?;
+    let v = read_group(&mut f)?;
+    let mut state = ModelState { params, m, v, step };
+    // tolerate truncated moments (older checkpoints): re-zero
+    if state.m.len() != state.params.len() {
+        state = ModelState::from_params(state.params);
+    }
+    Ok((state, names))
+}
+
+fn tensor_bytes(t: &HostTensor) -> &[u8] {
+    use crate::runtime::Data;
+    match &t.data {
+        Data::F32(v) => unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        },
+        Data::S32(v) => unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        },
+        Data::U32(v) => unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        },
+    }
+}
+
+fn le_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn le_s32(bytes: &[u8]) -> Vec<i32> {
+    bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let params = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
+            HostTensor::f32(vec![3], vec![9.0, 8.0, 7.0]),
+        ];
+        let mut state = ModelState::from_params(params);
+        state.step = 42.0;
+        state.m[0] = HostTensor::f32(vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]);
+        let names = vec!["w".to_string(), "b".to_string()];
+
+        let dir = std::env::temp_dir().join("cast_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.ckpt");
+        save(&state, &names, &path).unwrap();
+
+        let (loaded, lnames) = load(&path).unwrap();
+        assert_eq!(lnames, names);
+        assert_eq!(loaded.step, 42.0);
+        assert_eq!(loaded.params[0].as_f32().unwrap(), state.params[0].as_f32().unwrap());
+        assert_eq!(loaded.m[0].as_f32().unwrap(), &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(loaded.v[1].as_f32().unwrap(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("cast_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Model state owned by the coordinator: parameters + Adam moments as raw
+//! host buffers, created by the `init` artifact and threaded through
+//! `train_step` executions.  Includes the on-disk checkpoint format.
+
+pub mod checkpoint;
+pub mod params;
+
+pub use params::ModelState;

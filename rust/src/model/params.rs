@@ -1,0 +1,197 @@
+//! `ModelState`: parameters, Adam moments, and the step counter — the flat
+//! buffer lists whose order is pinned by `manifest.json`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Engine, HostTensor, Manifest};
+
+pub struct ModelState {
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: f32,
+}
+
+impl ModelState {
+    /// Run the `init` artifact to materialize fresh parameters.
+    pub fn init(engine: &Arc<Engine>, manifest: &Manifest, seed: u32) -> Result<ModelState> {
+        let exe = engine.load_hlo(&manifest.hlo_path("init")?)?;
+        let seed_t = HostTensor::u32(vec![], vec![seed]);
+        let params = exe.run(&[seed_t]).context("running init artifact")?;
+        if params.len() != manifest.n_params() {
+            bail!(
+                "init returned {} tensors but manifest declares {}",
+                params.len(),
+                manifest.n_params()
+            );
+        }
+        // cross-check shapes against the manifest contract
+        for (t, spec) in params.iter().zip(&manifest.params) {
+            if t.shape != spec.shape {
+                bail!(
+                    "param {:?}: init produced shape {:?}, manifest says {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        Ok(ModelState::from_params(params))
+    }
+
+    /// Wrap existing parameters (e.g. from a checkpoint) with zeroed moments.
+    pub fn from_params(params: Vec<HostTensor>) -> ModelState {
+        let m = params.iter().map(|p| HostTensor::zeros(p.dtype(), p.shape.clone())).collect();
+        let v = params.iter().map(|p| HostTensor::zeros(p.dtype(), p.shape.clone())).collect();
+        ModelState { params, m, v, step: 0.0 }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Global L2 norm of the parameters (training sanity metric).
+    pub fn param_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for p in &self.params {
+            if let Ok(v) = p.as_f32() {
+                acc += v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Assemble the train_step input list by reference (hot path):
+    /// params ++ m ++ v ++ [step, lr] ++ [tokens, labels].  The scalar
+    /// tensors are owned by the caller (`scalars`).
+    pub fn train_inputs_refs<'a>(
+        &'a self,
+        scalars: &'a (HostTensor, HostTensor),
+        tokens: &'a HostTensor,
+        labels: &'a HostTensor,
+    ) -> Vec<&'a HostTensor> {
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(3 * self.params.len() + 4);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&scalars.0);
+        inputs.push(&scalars.1);
+        inputs.push(tokens);
+        inputs.push(labels);
+        inputs
+    }
+
+    /// Assemble the train_step input list:
+    /// params ++ m ++ v ++ [step, lr] ++ [tokens, labels].
+    pub fn train_inputs(
+        &self,
+        lr: f32,
+        tokens: HostTensor,
+        labels: HostTensor,
+    ) -> Vec<HostTensor> {
+        let mut inputs =
+            Vec::with_capacity(3 * self.params.len() + 4);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(self.step));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(tokens);
+        inputs.push(labels);
+        inputs
+    }
+
+    /// Absorb train_step outputs: params' ++ m' ++ v' ++ [step', loss, acc].
+    /// Returns (loss, acc).
+    pub fn absorb(&mut self, mut outputs: Vec<HostTensor>) -> Result<(f32, f32)> {
+        let p = self.params.len();
+        if outputs.len() != 3 * p + 3 {
+            bail!("train_step returned {} outputs, expected {}", outputs.len(), 3 * p + 3);
+        }
+        let acc = outputs.pop().unwrap().scalar()?;
+        let loss = outputs.pop().unwrap().scalar()?;
+        let step = outputs.pop().unwrap().scalar()?;
+        self.v = outputs.split_off(2 * p);
+        self.m = outputs.split_off(p);
+        self.params = outputs;
+        self.step = step;
+        Ok((loss, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_state(n: usize) -> ModelState {
+        let params = (0..n)
+            .map(|i| HostTensor::f32(vec![2], vec![i as f32, i as f32 + 0.5]))
+            .collect();
+        ModelState::from_params(params)
+    }
+
+    #[test]
+    fn train_inputs_layout() {
+        let st = fake_state(3);
+        let tok = HostTensor::s32(vec![1, 4], vec![1, 2, 3, 4]);
+        let lab = HostTensor::s32(vec![1], vec![0]);
+        let inputs = st.train_inputs(0.01, tok, lab);
+        assert_eq!(inputs.len(), 3 * 3 + 4);
+        assert_eq!(inputs[9].scalar().unwrap(), 0.0); // step
+        assert_eq!(inputs[10].scalar().unwrap(), 0.01); // lr
+    }
+
+    #[test]
+    fn train_inputs_refs_matches_owned_layout() {
+        let st = fake_state(3);
+        let tok = HostTensor::s32(vec![1, 4], vec![1, 2, 3, 4]);
+        let lab = HostTensor::s32(vec![1], vec![0]);
+        let scalars = (HostTensor::scalar_f32(st.step), HostTensor::scalar_f32(0.01));
+        let by_ref = st.train_inputs_refs(&scalars, &tok, &lab);
+        let owned = st.train_inputs(0.01, tok.clone(), lab.clone());
+        assert_eq!(by_ref.len(), owned.len());
+        for (r, o) in by_ref.iter().zip(&owned) {
+            assert_eq!(r.shape, o.shape);
+        }
+        assert_eq!(by_ref[10].scalar().unwrap(), 0.01);
+    }
+
+    #[test]
+    fn absorb_roundtrip() {
+        let mut st = fake_state(2);
+        let outs = vec![
+            HostTensor::f32(vec![2], vec![9.0, 9.0]),
+            HostTensor::f32(vec![2], vec![8.0, 8.0]),
+            HostTensor::f32(vec![2], vec![7.0, 7.0]),
+            HostTensor::f32(vec![2], vec![6.0, 6.0]),
+            HostTensor::f32(vec![2], vec![5.0, 5.0]),
+            HostTensor::f32(vec![2], vec![4.0, 4.0]),
+            HostTensor::scalar_f32(1.0),
+            HostTensor::scalar_f32(0.25),
+            HostTensor::scalar_f32(0.75),
+        ];
+        let (loss, acc) = st.absorb(outs).unwrap();
+        assert_eq!((loss, acc), (0.25, 0.75));
+        assert_eq!(st.step, 1.0);
+        assert_eq!(st.params[0].as_f32().unwrap(), &[9.0, 9.0]);
+        assert_eq!(st.m[1].as_f32().unwrap(), &[6.0, 6.0]);
+        assert_eq!(st.v[1].as_f32().unwrap(), &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn absorb_wrong_arity_errors() {
+        let mut st = fake_state(2);
+        assert!(st.absorb(vec![HostTensor::scalar_f32(0.0)]).is_err());
+    }
+
+    #[test]
+    fn param_norm_positive() {
+        assert!(fake_state(2).param_norm() > 0.0);
+    }
+}

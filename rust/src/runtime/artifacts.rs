@@ -1,0 +1,218 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! rust runtime.  One directory per model config, containing HLO text files
+//! plus `manifest.json` describing the flattened parameter list and batch
+//! shapes (see aot.py's `manifest()` for the writer side).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// The subset of ModelConfig the runtime needs (full config kept as Json
+/// for reporting).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub task: String,
+    pub variant: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_c: usize,
+    pub kappa: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub d: usize,
+    pub d_ff: usize,
+    pub d_emb: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub dual: bool,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub key: String,
+    pub params: Vec<ParamSpec>,
+    pub tokens_shape: Vec<usize>,
+    pub labels_shape: Vec<usize>,
+    pub meta: ModelMeta,
+    pub files: Vec<(String, String)>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts`?)"))?;
+        let raw = Json::parse(&text).with_context(|| format!("parsing {man_path:?}"))?;
+
+        let key = raw
+            .get("key")
+            .and_then(Json::as_str)
+            .context("manifest missing 'key'")?
+            .to_string();
+
+        let mut params = Vec::new();
+        for p in raw.get("params").and_then(Json::as_arr).context("manifest missing 'params'")? {
+            params.push(ParamSpec {
+                name: p.get("name").and_then(Json::as_str).context("param name")?.to_string(),
+                shape: shape_of(p.get("shape").context("param shape")?)?,
+                dtype: DType::parse(p.get("dtype").and_then(Json::as_str).context("param dtype")?)?,
+            });
+        }
+        if params.is_empty() {
+            bail!("manifest has no parameters");
+        }
+
+        let cfg = raw.get("config").context("manifest missing 'config'")?;
+        let get_usize = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
+        };
+        let meta = ModelMeta {
+            task: cfg.get("task").and_then(Json::as_str).context("config.task")?.to_string(),
+            variant: cfg.get("variant").and_then(Json::as_str).context("config.variant")?.to_string(),
+            seq_len: get_usize("seq_len")?,
+            batch: get_usize("batch")?,
+            n_c: get_usize("n_c")?,
+            kappa: get_usize("kappa")?,
+            depth: get_usize("depth")?,
+            heads: get_usize("h")?,
+            d: get_usize("d")?,
+            d_ff: get_usize("d_ff")?,
+            d_emb: get_usize("d_emb")?,
+            vocab: get_usize("vocab")?,
+            n_classes: get_usize("n_classes")?,
+            dual: cfg.get("dual").and_then(Json::as_bool).unwrap_or(false),
+        };
+
+        let tokens_shape = shape_of(raw.path("tokens.shape").context("tokens.shape")?)?;
+        let labels_shape = shape_of(raw.path("labels.shape").context("labels.shape")?)?;
+
+        let mut files = Vec::new();
+        if let Some(obj) = raw.get("files").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                if let Some(f) = v.as_str() {
+                    files.push((k.clone(), f.to_string()));
+                }
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            key,
+            params,
+            tokens_shape,
+            labels_shape,
+            meta,
+            files,
+            raw,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .files
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, f)| f.clone())
+            .unwrap_or_else(|| format!("{name}.hlo.txt"));
+        let p = self.dir.join(file);
+        if !p.exists() {
+            bail!("artifact {:?} not found in {:?} (run `make artifacts`)", name, self.dir);
+        }
+        Ok(p)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+fn shape_of(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("shape is not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape entry not a number"))
+        .collect()
+}
+
+/// Find every artifact directory under the root (directories containing a
+/// manifest.json).
+pub fn discover(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(root) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_dir() && p.join("manifest.json").exists() {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> String {
+        r#"{
+            "key": "tiny_test",
+            "n_params": 2,
+            "params": [
+                {"name": "a.w", "shape": [2, 3], "dtype": "f32"},
+                {"name": "a.b", "shape": [3], "dtype": "f32"}
+            ],
+            "config": {"task": "text", "variant": "cast_topk", "seq_len": 64,
+                       "batch": 2, "n_c": 4, "kappa": 16, "depth": 2, "h": 2,
+                       "d": 16, "d_ff": 32, "d_emb": 16, "vocab": 32,
+                       "n_classes": 2, "dual": false},
+            "tokens": {"shape": [2, 64], "dtype": "s32"},
+            "labels": {"shape": [2], "dtype": "s32"},
+            "n_classes": 2,
+            "files": {"init": "init.hlo.txt"}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("cast_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest()).unwrap();
+        std::fs::write(dir.join("init.hlo.txt"), "HloModule fake").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.key, "tiny_test");
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.total_param_elems(), 9);
+        assert_eq!(m.meta.kappa, 16);
+        assert_eq!(m.tokens_shape, vec![2, 64]);
+        assert!(m.hlo_path("init").is_ok());
+        assert!(m.hlo_path("train_step").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! PJRT engine: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate exactly the way /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  All artifacts are lowered with
+//! `return_tuple=True`, so every execution returns ONE tuple literal that
+//! we decompose into per-output `HostTensor`s.
+//!
+//! The engine is shared (`Arc`) across trainer / bench / analysis code;
+//! compiled executables are cached by path so sweeps that revisit a config
+//! don't recompile.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::tensor::HostTensor;
+
+pub struct Engine {
+    client: PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+// The PJRT CPU client is thread-safe at the C++ level; executions are
+// serialized per-executable by XLA itself.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Engine {
+    pub fn cpu() -> Result<Arc<Engine>> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::debug!(
+            "engine: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Arc::new(Engine { client, cache: Mutex::new(HashMap::new()) }))
+    }
+
+    /// Load + compile an HLO text file (cached by canonical path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let t = crate::util::Timer::start();
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {path:?}"))?;
+        crate::debug!("engine: compiled {:?} in {:.2}s", path.file_name().unwrap(), t.seconds());
+        let exe = Arc::new(Executable { exe, path: key.clone() });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with borrowed host tensors — the trainer's hot path.  Lets
+    /// the caller assemble the (3P+4)-argument train_step input list
+    /// without cloning the full parameter/optimizer state every step
+    /// (§Perf L3 item 1 in EXPERIMENTS.md).
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (hot path: lets the caller reuse
+    /// param literals across steps instead of re-encoding them).
+    pub fn run_literals(&self, literals: &[Literal]) -> Result<Vec<HostTensor>> {
+        let out = self.run_literals_raw(literals)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute returning raw literals (no host-tensor conversion) — the
+    /// trainer feeds these straight back into the next step.
+    pub fn run_literals_raw(&self, literals: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(literals)
+            .with_context(|| format!("executing {:?}", self.path.file_name().unwrap()))?;
+        if result.is_empty() || result[0].is_empty() {
+            bail!("execution produced no outputs");
+        }
+        let root = result[0][0].to_literal_sync().context("fetching result literal")?;
+        let mut root = root;
+        let parts = root.decompose_tuple().context("decomposing result tuple")?;
+        Ok(parts)
+    }
+}

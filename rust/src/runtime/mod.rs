@@ -1,0 +1,15 @@
+//! L3 ↔ XLA boundary: PJRT client, AOT artifact manifests, host tensors.
+//!
+//! Loading path (the only way compute enters the system at run time):
+//!   `artifacts::Manifest::load(dir)` → `engine::Engine::load_hlo(path)`
+//!   → `Executable::run(&[HostTensor])`.
+//! Python never executes here; `artifacts/` is produced once by
+//! `make artifacts` (python/compile/aot.py).
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ModelMeta, ParamSpec};
+pub use engine::{Engine, Executable};
+pub use tensor::{DType, Data, HostTensor};

@@ -1,0 +1,207 @@
+//! Host-side tensors: the typed buffers the coordinator owns between PJRT
+//! calls (parameters, optimizer state, batches, metrics).
+//!
+//! Deliberately minimal — three dtypes (f32/s32/u32 are all the AOT
+//! artifacts use) and conversion to/from `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "s32" | "int32" | "i32" => DType::S32,
+            "u32" | "uint32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::U32 => "u32",
+        }
+    }
+
+    fn element_type(self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::S32 => ElementType::S32,
+            DType::U32 => ElementType::U32,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn s32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: Data::S32(data) }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: Data::U32(data) }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::f32(shape, vec![0.0; n]),
+            DType::S32 => HostTensor::s32(shape, vec![0; n]),
+            DType::U32 => HostTensor::u32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![x])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::S32(_) => DType::S32,
+            Data::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected f32", self.dtype()),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::S32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected s32", self.dtype()),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected a scalar, shape is {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    // -- literal conversion ------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = match &self.data {
+            Data::F32(v) => bytemuck_cast(v),
+            Data::S32(v) => bytemuck_cast(v),
+            Data::U32(v) => bytemuck_cast(v),
+        };
+        Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            bytes,
+        )
+        .context("creating literal from host tensor")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit.ty().context("literal element type")?;
+        let t = match ty {
+            ElementType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+            ElementType::S32 => HostTensor::s32(dims, lit.to_vec::<i32>()?),
+            ElementType::U32 => HostTensor::u32(dims, lit.to_vec::<u32>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(t)
+    }
+}
+
+/// Reinterpret a &[T] of 4-byte scalars as bytes (little-endian host).
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_checked() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("s32").unwrap(), DType::S32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_s32_scalar_shapes() {
+        let t = HostTensor::s32(vec![3], vec![7, -1, 0]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_s32().unwrap(), &[7, -1, 0]);
+
+        let s = HostTensor::scalar_f32(2.5);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(back.scalar().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,178 @@
+//! Training metrics: per-step records, running means, and export to
+//! JSON/CSV for EXPERIMENTS.md and the loss-curve artifacts.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub seconds: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub acc: f32,
+    pub loss: f32,
+}
+
+#[derive(Default, Debug)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl History {
+    pub fn push_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn push_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    /// Mean training loss over the trailing `window` steps.
+    pub fn recent_loss(&self, window: usize) -> f32 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.steps[lo..];
+        slice.iter().map(|r| r.loss).sum::<f32>() / slice.len() as f32
+    }
+
+    pub fn recent_acc(&self, window: usize) -> f32 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.steps[lo..];
+        slice.iter().map(|r| r.acc).sum::<f32>() / slice.len() as f32
+    }
+
+    pub fn best_eval_acc(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.acc).fold(None, |best, a| {
+            Some(best.map_or(a, |b: f32| b.max(a)))
+        })
+    }
+
+    /// Mean steps/second over the whole run (excludes eval time).
+    pub fn steps_per_sec(&self) -> f64 {
+        let total: f64 = self.steps.iter().map(|r| r.seconds).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.steps.len() as f64 / total
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::num(r.step as f64)),
+                                ("loss", Json::num(r.loss as f64)),
+                                ("acc", Json::num(r.acc as f64)),
+                                ("lr", Json::num(r.lr as f64)),
+                                ("seconds", Json::num(r.seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::num(r.step as f64)),
+                                ("acc", Json::num(r.acc as f64)),
+                                ("loss", Json::num(r.loss as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("steps_per_sec", Json::num(self.steps_per_sec())),
+        ])
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("step,loss,acc,lr,seconds\n");
+        for r in &self.steps {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.step, r.loss, r.acc, r.lr, r.seconds
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord { step, loss, acc: 0.5, lr: 1e-3, seconds: 0.1 }
+    }
+
+    #[test]
+    fn recent_loss_windows() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.push_step(rec(i, i as f32));
+        }
+        assert_eq!(h.recent_loss(2), 8.5);
+        assert_eq!(h.recent_loss(100), 4.5);
+    }
+
+    #[test]
+    fn steps_per_sec() {
+        let mut h = History::default();
+        for i in 0..5 {
+            h.push_step(rec(i, 1.0));
+        }
+        assert!((h.steps_per_sec() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_eval() {
+        let mut h = History::default();
+        assert_eq!(h.best_eval_acc(), None);
+        h.push_eval(EvalRecord { step: 1, acc: 0.4, loss: 1.0 });
+        h.push_eval(EvalRecord { step: 2, acc: 0.7, loss: 0.8 });
+        h.push_eval(EvalRecord { step: 3, acc: 0.6, loss: 0.9 });
+        assert_eq!(h.best_eval_acc(), Some(0.7));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut h = History::default();
+        h.push_step(rec(0, 2.0));
+        let j = h.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.path("steps").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 training runtime: loop, LR schedules, metrics.
+
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::History;
+pub use schedule::Schedule;
+pub use trainer::{score_logits, TrainConfig, Trainer, TrainReport};

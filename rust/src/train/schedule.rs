@@ -1,0 +1,73 @@
+//! Learning-rate schedules.  The LR is an *input* of the train_step
+//! artifact, so schedules live entirely in L3 and need no re-lowering.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup to `lr`, then constant (LRA default).
+    Warmup { lr: f32, warmup: usize },
+    /// Linear warmup then cosine decay to `floor` at `total` steps.
+    WarmupCosine { lr: f32, warmup: usize, total: usize, floor: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Warmup { lr, warmup } => {
+                if warmup == 0 || step >= warmup {
+                    lr
+                } else {
+                    lr * (step + 1) as f32 / warmup as f32
+                }
+            }
+            Schedule::WarmupCosine { lr, warmup, total, floor } => {
+                if step < warmup {
+                    return lr * (step + 1) as f32 / warmup.max(1) as f32;
+                }
+                if step >= total {
+                    return floor;
+                }
+                let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+                floor + 0.5 * (lr - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::Warmup { lr: 1.0, warmup: 10 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(1000), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::WarmupCosine { lr: 1.0, warmup: 2, total: 102, floor: 0.1 };
+        assert!(s.at(1) <= 1.0);
+        assert_eq!(s.at(500), 0.1);
+        let mid = s.at(52);
+        assert!(mid < 1.0 && mid > 0.1, "mid {mid}");
+        // monotone non-increasing after warmup
+        let mut prev = s.at(2);
+        for step in 3..102 {
+            let cur = s.at(step);
+            assert!(cur <= prev + 1e-6);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.5 };
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(9999), 0.5);
+    }
+}

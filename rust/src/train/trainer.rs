@@ -1,0 +1,258 @@
+//! The training loop: drives the `train_step` artifact over the background
+//! batch pipeline, schedules the learning rate, runs held-out evaluation
+//! through the `predict` artifact, and records metrics.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::Batcher;
+use crate::data::{self, Batch, TaskGen};
+use crate::model::{checkpoint, ModelState};
+use crate::runtime::{Engine, Executable, HostTensor, Manifest};
+use crate::util::Timer;
+
+use super::metrics::{EvalRecord, History, StepRecord};
+use super::schedule::Schedule;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub data_workers: usize,
+    pub queue_depth: usize,
+    pub log_every: usize,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            schedule: Schedule::Warmup { lr: 1e-3, warmup: 20 },
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            data_workers: 2,
+            queue_depth: 4,
+            log_every: 10,
+            checkpoint: None,
+        }
+    }
+}
+
+pub struct TrainReport {
+    pub history: History,
+    pub final_train_loss: f32,
+    pub final_train_acc: f32,
+    pub best_eval_acc: Option<f32>,
+    pub steps_per_sec: f64,
+}
+
+pub struct Trainer {
+    engine: Arc<Engine>,
+    pub manifest: Manifest,
+    train_exe: Arc<Executable>,
+    predict_exe: Option<Arc<Executable>>,
+    pub state: ModelState,
+    gen: Arc<dyn TaskGen>,
+    cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: Arc<Engine>,
+        manifest: Manifest,
+        cfg: TrainConfig,
+        init_seed: u32,
+    ) -> Result<Trainer> {
+        let gen: Arc<dyn TaskGen> = Arc::from(data::task(&manifest.meta.task)?);
+        anyhow::ensure!(
+            gen.vocab() <= manifest.meta.vocab,
+            "task vocab {} exceeds model vocab {}",
+            gen.vocab(),
+            manifest.meta.vocab
+        );
+        let train_exe = engine.load_hlo(&manifest.hlo_path("train_step")?)?;
+        let predict_exe = if manifest.has("predict") {
+            Some(engine.load_hlo(&manifest.hlo_path("predict")?)?)
+        } else {
+            None
+        };
+        let state = ModelState::init(&engine, &manifest, init_seed)?;
+        crate::info!(
+            "trainer: {} — {} params ({} tensors), task {}, seq {}, batch {}",
+            manifest.key,
+            state.total_elems(),
+            state.n_params(),
+            manifest.meta.task,
+            manifest.meta.seq_len,
+            manifest.meta.batch
+        );
+        Ok(Trainer { engine, manifest, train_exe, predict_exe, state, gen, cfg })
+    }
+
+    /// One optimization step on the given batch. Returns (loss, acc).
+    pub fn step(&mut self, batch: Batch, lr: f32) -> Result<(f32, f32)> {
+        // CAST_CLONE_INPUTS=1 selects the pre-optimization path (clones the
+        // full 3P-tensor state per step) — kept for the §Perf A/B in
+        // EXPERIMENTS.md.
+        if std::env::var_os("CAST_CLONE_INPUTS").is_some() {
+            let inputs = self.state.train_inputs(lr, batch.tokens, batch.labels);
+            let outputs = self.train_exe.run(&inputs).context("train_step execution")?;
+            return self.state.absorb(outputs);
+        }
+        // borrowed assembly: no clone of the 3P-tensor state per step
+        let scalars = (HostTensor::scalar_f32(self.state.step), HostTensor::scalar_f32(lr));
+        let inputs = self.state.train_inputs_refs(&scalars, &batch.tokens, &batch.labels);
+        let outputs = self.train_exe.run_refs(&inputs).context("train_step execution")?;
+        self.state.absorb(outputs)
+    }
+
+    /// Evaluate accuracy on `n_batches` held-out batches (disjoint stream).
+    pub fn evaluate(&self, n_batches: usize) -> Result<(f32, f32)> {
+        let exe = self
+            .predict_exe
+            .as_ref()
+            .context("no predict artifact for evaluation")?;
+        let meta = &self.manifest.meta;
+        let mut stream = crate::data::batcher::SyncStream::new(
+            self.gen.clone(),
+            self.cfg.seed ^ 0xE7A1_0000_0000_0000, // held-out stream
+            meta.batch,
+            meta.seq_len,
+        );
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut loss_sum = 0.0f64;
+        for _ in 0..n_batches {
+            let batch = stream.next();
+            let mut inputs: Vec<&HostTensor> = self.state.params.iter().collect();
+            inputs.push(&batch.tokens);
+            let out = exe.run_refs(&inputs).context("predict execution")?;
+            let logits = &out[0];
+            let labels = batch.labels.as_s32()?;
+            let (c, l) = score_logits(logits, labels)?;
+            correct += c;
+            total += labels.len();
+            loss_sum += l as f64 * labels.len() as f64;
+        }
+        Ok((correct as f32 / total as f32, (loss_sum / total as f64) as f32))
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let meta = &self.manifest.meta;
+        let mut batcher = Batcher::spawn(
+            self.gen.clone(),
+            self.cfg.seed,
+            meta.batch,
+            meta.seq_len,
+            self.cfg.data_workers,
+            self.cfg.queue_depth,
+        );
+        let mut history = History::default();
+        for step in 0..self.cfg.steps {
+            let lr = self.cfg.schedule.at(step);
+            let batch = batcher.next();
+            let t = Timer::start();
+            let (loss, acc) = self.step(batch, lr)?;
+            let seconds = t.seconds();
+            history.push_step(StepRecord { step, loss, acc, lr, seconds });
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                crate::info!(
+                    "step {step:5}  loss {loss:.4}  acc {acc:.3}  lr {lr:.2e}  {:.2} steps/s",
+                    1.0 / seconds.max(1e-9)
+                );
+            }
+            if self.cfg.eval_every > 0
+                && step > 0
+                && step % self.cfg.eval_every == 0
+                && self.predict_exe.is_some()
+            {
+                let (eacc, eloss) = self.evaluate(self.cfg.eval_batches)?;
+                crate::info!("eval @ {step}: acc {eacc:.3} loss {eloss:.4}");
+                history.push_eval(EvalRecord { step, acc: eacc, loss: eloss });
+            }
+        }
+        if self.predict_exe.is_some() && self.cfg.eval_batches > 0 {
+            let (eacc, eloss) = self.evaluate(self.cfg.eval_batches)?;
+            history.push_eval(EvalRecord { step: self.cfg.steps, acc: eacc, loss: eloss });
+            crate::info!("final eval: acc {eacc:.3} loss {eloss:.4}");
+        }
+        if let Some(path) = &self.cfg.checkpoint {
+            let names: Vec<String> =
+                self.manifest.params.iter().map(|p| p.name.clone()).collect();
+            checkpoint::save(&self.state, &names, path)?;
+            crate::info!("checkpoint -> {path:?}");
+        }
+        Ok(TrainReport {
+            final_train_loss: history.recent_loss(20),
+            final_train_acc: history.recent_acc(20),
+            best_eval_acc: history.best_eval_acc(),
+            steps_per_sec: history.steps_per_sec(),
+            history,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+/// Argmax accuracy + mean NLL from logits against labels.
+pub fn score_logits(logits: &HostTensor, labels: &[i32]) -> Result<(usize, f32)> {
+    let v = logits.as_f32()?;
+    let b = labels.len();
+    anyhow::ensure!(
+        logits.shape.len() == 2 && logits.shape[0] == b,
+        "logits shape {:?} vs {} labels",
+        logits.shape,
+        b
+    );
+    let c = logits.shape[1];
+    let mut correct = 0usize;
+    let mut nll = 0.0f64;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &v[i * c..(i + 1) * c];
+        let mut arg = 0;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[arg] {
+                arg = j;
+            }
+        }
+        if arg as i32 == label {
+            correct += 1;
+        }
+        // stable log-softmax NLL
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+        nll += -((row[label as usize] - m) - z.ln()) as f64;
+    }
+    Ok((correct, (nll / b as f64) as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_logits_counts_correct() {
+        let logits = HostTensor::f32(vec![3, 2], vec![2.0, 1.0, 0.0, 3.0, 1.0, 1.0]);
+        let (correct, nll) = score_logits(&logits, &[0, 1, 0]).unwrap();
+        assert_eq!(correct, 3); // third row is a tie -> first max -> class 0
+        assert!(nll > 0.0);
+        let (c2, _) = score_logits(&logits, &[1, 0, 1]).unwrap();
+        assert_eq!(c2, 0);
+    }
+
+    #[test]
+    fn score_logits_shape_mismatch() {
+        let logits = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+        assert!(score_logits(&logits, &[0, 1, 0]).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument substrate (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments.  Typed getters with defaults keep call sites
+//! terse: `args.usize("steps", 100)`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `parse()` uses std::env.
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Args::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, name: &str, default: f32) -> f32 {
+        self.f64(name, default as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = args("train artifacts/tiny --steps 50 --lr=0.01 --verbose");
+        assert_eq!(a.positional, vec!["train", "artifacts/tiny"]);
+        assert_eq!(a.usize("steps", 0), 50);
+        assert_eq!(a.f64("lr", 0.0), 0.01);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = args("bench --quick");
+        assert!(a.has("quick"));
+        assert!(a.positional == vec!["bench"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        args("--steps abc").usize("steps", 0);
+    }
+}

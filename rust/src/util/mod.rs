@@ -1,0 +1,72 @@
+//! Offline substrates: everything a normal project would pull from
+//! crates.io but this repo builds from scratch (see DESIGN.md
+//! §Substitutions — no network in the build environment).
+
+pub mod cli;
+pub mod json;
+pub mod pgm;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Wall-clock timer with a readable report, used by the bench harness.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Peak resident set size of this process in bytes (VmHWM from
+/// /proc/self/status).  The bench harness runs each measured config in a
+/// child process so peaks don't contaminate each other.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Simple stamped logging to stderr; level filtered by CAST_LOG=debug|info.
+pub fn log(level: &str, msg: &str) {
+    let want_debug = std::env::var("CAST_LOG").map(|v| v == "debug").unwrap_or(false);
+    if level == "debug" && !want_debug {
+        return;
+    }
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    eprintln!("[{t:.3} {level}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log("info", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log("debug", &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn peak_rss_is_positive_on_linux() {
+        let rss = super::peak_rss_bytes();
+        assert!(rss.unwrap_or(0) > 0);
+    }
+}

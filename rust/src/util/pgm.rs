@@ -1,0 +1,128 @@
+//! PGM/PPM image writers for the cluster-visualization analysis
+//! (paper Figure 4 and Appendix Figures 7–9).  Plain-text netpbm formats:
+//! zero dependencies, viewable everywhere.
+
+use std::io::Write;
+use std::path::Path;
+
+/// 8-bit grayscale image, row-major.
+pub struct Gray {
+    pub w: usize,
+    pub h: usize,
+    pub pixels: Vec<u8>,
+}
+
+impl Gray {
+    pub fn new(w: usize, h: usize) -> Gray {
+        Gray { w, h, pixels: vec![0; w * h] }
+    }
+
+    /// Build from f32 data normalized to the [min,max] of the slice.
+    pub fn from_f32(w: usize, h: usize, data: &[f32]) -> Gray {
+        assert_eq!(data.len(), w * h);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let span = (hi - lo).max(1e-9);
+        let pixels = data.iter().map(|&x| (255.0 * (x - lo) / span) as u8).collect();
+        Gray { w, h, pixels }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "P2\n{} {}\n255", self.w, self.h)?;
+        for row in self.pixels.chunks(self.w) {
+            let line: Vec<String> = row.iter().map(|p| p.to_string()).collect();
+            writeln!(f, "{}", line.join(" "))?;
+        }
+        Ok(())
+    }
+}
+
+/// 8-bit RGB image, row-major.
+pub struct Rgb {
+    pub w: usize,
+    pub h: usize,
+    pub pixels: Vec<[u8; 3]>,
+}
+
+/// A qualitative palette with good separation for up to 16 clusters
+/// (matplotlib `tab`-like).
+pub const PALETTE: [[u8; 3]; 16] = [
+    [31, 119, 180],
+    [255, 127, 14],
+    [44, 160, 44],
+    [214, 39, 40],
+    [148, 103, 189],
+    [140, 86, 75],
+    [227, 119, 194],
+    [127, 127, 127],
+    [188, 189, 34],
+    [23, 190, 207],
+    [174, 199, 232],
+    [255, 187, 120],
+    [152, 223, 138],
+    [255, 152, 150],
+    [197, 176, 213],
+    [196, 156, 148],
+];
+
+impl Rgb {
+    pub fn new(w: usize, h: usize) -> Rgb {
+        Rgb { w, h, pixels: vec![[0; 3]; w * h] }
+    }
+
+    /// Color each pixel by its cluster id (Figure 4b style).
+    pub fn from_labels(w: usize, h: usize, labels: &[usize]) -> Rgb {
+        assert_eq!(labels.len(), w * h);
+        let pixels = labels.iter().map(|&c| PALETTE[c % PALETTE.len()]).collect();
+        Rgb { w, h, pixels }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "P3\n{} {}\n255", self.w, self.h)?;
+        for row in self.pixels.chunks(self.w) {
+            let mut line = String::new();
+            for p in row {
+                line.push_str(&format!("{} {} {} ", p[0], p[1], p[2]));
+            }
+            writeln!(f, "{}", line.trim_end())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_normalizes_range() {
+        let g = Gray::from_f32(2, 2, &[0.0, 1.0, 0.5, 1.0]);
+        assert_eq!(g.pixels[0], 0);
+        assert_eq!(g.pixels[1], 255);
+        assert!(g.pixels[2] >= 126 && g.pixels[2] <= 128);
+    }
+
+    #[test]
+    fn gray_constant_image_does_not_nan() {
+        let g = Gray::from_f32(2, 1, &[3.0, 3.0]);
+        assert_eq!(g.pixels, vec![0, 0]);
+    }
+
+    #[test]
+    fn save_roundtrip_header() {
+        let dir = std::env::temp_dir().join("cast_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        Gray::from_f32(3, 2, &[0., 1., 2., 3., 4., 5.]).save(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("P2\n3 2\n255\n"), "{text}");
+        let q = dir.join("t.ppm");
+        Rgb::from_labels(2, 2, &[0, 1, 2, 3]).save(&q).unwrap();
+        assert!(std::fs::read_to_string(&q).unwrap().starts_with("P3\n2 2\n255"));
+    }
+}

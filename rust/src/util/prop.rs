@@ -1,0 +1,120 @@
+//! Tiny property-testing substrate (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`; on failure it performs a bounded greedy shrink using the
+//! caller-provided `shrink` candidates (if any) and panics with the seed so
+//! the case is reproducible: rerun with `PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xCA57_0001);
+        Config { cases: 64, seed }
+    }
+}
+
+/// Run a property over random inputs.  `gen` draws a case from the RNG;
+/// `prop` returns Err(description) on violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (PROP_SEED={}):\n  {msg}\n  input: {input:?}",
+                cfg.seed,
+            );
+        }
+    }
+}
+
+/// Like `check` but with a caller-provided shrinker: on failure, repeatedly
+/// tries `shrink(input)` candidates that still fail, reporting the smallest.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let mut best = input.clone();
+            let mut msg = first_msg;
+            // bounded greedy descent
+            'outer: for _ in 0..200 {
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed on case {case} (PROP_SEED={}):\n  {msg}\n  shrunk input: {best:?}",
+                cfg.seed,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "u64 plus zero",
+            Config { cases: 10, ..Default::default() },
+            |r| r.next_u64(),
+            |x| {
+                n += 1;
+                if x + 0 == *x { Ok(()) } else { Err("math broke".into()) }
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always fails",
+            Config::default(),
+            |r| r.below(10),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: 0")]
+    fn shrinker_reaches_minimum() {
+        check_shrink(
+            "all inputs fail, shrink to 0",
+            Config { cases: 1, ..Default::default() },
+            |r| r.range(50, 100),
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |_| Err("fails everywhere".into()),
+        );
+    }
+}

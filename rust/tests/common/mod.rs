@@ -1,0 +1,49 @@
+//! Shared helpers for integration tests: locate the artifacts root and the
+//! tiny smoke-test artifact, skipping gracefully when `make artifacts` has
+//! not been run.
+
+use std::path::PathBuf;
+
+pub fn artifacts_root() -> PathBuf {
+    let root = std::env::var("CAST_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    root
+}
+
+/// The tiny config lowered by `make artifacts` (aot.py suite `default`).
+pub fn tiny_dir(variant: &str) -> Option<PathBuf> {
+    let key = match variant {
+        "cast_topk" => "text_cast_topk_n64_b2_c4_k16",
+        "cast_sa" => "text_cast_sa_n64_b2_c4_k16",
+        "vanilla" => "text_vanilla_n64_b2",
+        "local" => "text_local_n64_b2_w64",
+        "lsh" => "text_lsh_n64_b2_c4_k16",
+        "causal" => "text_cast_sa_n64_b2_c4_k16_causal",
+        _ => return None,
+    };
+    let dir = artifacts_root().join(key);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+/// Skip (with a loud message) when artifacts are missing — integration
+/// tests require `make artifacts` to have run.
+#[macro_export]
+macro_rules! require_artifact {
+    ($variant:expr) => {
+        match common::tiny_dir($variant) {
+            Some(dir) => dir,
+            None => {
+                eprintln!(
+                    "SKIP: tiny artifact for {:?} missing — run `make artifacts`",
+                    $variant
+                );
+                return;
+            }
+        }
+    };
+}

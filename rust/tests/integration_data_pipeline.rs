@@ -1,0 +1,91 @@
+//! Integration: data pipeline × coordinator invariants that span modules
+//! (no artifacts required — pure L3).
+
+mod common;
+
+use std::sync::Arc;
+
+use cast::data::batcher::{Batcher, SyncStream};
+use cast::data::{self, TaskGen};
+use cast::util::prop;
+use cast::util::rng::Rng;
+
+#[test]
+fn prop_batches_respect_model_contract_all_tasks() {
+    // Every generated batch must satisfy the manifest contract the models
+    // are lowered against: token range < vocab, labels < n_classes.
+    for name in ["listops", "text", "retrieval", "image", "pathfinder"] {
+        let gen = data::task(name).unwrap();
+        let seq = match name {
+            "image" | "pathfinder" => 1024,
+            _ => 128,
+        };
+        prop::check(
+            "batch contract",
+            prop::Config { cases: 10, ..Default::default() },
+            |rng| data::make_batch(gen.as_ref(), rng, 3, seq),
+            |batch| {
+                let toks = batch.tokens.as_s32().map_err(|e| e.to_string())?;
+                if !toks.iter().all(|&t| t >= 0 && (t as usize) < gen.vocab()) {
+                    return Err(format!("{name}: token out of range"));
+                }
+                let labels = batch.labels.as_s32().map_err(|e| e.to_string())?;
+                if !labels.iter().all(|&l| l >= 0 && (l as usize) < gen.n_classes()) {
+                    return Err(format!("{name}: label out of range"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn train_and_eval_streams_are_disjoint() {
+    // The trainer derives its eval stream by XORing the seed; the first
+    // batches of both streams must differ (overlap would inflate eval).
+    let gen: Arc<dyn TaskGen> = Arc::from(data::task("text").unwrap());
+    let mut train = SyncStream::new(gen.clone(), 42, 2, 128);
+    let mut eval = SyncStream::new(gen, 42 ^ 0xE7A1_0000_0000_0000, 2, 128);
+    let a = train.next();
+    let b = eval.next();
+    assert_ne!(a.tokens.as_s32().unwrap(), b.tokens.as_s32().unwrap());
+}
+
+#[test]
+fn batcher_survives_slow_consumer_and_stays_ordered() {
+    let gen: Arc<dyn TaskGen> = Arc::from(data::task("listops").unwrap());
+    let mut reference = SyncStream::new(gen.clone(), 5, 2, 64);
+    let mut batcher = Batcher::spawn(gen, 5, 2, 64, 3, 2);
+    for i in 0..8 {
+        if i % 3 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let got = batcher.next();
+        let want = reference.next();
+        assert_eq!(got.labels.as_s32().unwrap(), want.labels.as_s32().unwrap(), "batch {i}");
+    }
+}
+
+#[test]
+fn listops_stream_has_parseable_prefix_rate() {
+    // Every listops example must be a valid expression (evaluator != None).
+    let gen = data::task("listops").unwrap();
+    let mut rng = Rng::new(77);
+    for _ in 0..50 {
+        let ex = gen.example(&mut rng, 128);
+        let stripped: Vec<i32> =
+            ex.tokens.iter().copied().take_while(|&t| t != 0).collect();
+        let val = cast::data::listops::eval_tokens(&stripped);
+        assert_eq!(val, Some(ex.label));
+    }
+}
+
+#[test]
+fn pathx_batches_are_generatable_at_16k() {
+    // Path-X (16K tokens) — the paper reports × (not learnable) but the
+    // substrate must still produce the workload.
+    let gen = data::task("pathx").unwrap();
+    let mut rng = Rng::new(3);
+    let b = data::make_batch(gen.as_ref(), &mut rng, 1, 16384);
+    assert_eq!(b.tokens.shape, vec![1, 16384]);
+}

@@ -1,0 +1,129 @@
+//! Integration: PJRT runtime over real AOT artifacts (tiny config).
+//! Requires `make artifacts` (aot.py default suite).
+
+mod common;
+
+use cast::model::ModelState;
+use cast::runtime::{Engine, HostTensor, Manifest};
+
+#[test]
+fn manifest_loads_and_describes_tiny_model() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.meta.task, "text");
+    assert_eq!(m.meta.seq_len, 64);
+    assert_eq!(m.meta.batch, 2);
+    assert_eq!(m.meta.n_c, 4);
+    assert!(m.n_params() > 10);
+    assert!(m.has("init") && m.has("train_step") && m.has("predict"));
+    assert!(m.has("predict_ag"), "cast artifacts include predict_ag");
+}
+
+#[test]
+fn init_produces_manifest_shaped_params_deterministically() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let a = ModelState::init(&engine, &m, 7).unwrap();
+    let b = ModelState::init(&engine, &m, 7).unwrap();
+    let c = ModelState::init(&engine, &m, 8).unwrap();
+    assert_eq!(a.n_params(), m.n_params());
+    // same seed -> identical params; different seed -> different params
+    assert_eq!(a.params[0].as_f32().unwrap(), b.params[0].as_f32().unwrap());
+    let same = a
+        .params
+        .iter()
+        .zip(&c.params)
+        .all(|(x, y)| x.as_f32().ok() == y.as_f32().ok());
+    assert!(!same, "different seeds must give different params");
+    // finite values
+    for p in &a.params {
+        if let Ok(v) = p.as_f32() {
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn predict_runs_and_emits_logits() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &m, 0).unwrap();
+    let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![1; 2 * 64]);
+    let mut inputs: Vec<HostTensor> = state.params.clone();
+    inputs.push(tokens);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![2, 2]); // (batch, classes)
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn predict_is_deterministic_across_calls() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &m, 3).unwrap();
+    let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let tokens = HostTensor::s32(m.tokens_shape.clone(), (0..128).map(|i| i % 30).collect());
+    let mut inputs: Vec<HostTensor> = state.params.clone();
+    inputs.push(tokens);
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}
+
+#[test]
+fn executable_cache_deduplicates_compiles() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let before = engine.compiled_count();
+    let _a = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let _b = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    assert_eq!(engine.compiled_count(), before + 1);
+}
+
+#[test]
+fn predict_ag_shape_is_layers_batch_tokens_clusters() {
+    let dir = require_artifact!("cast_topk");
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &m, 0).unwrap();
+    let exe = engine.load_hlo(&m.hlo_path("predict_ag").unwrap()).unwrap();
+    let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![2; 128]);
+    let mut inputs: Vec<HostTensor> = state.params.clone();
+    inputs.push(tokens);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out[0].shape, vec![m.meta.depth, 2, 64, 4]);
+    // A_g is a convex-ish mixture of two softmaxes: rows sum to ~1
+    let v = out[0].as_f32().unwrap();
+    for row in v.chunks(4) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "A_g row sums to {s}");
+    }
+}
+
+#[test]
+fn all_four_variants_load_and_predict() {
+    for variant in ["cast_topk", "cast_sa", "vanilla", "local"] {
+        let dir = match common::tiny_dir(variant) {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP {variant}: artifact missing");
+                continue;
+            }
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let state = ModelState::init(&engine, &m, 1).unwrap();
+        let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+        let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![5; 128]);
+        let mut inputs: Vec<HostTensor> = state.params.clone();
+        inputs.push(tokens);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2], "{variant}");
+    }
+}

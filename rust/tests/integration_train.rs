@@ -1,0 +1,154 @@
+//! Integration: full training loop over the tiny artifacts — the
+//! end-to-end proof that L3 (rust trainer) → L2 (jax train_step) → L1
+//! (pallas kernel) compose and actually learn.
+
+mod common;
+
+use cast::model::{checkpoint, ModelState};
+use cast::runtime::{Engine, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+
+fn quick_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        schedule: Schedule::Warmup { lr: 2e-3, warmup: 5 },
+        seed: 1,
+        eval_every: 0,
+        eval_batches: 4,
+        data_workers: 2,
+        queue_depth: 2,
+        log_every: 0,
+        checkpoint: None,
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_tiny_cast() {
+    let dir = require_artifact!("cast_topk");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(30), 1).unwrap();
+    let report = trainer.run().unwrap();
+    let first = report.history.steps[..5].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    let last = report.final_train_loss;
+    assert!(
+        last < first,
+        "loss should decrease: first5 {first:.4} -> last {last:.4}"
+    );
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite()));
+    assert!(trainer.state.step >= 30.0);
+}
+
+#[test]
+fn sa_topk_variant_trains_too() {
+    let dir = require_artifact!("cast_sa");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(8), 2).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn evaluation_runs_on_heldout_stream() {
+    let dir = require_artifact!("cast_topk");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let trainer = Trainer::new(engine, manifest, quick_cfg(1), 3).unwrap();
+    let (acc, loss) = trainer.evaluate(3).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    let dir = require_artifact!("cast_topk");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = quick_cfg(5);
+    let ckpt_path = std::env::temp_dir().join("cast_it_train.ckpt");
+    cfg.checkpoint = Some(ckpt_path.clone());
+    let mut trainer = Trainer::new(engine.clone(), manifest, cfg, 4).unwrap();
+    let _ = trainer.run().unwrap();
+    let expect = trainer.state.params[0].as_f32().unwrap().to_vec();
+
+    let (loaded, names) = checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(loaded.step, 5.0);
+    assert_eq!(loaded.params[0].as_f32().unwrap(), &expect[..]);
+    assert_eq!(names.len(), loaded.n_params());
+    // moments survive the roundtrip (exact resume)
+    assert_eq!(
+        loaded.m[0].as_f32().unwrap(),
+        trainer.state.m[0].as_f32().unwrap()
+    );
+}
+
+#[test]
+fn deterministic_training_same_seed_same_loss() {
+    let dir = require_artifact!("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    let run = |seed: u64| {
+        let manifest = Manifest::load(&dir).unwrap();
+        let mut cfg = quick_cfg(6);
+        cfg.seed = seed;
+        let mut t = Trainer::new(engine.clone(), manifest, cfg, seed as u32).unwrap();
+        t.run().unwrap().history.steps.iter().map(|r| r.loss).collect::<Vec<_>>()
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}
+
+#[test]
+fn causal_decoder_extension_trains() {
+    // §5.5 extension: the causal artifact flows through the same L3
+    // trainer unchanged (variant-agnostic manifest contract).
+    let dir = require_artifact!("causal");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(6), 21).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn lsh_baseline_trains() {
+    let dir = require_artifact!("lsh");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(6), 22).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn vanilla_baseline_trains() {
+    let dir = require_artifact!("vanilla");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(8), 5).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn params_change_after_one_step() {
+    let dir = require_artifact!("cast_topk");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine.clone(), manifest, quick_cfg(1), 6).unwrap();
+    let before = trainer.state.params[0].as_f32().unwrap().to_vec();
+    let _ = trainer.run().unwrap();
+    let after = trainer.state.params[0].as_f32().unwrap();
+    assert_ne!(&before[..], after, "one Adam step must move parameters");
+}
+
+#[test]
+fn model_state_from_params_matches_init_shapes() {
+    let dir = require_artifact!("cast_topk");
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let st = ModelState::init(&engine, &manifest, 0).unwrap();
+    let st2 = ModelState::from_params(st.params.clone());
+    assert_eq!(st2.n_params(), manifest.n_params());
+    assert_eq!(st2.step, 0.0);
+}
