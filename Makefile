@@ -1,0 +1,30 @@
+# Build entry points.  Tier-1 verify needs only `make build test`
+# (native backend, zero artifacts).  The artifact targets require a
+# python environment with jax (the AOT / PJRT path).
+
+.PHONY: build test gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Native-runnable artifact directories (manifest.json only).
+gen: build
+	./target/release/cast gen --out artifacts
+
+artifacts:
+	cd python && python -m compile.aot --suite default --out-root ../artifacts
+
+artifacts-efficiency:
+	cd python && python -m compile.aot --suite efficiency --out-root ../artifacts
+
+artifacts-ablation:
+	cd python && python -m compile.aot --suite ablation --out-root ../artifacts
+
+artifacts-lra:
+	cd python && python -m compile.aot --suite lra --out-root ../artifacts
+
+fmt:
+	cargo fmt --all --check

@@ -1,5 +1,5 @@
 //! End-to-end driver: train CAST on real LRA workloads and log the loss
-//! curve — the full-system validation run recorded in EXPERIMENTS.md.
+//! curve — the full-system validation run (see DESIGN.md §Layers).
 //!
 //! Trains the scaled ListOps and Image presets (built by `make artifacts`)
 //! for a few hundred steps each, evaluating on a held-out stream, and

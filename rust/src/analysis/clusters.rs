@@ -62,7 +62,7 @@ pub fn cluster_assignments(
     tokens: &HostTensor,
     b_idx: usize,
 ) -> Result<AgScores> {
-    let exe = engine.load_hlo(&manifest.hlo_path("predict_ag")?)?;
+    let exe = engine.load(manifest, "predict_ag")?;
     let mut inputs: Vec<HostTensor> = state.params.clone();
     inputs.push(tokens.clone());
     let out = exe.run(&inputs).context("predict_ag execution")?;
@@ -93,6 +93,16 @@ pub fn visualize_image_clusters(
     let n = manifest.meta.seq_len;
     let side = (n as f64).sqrt() as usize;
     anyhow::ensure!(side * side == n, "not an image task: seq_len {n} is not square");
+    anyhow::ensure!(
+        tokens.shape.len() >= 2 && tokens.shape[tokens.shape.len() - 1] == n,
+        "tokens must be a (B, .., {n}) batch, got shape {:?}",
+        tokens.shape
+    );
+    let b_total = tokens.shape[0];
+    anyhow::ensure!(
+        b_idx < b_total,
+        "batch index {b_idx} out of range: tokens batch dimension is {b_total}"
+    );
     std::fs::create_dir_all(out_dir)?;
     let mut written = Vec::new();
 

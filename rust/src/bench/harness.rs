@@ -24,7 +24,7 @@ pub fn efficiency_table(
     title: &str,
 ) -> Result<RelativeTable> {
     let sweep = Sweep::new();
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let mut table = RelativeTable::new(title, "vanilla", seq_lens.to_vec());
     let task_owned = task.to_string();
     let wanted: Vec<usize> = seq_lens.to_vec();
@@ -93,7 +93,7 @@ pub fn ablation_points(
     isolate: bool,
 ) -> Result<Vec<AblationPoint>> {
     let sweep = Sweep::new();
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let task_owned = task.to_string();
     const SWEEP_KAPPAS: [usize; 5] = [32, 64, 128, 256, 512];
     let jobs = jobs_matching(

@@ -74,7 +74,7 @@ impl Sweep {
         seed: u64,
     ) -> Result<JobResult> {
         let gen = data::task(&manifest.meta.task)?;
-        let exe = engine.load_hlo(&manifest.hlo_path("predict")?)?;
+        let exe = engine.load(manifest, "predict")?;
         let state = crate::model::ModelState::init(engine, manifest, seed as u32)?;
         let mut rng = crate::util::rng::Rng::new(seed);
         // warmup execution (compile/caches) excluded from timing

@@ -9,14 +9,22 @@
 //! * **L2** — the full CAST encoder + baselines in JAX
 //!   (`python/compile/`), lowered once to HLO-text artifacts.
 //! * **L3** — this crate: the coordinator that generates LRA workloads,
-//!   drives training/inference through PJRT, runs every efficiency
-//!   benchmark in the paper, and renders the cluster visualizations.
+//!   drives training/inference through a pluggable [`runtime::Backend`],
+//!   runs every efficiency benchmark in the paper, and renders the
+//!   cluster visualizations.
 //!
-//! Python never runs at run time; artifacts are produced by
-//! `make artifacts` and the `cast` binary is self-contained after that.
+//! Two backends sit behind [`runtime::Engine`]:
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! * **native** (default) — a pure-Rust f32 engine implementing the CAST
+//!   forward pass and the `init`/`predict`/`predict_ag`/`train_step`
+//!   program contracts (`runtime::native`).  Needs no artifacts, no
+//!   Python, and no external crates: `cargo build && cargo test` work on
+//!   a fresh checkout.
+//! * **pjrt** (`xla` cargo feature) — executes the AOT HLO artifacts
+//!   produced by `make artifacts` (python/compile/aot.py) through PJRT.
+//!
+//! See DESIGN.md (repo root) for the layer inventory, the backend seam,
+//! and the offline-substitution rationale.
 
 pub mod analysis;
 pub mod bench;

@@ -1,6 +1,7 @@
 //! `cast` — the L3 coordinator binary.
 //!
 //! Subcommands:
+//!   gen     --out <dir> [--variant V]     (write native-runnable manifests)
 //!   train   --dir <artifact-dir> [--steps N --lr X --warmup N --seed S
 //!           --eval-every N --ckpt PATH --history PATH]
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
@@ -11,6 +12,10 @@
 //!   inspect --dir <artifact-dir>                      (manifest summary)
 //!   memmodel [--seq N --kappa K]                      (§3.4 predictions)
 //!   _job    (internal: isolated child for peak-RSS measurement)
+//!
+//! Backend selection: CAST_BACKEND=native (default, pure-Rust engine, no
+//! artifacts needed beyond manifest.json) or CAST_BACKEND=pjrt (`xla`
+//! feature build, executes the AOT HLO files).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -43,6 +48,7 @@ fn main() {
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
+        "gen" => cmd_gen(args),
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
         "bench" => cmd_bench(args),
@@ -61,8 +67,42 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "cast — CAST reproduction coordinator
-  train | eval | bench | sweep | viz | data | inspect | memmodel
-See rust/src/main.rs header or README.md for flags.";
+  gen | train | eval | bench | sweep | viz | data | inspect | memmodel
+Quickstart (no artifacts needed — native backend):
+  cast gen --out artifacts && cast train --dir artifacts/text_cast_topk_n64_b2_c4_k16
+See rust/src/main.rs header or DESIGN.md for flags.";
+
+/// Write native-runnable artifact directories (manifest.json only) for
+/// the tiny smoke configs — the zero-Python path into train/eval/viz.
+fn cmd_gen(args: &Args) -> Result<()> {
+    use cast::runtime::native::{spec::tiny_meta, VARIANTS};
+    let out = PathBuf::from(args.str("out", "artifacts"));
+    let wanted: Vec<String> = match args.opt_str("variant") {
+        Some(v) => {
+            if !VARIANTS.contains(&v.as_str()) {
+                bail!("unknown variant {v:?}; know {VARIANTS:?}");
+            }
+            vec![v]
+        }
+        None => VARIANTS.iter().map(|s| s.to_string()).collect(),
+    };
+    let mut dirs = Vec::new();
+    for variant in &wanted {
+        let meta = tiny_meta(variant);
+        dirs.push(Manifest::synthetic(meta).save(&out)?);
+    }
+    if args.opt_str("variant").is_none() {
+        // the decoder extension (paper §5.5) rides along in the full set
+        let mut meta = tiny_meta("cast_sa");
+        meta.causal = true;
+        dirs.push(Manifest::synthetic(meta).save(&out)?);
+    }
+    for d in &dirs {
+        println!("wrote {}", d.join("manifest.json").display());
+    }
+    println!("{} native-runnable config(s) under {}", dirs.len(), out.display());
+    Ok(())
+}
 
 fn artifact_dir(args: &Args) -> Result<PathBuf> {
     let dir = args.opt_str("dir").context("--dir <artifact-dir> is required")?;
@@ -86,7 +126,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize("log-every", 10),
         checkpoint: args.opt_str("ckpt").map(PathBuf::from),
     };
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
     let report = trainer.run()?;
     if let Some(path) = args.opt_str("history") {
@@ -106,7 +146,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let dir = artifact_dir(args)?;
     let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let cfg = TrainConfig { eval_batches: args.usize("batches", 16), ..Default::default() };
     let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
     if let Some(ckpt) = args.opt_str("ckpt") {
@@ -160,7 +200,7 @@ fn cmd_viz(args: &Args) -> Result<()> {
     let dir = artifact_dir(args)?;
     let out = PathBuf::from(args.str("out", "viz_out"));
     let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let state = if let Some(ckpt) = args.opt_str("ckpt") {
         checkpoint::load(&PathBuf::from(&ckpt))?.0
     } else {
@@ -265,7 +305,7 @@ fn cmd_job(args: &Args) -> Result<()> {
         other => bail!("unknown job kind {other:?}"),
     };
     let sweep = Sweep::new();
-    let engine = Engine::cpu()?;
+    let engine = Engine::auto()?;
     let job = Job { artifact_dir: dir, kind, seed };
     let result = sweep.run_inprocess(&engine, &job)?;
     println!("{}", result.to_json().to_string());

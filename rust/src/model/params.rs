@@ -15,11 +15,11 @@ pub struct ModelState {
 }
 
 impl ModelState {
-    /// Run the `init` artifact to materialize fresh parameters.
+    /// Run the `init` program to materialize fresh parameters.
     pub fn init(engine: &Arc<Engine>, manifest: &Manifest, seed: u32) -> Result<ModelState> {
-        let exe = engine.load_hlo(&manifest.hlo_path("init")?)?;
+        let exe = engine.load(manifest, "init")?;
         let seed_t = HostTensor::u32(vec![], vec![seed]);
-        let params = exe.run(&[seed_t]).context("running init artifact")?;
+        let params = exe.run(&[seed_t]).context("running init program")?;
         if params.len() != manifest.n_params() {
             bail!(
                 "init returned {} tensors but manifest declares {}",

@@ -1,7 +1,10 @@
-//! Artifact manifests: the contract between `python/compile/aot.py` and the
-//! rust runtime.  One directory per model config, containing HLO text files
-//! plus `manifest.json` describing the flattened parameter list and batch
-//! shapes (see aot.py's `manifest()` for the writer side).
+//! Artifact manifests: the contract between model *programs* and the rust
+//! runtime.  One directory per model config, containing `manifest.json`
+//! describing the flattened parameter list and batch shapes, plus — for
+//! the PJRT backend — HLO text files produced by `python/compile/aot.py`
+//! (`make artifacts`).  The native backend needs only the manifest (and
+//! can synthesize one in memory with [`Manifest::synthetic`], so it runs
+//! with zero files on disk).
 
 use std::path::{Path, PathBuf};
 
@@ -19,7 +22,9 @@ pub struct ParamSpec {
 }
 
 /// The subset of ModelConfig the runtime needs (full config kept as Json
-/// for reporting).
+/// for reporting).  The architecture fields beyond the original set
+/// (`norm`, `prenorm`, `attn_fn`, `window`, `causal`) default to the
+/// Table-4 text-task values when a manifest predates them.
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
     pub task: String,
@@ -36,9 +41,95 @@ pub struct ModelMeta {
     pub vocab: usize,
     pub n_classes: usize,
     pub dual: bool,
+    pub norm: String,
+    pub prenorm: bool,
+    pub attn_fn: String,
+    pub window: usize,
+    pub causal: bool,
 }
 
-#[derive(Debug)]
+impl ModelMeta {
+    pub fn d_h(&self) -> usize {
+        self.d / self.heads
+    }
+
+    pub fn is_cast(&self) -> bool {
+        self.variant.starts_with("cast")
+    }
+
+    /// The clustering mechanism G (paper §3.2 / §5.5).
+    pub fn clustering(&self) -> &'static str {
+        if self.causal {
+            "causal"
+        } else if self.variant == "cast_sa" {
+            "sa"
+        } else {
+            "topk"
+        }
+    }
+
+    /// Whether the `predict_ag` entry point exists for this config
+    /// (cluster affinities are only defined for non-dual CAST variants).
+    pub fn has_ag(&self) -> bool {
+        self.is_cast() && !self.dual
+    }
+
+    /// Token batch shape: `(B, N)`, or `(B, 2, N)` for dual-encoder tasks.
+    pub fn tokens_shape(&self) -> Vec<usize> {
+        if self.dual {
+            vec![self.batch, 2, self.seq_len]
+        } else {
+            vec![self.batch, self.seq_len]
+        }
+    }
+
+    /// Stable artifact key, mirroring python `ModelConfig.key()`.
+    pub fn key(&self) -> String {
+        let mut parts = vec![
+            self.task.clone(),
+            self.variant.clone(),
+            format!("n{}", self.seq_len),
+            format!("b{}", self.batch),
+        ];
+        if self.is_cast() || self.variant == "lsh" {
+            parts.push(format!("c{}", self.n_c));
+            parts.push(format!("k{}", self.kappa));
+        }
+        if self.variant == "local" {
+            parts.push(format!("w{}", self.window));
+        }
+        if self.causal {
+            parts.push("causal".to_string());
+        }
+        parts.join("_")
+    }
+
+    fn to_config_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(&self.task)),
+            ("variant", Json::str(&self.variant)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("n_c", Json::num(self.n_c as f64)),
+            ("kappa", Json::num(self.kappa as f64)),
+            ("depth", Json::num(self.depth as f64)),
+            ("h", Json::num(self.heads as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("d_emb", Json::num(self.d_emb as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("dual", Json::Bool(self.dual)),
+            ("norm", Json::str(&self.norm)),
+            ("prenorm", Json::Bool(self.prenorm)),
+            ("attn_fn", Json::str(&self.attn_fn)),
+            ("window", Json::num(self.window as f64)),
+            ("causal", Json::Bool(self.causal)),
+        ])
+    }
+}
+
+#[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub key: String,
@@ -54,7 +145,7 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let man_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&man_path)
-            .with_context(|| format!("reading {man_path:?} (run `make artifacts`?)"))?;
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts` or `cast gen`?)"))?;
         let raw = Json::parse(&text).with_context(|| format!("parsing {man_path:?}"))?;
 
         let key = raw
@@ -94,6 +185,19 @@ impl Manifest {
             vocab: get_usize("vocab")?,
             n_classes: get_usize("n_classes")?,
             dual: cfg.get("dual").and_then(Json::as_bool).unwrap_or(false),
+            norm: cfg
+                .get("norm")
+                .and_then(Json::as_str)
+                .unwrap_or("layer")
+                .to_string(),
+            prenorm: cfg.get("prenorm").and_then(Json::as_bool).unwrap_or(false),
+            attn_fn: cfg
+                .get("attn_fn")
+                .and_then(Json::as_str)
+                .unwrap_or("softmax")
+                .to_string(),
+            window: cfg.get("window").and_then(Json::as_usize).unwrap_or(128),
+            causal: cfg.get("causal").and_then(Json::as_bool).unwrap_or(false),
         };
 
         let tokens_shape = shape_of(raw.path("tokens.shape").context("tokens.shape")?)?;
@@ -120,6 +224,69 @@ impl Manifest {
         })
     }
 
+    /// Build a manifest in memory from a model config alone — the native
+    /// backend's zero-artifact entry point.  The parameter list replicates
+    /// the flat ordering the AOT pipeline records (jax tree_flatten over
+    /// sorted dict keys; see `runtime::native::spec`).
+    pub fn synthetic(meta: ModelMeta) -> Manifest {
+        let params = super::native::spec::param_specs(&meta);
+        Manifest {
+            dir: PathBuf::new(),
+            key: meta.key(),
+            params,
+            tokens_shape: meta.tokens_shape(),
+            labels_shape: vec![meta.batch],
+            meta,
+            files: Vec::new(),
+            raw: Json::Null,
+        }
+    }
+
+    /// Write `manifest.json` into `root/<key>/` so the standard discovery
+    /// path (`Manifest::load`, `artifacts::discover`, the bench harness)
+    /// picks this config up — no HLO files required for the native
+    /// backend.  Returns the artifact directory.
+    pub fn save(&self, root: &Path) -> Result<PathBuf> {
+        let dir = root.join(&self.key);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(&p.name)),
+                    ("shape", Json::arr_usize(&p.shape)),
+                    ("dtype", Json::str(p.dtype.name())),
+                ])
+            })
+            .collect();
+        let man = Json::obj(vec![
+            ("key", Json::str(&self.key)),
+            ("n_params", Json::num(self.params.len() as f64)),
+            ("params", Json::Arr(params)),
+            ("config", self.meta.to_config_json()),
+            (
+                "tokens",
+                Json::obj(vec![
+                    ("shape", Json::arr_usize(&self.tokens_shape)),
+                    ("dtype", Json::str("s32")),
+                ]),
+            ),
+            (
+                "labels",
+                Json::obj(vec![
+                    ("shape", Json::arr_usize(&self.labels_shape)),
+                    ("dtype", Json::str("s32")),
+                ]),
+            ),
+            ("n_classes", Json::num(self.meta.n_classes as f64)),
+        ]);
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, man.to_string_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(dir)
+    }
+
     pub fn n_params(&self) -> usize {
         self.params.len()
     }
@@ -142,8 +309,10 @@ impl Manifest {
         Ok(p)
     }
 
+    /// Whether an HLO file for `name` is on disk (PJRT backend contract;
+    /// the native backend answers through `Engine::has` instead).
     pub fn has(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
+        !self.dir.as_os_str().is_empty() && self.dir.join(format!("{name}.hlo.txt")).exists()
     }
 }
 
@@ -209,10 +378,50 @@ mod tests {
         assert_eq!(m.tokens_shape, vec![2, 64]);
         assert!(m.hlo_path("init").is_ok());
         assert!(m.hlo_path("train_step").is_err());
+        // architecture fields absent from older manifests take defaults
+        assert_eq!(m.meta.norm, "layer");
+        assert_eq!(m.meta.attn_fn, "softmax");
+        assert!(!m.meta.prenorm && !m.meta.causal);
     }
 
     #[test]
     fn missing_dir_is_error() {
         assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_roundtrips_through_save_and_load() {
+        let meta = crate::runtime::native::spec::tiny_meta("cast_topk");
+        let m = Manifest::synthetic(meta);
+        assert_eq!(m.key, "text_cast_topk_n64_b2_c4_k16");
+        assert!(m.n_params() > 10);
+        let root = std::env::temp_dir().join("cast_manifest_synth_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = m.save(&root).unwrap();
+        let back = Manifest::load(&dir).unwrap();
+        assert_eq!(back.key, m.key);
+        assert_eq!(back.n_params(), m.n_params());
+        assert_eq!(back.meta.norm, m.meta.norm);
+        assert_eq!(back.meta.kappa, m.meta.kappa);
+        assert_eq!(back.tokens_shape, m.tokens_shape);
+        for (a, b) in back.params.iter().zip(&m.params) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+        }
+        // no HLO files exist — disk `has` is false, hlo_path errors
+        assert!(!back.has("predict"));
+        assert!(back.hlo_path("predict").is_err());
+    }
+
+    #[test]
+    fn meta_key_matches_python_key_scheme() {
+        let mut meta = crate::runtime::native::spec::tiny_meta("vanilla");
+        assert_eq!(meta.key(), "text_vanilla_n64_b2");
+        meta.variant = "local".into();
+        meta.window = 64;
+        assert_eq!(meta.key(), "text_local_n64_b2_w64");
+        meta.variant = "cast_sa".into();
+        meta.causal = true;
+        assert_eq!(meta.key(), "text_cast_sa_n64_b2_c4_k16_causal");
     }
 }

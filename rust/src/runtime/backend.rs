@@ -1,0 +1,48 @@
+//! The execution-substrate seam: every way of running a model program —
+//! the native CPU engine, PJRT over AOT HLO artifacts, and whatever later
+//! PRs add (threaded batching, sharded execution, remote workers) — sits
+//! behind these two traits.
+//!
+//! A *program* is identified by `(manifest, entry)` where `entry` is one
+//! of the artifact contract's entry points (`init`, `predict`,
+//! `predict_ag`, `train_step`); loading yields an [`Executable`] that maps
+//! a flat `HostTensor` input list to a flat output list.  Everything above
+//! this seam (`ModelState`, the trainer, the bench harness, analysis) is
+//! backend-agnostic.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifacts::Manifest;
+use super::tensor::HostTensor;
+
+/// A loaded, runnable program.
+pub trait Executable: Send + Sync {
+    /// The entry-point name this executable was loaded for.
+    fn entry(&self) -> &str;
+
+    /// Execute with borrowed inputs — the trainer's hot path (no clone of
+    /// the 3P-tensor optimizer state per step).
+    fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Execute with owned inputs.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+}
+
+/// An execution substrate that can load programs for a model config.
+pub trait Backend: Send + Sync {
+    /// Short backend name for logs/reports ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can provide `entry` for `manifest` (the
+    /// native engine answers from the model config; PJRT from the files
+    /// on disk).
+    fn supports(&self, manifest: &Manifest, entry: &str) -> bool;
+
+    /// Load (and, where applicable, compile) the program.
+    fn load(&self, manifest: &Manifest, entry: &str) -> Result<Arc<dyn Executable>>;
+}

@@ -1,116 +1,160 @@
-//! PJRT engine: load AOT HLO-text artifacts and execute them.
+//! `Engine`: the backend-owning facade the rest of the system talks to.
 //!
-//! Wraps the `xla` crate exactly the way /opt/xla-example/load_hlo does:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`.  All artifacts are lowered with
-//! `return_tuple=True`, so every execution returns ONE tuple literal that
-//! we decompose into per-output `HostTensor`s.
+//! Holds one [`Backend`] implementation plus a load cache keyed by
+//! `(artifact key, entry)` so sweeps that revisit a config don't recompile
+//! (PJRT) or revalidate (native).  The engine is shared (`Arc`) across
+//! trainer / bench / analysis code.
 //!
-//! The engine is shared (`Arc`) across trainer / bench / analysis code;
-//! compiled executables are cached by path so sweeps that revisit a config
-//! don't recompile.
+//! Backend selection:
+//! * [`Engine::cpu`] — the native pure-Rust engine (always available,
+//!   zero artifacts required).
+//! * [`Engine::pjrt`] — PJRT over AOT HLO artifacts (`xla` feature).
+//! * [`Engine::auto`] — `CAST_BACKEND=native|pjrt` env override, default
+//!   native.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::Result;
 
-use super::tensor::HostTensor;
+use super::artifacts::Manifest;
+use super::backend::{Backend, Executable};
+use super::native::NativeBackend;
 
 pub struct Engine {
-    client: PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+    backend: Box<dyn Backend>,
+    cache: Mutex<HashMap<(String, String), Arc<dyn Executable>>>,
 }
-
-pub struct Executable {
-    exe: PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-// The PJRT CPU client is thread-safe at the C++ level; executions are
-// serialized per-executable by XLA itself.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
 
 impl Engine {
+    /// The native CPU engine — the default backend.
     pub fn cpu() -> Result<Arc<Engine>> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::debug!(
-            "engine: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Arc::new(Engine { client, cache: Mutex::new(HashMap::new()) }))
+        Ok(Engine::with_backend(Box::new(NativeBackend)))
     }
 
-    /// Load + compile an HLO text file (cached by canonical path).
-    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
-        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+    /// The PJRT backend executing AOT HLO-text artifacts.
+    #[cfg(feature = "xla")]
+    pub fn pjrt() -> Result<Arc<Engine>> {
+        Ok(Engine::with_backend(Box::new(super::pjrt::PjrtBackend::new()?)))
+    }
+
+    /// Backend selected by the `CAST_BACKEND` environment variable
+    /// (`native` default; `pjrt` requires the `xla` feature).
+    pub fn auto() -> Result<Arc<Engine>> {
+        match std::env::var("CAST_BACKEND").as_deref() {
+            Ok("pjrt") => pjrt_or_err(),
+            Ok("native") | Err(_) => Engine::cpu(),
+            Ok(other) => anyhow::bail!("unknown CAST_BACKEND {other:?} (know native, pjrt)"),
+        }
+    }
+
+    pub fn with_backend(backend: Box<dyn Backend>) -> Arc<Engine> {
+        crate::debug!("engine: backend={}", backend.name());
+        Arc::new(Engine { backend, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Whether `entry` is available for this config on this backend.
+    pub fn has(&self, manifest: &Manifest, entry: &str) -> bool {
+        self.backend.supports(manifest, entry)
+    }
+
+    /// Load (compile) a program, cached per `(artifact, entry)`.
+    pub fn load(&self, manifest: &Manifest, entry: &str) -> Result<Arc<dyn Executable>> {
+        let key = (cache_scope(manifest), entry.to_string());
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
         let t = crate::util::Timer::start();
-        let proto = HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {path:?}"))?;
-        crate::debug!("engine: compiled {:?} in {:.2}s", path.file_name().unwrap(), t.seconds());
-        let exe = Arc::new(Executable { exe, path: key.clone() });
+        let exe = self.backend.load(manifest, entry)?;
+        crate::debug!(
+            "engine: loaded {}/{} on {} in {:.2}s",
+            manifest.key,
+            entry,
+            self.backend.name(),
+            t.seconds()
+        );
         self.cache.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
 
-    /// Number of executables compiled so far (for tests/metrics).
+    /// Number of distinct programs loaded so far (for tests/metrics).
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 }
 
-impl Executable {
-    /// Execute with host tensors; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let literals: Vec<Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        self.run_literals(&literals)
+#[cfg(feature = "xla")]
+fn pjrt_or_err() -> Result<Arc<Engine>> {
+    Engine::pjrt()
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_or_err() -> Result<Arc<Engine>> {
+    anyhow::bail!(
+        "CAST_BACKEND=pjrt but this build has no `xla` feature; \
+         rebuild with `--features xla` (requires the xla crate, see Cargo.toml)"
+    )
+}
+
+/// Cache scope for a manifest: the canonical artifact directory when it
+/// lives on disk (so relative and absolute spellings of the same dir hit
+/// one cache entry), the full config when synthetic — the key alone
+/// omits fields like depth/attn_fn/prenorm, and two synthetic configs
+/// differing only there must not share an executable.
+fn cache_scope(manifest: &Manifest) -> String {
+    if manifest.dir.as_os_str().is_empty() {
+        format!("synthetic:{:?}", manifest.meta)
+    } else {
+        manifest
+            .dir
+            .canonicalize()
+            .unwrap_or_else(|_| manifest.dir.clone())
+            .to_string_lossy()
+            .into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spec::tiny_meta;
+    use crate::runtime::HostTensor;
+
+    #[test]
+    fn load_caches_by_artifact_and_entry() {
+        let engine = Engine::cpu().unwrap();
+        let man = Manifest::synthetic(tiny_meta("cast_topk"));
+        assert_eq!(engine.compiled_count(), 0);
+        let a = engine.load(&man, "predict").unwrap();
+        let b = engine.load(&man, "predict").unwrap();
+        assert_eq!(engine.compiled_count(), 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        let _ = engine.load(&man, "init").unwrap();
+        assert_eq!(engine.compiled_count(), 2);
     }
 
-    /// Execute with borrowed host tensors — the trainer's hot path.  Lets
-    /// the caller assemble the (3P+4)-argument train_step input list
-    /// without cloning the full parameter/optimizer state every step
-    /// (§Perf L3 item 1 in EXPERIMENTS.md).
-    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-        let literals: Vec<Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        self.run_literals(&literals)
+    #[test]
+    fn native_engine_runs_init_through_trait_object() {
+        let engine = Engine::cpu().unwrap();
+        assert_eq!(engine.backend_name(), "native");
+        let man = Manifest::synthetic(tiny_meta("cast_topk"));
+        assert!(engine.has(&man, "predict_ag"));
+        let exe = engine.load(&man, "init").unwrap();
+        assert_eq!(exe.entry(), "init");
+        let out = exe.run(&[HostTensor::u32(vec![], vec![42])]).unwrap();
+        assert_eq!(out.len(), man.n_params());
     }
 
-    /// Execute with pre-built literals (hot path: lets the caller reuse
-    /// param literals across steps instead of re-encoding them).
-    pub fn run_literals(&self, literals: &[Literal]) -> Result<Vec<HostTensor>> {
-        let out = self.run_literals_raw(literals)?;
-        out.iter().map(HostTensor::from_literal).collect()
-    }
-
-    /// Execute returning raw literals (no host-tensor conversion) — the
-    /// trainer feeds these straight back into the next step.
-    pub fn run_literals_raw(&self, literals: &[Literal]) -> Result<Vec<Literal>> {
-        let result = self
-            .exe
-            .execute::<Literal>(literals)
-            .with_context(|| format!("executing {:?}", self.path.file_name().unwrap()))?;
-        if result.is_empty() || result[0].is_empty() {
-            bail!("execution produced no outputs");
+    #[test]
+    fn auto_defaults_to_native() {
+        // NB: relies on CAST_BACKEND being unset in the test environment
+        if std::env::var("CAST_BACKEND").is_err() {
+            let engine = Engine::auto().unwrap();
+            assert_eq!(engine.backend_name(), "native");
         }
-        let root = result[0][0].to_literal_sync().context("fetching result literal")?;
-        let mut root = root;
-        let parts = root.decompose_tuple().context("decomposing result tuple")?;
-        Ok(parts)
     }
 }

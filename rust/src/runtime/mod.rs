@@ -1,15 +1,25 @@
-//! L3 ↔ XLA boundary: PJRT client, AOT artifact manifests, host tensors.
+//! L3 ↔ compute boundary: the pluggable execution backends, artifact
+//! manifests, and host tensors.
 //!
 //! Loading path (the only way compute enters the system at run time):
-//!   `artifacts::Manifest::load(dir)` → `engine::Engine::load_hlo(path)`
-//!   → `Executable::run(&[HostTensor])`.
-//! Python never executes here; `artifacts/` is produced once by
-//! `make artifacts` (python/compile/aot.py).
+//!   `Manifest` (loaded from disk, or `Manifest::synthetic(meta)`) →
+//!   `Engine::load(&manifest, entry)` → `Executable::run(&[HostTensor])`.
+//!
+//! Two [`Backend`] implementations sit behind the `Engine` facade:
+//! * `native` — a pure-Rust f32 CAST engine (`runtime::native`), the
+//!   default; zero artifacts, zero Python, zero external crates.
+//! * `pjrt` — AOT HLO artifacts produced by `python/compile/aot.py`
+//!   (`make artifacts`) executed through PJRT; `xla` cargo feature.
 
 pub mod artifacts;
+pub mod backend;
 pub mod engine;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ModelMeta, ParamSpec};
-pub use engine::{Engine, Executable};
+pub use backend::{Backend, Executable};
+pub use engine::Engine;
 pub use tensor::{DType, Data, HostTensor};

@@ -1,0 +1,781 @@
+//! Native attention layers: the CAST layer (paper §3.1–3.3) and the three
+//! baselines (vanilla / local / LSH), mirroring `python/compile/cast_layer.py`,
+//! `clustering.py`, `attention_baselines.py`, and `kernels/ref.py`.
+//!
+//! Shapes are row-major flat `&[f32]`:
+//!   x (B,N,d) · q/k/v (B,N,h·d_h) · A_g (B,N,Nc) · idx/valid (B,Nc,κ).
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::ops::{self, AttnFn, NEG_INF};
+
+/// Geometry + mechanism of one attention layer.
+#[derive(Clone, Debug)]
+pub struct Dims {
+    pub b: usize,
+    pub n: usize,
+    pub heads: usize,
+    pub d_h: usize,
+    pub n_c: usize,
+    pub kappa: usize,
+    pub attn: AttnFn,
+    /// "topk" | "sa" | "causal" (paper §3.2 / §5.5).
+    pub clustering: String,
+    pub causal: bool,
+    pub window: usize,
+}
+
+impl Dims {
+    pub fn d(&self) -> usize {
+        self.heads * self.d_h
+    }
+}
+
+/// Weights of one CAST attention layer (borrowed from the flat param list).
+pub struct CastParams<'a> {
+    pub wq_w: &'a [f32],
+    pub wq_b: &'a [f32],
+    pub wk_w: &'a [f32],
+    pub wk_b: &'a [f32],
+    pub wv_w: &'a [f32],
+    pub wv_b: &'a [f32],
+    pub wo_w: &'a [f32],
+    pub wo_b: &'a [f32],
+    /// Surrogate tokens S (Nc, h, d_h) — the learnable cluster directions.
+    pub s: &'a [f32],
+    pub phi_w: &'a [f32],
+    pub phi_b: &'a [f32],
+}
+
+/// Weights of a baseline attention layer.
+pub struct BaselineParams<'a> {
+    pub wq_w: &'a [f32],
+    pub wq_b: &'a [f32],
+    pub wk_w: &'a [f32],
+    pub wk_b: &'a [f32],
+    pub wv_w: &'a [f32],
+    pub wv_b: &'a [f32],
+    pub wo_w: &'a [f32],
+    pub wo_b: &'a [f32],
+}
+
+// ---------------------------------------------------------------------------
+// clustering mechanisms G (clustering.py)
+// ---------------------------------------------------------------------------
+
+/// Algorithm 1 (Top-K): every cluster independently takes its κ
+/// highest-affinity tokens; a token may land in several clusters or none.
+pub fn top_k_cluster(
+    a_g: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+) -> (Vec<usize>, Vec<f32>) {
+    let mut idx = vec![0usize; b * n_c * kappa];
+    let valid = vec![1.0f32; b * n_c * kappa];
+    let mut col = vec![0.0f32; n];
+    for bb in 0..b {
+        for c in 0..n_c {
+            for (nn, cv) in col.iter_mut().enumerate() {
+                *cv = a_g[(bb * n + nn) * n_c + c];
+            }
+            let order = ops::argsort_desc(&col);
+            let base = (bb * n_c + c) * kappa;
+            idx[base..base + kappa].copy_from_slice(&order[..kappa]);
+        }
+    }
+    (idx, valid)
+}
+
+/// Greedy capacity-constrained assignment shared by SA Top-K (visit order =
+/// descending best affinity) and the causal variant (visit order = position).
+fn greedy_assign(
+    a_g: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+    by_position: bool,
+) -> (Vec<usize>, Vec<f32>) {
+    let mut idx = vec![0usize; b * n_c * kappa];
+    let mut valid = vec![0.0f32; b * n_c * kappa];
+    let mut row = vec![0.0f32; n_c];
+    for bb in 0..b {
+        // per-token cluster preference (descending affinity)
+        let mut pref: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut best = vec![0.0f32; n];
+        for nn in 0..n {
+            for (c, rv) in row.iter_mut().enumerate() {
+                *rv = a_g[(bb * n + nn) * n_c + c];
+            }
+            best[nn] = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            pref.push(ops::argsort_desc(&row));
+        }
+        let order: Vec<usize> =
+            if by_position { (0..n).collect() } else { ops::argsort_desc(&best) };
+        let mut fill = vec![0usize; n_c];
+        for &t in &order {
+            if let Some(&c) = pref[t].iter().find(|&&c| fill[c] < kappa) {
+                let base = (bb * n_c + c) * kappa + fill[c];
+                idx[base] = t;
+                valid[base] = 1.0;
+                fill[c] += 1;
+            }
+        }
+    }
+    (idx, valid)
+}
+
+/// Algorithm 2 (SA Top-K): each token joins exactly one cluster, greedily
+/// in descending order of its best affinity, subject to capacity.
+pub fn sa_top_k_cluster(
+    a_g: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+) -> (Vec<usize>, Vec<f32>) {
+    greedy_assign(a_g, b, n, n_c, kappa, false)
+}
+
+/// Causal clustering (paper §5.5): assignment in *position* order, so
+/// token n's cluster depends only on tokens 0..n.
+pub fn causal_cluster(
+    a_g: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+) -> (Vec<usize>, Vec<f32>) {
+    greedy_assign(a_g, b, n, n_c, kappa, true)
+}
+
+/// The paper's membership mask M (B,N,Nc): 1 iff the token sits in the
+/// cluster's slot list.
+pub fn membership(
+    idx: &[usize],
+    valid: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+) -> Vec<f32> {
+    let mut m = vec![0.0f32; b * n * n_c];
+    for bb in 0..b {
+        for c in 0..n_c {
+            for slot in 0..kappa {
+                let base = (bb * n_c + c) * kappa + slot;
+                if valid[base] > 0.0 {
+                    m[(bb * n + idx[base]) * n_c + c] = 1.0;
+                }
+            }
+        }
+    }
+    m
+}
+
+fn cluster(
+    mechanism: &str,
+    a_g: &[f32],
+    b: usize,
+    n: usize,
+    n_c: usize,
+    kappa: usize,
+) -> Result<(Vec<usize>, Vec<f32>)> {
+    Ok(match mechanism {
+        "topk" => top_k_cluster(a_g, b, n, n_c, kappa),
+        "sa" => sa_top_k_cluster(a_g, b, n, n_c, kappa),
+        "causal" => causal_cluster(a_g, b, n, n_c, kappa),
+        other => anyhow::bail!("unknown clustering mechanism {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the CAST layer (cast_layer.py apply())
+// ---------------------------------------------------------------------------
+
+/// Full CAST attention layer.  Returns `(out (B,N,d), a_g (B,N,Nc))`.
+pub fn cast_layer(p: &CastParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let kappa = dims.kappa.min(n);
+    ensure!(kappa > 0 && n_c > 0, "CAST needs n_c>0 and kappa>0");
+    let rows = b * n;
+    let tau = (d_h as f32).sqrt();
+
+    // step 1: projections (eq. 1)
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let phi = ops::dense(x, p.phi_w, p.phi_b, rows, d, 1); // (B·N,)
+
+    // step 2: surrogate similarities A_q, A_k (eq. 6), per head
+    let mut a_q = vec![0.0f32; rows * h * n_c];
+    let mut a_k = vec![0.0f32; rows * h * n_c];
+    for r in 0..rows {
+        for hh in 0..h {
+            let qrow = &q[r * d + hh * d_h..r * d + (hh + 1) * d_h];
+            let krow = &k[r * d + hh * d_h..r * d + (hh + 1) * d_h];
+            for c in 0..n_c {
+                let srow = &p.s[(c * h + hh) * d_h..(c * h + hh + 1) * d_h];
+                let mut sq = 0.0f32;
+                let mut sk = 0.0f32;
+                for dd in 0..d_h {
+                    sq += qrow[dd] * srow[dd];
+                    sk += krow[dd] * srow[dd];
+                }
+                a_q[(r * h + hh) * n_c + c] = sq;
+                a_k[(r * h + hh) * n_c + c] = sk;
+            }
+        }
+    }
+
+    // head-summed raw similarities
+    let mut a_q_raw = vec![0.0f32; rows * n_c];
+    let mut a_k_raw = vec![0.0f32; rows * n_c];
+    for r in 0..rows {
+        for hh in 0..h {
+            for c in 0..n_c {
+                a_q_raw[r * n_c + c] += a_q[(r * h + hh) * n_c + c];
+                a_k_raw[r * n_c + c] += a_k[(r * h + hh) * n_c + c];
+            }
+        }
+    }
+
+    // step 3: gate + affinity A_g = sigm(phi)·f2(ΣA_q) + (1-sigm(phi))·f2(ΣA_k)
+    let mut f2q = a_q_raw.clone();
+    ops::attn_rows(&mut f2q, n_c, dims.attn);
+    let mut f2k = a_k_raw.clone();
+    ops::attn_rows(&mut f2k, n_c, dims.attn);
+    let mut a_g = vec![0.0f32; rows * n_c];
+    for r in 0..rows {
+        let g = ops::sigmoid(phi[r]);
+        for c in 0..n_c {
+            a_g[r * n_c + c] = g * f2q[r * n_c + c] + (1.0 - g) * f2k[r * n_c + c];
+        }
+    }
+
+    // step 4: clustering (indices are non-differentiable, paper §3.2)
+    let (idx, valid) = cluster(&dims.clustering, &a_g, b, n, n_c, kappa)?;
+    let member = membership(&idx, &valid, b, n, n_c, kappa);
+
+    // step 5: fused intra-cluster attention + cluster summaries (eq. 3/4)
+    let mut r_intra = vec![0.0f32; b * n_c * kappa * d];
+    let mut r_inter = vec![0.0f32; b * n_c * d];
+    let mut scores = vec![0.0f32; kappa * kappa];
+    let mut wrow = vec![0.0f32; kappa];
+    for bb in 0..b {
+        for c in 0..n_c {
+            let base = (bb * n_c + c) * kappa;
+            let slots = &idx[base..base + kappa];
+            let val = &valid[base..base + kappa];
+            let mask_ij = |i: usize, j: usize| -> f32 {
+                if dims.causal && slots[j] > slots[i] {
+                    0.0
+                } else {
+                    val[j]
+                }
+            };
+            for hh in 0..h {
+                // masked κ×κ scores: f(Q_g K_gᵀ / τ)
+                for i in 0..kappa {
+                    let qrow = &q[(bb * n + slots[i]) * d + hh * d_h..][..d_h];
+                    for j in 0..kappa {
+                        let krow = &k[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                        let mut dot = 0.0f32;
+                        for dd in 0..d_h {
+                            dot += qrow[dd] * krow[dd];
+                        }
+                        scores[i * kappa + j] = dot / tau + (1.0 - mask_ij(i, j)) * NEG_INF;
+                    }
+                }
+                ops::attn_rows(&mut scores, kappa, dims.attn);
+                for i in 0..kappa {
+                    if val[i] == 0.0 {
+                        continue; // padding rows stay zero (· valid)
+                    }
+                    let out = ((bb * n_c + c) * kappa + i) * d + hh * d_h;
+                    for j in 0..kappa {
+                        let pij = scores[i * kappa + j] * mask_ij(i, j);
+                        if pij != 0.0 {
+                            let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                            for dd in 0..d_h {
+                                r_intra[out + dd] += pij * vrow[dd];
+                            }
+                        }
+                    }
+                }
+                // eq. 4: cluster summary R_inter (omitted in causal mode —
+                // summaries would leak future tokens)
+                if !dims.causal {
+                    for j in 0..kappa {
+                        let t = slots[j];
+                        wrow[j] = a_k[((bb * n + t) * h + hh) * n_c + c]
+                            * ops::softplus1(-phi[bb * n + t])
+                            / tau
+                            + (1.0 - val[j]) * NEG_INF;
+                    }
+                    ops::attn_rows(&mut wrow, kappa, dims.attn);
+                    let out = (bb * n_c + c) * d + hh * d_h;
+                    for j in 0..kappa {
+                        let pk = wrow[j] * val[j];
+                        if pk != 0.0 {
+                            let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                            for dd in 0..d_h {
+                                r_inter[out + dd] += pk * vrow[dd];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // step 6: combination (eq. 5)
+    let mut a_sum = vec![0.0f32; rows * n_c];
+    for r in 0..rows {
+        let sp = ops::softplus1(phi[r]) / tau;
+        for c in 0..n_c {
+            a_sum[r * n_c + c] = a_q_raw[r * n_c + c] * sp;
+        }
+    }
+    ops::attn_rows(&mut a_sum, n_c, dims.attn);
+
+    let mut r = vec![0.0f32; rows * d];
+    for bb in 0..b {
+        for c in 0..n_c {
+            let base = (bb * n_c + c) * kappa;
+            for slot in 0..kappa {
+                if valid[base + slot] == 0.0 {
+                    continue;
+                }
+                let t = idx[base + slot];
+                let wi = a_sum[(bb * n + t) * n_c + c];
+                if wi == 0.0 {
+                    continue;
+                }
+                let src = (base + slot) * d;
+                let dst = (bb * n + t) * d;
+                for dd in 0..d {
+                    r[dst + dd] += wi * r_intra[src + dd];
+                }
+            }
+        }
+    }
+    if !dims.causal {
+        // summaries of *other* clusters, weighted by off-membership A_sum
+        for bb in 0..b {
+            for nn in 0..n {
+                let dst = (bb * n + nn) * d;
+                for c in 0..n_c {
+                    let ai = a_sum[(bb * n + nn) * n_c + c]
+                        * (1.0 - member[(bb * n + nn) * n_c + c]);
+                    if ai != 0.0 {
+                        let src = (bb * n_c + c) * d;
+                        for dd in 0..d {
+                            r[dst + dd] += ai * r_inter[src + dd];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let out = ops::dense(&r, p.wo_w, p.wo_b, rows, d, d);
+    Ok((out, a_g))
+}
+
+// ---------------------------------------------------------------------------
+// baselines (attention_baselines.py)
+// ---------------------------------------------------------------------------
+
+/// Row-wise softmax attention of `q` against keys/values restricted to the
+/// token range `[lo, hi)` of batch `bb` — the shared core of the vanilla
+/// and local baselines (row-wise so O(N) scratch, not O(N²)).
+fn attend_range(
+    out: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bb: usize,
+    n: usize,
+    h: usize,
+    d_h: usize,
+    lo: usize,
+    hi: usize,
+    row_lo: usize,
+    row_hi: usize,
+) {
+    let d = h * d_h;
+    let tau = (d_h as f32).sqrt();
+    let w = hi - lo;
+    let mut scores = vec![0.0f32; w];
+    for i in row_lo..row_hi {
+        for hh in 0..h {
+            let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+            for (jj, sc) in scores.iter_mut().enumerate() {
+                let krow = &k[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
+                let mut dot = 0.0f32;
+                for dd in 0..d_h {
+                    dot += qrow[dd] * krow[dd];
+                }
+                *sc = dot / tau;
+            }
+            ops::attn_rows(&mut scores, w, AttnFn::Softmax);
+            let dst = (bb * n + i) * d + hh * d_h;
+            for (jj, &pj) in scores.iter().enumerate() {
+                let vrow = &v[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
+                for dd in 0..d_h {
+                    out[dst + dd] += pj * vrow[dd];
+                }
+            }
+        }
+    }
+}
+
+/// The original O(N²) multi-head self-attention.
+pub fn vanilla_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
+    let (b, n, h, d_h) = (dims.b, dims.n, dims.heads, dims.d_h);
+    let d = dims.d();
+    let rows = b * n;
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut out = vec![0.0f32; rows * d];
+    for bb in 0..b {
+        attend_range(&mut out, &q, &k, &v, bb, n, h, d_h, 0, n, 0, n);
+    }
+    Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
+}
+
+/// LRA's Local Attention: full attention within non-overlapping windows.
+pub fn local_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
+    let (b, n, h, d_h) = (dims.b, dims.n, dims.heads, dims.d_h);
+    let w = dims.window.min(n).max(1);
+    ensure!(n % w == 0, "local attention needs seq_len % window == 0 ({n} % {w})");
+    let d = dims.d();
+    let rows = b * n;
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut out = vec![0.0f32; rows * d];
+    for bb in 0..b {
+        for chunk in 0..n / w {
+            let lo = chunk * w;
+            attend_range(&mut out, &q, &k, &v, bb, n, h, d_h, lo, lo + w, lo, lo + w);
+        }
+    }
+    Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
+}
+
+/// Reformer-style LSH attention: shared Q/K projection, random-rotation
+/// hashing into Nc buckets, bucket-sorted κ-sized chunks.
+pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
+    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let rows = b * n;
+    let kappa = dims.kappa.min(n).max(1);
+    let qk = ops::dense(x, p.wq_w, p.wq_b, rows, d, d); // Reformer ties Q and K
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+
+    // fixed pseudorandom rotation (python uses PRNGKey(0); a fixed draw
+    // keeps the layer deterministic — the property that matters)
+    let rc = (n_c / 2).max(1);
+    let mut rng = Rng::new(0);
+    let rot: Vec<f32> = (0..d * rc).map(|_| rng.gaussian() as f32).collect();
+
+    // bucket = argmax over [xR ; -xR]
+    let mut buckets = vec![0usize; rows];
+    for r in 0..rows {
+        let mut best = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for j in 0..2 * rc {
+            let col = j % rc;
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += qk[r * d + i] * rot[i * rc + col];
+            }
+            if j >= rc {
+                acc = -acc;
+            }
+            if acc > best {
+                best = acc;
+                arg = j;
+            }
+        }
+        buckets[r] = arg;
+    }
+
+    let m = n.div_ceil(kappa) * kappa; // padded length
+    let mut out = vec![0.0f32; rows * d];
+    let mut qk_s = vec![0.0f32; m * d];
+    let mut v_s = vec![0.0f32; m * d];
+    let mut chunk_out = vec![0.0f32; m * d];
+    let mut scores = vec![0.0f32; kappa];
+    for bb in 0..b {
+        // stable ascending sort by bucket (ties keep sequence order)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| buckets[bb * n + i]);
+        qk_s.iter_mut().for_each(|z| *z = 0.0);
+        v_s.iter_mut().for_each(|z| *z = 0.0);
+        chunk_out.iter_mut().for_each(|z| *z = 0.0);
+        for (pos, &t) in order.iter().enumerate() {
+            qk_s[pos * d..(pos + 1) * d].copy_from_slice(&qk[(bb * n + t) * d..][..d]);
+            v_s[pos * d..(pos + 1) * d].copy_from_slice(&v[(bb * n + t) * d..][..d]);
+        }
+        let tau = (d_h as f32).sqrt();
+        for chunk in 0..m / kappa {
+            let lo = chunk * kappa;
+            // rows past n are padding (dropped by the un-sort); pad *keys*
+            // must be masked so real tokens don't leak softmax mass to them
+            for i in lo..(lo + kappa).min(n) {
+                for hh in 0..h {
+                    let qrow = &qk_s[i * d + hh * d_h..][..d_h];
+                    for jj in 0..kappa {
+                        if lo + jj >= n {
+                            scores[jj] = NEG_INF;
+                            continue;
+                        }
+                        let krow = &qk_s[(lo + jj) * d + hh * d_h..][..d_h];
+                        let mut dot = 0.0f32;
+                        for dd in 0..d_h {
+                            dot += qrow[dd] * krow[dd];
+                        }
+                        scores[jj] = dot / tau;
+                    }
+                    ops::attn_rows(&mut scores, kappa, AttnFn::Softmax);
+                    let dst = i * d + hh * d_h;
+                    for (jj, &pj) in scores.iter().enumerate() {
+                        let vrow = &v_s[(lo + jj) * d + hh * d_h..][..d_h];
+                        for dd in 0..d_h {
+                            chunk_out[dst + dd] += pj * vrow[dd];
+                        }
+                    }
+                }
+            }
+        }
+        // un-sort back to sequence order (padding rows are dropped)
+        for (pos, &t) in order.iter().enumerate() {
+            out[(bb * n + t) * d..][..d].copy_from_slice(&chunk_out[pos * d..][..d]);
+        }
+    }
+    Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(clustering: &str) -> Dims {
+        Dims {
+            b: 1,
+            n: 8,
+            heads: 2,
+            d_h: 4,
+            n_c: 2,
+            kappa: 4,
+            attn: AttnFn::Softmax,
+            clustering: clustering.to_string(),
+            causal: clustering == "causal",
+            window: 4,
+        }
+    }
+
+    fn ag_for(n: usize, n_c: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * n_c).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn topk_takes_highest_affinity_tokens() {
+        // 4 tokens, 2 clusters, kappa 2
+        #[rustfmt::skip]
+        let a_g = vec![
+            0.9, 0.1, // token 0: cluster 0
+            0.8, 0.2, // token 1: cluster 0
+            0.1, 0.9, // token 2: cluster 1
+            0.7, 0.6, // token 3
+        ];
+        let (idx, valid) = top_k_cluster(&a_g, 1, 4, 2, 2);
+        assert_eq!(&idx[0..2], &[0, 1]); // cluster 0 top-2
+        assert_eq!(&idx[2..4], &[2, 3]); // cluster 1 top-2
+        assert!(valid.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn sa_topk_assigns_each_token_once_with_capacity() {
+        let a_g = ag_for(8, 2, 7);
+        let (idx, valid) = sa_top_k_cluster(&a_g, 1, 8, 2, 4);
+        // Nc*kappa == N: every token placed exactly once
+        assert!(valid.iter().all(|&v| v == 1.0));
+        let mut seen: Vec<usize> = idx.clone();
+        seen.sort();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sa_topk_respects_capacity_with_slack() {
+        // capacity 8*2 = 16 > 8 tokens: some slots stay padding
+        let a_g = ag_for(8, 2, 9);
+        let (idx, valid) = sa_top_k_cluster(&a_g, 1, 8, 2, 8);
+        let placed: usize = valid.iter().map(|&v| v as usize).sum();
+        assert_eq!(placed, 8);
+        for c in 0..2 {
+            for slot in 0..8 {
+                let b = c * 8 + slot;
+                if valid[b] == 0.0 {
+                    assert_eq!(idx[b], 0, "padding slots hold index 0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn membership_marks_assignments() {
+        let a_g = ag_for(8, 2, 3);
+        let (idx, valid) = sa_top_k_cluster(&a_g, 1, 8, 2, 4);
+        let m = membership(&idx, &valid, 1, 8, 2, 4);
+        // single-assignment: each token belongs to exactly one cluster
+        for nn in 0..8 {
+            let s: f32 = (0..2).map(|c| m[nn * 2 + c]).sum();
+            assert_eq!(s, 1.0, "token {nn}");
+        }
+    }
+
+    fn rand_cast_params(d: usize, h: usize, n_c: usize, seed: u64) -> Vec<Vec<f32>> {
+        let d_h = d / h;
+        let mut rng = Rng::new(seed);
+        let mut mk = |len: usize, scale: f32| -> Vec<f32> {
+            (0..len).map(|_| rng.gaussian() as f32 * scale).collect()
+        };
+        let s = 1.0 / (d as f32).sqrt();
+        vec![
+            mk(d * d, s),           // wq_w
+            vec![0.0; d],           // wq_b
+            mk(d * d, s),           // wk_w
+            vec![0.0; d],           // wk_b
+            mk(d * d, s),           // wv_w
+            vec![0.0; d],           // wv_b
+            mk(d * d, s),           // wo_w
+            vec![0.0; d],           // wo_b
+            mk(n_c * h * d_h, 1.0 / (d_h as f32).sqrt()), // s
+            mk(d, s),               // phi_w
+            vec![0.0; 1],           // phi_b
+        ]
+    }
+
+    fn cast_params(buf: &[Vec<f32>]) -> CastParams<'_> {
+        CastParams {
+            wq_w: &buf[0],
+            wq_b: &buf[1],
+            wk_w: &buf[2],
+            wk_b: &buf[3],
+            wv_w: &buf[4],
+            wv_b: &buf[5],
+            wo_w: &buf[6],
+            wo_b: &buf[7],
+            s: &buf[8],
+            phi_w: &buf[9],
+            phi_b: &buf[10],
+        }
+    }
+
+    #[test]
+    fn cast_layer_shapes_and_ag_rows_sum_to_one() {
+        for mech in ["topk", "sa", "causal"] {
+            let dm = dims(mech);
+            let d = dm.d();
+            let buf = rand_cast_params(d, dm.heads, dm.n_c, 11);
+            let p = cast_params(&buf);
+            let mut rng = Rng::new(5);
+            let x: Vec<f32> = (0..dm.b * dm.n * d).map(|_| rng.gaussian() as f32).collect();
+            let (out, a_g) = cast_layer(&p, &x, &dm).unwrap();
+            assert_eq!(out.len(), dm.b * dm.n * d, "{mech}");
+            assert_eq!(a_g.len(), dm.b * dm.n * dm.n_c, "{mech}");
+            assert!(out.iter().all(|v| v.is_finite()), "{mech}");
+            // A_g is a convex mix of two softmaxes: rows sum to 1
+            for row in a_g.chunks(dm.n_c) {
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "{mech}: A_g row sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn cast_layer_is_deterministic() {
+        let dm = dims("topk");
+        let d = dm.d();
+        let buf = rand_cast_params(d, dm.heads, dm.n_c, 2);
+        let p = cast_params(&buf);
+        let x: Vec<f32> = (0..dm.b * dm.n * d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (a, _) = cast_layer(&p, &x, &dm).unwrap();
+        let (b2, _) = cast_layer(&p, &x, &dm).unwrap();
+        assert_eq!(a, b2);
+    }
+
+    fn rand_baseline(d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let s = 1.0 / (d as f32).sqrt();
+        let mut mk =
+            |len: usize| -> Vec<f32> { (0..len).map(|_| rng.gaussian() as f32 * s).collect() };
+        vec![
+            mk(d * d),
+            vec![0.0; d],
+            mk(d * d),
+            vec![0.0; d],
+            mk(d * d),
+            vec![0.0; d],
+            mk(d * d),
+            vec![0.0; d],
+        ]
+    }
+
+    fn baseline_params(buf: &[Vec<f32>]) -> BaselineParams<'_> {
+        BaselineParams {
+            wq_w: &buf[0],
+            wq_b: &buf[1],
+            wk_w: &buf[2],
+            wk_b: &buf[3],
+            wv_w: &buf[4],
+            wv_b: &buf[5],
+            wo_w: &buf[6],
+            wo_b: &buf[7],
+        }
+    }
+
+    #[test]
+    fn baselines_produce_finite_outputs() {
+        let dm = dims("topk");
+        let d = dm.d();
+        let buf = rand_baseline(d, 4);
+        let p = baseline_params(&buf);
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..dm.b * dm.n * d).map(|_| rng.gaussian() as f32).collect();
+        for (name, out) in [
+            ("vanilla", vanilla_layer(&p, &x, &dm).unwrap()),
+            ("local", local_layer(&p, &x, &dm).unwrap()),
+            ("lsh", lsh_layer(&p, &x, &dm).unwrap()),
+        ] {
+            assert_eq!(out.len(), x.len(), "{name}");
+            assert!(out.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn local_equals_vanilla_when_window_covers_sequence() {
+        let mut dm = dims("topk");
+        dm.window = dm.n; // one window == full attention
+        let d = dm.d();
+        let buf = rand_baseline(d, 8);
+        let p = baseline_params(&buf);
+        let x: Vec<f32> = (0..dm.b * dm.n * d).map(|i| ((i * 7 % 13) as f32) / 13.0).collect();
+        let a = vanilla_layer(&p, &x, &dm).unwrap();
+        let b = local_layer(&p, &x, &dm).unwrap();
+        for (u, w) in a.iter().zip(&b) {
+            assert!((u - w).abs() < 1e-4, "{u} vs {w}");
+        }
+    }
+}

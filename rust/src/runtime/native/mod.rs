@@ -1,0 +1,129 @@
+//! The native CPU backend: a pure-Rust f32 implementation of the CAST
+//! forward pass (surrogate-token affinities, Top-κ clustering,
+//! intra-cluster attention, cluster summaries, inter-cluster mixing —
+//! paper §3.1–3.3) plus the `init`/`predict`/`predict_ag`/`train_step`
+//! program entry points, shaped exactly like the AOT artifact manifests.
+//!
+//! This is the default [`Backend`](super::Backend): it needs no artifacts
+//! on disk, no Python, and no external crates — `Manifest::synthetic`
+//! plus this module is a complete zero-dependency runtime.  The PJRT
+//! backend (`runtime::pjrt`, `xla` feature) plugs into the same trait.
+
+pub mod layer;
+pub mod model;
+pub mod ops;
+pub mod spec;
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, Executable};
+use super::tensor::HostTensor;
+
+/// The model variants the engine implements (mirrors configs.VARIANTS).
+pub const VARIANTS: [&str; 5] = ["cast_topk", "cast_sa", "vanilla", "local", "lsh"];
+const ENTRIES: [&str; 4] = ["init", "predict", "predict_ag", "train_step"];
+
+/// The pure-Rust CPU engine.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, manifest: &Manifest, entry: &str) -> bool {
+        match entry {
+            "init" | "predict" | "train_step" => true,
+            "predict_ag" => manifest.meta.has_ag(),
+            _ => false,
+        }
+    }
+
+    fn load(&self, manifest: &Manifest, entry: &str) -> Result<Arc<dyn Executable>> {
+        ensure!(
+            ENTRIES.contains(&entry),
+            "unknown program entry {entry:?} (know {ENTRIES:?})"
+        );
+        ensure!(
+            self.supports(manifest, entry),
+            "native backend has no {entry:?} for {} (variant {})",
+            manifest.key,
+            manifest.meta.variant
+        );
+        let meta = &manifest.meta;
+        if !VARIANTS.contains(&meta.variant.as_str()) {
+            bail!("unknown model variant {:?} (know {VARIANTS:?})", meta.variant);
+        }
+        ensure!(
+            meta.heads > 0 && meta.d % meta.heads == 0,
+            "d={} not divisible by h={}",
+            meta.d,
+            meta.heads
+        );
+        ops::AttnFn::parse(&meta.attn_fn)?;
+        ensure!(
+            matches!(meta.norm.as_str(), "layer" | "scale" | "batch"),
+            "unknown norm {:?}",
+            meta.norm
+        );
+        Ok(Arc::new(NativeExecutable {
+            manifest: manifest.clone(),
+            entry: entry.to_string(),
+        }))
+    }
+}
+
+/// One loaded native program (manifest snapshot + entry point).
+pub struct NativeExecutable {
+    manifest: Manifest,
+    entry: String,
+}
+
+impl Executable for NativeExecutable {
+    fn entry(&self) -> &str {
+        &self.entry
+    }
+
+    fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        match self.entry.as_str() {
+            "init" => model::run_init(&self.manifest, inputs),
+            "predict" => model::run_predict(&self.manifest, inputs),
+            "predict_ag" => model::run_predict_ag(&self.manifest, inputs),
+            "train_step" => model::run_train_step(&self.manifest, inputs),
+            other => bail!("unknown entry {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_supports_the_manifest_contract() {
+        let b = NativeBackend;
+        let cast = Manifest::synthetic(spec::tiny_meta("cast_topk"));
+        let vanilla = Manifest::synthetic(spec::tiny_meta("vanilla"));
+        for entry in ["init", "predict", "train_step"] {
+            assert!(b.supports(&cast, entry), "{entry}");
+            assert!(b.supports(&vanilla, entry), "{entry}");
+        }
+        assert!(b.supports(&cast, "predict_ag"));
+        assert!(!b.supports(&vanilla, "predict_ag"));
+        assert!(!b.supports(&cast, "nonsense"));
+        assert!(b.load(&vanilla, "predict_ag").is_err());
+        assert!(b.load(&cast, "predict_ag").is_ok());
+    }
+
+    #[test]
+    fn load_rejects_bad_geometry() {
+        let b = NativeBackend;
+        let mut meta = spec::tiny_meta("cast_topk");
+        meta.heads = 3; // 16 % 3 != 0
+        let man = Manifest::synthetic(meta);
+        assert!(b.load(&man, "predict").is_err());
+    }
+}

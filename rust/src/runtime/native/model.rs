@@ -1,0 +1,723 @@
+//! Native encoder model: embedding → blocks (attention + FFN + norms) →
+//! mean-pool → classifier head, mirroring `python/compile/model.py`.
+//!
+//! Entry points match the AOT program contracts exactly (same flat
+//! parameter order, same input/output arity), so `ModelState`, the
+//! trainer, and the analysis code are backend-agnostic:
+//!
+//!   init       (seed u32)                          → P param tensors
+//!   predict    (P params, tokens)                  → logits (B, classes)
+//!   predict_ag (P params, tokens)                  → A_g (L, B, N, Nc)
+//!   train_step (P params, P m, P v, step, lr, tokens, labels)
+//!                                                  → (P, P, P, step', loss, acc)
+//!
+//! Training scope: the forward pass is the full CAST model; the gradient
+//! is exact for the classifier head (`head.fc`, `head.out`) with the
+//! encoder backbone frozen (AdamW + global-norm clipping, as in
+//! `python/compile/train.py`).  Full native backpropagation through the
+//! attention stack is a ROADMAP item; the PJRT backend trains everything.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::artifacts::{Manifest, ModelMeta, ParamSpec};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::layer::{self, BaselineParams, CastParams, Dims};
+use super::ops::{self, AttnFn};
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const WEIGHT_DECAY: f32 = 1e-2;
+const GRAD_CLIP: f32 = 1.0;
+const NORM_EPS: f32 = 1e-5;
+
+/// Borrowed flat parameter list, addressable by manifest name.
+pub struct Params<'a> {
+    by_name: HashMap<&'a str, &'a HostTensor>,
+}
+
+impl<'a> Params<'a> {
+    pub fn bind(specs: &'a [ParamSpec], bufs: &[&'a HostTensor]) -> Result<Params<'a>> {
+        ensure!(
+            specs.len() == bufs.len(),
+            "expected {} parameter tensors, got {}",
+            specs.len(),
+            bufs.len()
+        );
+        let mut by_name = HashMap::with_capacity(specs.len());
+        for (spec, &buf) in specs.iter().zip(bufs.iter()) {
+            ensure!(
+                buf.shape == spec.shape,
+                "param {:?}: tensor shape {:?} does not match manifest {:?}",
+                spec.name,
+                buf.shape,
+                spec.shape
+            );
+            by_name.insert(spec.name.as_str(), buf);
+        }
+        Ok(Params { by_name })
+    }
+
+    fn f(&self, name: &str) -> Result<&'a [f32]> {
+        self.by_name
+            .get(name)
+            .with_context(|| format!("model parameter {name:?} missing from manifest"))?
+            .as_f32()
+            .with_context(|| format!("parameter {name:?}"))
+    }
+}
+
+fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
+    ensure!(meta.heads > 0 && meta.d % meta.heads == 0, "d={} not divisible by h={}", meta.d, meta.heads);
+    Ok(Dims {
+        b,
+        n: meta.seq_len,
+        heads: meta.heads,
+        d_h: meta.d_h(),
+        n_c: meta.n_c.max(1),
+        kappa: meta.kappa.max(1),
+        attn: AttnFn::parse(&meta.attn_fn)?,
+        clustering: meta.clustering().to_string(),
+        causal: meta.causal,
+        window: meta.window.max(1),
+    })
+}
+
+fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f32]) -> Result<()> {
+    if meta.norm == "scale" {
+        let g = p.f(&format!("{prefix}.g"))?;
+        ops::scalenorm_rows(x, g[0], meta.d, NORM_EPS);
+    } else {
+        // "layer", and "batch" substituted by affine layernorm (DESIGN.md)
+        let g = p.f(&format!("{prefix}.g"))?;
+        let b = p.f(&format!("{prefix}.b"))?;
+        ops::layernorm_rows(x, g, b, meta.d, NORM_EPS);
+    }
+    Ok(())
+}
+
+fn ffn(p: &Params, prefix: &str, x: &[f32], rows: usize, d: usize, d_ff: usize) -> Result<Vec<f32>> {
+    let mut h = ops::dense(x, p.f(&format!("{prefix}.in.w"))?, p.f(&format!("{prefix}.in.b"))?, rows, d, d_ff);
+    for v in h.iter_mut() {
+        *v = ops::gelu(*v);
+    }
+    Ok(ops::dense(&h, p.f(&format!("{prefix}.out.w"))?, p.f(&format!("{prefix}.out.b"))?, rows, d_ff, d))
+}
+
+fn attn_apply(
+    p: &Params,
+    meta: &ModelMeta,
+    prefix: &str,
+    x: &[f32],
+    dims: &Dims,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    if meta.is_cast() {
+        let cp = CastParams {
+            wq_w: p.f(&format!("{prefix}.wq.w"))?,
+            wq_b: p.f(&format!("{prefix}.wq.b"))?,
+            wk_w: p.f(&format!("{prefix}.wk.w"))?,
+            wk_b: p.f(&format!("{prefix}.wk.b"))?,
+            wv_w: p.f(&format!("{prefix}.wv.w"))?,
+            wv_b: p.f(&format!("{prefix}.wv.b"))?,
+            wo_w: p.f(&format!("{prefix}.wo.w"))?,
+            wo_b: p.f(&format!("{prefix}.wo.b"))?,
+            s: p.f(&format!("{prefix}.s"))?,
+            phi_w: p.f(&format!("{prefix}.phi.w"))?,
+            phi_b: p.f(&format!("{prefix}.phi.b"))?,
+        };
+        return layer::cast_layer(&cp, x, dims);
+    }
+    let bp = BaselineParams {
+        wq_w: p.f(&format!("{prefix}.wq.w"))?,
+        wq_b: p.f(&format!("{prefix}.wq.b"))?,
+        wk_w: p.f(&format!("{prefix}.wk.w"))?,
+        wk_b: p.f(&format!("{prefix}.wk.b"))?,
+        wv_w: p.f(&format!("{prefix}.wv.w"))?,
+        wv_b: p.f(&format!("{prefix}.wv.b"))?,
+        wo_w: p.f(&format!("{prefix}.wo.w"))?,
+        wo_b: p.f(&format!("{prefix}.wo.b"))?,
+    };
+    let out = match meta.variant.as_str() {
+        "vanilla" => layer::vanilla_layer(&bp, x, dims)?,
+        "local" => layer::local_layer(&bp, x, dims)?,
+        "lsh" => layer::lsh_layer(&bp, x, dims)?,
+        other => bail!("unknown model variant {other:?}"),
+    };
+    // baselines have no cluster affinities (model.py returns zeros)
+    let ag = vec![0.0f32; dims.b * dims.n * dims.n_c];
+    Ok((out, ag))
+}
+
+/// tokens (b·N,) int32 → pooled features (b, d) [+ per-layer A_g].
+fn encode(
+    p: &Params,
+    meta: &ModelMeta,
+    tokens: &[i32],
+    b: usize,
+    collect_ag: bool,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let n = meta.seq_len;
+    ensure!(tokens.len() == b * n, "tokens length {} != {}x{}", tokens.len(), b, n);
+    let (d, d_emb) = (meta.d, meta.d_emb);
+    let rows = b * n;
+
+    // embedding + fixed sinusoidal positions + input projection
+    let emb = p.f("embed.emb")?;
+    let pe = ops::sinusoidal_positions(n, d_emb);
+    let mut x = vec![0.0f32; rows * d_emb];
+    for bb in 0..b {
+        for nn in 0..n {
+            let tok = (tokens[bb * n + nn].max(0) as usize).min(meta.vocab.saturating_sub(1));
+            let dst = (bb * n + nn) * d_emb;
+            for j in 0..d_emb {
+                x[dst + j] = emb[tok * d_emb + j] + pe[nn * d_emb + j];
+            }
+        }
+    }
+    let mut x = ops::dense(&x, p.f("proj.w")?, p.f("proj.b")?, rows, d_emb, d);
+
+    let dims = dims_for(meta, b)?;
+    let mut ags = Vec::new();
+    for i in 0..meta.depth {
+        let blk = format!("blocks.{i}");
+        if meta.prenorm {
+            let mut xn = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm1"), &mut xn)?;
+            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &xn, &dims)?;
+            if collect_ag {
+                ags.push(ag);
+            }
+            for (xv, av) in x.iter_mut().zip(&a) {
+                *xv += av;
+            }
+            let mut x2n = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm2"), &mut x2n)?;
+            let f = ffn(p, &format!("{blk}.ffn"), &x2n, rows, d, meta.d_ff)?;
+            for (xv, fv) in x.iter_mut().zip(&f) {
+                *xv += fv;
+            }
+        } else {
+            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &x, &dims)?;
+            if collect_ag {
+                ags.push(ag);
+            }
+            for (xv, av) in x.iter_mut().zip(&a) {
+                *xv += av;
+            }
+            apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
+            let f = ffn(p, &format!("{blk}.ffn"), &x, rows, d, meta.d_ff)?;
+            for (xv, fv) in x.iter_mut().zip(&f) {
+                *xv += fv;
+            }
+            apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
+        }
+    }
+    if meta.prenorm {
+        apply_norm(p, meta, "out_norm", &mut x)?;
+    }
+
+    // mean-pool over the sequence
+    let mut pooled = vec![0.0f32; b * d];
+    let inv = 1.0 / n as f32;
+    for bb in 0..b {
+        for nn in 0..n {
+            let src = (bb * n + nn) * d;
+            for j in 0..d {
+                pooled[bb * d + j] += x[src + j] * inv;
+            }
+        }
+    }
+    Ok((pooled, ags))
+}
+
+/// Pooled classifier features (B, d or 4d for dual), from a token tensor.
+fn pooled_features(p: &Params, meta: &ModelMeta, tokens: &HostTensor) -> Result<(Vec<f32>, usize)> {
+    let toks = tokens.as_s32().context("tokens tensor")?;
+    let n = meta.seq_len;
+    if meta.dual {
+        ensure!(
+            tokens.shape.len() == 3 && tokens.shape[1] == 2 && tokens.shape[2] == n,
+            "dual tokens must be (B,2,{}), got {:?}",
+            n,
+            tokens.shape
+        );
+        let b = tokens.shape[0];
+        let mut t1 = vec![0i32; b * n];
+        let mut t2 = vec![0i32; b * n];
+        for bb in 0..b {
+            t1[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2) * n..(bb * 2 + 1) * n]);
+            t2[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2 + 1) * n..(bb * 2 + 2) * n]);
+        }
+        let (f1, _) = encode(p, meta, &t1, b, false)?;
+        let (f2, _) = encode(p, meta, &t2, b, false)?;
+        let d = meta.d;
+        let mut feats = vec![0.0f32; b * 4 * d];
+        for bb in 0..b {
+            for j in 0..d {
+                let (a, c) = (f1[bb * d + j], f2[bb * d + j]);
+                feats[bb * 4 * d + j] = a;
+                feats[bb * 4 * d + d + j] = c;
+                feats[bb * 4 * d + 2 * d + j] = a * c;
+                feats[bb * 4 * d + 3 * d + j] = a - c;
+            }
+        }
+        Ok((feats, 4 * d))
+    } else {
+        ensure!(
+            tokens.shape.len() == 2 && tokens.shape[1] == n,
+            "tokens must be (B,{}), got {:?}",
+            n,
+            tokens.shape
+        );
+        let b = tokens.shape[0];
+        let (feats, _) = encode(p, meta, toks, b, false)?;
+        Ok((feats, meta.d))
+    }
+}
+
+struct HeadForward {
+    h_pre: Vec<f32>,
+    h: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn head_forward(p: &Params, meta: &ModelMeta, feats: &[f32], b: usize, d_in: usize) -> Result<HeadForward> {
+    let d = meta.d;
+    let h_pre = ops::dense(feats, p.f("head.fc.w")?, p.f("head.fc.b")?, b, d_in, d);
+    let h: Vec<f32> = h_pre.iter().map(|&v| ops::gelu(v)).collect();
+    let logits = ops::dense(&h, p.f("head.out.w")?, p.f("head.out.b")?, b, d, meta.n_classes);
+    Ok(HeadForward { h_pre, h, logits })
+}
+
+// ---------------------------------------------------------------------------
+// program entry points
+// ---------------------------------------------------------------------------
+
+/// `init`: deterministic parameter synthesis from a u32 seed, following
+/// the same initializer families as `python/compile/layers.py` (scaled
+/// normal weights, zero biases, unit norm gains).
+pub fn run_init(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    ensure!(inputs.len() == 1, "init takes one seed input, got {}", inputs.len());
+    let seed_buf = inputs[0].as_u32().context("init seed")?;
+    ensure!(seed_buf.len() == 1, "init seed must be a scalar");
+    let seed = seed_buf[0];
+    let mut rng = Rng::new(seed as u64 ^ 0x5EED_CA57_0000);
+    let mut out = Vec::with_capacity(manifest.n_params());
+    for spec in &manifest.params {
+        let n: usize = spec.shape.iter().product();
+        let data: Vec<f32> = if spec.name.ends_with(".g") {
+            vec![1.0; n]
+        } else if spec.name.ends_with(".b") {
+            vec![0.0; n]
+        } else if spec.name == "embed.emb" {
+            let scale = 1.0 / (spec.shape[1] as f32).sqrt();
+            (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+        } else if spec.name.ends_with(".s") {
+            // surrogate tokens: normal / sqrt(d_h)
+            let d_h = *spec.shape.last().unwrap_or(&1);
+            let scale = 1.0 / (d_h as f32).sqrt();
+            (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+        } else if spec.name.ends_with(".w") {
+            let d_in = spec.shape.first().copied().unwrap_or(1);
+            let scale = 1.0 / (d_in as f32).sqrt();
+            (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+        } else {
+            bail!("init: unrecognized parameter role for {:?}", spec.name);
+        };
+        out.push(HostTensor::f32(spec.shape.clone(), data));
+    }
+    Ok(out)
+}
+
+/// `predict`: (P params, tokens) → logits (B, n_classes).
+pub fn run_predict(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let p_count = manifest.n_params();
+    ensure!(
+        inputs.len() == p_count + 1,
+        "predict takes {} params + tokens, got {} inputs",
+        p_count,
+        inputs.len()
+    );
+    let p = Params::bind(&manifest.params, &inputs[..p_count])?;
+    let meta = &manifest.meta;
+    let (feats, d_in) = pooled_features(&p, meta, inputs[p_count])?;
+    let b = feats.len() / d_in;
+    let head = head_forward(&p, meta, &feats, b, d_in)?;
+    Ok(vec![HostTensor::f32(vec![b, meta.n_classes], head.logits)])
+}
+
+/// `predict_ag`: (P params, tokens) → A_g (L, B, N, Nc).
+pub fn run_predict_ag(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let p_count = manifest.n_params();
+    ensure!(
+        inputs.len() == p_count + 1,
+        "predict_ag takes {} params + tokens, got {} inputs",
+        p_count,
+        inputs.len()
+    );
+    let meta = &manifest.meta;
+    ensure!(meta.has_ag(), "predict_ag only exists for non-dual CAST variants");
+    let p = Params::bind(&manifest.params, &inputs[..p_count])?;
+    let tokens = inputs[p_count];
+    let toks = tokens.as_s32().context("tokens tensor")?;
+    ensure!(
+        tokens.shape.len() == 2 && tokens.shape[1] == meta.seq_len,
+        "tokens must be (B,{}), got {:?}",
+        meta.seq_len,
+        tokens.shape
+    );
+    let b = tokens.shape[0];
+    let (_, ags) = encode(&p, meta, toks, b, true)?;
+    ensure!(ags.len() == meta.depth, "collected {} A_g layers, expected {}", ags.len(), meta.depth);
+    let mut stacked = Vec::with_capacity(meta.depth * b * meta.seq_len * meta.n_c);
+    for ag in &ags {
+        stacked.extend_from_slice(ag);
+    }
+    Ok(vec![HostTensor::f32(
+        vec![meta.depth, b, meta.seq_len, meta.n_c],
+        stacked,
+    )])
+}
+
+/// `train_step`: one AdamW update with exact classifier-head gradients
+/// (backbone frozen — see module docs).  Input/output arity matches the
+/// AOT train_step program.
+pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let p_count = manifest.n_params();
+    ensure!(
+        inputs.len() == 3 * p_count + 4,
+        "train_step takes 3x{} params + (step, lr, tokens, labels), got {} inputs",
+        p_count,
+        inputs.len()
+    );
+    let params = &inputs[..p_count];
+    let m_in = &inputs[p_count..2 * p_count];
+    let v_in = &inputs[2 * p_count..3 * p_count];
+    let step = inputs[3 * p_count].scalar().context("step")?;
+    let lr = inputs[3 * p_count + 1].scalar().context("lr")?;
+    let tokens = inputs[3 * p_count + 2];
+    let labels = inputs[3 * p_count + 3].as_s32().context("labels")?;
+
+    let meta = &manifest.meta;
+    let p = Params::bind(&manifest.params, params)?;
+    let (feats, d_in) = pooled_features(&p, meta, tokens)?;
+    let b = labels.len();
+    ensure!(feats.len() == b * d_in, "feature/label batch mismatch");
+    let head = head_forward(&p, meta, &feats, b, d_in)?;
+    let (d, nc) = (meta.d, meta.n_classes);
+
+    // softmax cross-entropy + accuracy + dL/dlogits
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut dlogits = vec![0.0f32; b * nc];
+    for i in 0..b {
+        let row = &head.logits[i * nc..(i + 1) * nc];
+        let label = labels[i];
+        ensure!(
+            label >= 0 && (label as usize) < nc,
+            "label {label} out of range for {nc} classes"
+        );
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+        loss += -((row[label as usize] - mx) - z.ln()) as f64;
+        let mut arg = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[arg] {
+                arg = j;
+            }
+            dlogits[i * nc + j] = (x - mx).exp() / z;
+        }
+        dlogits[i * nc + label as usize] -= 1.0;
+        if arg as i32 == label {
+            correct += 1;
+        }
+    }
+    let inv_b = 1.0 / b as f32;
+    for g in dlogits.iter_mut() {
+        *g *= inv_b;
+    }
+    let loss = (loss / b as f64) as f32;
+    let acc = correct as f32 / b as f32;
+
+    // exact head gradients
+    let out_w = p.f("head.out.w")?; // (d, nc)
+    let mut g_out_w = vec![0.0f32; d * nc];
+    let mut g_out_b = vec![0.0f32; nc];
+    let mut dh_pre = vec![0.0f32; b * d];
+    for i in 0..b {
+        for o in 0..nc {
+            let gl = dlogits[i * nc + o];
+            if gl == 0.0 {
+                continue;
+            }
+            g_out_b[o] += gl;
+            for j in 0..d {
+                g_out_w[j * nc + o] += head.h[i * d + j] * gl;
+                dh_pre[i * d + j] += gl * out_w[j * nc + o];
+            }
+        }
+    }
+    for (i, g) in dh_pre.iter_mut().enumerate() {
+        *g *= ops::gelu_prime(head.h_pre[i]);
+    }
+    let mut g_fc_w = vec![0.0f32; d_in * d]; // (d_in, d)
+    let mut g_fc_b = vec![0.0f32; d];
+    for i in 0..b {
+        for j in 0..d {
+            let g = dh_pre[i * d + j];
+            if g == 0.0 {
+                continue;
+            }
+            g_fc_b[j] += g;
+            for k in 0..d_in {
+                g_fc_w[k * d + j] += feats[i * d_in + k] * g;
+            }
+        }
+    }
+
+    // global-norm clip over the trained subset (train.py: clip = 1.0)
+    let mut sq = 0.0f64;
+    for grads in [&g_out_w, &g_out_b, &g_fc_w, &g_fc_b] {
+        sq += grads.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+    }
+    let gnorm = sq.sqrt() as f32;
+    let clip_scale = (GRAD_CLIP / gnorm.max(1e-6)).min(1.0);
+
+    let t = step + 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let mut grads_by_name: HashMap<&str, Vec<f32>> = HashMap::new();
+    grads_by_name.insert("head.fc.b", g_fc_b);
+    grads_by_name.insert("head.fc.w", g_fc_w);
+    grads_by_name.insert("head.out.b", g_out_b);
+    grads_by_name.insert("head.out.w", g_out_w);
+
+    let mut p_out = Vec::with_capacity(p_count);
+    let mut m_out = Vec::with_capacity(p_count);
+    let mut v_out = Vec::with_capacity(p_count);
+    for (i, spec) in manifest.params.iter().enumerate() {
+        match grads_by_name.get(spec.name.as_str()) {
+            Some(grad) => {
+                let pv = params[i].as_f32()?;
+                let mv = m_in[i].as_f32()?;
+                let vv = v_in[i].as_f32()?;
+                ensure!(pv.len() == grad.len(), "grad size mismatch for {:?}", spec.name);
+                let decay = spec.name.ends_with(".w"); // AdamW: no decay on biases
+                let mut p2 = Vec::with_capacity(pv.len());
+                let mut m2 = Vec::with_capacity(pv.len());
+                let mut v2 = Vec::with_capacity(pv.len());
+                for j in 0..pv.len() {
+                    let g = grad[j] * clip_scale;
+                    let mj = ADAM_B1 * mv[j] + (1.0 - ADAM_B1) * g;
+                    let vj = ADAM_B2 * vv[j] + (1.0 - ADAM_B2) * g * g;
+                    let mhat = mj / bc1;
+                    let vhat = vj / bc2;
+                    let mut delta = mhat / (vhat.sqrt() + ADAM_EPS);
+                    if decay {
+                        delta += WEIGHT_DECAY * pv[j];
+                    }
+                    p2.push(pv[j] - lr * delta);
+                    m2.push(mj);
+                    v2.push(vj);
+                }
+                p_out.push(HostTensor::f32(spec.shape.clone(), p2));
+                m_out.push(HostTensor::f32(spec.shape.clone(), m2));
+                v_out.push(HostTensor::f32(spec.shape.clone(), v2));
+            }
+            None => {
+                p_out.push(params[i].clone());
+                m_out.push(m_in[i].clone());
+                v_out.push(v_in[i].clone());
+            }
+        }
+    }
+
+    let mut outputs = p_out;
+    outputs.extend(m_out);
+    outputs.extend(v_out);
+    outputs.push(HostTensor::scalar_f32(t));
+    outputs.push(HostTensor::scalar_f32(loss));
+    outputs.push(HostTensor::scalar_f32(acc));
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spec::tiny_meta;
+
+    fn tiny_manifest(variant: &str) -> Manifest {
+        Manifest::synthetic(tiny_meta(variant))
+    }
+
+    fn init_params(man: &Manifest, seed: u32) -> Vec<HostTensor> {
+        let seed_t = HostTensor::u32(vec![], vec![seed]);
+        run_init(man, &[&seed_t]).unwrap()
+    }
+
+    fn tokens_for(man: &Manifest, fill: impl Fn(usize) -> i32) -> HostTensor {
+        let n: usize = man.tokens_shape.iter().product();
+        HostTensor::s32(man.tokens_shape.clone(), (0..n).map(fill).collect())
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let man = tiny_manifest("cast_topk");
+        let a = init_params(&man, 7);
+        let b = init_params(&man, 7);
+        let c = init_params(&man, 8);
+        assert_eq!(a.len(), man.n_params());
+        for ((x, y), spec) in a.iter().zip(&b).zip(&man.params) {
+            assert_eq!(x.shape, spec.shape, "{}", spec.name);
+            assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap(), "{}", spec.name);
+            assert!(x.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+        let same = a
+            .iter()
+            .zip(&c)
+            .all(|(x, y)| x.as_f32().unwrap() == y.as_f32().unwrap());
+        assert!(!same, "different seeds must give different params");
+    }
+
+    #[test]
+    fn predict_emits_finite_logits_for_every_variant() {
+        for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+            let man = tiny_manifest(variant);
+            let params = init_params(&man, 1);
+            let tokens = tokens_for(&man, |i| (i % 30) as i32);
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.push(&tokens);
+            let out = run_predict(&man, &inputs).unwrap();
+            assert_eq!(out.len(), 1, "{variant}");
+            assert_eq!(out[0].shape, vec![2, 2], "{variant}");
+            assert!(
+                out[0].as_f32().unwrap().iter().all(|v| v.is_finite()),
+                "{variant}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_is_deterministic() {
+        let man = tiny_manifest("cast_topk");
+        let params = init_params(&man, 3);
+        let tokens = tokens_for(&man, |i| (i % 17) as i32);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        let a = run_predict(&man, &inputs).unwrap();
+        let b = run_predict(&man, &inputs).unwrap();
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn predict_ag_shape_and_row_sums() {
+        let man = tiny_manifest("cast_topk");
+        let params = init_params(&man, 0);
+        let tokens = tokens_for(&man, |_| 2);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        let out = run_predict_ag(&man, &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2, 64, 4]);
+        for row in out[0].as_f32().unwrap().chunks(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "A_g row sums to {s}");
+        }
+    }
+
+    #[test]
+    fn predict_ag_refused_for_baselines() {
+        let man = tiny_manifest("vanilla");
+        let params = init_params(&man, 0);
+        let tokens = tokens_for(&man, |_| 1);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        assert!(run_predict_ag(&man, &inputs).is_err());
+    }
+
+    #[test]
+    fn train_step_arity_and_counters() {
+        let man = tiny_manifest("cast_topk");
+        let params = init_params(&man, 5);
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|t| HostTensor::zeros(t.dtype(), t.shape.clone()))
+            .collect();
+        let step = HostTensor::scalar_f32(0.0);
+        let lr = HostTensor::scalar_f32(1e-2);
+        let tokens = tokens_for(&man, |i| (i % 29) as i32);
+        let labels = HostTensor::s32(vec![2], vec![0, 1]);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.extend(zeros.iter());
+        inputs.extend(zeros.iter());
+        inputs.push(&step);
+        inputs.push(&lr);
+        inputs.push(&tokens);
+        inputs.push(&labels);
+        let out = run_train_step(&man, &inputs).unwrap();
+        let p = man.n_params();
+        assert_eq!(out.len(), 3 * p + 3);
+        assert_eq!(out[3 * p].scalar().unwrap(), 1.0); // step'
+        let loss = out[3 * p + 1].scalar().unwrap();
+        let acc = out[3 * p + 2].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        // head params moved, backbone untouched
+        for (i, spec) in man.params.iter().enumerate() {
+            let before = params[i].as_f32().unwrap();
+            let after = out[i].as_f32().unwrap();
+            if spec.name.starts_with("head.") {
+                assert_ne!(before, after, "{} should update", spec.name);
+            } else {
+                assert_eq!(before, after, "{} is frozen", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_train_steps_on_one_batch_reduce_loss() {
+        let man = tiny_manifest("cast_topk");
+        let mut params = init_params(&man, 9);
+        let mut m: Vec<HostTensor> = params
+            .iter()
+            .map(|t| HostTensor::zeros(t.dtype(), t.shape.clone()))
+            .collect();
+        let mut v = m.clone();
+        let tokens = tokens_for(&man, |i| ((i * 7 + 3) % 90) as i32);
+        let labels = HostTensor::s32(vec![2], vec![0, 1]);
+        let lr = HostTensor::scalar_f32(1e-2);
+        let mut step = HostTensor::scalar_f32(0.0);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for it in 0..60 {
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.extend(m.iter());
+            inputs.extend(v.iter());
+            inputs.push(&step);
+            inputs.push(&lr);
+            inputs.push(&tokens);
+            inputs.push(&labels);
+            let mut out = run_train_step(&man, &inputs).unwrap();
+            let p = man.n_params();
+            last = out[3 * p + 1].scalar().unwrap();
+            if it == 0 {
+                first = last;
+            }
+            step = HostTensor::scalar_f32(out[3 * p].scalar().unwrap());
+            let v_new = out.split_off(2 * p);
+            // out now holds params' ++ m'; v_new holds v' ++ scalars
+            let m_new = out.split_off(p);
+            params = out;
+            m = m_new;
+            v = v_new.into_iter().take(p).collect();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(
+            last < first * 0.9,
+            "overfitting one batch must cut loss: {first:.4} -> {last:.4}"
+        );
+    }
+}

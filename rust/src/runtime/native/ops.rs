@@ -1,0 +1,303 @@
+//! Scalar f32 building blocks for the native CPU engine.
+//!
+//! Semantics mirror `python/compile/layers.py` and
+//! `python/compile/kernels/ref.py` (the correctness oracles of the AOT
+//! path): same activation definitions, same normalizations, same masking
+//! conventions.  Everything is dense row-major `Vec<f32>`; shapes are
+//! carried by the callers.
+
+use anyhow::{bail, Result};
+
+/// Additive mask value (matches `kernel_ref.NEG_INF`).
+pub const NEG_INF: f32 = -1e9;
+
+/// Row-normalized attention weight function (softmax or MEGA's laplace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnFn {
+    Softmax,
+    Laplace,
+}
+
+impl AttnFn {
+    pub fn parse(s: &str) -> Result<AttnFn> {
+        Ok(match s {
+            "softmax" => AttnFn::Softmax,
+            "laplace" => AttnFn::Laplace,
+            other => bail!("unknown attention fn {other:?}"),
+        })
+    }
+}
+
+/// `y = x @ w + b` where `x` is (rows, d_in), `w` is (d_in, d_out),
+/// `b` is (d_out).
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], rows: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(b.len(), d_out);
+    let mut y = Vec::with_capacity(rows * d_out);
+    for _ in 0..rows {
+        y.extend_from_slice(b);
+    }
+    for r in 0..rows {
+        let xrow = &x[r * d_in..(r + 1) * d_in];
+        let yrow = &mut y[r * d_out..(r + 1) * d_out];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * d_out..(i + 1) * d_out];
+                for (o, &wv) in wrow.iter().enumerate() {
+                    yrow[o] += xv * wv;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Normalize every `cols`-wide row of `x` in place with the given weight
+/// function.  Rows that are entirely masked to `NEG_INF` become uniform
+/// (softmax) or ~zero (laplace) — callers multiply by the mask afterwards,
+/// exactly like the reference kernel.
+pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
+    debug_assert!(cols > 0 && x.len() % cols == 0);
+    match f {
+        AttnFn::Softmax => {
+            for row in x.chunks_mut(cols) {
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - m).exp();
+                    z += *v;
+                }
+                let inv = 1.0 / z.max(1e-30);
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        AttnFn::Laplace => {
+            // MEGA (Ma et al., 2023): phi_laplace with mu = sqrt(1/2),
+            // sigma = sqrt(1/(4*pi)), rescaled row-wise to a distribution.
+            let mu = 0.5f32.sqrt();
+            let sigma = (0.25 / std::f32::consts::PI).sqrt();
+            let denom = sigma * 2.0f32.sqrt();
+            for row in x.chunks_mut(cols) {
+                let mut z = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = 0.5 * (1.0 + erf((*v - mu) / denom));
+                    z += *v;
+                }
+                let inv = 1.0 / z.max(1e-6);
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// Error function (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7).
+pub fn erf(x: f32) -> f32 {
+    let sign: f64 = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs() as f64;
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    (sign * (1.0 - poly * (-x * x).exp())) as f32
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable softplus.
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// `softplus(x) + 1` (Zheng et al., 2015), used in paper eq. 4/5.
+pub fn softplus1(x: f32) -> f32 {
+    softplus(x) + 1.0
+}
+
+/// Gelu with the tanh approximation (jax.nn.gelu's default).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// d gelu / dx for the tanh approximation (the head-gradient path).
+pub fn gelu_prime(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044_715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044_715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// LayerNorm over the last dimension: `g * (x - mu) / sqrt(var + eps) + b`.
+pub fn layernorm_rows(x: &mut [f32], g: &[f32], b: &[f32], d: usize, eps: f32) {
+    debug_assert!(x.len() % d == 0);
+    for row in x.chunks_mut(d) {
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = g[i] * (*v - mu) * inv + b[i];
+        }
+    }
+}
+
+/// ScaleNorm (Nguyen & Salazar, 2019): `g * x * sqrt(d) / ||x||`.
+pub fn scalenorm_rows(x: &mut [f32], g: f32, d: usize, eps: f32) {
+    debug_assert!(x.len() % d == 0);
+    let sqrt_d = (d as f32).sqrt();
+    for row in x.chunks_mut(d) {
+        let rms = (row.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
+        let s = g * sqrt_d / rms;
+        for v in row.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Fixed sinusoidal positional embeddings (Vaswani et al., 2017), matching
+/// `layers.sinusoidal_positions`: `(n, d)` with sin block then cos block.
+pub fn sinusoidal_positions(n: usize, d: usize) -> Vec<f32> {
+    let half = d.div_ceil(2);
+    let mut pe = vec![0.0f32; n * d];
+    for pos in 0..n {
+        for j in 0..half {
+            let freq = (-(10000.0f64.ln()) * j as f64 / half as f64).exp();
+            let ang = pos as f64 * freq;
+            pe[pos * d + j] = ang.sin() as f32;
+            let cj = half + j;
+            if cj < d {
+                pe[pos * d + cj] = ang.cos() as f32;
+            }
+        }
+    }
+    pe
+}
+
+/// Stable descending argsort (ties keep the lower index first — the same
+/// order `lax.sort_key_val` over `(-x, iota)` produces).
+pub fn argsort_desc(scores: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_manual() {
+        // x (2,3) @ w (3,2) + b
+        let x = [1.0, 2.0, 3.0, 0.5, -1.0, 0.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = [10.0, 20.0];
+        let y = dense(&x, &w, &b, 2, 3, 2);
+        assert_eq!(y, vec![14.0, 25.0, 10.5, 19.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, NEG_INF, -1.0];
+        attn_rows(&mut x, 3, AttnFn::Softmax);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        assert!(x[4] < 1e-6, "masked entry must vanish: {}", x[4]);
+    }
+
+    #[test]
+    fn laplace_rows_normalize_and_mask() {
+        let mut x = vec![0.5, 1.5, NEG_INF];
+        attn_rows(&mut x, 3, AttnFn::Laplace);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "sums to {s}");
+        assert!(x[2] < 1e-6);
+        assert!(x[1] > x[0]);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+        assert!((erf(3.0) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_and_derivative() {
+        assert!(gelu(0.0).abs() < 1e-6);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+        // numeric derivative check
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let h = 1e-3;
+            let num = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((num - gelu_prime(x)).abs() < 1e-2, "x={x}: {num} vs {}", gelu_prime(x));
+        }
+    }
+
+    #[test]
+    fn softplus_stable() {
+        assert!((softplus(0.0) - 0.6931).abs() < 1e-3);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-3);
+        assert!(softplus(-30.0) >= 0.0 && softplus(-30.0) < 1e-6);
+        assert!((softplus1(0.0) - 1.6931).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let d = 4;
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; d];
+        let b = vec![0.0; d];
+        layernorm_rows(&mut x, &g, &b, d, 1e-5);
+        let mu: f32 = x.iter().sum::<f32>() / d as f32;
+        let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        assert!(mu.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn scalenorm_sets_norm() {
+        let d = 4;
+        let mut x = vec![3.0, 0.0, 4.0, 0.0]; // ||x|| = 5
+        scalenorm_rows(&mut x, 1.0, d, 1e-5);
+        let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - (d as f32).sqrt()).abs() < 1e-3, "norm {norm}");
+    }
+
+    #[test]
+    fn sinusoidal_shape_and_range() {
+        let pe = sinusoidal_positions(8, 6);
+        assert_eq!(pe.len(), 48);
+        assert!(pe.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        // position 0: sin block is 0, cos block is 1
+        assert!(pe[0].abs() < 1e-6);
+        assert!((pe[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argsort_desc_stable_ties() {
+        assert_eq!(argsort_desc(&[0.5, 0.9, 0.5, 0.1]), vec![1, 0, 2, 3]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Flat parameter layout of the encoder model — the native mirror of the
+//! ordering `python/compile/model.py` records in `manifest.json`
+//! (jax `tree_flatten`, which walks dict keys in sorted order).
+//!
+//! Top-level order: `blocks` < `embed` < `head` < `out_norm` < `proj`.
+//! Per block: `attn` < `ffn` < `norm1` < `norm2`; per dense layer `b` < `w`.
+//! Keeping this order bit-identical to the AOT pipeline means one
+//! `ModelState` / checkpoint layout serves both backends.
+
+use crate::runtime::artifacts::{ModelMeta, ParamSpec};
+use crate::runtime::tensor::DType;
+
+fn f32_spec(name: String, shape: Vec<usize>) -> ParamSpec {
+    ParamSpec { name, shape, dtype: DType::F32 }
+}
+
+fn dense_specs(out: &mut Vec<ParamSpec>, prefix: &str, d_in: usize, d_out: usize) {
+    out.push(f32_spec(format!("{prefix}.b"), vec![d_out]));
+    out.push(f32_spec(format!("{prefix}.w"), vec![d_in, d_out]));
+}
+
+fn norm_specs(out: &mut Vec<ParamSpec>, prefix: &str, kind: &str, d: usize) {
+    if kind == "scale" {
+        out.push(f32_spec(format!("{prefix}.g"), vec![]));
+    } else {
+        // "layer" and "batch" (substituted by an affine layernorm, see
+        // DESIGN.md §Substitutions) share the same parameter shape
+        out.push(f32_spec(format!("{prefix}.b"), vec![d]));
+        out.push(f32_spec(format!("{prefix}.g"), vec![d]));
+    }
+}
+
+/// The full flat parameter list for a model config, in manifest order.
+pub fn param_specs(meta: &ModelMeta) -> Vec<ParamSpec> {
+    let (d, d_ff, d_emb) = (meta.d, meta.d_ff, meta.d_emb);
+    let mut out = Vec::new();
+    for i in 0..meta.depth {
+        let blk = format!("blocks.{i}");
+        // attn (sorted keys: phi < s < wk < wo < wq < wv; baselines have
+        // only the four projections)
+        if meta.is_cast() {
+            dense_specs(&mut out, &format!("{blk}.attn.phi"), d, 1);
+            out.push(f32_spec(
+                format!("{blk}.attn.s"),
+                vec![meta.n_c, meta.heads, meta.d_h()],
+            ));
+        }
+        for proj in ["wk", "wo", "wq", "wv"] {
+            dense_specs(&mut out, &format!("{blk}.attn.{proj}"), d, d);
+        }
+        // ffn ("in" < "out")
+        dense_specs(&mut out, &format!("{blk}.ffn.in"), d, d_ff);
+        dense_specs(&mut out, &format!("{blk}.ffn.out"), d_ff, d);
+        norm_specs(&mut out, &format!("{blk}.norm1"), &meta.norm, d);
+        norm_specs(&mut out, &format!("{blk}.norm2"), &meta.norm, d);
+    }
+    out.push(f32_spec("embed.emb".to_string(), vec![meta.vocab, d_emb]));
+    let d_head_in = if meta.dual { 4 * d } else { d };
+    dense_specs(&mut out, "head.fc", d_head_in, d);
+    dense_specs(&mut out, "head.out", d, meta.n_classes);
+    if meta.prenorm {
+        norm_specs(&mut out, "out_norm", &meta.norm, d);
+    }
+    dense_specs(&mut out, "proj", d_emb, d);
+    out
+}
+
+/// The tiny smoke config (`python/compile/configs.py::tiny`): text task,
+/// seq 64, batch 2, depth 2, h 2, d 16, Nc 4, kappa 16.
+pub fn tiny_meta(variant: &str) -> ModelMeta {
+    ModelMeta {
+        task: "text".to_string(),
+        variant: variant.to_string(),
+        seq_len: 64,
+        batch: 2,
+        n_c: 4,
+        kappa: 16,
+        depth: 2,
+        heads: 2,
+        d: 16,
+        d_ff: 32,
+        d_emb: 16,
+        vocab: 256,
+        n_classes: 2,
+        dual: false,
+        norm: "layer".to_string(),
+        prenorm: false,
+        attn_fn: "softmax".to_string(),
+        window: 64,
+        causal: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_cast_layout_matches_aot_count_and_order() {
+        let specs = param_specs(&tiny_meta("cast_topk"));
+        // per block: 11 attn + 4 ffn + 2 + 2 norms = 19; x2 blocks = 38;
+        // + embed + 4 head + 2 proj = 45
+        assert_eq!(specs.len(), 45);
+        assert_eq!(specs[0].name, "blocks.0.attn.phi.b");
+        assert_eq!(specs[1].name, "blocks.0.attn.phi.w");
+        assert_eq!(specs[1].shape, vec![16, 1]);
+        assert_eq!(specs[2].name, "blocks.0.attn.s");
+        assert_eq!(specs[2].shape, vec![4, 2, 8]);
+        assert_eq!(specs[19].name, "blocks.1.attn.phi.b");
+        assert_eq!(specs[38].name, "embed.emb");
+        assert_eq!(specs[38].shape, vec![256, 16]);
+        assert_eq!(specs[39].name, "head.fc.b");
+        assert_eq!(specs[43].name, "proj.b");
+        assert_eq!(specs[44].name, "proj.w");
+        assert_eq!(specs[44].shape, vec![16, 16]);
+        // names are strictly ordered the way sorted-dict flattening yields
+        for pair in specs.windows(2) {
+            assert_ne!(pair[0].name, pair[1].name);
+        }
+    }
+
+    #[test]
+    fn baseline_layout_drops_cast_params() {
+        let cast = param_specs(&tiny_meta("cast_topk"));
+        let vanilla = param_specs(&tiny_meta("vanilla"));
+        // vanilla loses phi.b, phi.w and s per block
+        assert_eq!(cast.len() - vanilla.len(), 2 * 3);
+        assert_eq!(vanilla[0].name, "blocks.0.attn.wk.b");
+        assert!(vanilla.iter().all(|p| !p.name.contains(".phi.") && !p.name.ends_with(".s")));
+    }
+
+    #[test]
+    fn prenorm_and_scale_and_dual_variants() {
+        let mut meta = tiny_meta("cast_topk");
+        meta.prenorm = true;
+        meta.norm = "scale".to_string();
+        meta.dual = true;
+        let specs = param_specs(&meta);
+        // scale norm: one scalar g per norm site
+        let norm1: Vec<_> = specs.iter().filter(|p| p.name.contains("norm1")).collect();
+        assert_eq!(norm1.len(), 2); // one per block
+        assert!(norm1.iter().all(|p| p.shape.is_empty()));
+        // out_norm present between head.* and proj.*
+        let names: Vec<&str> = specs.iter().map(|p| p.name.as_str()).collect();
+        let i_out = names.iter().position(|n| *n == "out_norm.g").unwrap();
+        let i_head = names.iter().position(|n| *n == "head.out.w").unwrap();
+        let i_proj = names.iter().position(|n| *n == "proj.b").unwrap();
+        assert!(i_head < i_out && i_out < i_proj);
+        // dual head consumes 4d features
+        let fc_w = specs.iter().find(|p| p.name == "head.fc.w").unwrap();
+        assert_eq!(fc_w.shape, vec![64, 16]);
+    }
+}

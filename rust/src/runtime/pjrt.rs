@@ -1,0 +1,112 @@
+//! PJRT backend (`xla` feature): load AOT HLO-text artifacts and execute
+//! them, wrapping the `xla` crate the way /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.
+//!
+//! Most artifacts are lowered with `return_tuple=True`, so execution
+//! returns ONE tuple literal decomposed into per-output `HostTensor`s;
+//! single-output programs whose root is *not* a tuple yield a 1-element
+//! vector instead of failing (see `run_literals_raw`).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, Executable};
+use super::tensor::HostTensor;
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+}
+
+// The PJRT CPU client is thread-safe at the C++ level; executions are
+// serialized per-executable by XLA itself.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+unsafe impl Send for PjrtExecutable {}
+unsafe impl Sync for PjrtExecutable {}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::debug!(
+            "pjrt: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports(&self, manifest: &Manifest, entry: &str) -> bool {
+        manifest.has(entry)
+    }
+
+    fn load(&self, manifest: &Manifest, entry: &str) -> Result<Arc<dyn Executable>> {
+        let path = manifest.hlo_path(entry)?;
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {path:?}"))?;
+        Ok(Arc::new(PjrtExecutable { exe, entry: entry.to_string() }))
+    }
+}
+
+pub struct PjrtExecutable {
+    exe: PjRtLoadedExecutable,
+    entry: String,
+}
+
+impl Executable for PjrtExecutable {
+    fn entry(&self) -> &str {
+        &self.entry
+    }
+
+    fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+}
+
+impl PjrtExecutable {
+    /// Execute with pre-built literals (hot path: lets the caller reuse
+    /// param literals across steps instead of re-encoding them).
+    pub fn run_literals(&self, literals: &[Literal]) -> Result<Vec<HostTensor>> {
+        let out = self.run_literals_raw(literals)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute returning raw literals (no host-tensor conversion).
+    ///
+    /// Handles both root shapes the AOT pipeline can produce: a tuple
+    /// (decomposed into its elements) and a plain array (returned as a
+    /// 1-element vec) — `decompose_tuple` hard-failing on single-output
+    /// programs was a long-standing bug.
+    pub fn run_literals_raw(&self, literals: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(literals)
+            .with_context(|| format!("executing {:?}", self.entry))?;
+        if result.is_empty() || result[0].is_empty() {
+            bail!("execution produced no outputs");
+        }
+        let mut root = result[0][0].to_literal_sync().context("fetching result literal")?;
+        match root.decompose_tuple() {
+            Ok(parts) if !parts.is_empty() => Ok(parts),
+            // non-tuple root (single-output program): the literal itself
+            // is the one output
+            _ => Ok(vec![root]),
+        }
+    }
+}

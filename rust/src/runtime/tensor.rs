@@ -1,11 +1,12 @@
-//! Host-side tensors: the typed buffers the coordinator owns between PJRT
-//! calls (parameters, optimizer state, batches, metrics).
+//! Host-side tensors: the typed buffers the coordinator owns between
+//! backend calls (parameters, optimizer state, batches, metrics).
 //!
-//! Deliberately minimal — three dtypes (f32/s32/u32 are all the AOT
-//! artifacts use) and conversion to/from `xla::Literal`.
+//! Deliberately minimal — three dtypes (f32/s32/u32 are all the program
+//! contracts use).  Conversion to/from `xla::Literal` is only compiled
+//! with the optional `xla` feature (the PJRT backend); the native backend
+//! consumes `HostTensor`s directly.
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal};
+use anyhow::{bail, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -32,11 +33,12 @@ impl DType {
         }
     }
 
-    fn element_type(self) -> ElementType {
+    #[cfg(feature = "xla")]
+    fn element_type(self) -> xla::ElementType {
         match self {
-            DType::F32 => ElementType::F32,
-            DType::S32 => ElementType::S32,
-            DType::U32 => ElementType::U32,
+            DType::F32 => xla::ElementType::F32,
+            DType::S32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
         }
     }
 }
@@ -107,34 +109,54 @@ impl HostTensor {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
-            _ => bail!("tensor is {:?}, expected f32", self.dtype()),
+            _ => bail!("tensor is {}, expected f32", self.dtype().name()),
         }
     }
 
     pub fn as_s32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::S32(v) => Ok(v),
-            _ => bail!("tensor is {:?}, expected s32", self.dtype()),
+            _ => bail!("tensor is {}, expected s32", self.dtype().name()),
         }
     }
 
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            Data::U32(v) => Ok(v),
+            _ => bail!("tensor is {}, expected u32", self.dtype().name()),
+        }
+    }
+
+    /// The single f32 value of a scalar tensor.  The error names the
+    /// actual dtype/shape so arity bugs in program outputs are diagnosable.
     pub fn scalar(&self) -> Result<f32> {
-        let v = self.as_f32()?;
+        let v = match &self.data {
+            Data::F32(v) => v,
+            _ => bail!(
+                "expected an f32 scalar, tensor is {} with shape {:?}",
+                self.dtype().name(),
+                self.shape
+            ),
+        };
         if v.len() != 1 {
             bail!("expected a scalar, shape is {:?}", self.shape);
         }
         Ok(v[0])
     }
+}
 
-    // -- literal conversion ------------------------------------------------
+// -- literal conversion (PJRT backend only) --------------------------------
 
-    pub fn to_literal(&self) -> Result<Literal> {
+#[cfg(feature = "xla")]
+impl HostTensor {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        use anyhow::Context;
         let bytes: &[u8] = match &self.data {
             Data::F32(v) => bytemuck_cast(v),
             Data::S32(v) => bytemuck_cast(v),
             Data::U32(v) => bytemuck_cast(v),
         };
-        Literal::create_from_shape_and_untyped_data(
+        xla::Literal::create_from_shape_and_untyped_data(
             self.dtype().element_type(),
             &self.shape,
             bytes,
@@ -142,14 +164,15 @@ impl HostTensor {
         .context("creating literal from host tensor")
     }
 
-    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        use anyhow::Context;
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         let ty = lit.ty().context("literal element type")?;
         let t = match ty {
-            ElementType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
-            ElementType::S32 => HostTensor::s32(dims, lit.to_vec::<i32>()?),
-            ElementType::U32 => HostTensor::u32(dims, lit.to_vec::<u32>()?),
+            xla::ElementType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => HostTensor::s32(dims, lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => HostTensor::u32(dims, lit.to_vec::<u32>()?),
             other => bail!("unsupported literal element type {other:?}"),
         };
         Ok(t)
@@ -157,6 +180,7 @@ impl HostTensor {
 }
 
 /// Reinterpret a &[T] of 4-byte scalars as bytes (little-endian host).
+#[cfg(feature = "xla")]
 fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
@@ -186,6 +210,44 @@ mod tests {
     }
 
     #[test]
+    fn u32_accessor_roundtrip() {
+        let t = HostTensor::u32(vec![3], vec![7, 0, u32::MAX]);
+        assert_eq!(t.as_u32().unwrap(), &[7, 0, u32::MAX]);
+        assert_eq!(t.dtype(), DType::U32);
+        // the other typed accessors must refuse a u32 tensor
+        assert!(t.as_f32().is_err());
+        assert!(t.as_s32().is_err());
+    }
+
+    #[test]
+    fn u32_accessor_rejects_other_dtypes() {
+        let f = HostTensor::f32(vec![1], vec![1.5]);
+        let err = format!("{:#}", f.as_u32().unwrap_err());
+        assert!(err.contains("f32"), "error should name actual dtype: {err}");
+        let s = HostTensor::s32(vec![1], vec![-3]);
+        assert!(s.as_u32().is_err());
+    }
+
+    #[test]
+    fn scalar_reports_actual_dtype_on_mismatch() {
+        let t = HostTensor::s32(vec![], vec![5]);
+        let err = format!("{:#}", t.scalar().unwrap_err());
+        assert!(err.contains("s32"), "error should name the actual dtype: {err}");
+
+        let u = HostTensor::u32(vec![2], vec![1, 2]);
+        let err = format!("{:#}", u.scalar().unwrap_err());
+        assert!(err.contains("u32"), "error should name the actual dtype: {err}");
+
+        // non-scalar f32 still errors on shape
+        let f = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let err = format!("{:#}", f.scalar().unwrap_err());
+        assert!(err.contains("shape"), "{err}");
+
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+    }
+
+    #[cfg(feature = "xla")]
+    #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let lit = t.to_literal().unwrap();
@@ -194,6 +256,7 @@ mod tests {
         assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_s32_scalar_shapes() {
         let t = HostTensor::s32(vec![3], vec![7, -1, 0]);

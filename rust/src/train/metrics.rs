@@ -1,5 +1,5 @@
 //! Training metrics: per-step records, running means, and export to
-//! JSON/CSV for EXPERIMENTS.md and the loss-curve artifacts.
+//! JSON/CSV for experiment reports and the loss-curve artifacts.
 
 use std::path::Path;
 

@@ -56,8 +56,8 @@ pub struct TrainReport {
 pub struct Trainer {
     engine: Arc<Engine>,
     pub manifest: Manifest,
-    train_exe: Arc<Executable>,
-    predict_exe: Option<Arc<Executable>>,
+    train_exe: Arc<dyn Executable>,
+    predict_exe: Option<Arc<dyn Executable>>,
     pub state: ModelState,
     gen: Arc<dyn TaskGen>,
     cfg: TrainConfig,
@@ -77,9 +77,9 @@ impl Trainer {
             gen.vocab(),
             manifest.meta.vocab
         );
-        let train_exe = engine.load_hlo(&manifest.hlo_path("train_step")?)?;
-        let predict_exe = if manifest.has("predict") {
-            Some(engine.load_hlo(&manifest.hlo_path("predict")?)?)
+        let train_exe = engine.load(&manifest, "train_step")?;
+        let predict_exe = if engine.has(&manifest, "predict") {
+            Some(engine.load(&manifest, "predict")?)
         } else {
             None
         };
@@ -99,8 +99,8 @@ impl Trainer {
     /// One optimization step on the given batch. Returns (loss, acc).
     pub fn step(&mut self, batch: Batch, lr: f32) -> Result<(f32, f32)> {
         // CAST_CLONE_INPUTS=1 selects the pre-optimization path (clones the
-        // full 3P-tensor state per step) — kept for the §Perf A/B in
-        // EXPERIMENTS.md.
+        // full 3P-tensor state per step) — kept so the borrowed-assembly
+        // speedup stays A/B-measurable (DESIGN.md §Performance).
         if std::env::var_os("CAST_CLONE_INPUTS").is_some() {
             let inputs = self.state.train_inputs(lr, batch.tokens, batch.labels);
             let outputs = self.train_exe.run(&inputs).context("train_step execution")?;

@@ -1,6 +1,8 @@
 //! Shared helpers for integration tests: locate the artifacts root and the
-//! tiny smoke-test artifact, skipping gracefully when `make artifacts` has
-//! not been run.
+//! tiny smoke-test artifact, skipping gracefully when neither
+//! `make artifacts` (AOT HLO) nor `cast gen` (native manifests) has run.
+//! The native-backend suite (`integration_native.rs`) needs no disk
+//! artifacts at all — it synthesizes manifests in memory.
 
 use std::path::PathBuf;
 

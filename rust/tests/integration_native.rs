@@ -1,0 +1,240 @@
+//! Integration: the native CPU backend end-to-end with ZERO artifacts on
+//! disk — manifests are synthesized in memory, and init → predict →
+//! cluster-assignment extraction, the trainer loop, and the Figure-4
+//! visualization pipeline all run through the same backend-agnostic code
+//! paths the PJRT backend uses.
+
+use std::sync::Arc;
+
+use cast::analysis;
+use cast::data;
+use cast::model::ModelState;
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::{Engine, HostTensor, Manifest};
+use cast::train::{Schedule, TrainConfig, Trainer};
+use cast::util::rng::Rng;
+
+fn tiny_manifest(variant: &str) -> Manifest {
+    Manifest::synthetic(tiny_meta(variant))
+}
+
+fn quick_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        schedule: Schedule::Warmup { lr: 2e-3, warmup: 2 },
+        seed: 1,
+        eval_every: 0,
+        eval_batches: 2,
+        data_workers: 2,
+        queue_depth: 2,
+        log_every: 0,
+        checkpoint: None,
+    }
+}
+
+/// The acceptance path: init → predict → cluster-assignment extraction,
+/// all through `Engine::cpu()` with an in-memory manifest.
+#[test]
+fn native_init_predict_and_cluster_extraction_end_to_end() {
+    let manifest = tiny_manifest("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    assert_eq!(engine.backend_name(), "native");
+
+    // init: manifest-shaped, deterministic parameters
+    let state = ModelState::init(&engine, &manifest, 7).unwrap();
+    assert_eq!(state.n_params(), manifest.n_params());
+    let again = ModelState::init(&engine, &manifest, 7).unwrap();
+    for (a, b) in state.params.iter().zip(&again.params) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    // predict: finite logits of the right shape
+    let gen = data::task(&manifest.meta.task).unwrap();
+    let mut rng = Rng::new(3);
+    let batch =
+        data::make_batch(gen.as_ref(), &mut rng, manifest.meta.batch, manifest.meta.seq_len);
+    let exe = engine.load(&manifest, "predict").unwrap();
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+    inputs.push(&batch.tokens);
+    let out = exe.run_refs(&inputs).unwrap();
+    assert_eq!(out[0].shape, vec![2, 2]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // cluster-assignment extraction (predict_ag → argmax assignments)
+    let ag = analysis::cluster_assignments(&engine, &manifest, &state, &batch.tokens, 0).unwrap();
+    assert_eq!(ag.layers, manifest.meta.depth);
+    assert_eq!(ag.n, manifest.meta.seq_len);
+    assert_eq!(ag.n_c, manifest.meta.n_c);
+    for layer in 0..ag.layers {
+        let assign = ag.assignments(layer);
+        assert_eq!(assign.len(), 64);
+        assert!(assign.iter().all(|&c| c < 4), "assignments must index clusters");
+    }
+    // scores are a convex softmax mix: rows sum to ~1
+    for t in 0..ag.n {
+        let s: f32 = (0..ag.n_c).map(|c| ag.at(0, t, c)).sum();
+        assert!((s - 1.0).abs() < 1e-3, "A_g row sums to {s}");
+    }
+}
+
+#[test]
+fn native_predict_runs_for_every_variant() {
+    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        let manifest = tiny_manifest(variant);
+        let engine = Engine::cpu().unwrap();
+        let state = ModelState::init(&engine, &manifest, 1).unwrap();
+        let exe = engine.load(&manifest, "predict").unwrap();
+        let tokens = HostTensor::s32(manifest.tokens_shape.clone(), vec![5; 128]);
+        let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+        inputs.push(&tokens);
+        let out = exe.run_refs(&inputs).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2], "{variant}");
+        assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()), "{variant}");
+    }
+}
+
+#[test]
+fn native_trainer_runs_end_to_end_and_counts_steps() {
+    let manifest = tiny_manifest("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    let mut trainer = Trainer::new(engine, manifest, quick_cfg(5), 4).unwrap();
+    let report = trainer.run().unwrap();
+    assert_eq!(report.history.steps.len(), 5);
+    assert!(report.history.steps.iter().all(|r| r.loss.is_finite() && r.loss < 20.0));
+    assert_eq!(trainer.state.step, 5.0);
+    // head parameters moved under the native train_step
+    let head_idx = trainer
+        .manifest
+        .params
+        .iter()
+        .position(|p| p.name == "head.out.w")
+        .unwrap();
+    let fresh = ModelState::init(trainer.engine(), &trainer.manifest, 4).unwrap();
+    assert_ne!(
+        trainer.state.params[head_idx].as_f32().unwrap(),
+        fresh.params[head_idx].as_f32().unwrap(),
+        "training must move the classifier head"
+    );
+    // evaluation on the held-out stream works through the same backend
+    let (acc, loss) = trainer.evaluate(2).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn native_training_is_deterministic_per_seed() {
+    let engine = Engine::cpu().unwrap();
+    let run = |seed: u64| {
+        let manifest = tiny_manifest("cast_topk");
+        let mut cfg = quick_cfg(4);
+        cfg.seed = seed;
+        let mut t = Trainer::new(engine.clone(), manifest, cfg, seed as u32).unwrap();
+        t.run().unwrap().history.steps.iter().map(|r| r.loss).collect::<Vec<_>>()
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}
+
+#[test]
+fn native_viz_pipeline_writes_cluster_maps() {
+    // seq_len 64 = 8x8 is square, so the Figure-4 image pipeline runs on
+    // the tiny config directly.
+    let manifest = tiny_manifest("cast_sa");
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &manifest, 2).unwrap();
+    let tokens = HostTensor::s32(vec![2, 64], (0..128).map(|i| i % 90).collect());
+    let out_dir = std::env::temp_dir().join("cast_native_viz_test");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let files =
+        analysis::visualize_image_clusters(&engine, &manifest, &state, &tokens, 0, &out_dir)
+            .unwrap();
+    // input.pgm + per layer: clusters.ppm + Nc score maps
+    let expected = 1 + manifest.meta.depth * (1 + manifest.meta.n_c);
+    assert_eq!(files.len(), expected);
+    for f in &files {
+        assert!(f.exists(), "{f:?} missing");
+        assert!(std::fs::metadata(f).unwrap().len() > 0);
+    }
+}
+
+#[test]
+fn viz_rejects_out_of_range_batch_index() {
+    let manifest = tiny_manifest("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &manifest, 0).unwrap();
+    let tokens = HostTensor::s32(vec![2, 64], vec![1; 128]);
+    let out_dir = std::env::temp_dir().join("cast_native_viz_oob");
+    let err =
+        analysis::visualize_image_clusters(&engine, &manifest, &state, &tokens, 5, &out_dir)
+            .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("out of range"), "want a bounds error, got: {msg}");
+}
+
+#[test]
+fn native_infer_efficiency_job_runs_without_artifacts_on_disk() {
+    // The sweep runner path (JobKind::InferEfficiency) over a saved
+    // manifest-only artifact dir — what `cast gen` emits.
+    use cast::coordinator::sweep::Sweep;
+    use cast::coordinator::{Job, JobKind};
+    let root = std::env::temp_dir().join("cast_native_job_test");
+    let _ = std::fs::remove_dir_all(&root);
+    let dir = tiny_manifest("cast_topk").save(&root).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let sweep = Sweep::new();
+    let job = Job { artifact_dir: dir, kind: JobKind::InferEfficiency { steps: 2 }, seed: 3 };
+    let result = sweep.run_inprocess(&engine, &job).unwrap();
+    assert_eq!(result.key, "text_cast_topk_n64_b2_c4_k16");
+    assert!(result.steps_per_sec > 0.0);
+    assert!((0.0..=1.0).contains(&result.final_acc));
+}
+
+#[test]
+fn checkpoint_roundtrip_on_native_state() {
+    let manifest = tiny_manifest("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = quick_cfg(3);
+    let ckpt = std::env::temp_dir().join("cast_native_it.ckpt");
+    cfg.checkpoint = Some(ckpt.clone());
+    let mut trainer = Trainer::new(engine, manifest, cfg, 6).unwrap();
+    let _ = trainer.run().unwrap();
+    let (loaded, names) = cast::model::checkpoint::load(&ckpt).unwrap();
+    assert_eq!(loaded.step, 3.0);
+    assert_eq!(names.len(), loaded.n_params());
+    assert_eq!(
+        loaded.params[0].as_f32().unwrap(),
+        trainer.state.params[0].as_f32().unwrap()
+    );
+}
+
+#[test]
+fn dual_encoder_retrieval_config_predicts_natively() {
+    // Retrieval-style dual tower: tokens (B,2,N), 4d head features.
+    let mut meta = tiny_meta("cast_topk");
+    meta.task = "retrieval".to_string();
+    meta.dual = true;
+    let manifest = Manifest::synthetic(meta);
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &manifest, 1).unwrap();
+    let exe = engine.load(&manifest, "predict").unwrap();
+    let tokens = HostTensor::s32(vec![2, 2, 64], (0..256).map(|i| i % 60).collect());
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+    inputs.push(&tokens);
+    let out = exe.run_refs(&inputs).unwrap();
+    assert_eq!(out[0].shape, vec![2, 2]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    // dual configs have no predict_ag
+    assert!(!Engine::cpu().unwrap().has(&manifest, "predict_ag"));
+}
+
+#[test]
+fn synthetic_and_saved_manifests_agree_with_batcher_contract() {
+    // The trainer's data path: generated batches satisfy the manifest the
+    // native engine validates against.
+    let manifest = tiny_manifest("cast_sa");
+    let gen: Arc<dyn data::TaskGen> = Arc::from(data::task("text").unwrap());
+    let mut stream = data::batcher::SyncStream::new(gen, 11, manifest.meta.batch, 64);
+    let batch = stream.next();
+    assert_eq!(batch.tokens.shape, manifest.tokens_shape);
+    assert_eq!(batch.labels.shape, vec![manifest.meta.batch]);
+}

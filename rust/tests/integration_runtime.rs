@@ -1,5 +1,6 @@
-//! Integration: PJRT runtime over real AOT artifacts (tiny config).
-//! Requires `make artifacts` (aot.py default suite).
+//! Integration: the runtime over on-disk artifact directories (tiny
+//! config).  Requires `make artifacts` (aot.py default suite) or
+//! `cast gen` (manifest-only, native backend).
 
 mod common;
 
@@ -15,8 +16,9 @@ fn manifest_loads_and_describes_tiny_model() {
     assert_eq!(m.meta.batch, 2);
     assert_eq!(m.meta.n_c, 4);
     assert!(m.n_params() > 10);
-    assert!(m.has("init") && m.has("train_step") && m.has("predict"));
-    assert!(m.has("predict_ag"), "cast artifacts include predict_ag");
+    let engine = Engine::cpu().unwrap();
+    assert!(engine.has(&m, "init") && engine.has(&m, "train_step") && engine.has(&m, "predict"));
+    assert!(engine.has(&m, "predict_ag"), "cast configs include predict_ag");
 }
 
 #[test]
@@ -50,7 +52,7 @@ fn predict_runs_and_emits_logits() {
     let m = Manifest::load(&dir).unwrap();
     let engine = Engine::cpu().unwrap();
     let state = ModelState::init(&engine, &m, 0).unwrap();
-    let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let exe = engine.load(&m, "predict").unwrap();
     let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![1; 2 * 64]);
     let mut inputs: Vec<HostTensor> = state.params.clone();
     inputs.push(tokens);
@@ -66,7 +68,7 @@ fn predict_is_deterministic_across_calls() {
     let m = Manifest::load(&dir).unwrap();
     let engine = Engine::cpu().unwrap();
     let state = ModelState::init(&engine, &m, 3).unwrap();
-    let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let exe = engine.load(&m, "predict").unwrap();
     let tokens = HostTensor::s32(m.tokens_shape.clone(), (0..128).map(|i| i % 30).collect());
     let mut inputs: Vec<HostTensor> = state.params.clone();
     inputs.push(tokens);
@@ -81,8 +83,8 @@ fn executable_cache_deduplicates_compiles() {
     let m = Manifest::load(&dir).unwrap();
     let engine = Engine::cpu().unwrap();
     let before = engine.compiled_count();
-    let _a = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
-    let _b = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+    let _a = engine.load(&m, "predict").unwrap();
+    let _b = engine.load(&m, "predict").unwrap();
     assert_eq!(engine.compiled_count(), before + 1);
 }
 
@@ -92,7 +94,7 @@ fn predict_ag_shape_is_layers_batch_tokens_clusters() {
     let m = Manifest::load(&dir).unwrap();
     let engine = Engine::cpu().unwrap();
     let state = ModelState::init(&engine, &m, 0).unwrap();
-    let exe = engine.load_hlo(&m.hlo_path("predict_ag").unwrap()).unwrap();
+    let exe = engine.load(&m, "predict_ag").unwrap();
     let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![2; 128]);
     let mut inputs: Vec<HostTensor> = state.params.clone();
     inputs.push(tokens);
@@ -119,7 +121,7 @@ fn all_four_variants_load_and_predict() {
         let m = Manifest::load(&dir).unwrap();
         let engine = Engine::cpu().unwrap();
         let state = ModelState::init(&engine, &m, 1).unwrap();
-        let exe = engine.load_hlo(&m.hlo_path("predict").unwrap()).unwrap();
+        let exe = engine.load(&m, "predict").unwrap();
         let tokens = HostTensor::s32(m.tokens_shape.clone(), vec![5; 128]);
         let mut inputs: Vec<HostTensor> = state.params.clone();
         inputs.push(tokens);

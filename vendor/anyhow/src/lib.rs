@@ -1,0 +1,184 @@
+//! Offline substrate for the `anyhow` error-handling crate.
+//!
+//! The build environment has no network and no crates.io mirror (the same
+//! constraint that produced `util/json`, `util/rng`, and `util/prop` in the
+//! main crate), so this workspace vendors the small slice of anyhow's API
+//! the codebase actually uses:
+//!
+//! * `Result<T>` / `Error` with a context *chain* rendered by `{:#}`
+//! * the `Context` trait (`.context(..)` / `.with_context(|| ..)`) on both
+//!   `Result` and `Option`
+//! * the `anyhow!`, `bail!`, and `ensure!` macros
+//! * blanket `From<E: std::error::Error>` so `?` converts std errors
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` impl
+//! coherent.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`], matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error. `chain[0]` is the outermost (most recent)
+/// context message; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (the `anyhow!` macro's backend).
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error { chain: vec![message.into()] }
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, outermost first — the format
+            // every `eprintln!("error: {e:#}")` in the workspace relies on.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+/// `Debug` matches anyhow's shape: message, then a `Caused by:` list.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to a fallible value, exactly like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/anyhow/shim/test")
+            .context("reading test file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_renders_outermost_first() {
+        let e = io_fail().unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading test file: "), "{full}");
+        assert_eq!(format!("{e}"), "reading test file");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+
+        fn barf() -> Result<()> {
+            bail!("bad {}", 7);
+        }
+        assert_eq!(format!("{}", barf().unwrap_err()), "bad 7");
+
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(format!("{}", check(30).unwrap_err()), "x too big: 30");
+
+        let e = anyhow!("standalone {}", 1);
+        assert_eq!(format!("{e}"), "standalone 1");
+    }
+}
