@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt
+.PHONY: build test gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json
 
 build:
 	cargo build --release
@@ -10,9 +10,20 @@ build:
 test:
 	cargo test -q
 
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
 # Native-runnable artifact directories (manifest.json only).
 gen: build
 	./target/release/cast gen --out artifacts
+
+# Measured perf trajectory: N=2048 native configs through the threaded
+# engine, emitting BENCH_native.json (CAST_NUM_THREADS=1 for the serial
+# baseline; see DESIGN.md §Threading).
+bench-json: build
+	./target/release/cast gen --out bench_artifacts --seq 2048 --nc 16 --kappa 128
+	CAST_NUM_THREADS=1 ./target/release/cast bench --table 5 --artifacts bench_artifacts --seq 2048 --steps 3 --json BENCH_native_t1.json
+	./target/release/cast bench --table 5 --artifacts bench_artifacts --seq 2048 --steps 3 --json BENCH_native.json
 
 artifacts:
 	cd python && python -m compile.aot --suite default --out-root ../artifacts

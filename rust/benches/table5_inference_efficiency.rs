@@ -6,7 +6,7 @@
 mod bench_common;
 
 use bench_common::*;
-use cast::bench::efficiency_table;
+use cast::bench::{efficiency_rows, table_from_rows, write_bench_json};
 use cast::coordinator::JobKind;
 
 fn main() {
@@ -14,15 +14,25 @@ fn main() {
         skip("Table-5 artifacts missing — run `make artifacts-efficiency`");
     }
     let steps = bench_steps(8);
-    let table = efficiency_table(
+    let seq_lens = [1024, 2048, 3072, 4096];
+    let rows = efficiency_rows(
         &artifacts_root(),
         "text",
-        &[1024, 2048, 3072, 4096],
+        &seq_lens,
         JobKind::InferEfficiency { steps },
         std::env::var("CAST_NO_ISOLATE").is_err(),
-        "Table 5: inference efficiency relative to Transformer (Text task)",
     )
     .expect("table 5 run failed");
+    let table = table_from_rows(
+        "Table 5: inference efficiency relative to Transformer (Text task)",
+        "vanilla",
+        &seq_lens,
+        &rows,
+    );
     println!("{}", table.render());
+    if let Ok(path) = std::env::var("CAST_BENCH_JSON") {
+        write_bench_json(std::path::Path::new(&path), &rows).expect("writing bench json");
+        println!("bench json -> {path}");
+    }
     println!("paper @4K: CAST(Top-K) 6.91x steps/s, 0.081x memory.");
 }

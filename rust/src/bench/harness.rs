@@ -1,31 +1,41 @@
 //! Efficiency harness: builds the paper's Table-1 / Table-5 / Figure-3
 //! measurements out of coordinator jobs, with child-process isolation for
-//! peak-memory fidelity (see `coordinator::sweep`).
+//! peak-memory fidelity (see `coordinator::sweep`), plus the
+//! machine-readable `BENCH_native.json` emitter that tracks the perf
+//! trajectory across PRs.
 
 use std::path::Path;
-use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::sweep::{jobs_matching, Sweep};
-use crate::coordinator::{Job, JobKind, JobResult};
+use crate::coordinator::{JobKind, JobResult};
 use crate::runtime::Engine;
+use crate::util::json::Json;
 
 use super::tables::RelativeTable;
 
-/// Run training-efficiency jobs for every artifact whose key matches
-/// `task` at the given sequence lengths and assemble the relative table.
-pub fn efficiency_table(
+/// One measured efficiency cell, raw (before relative normalization).
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Full artifact key, e.g. `text_cast_topk_n2048_b2_c10_k200`.
+    pub config: String,
+    pub variant: String,
+    pub seq_len: usize,
+    pub result: JobResult,
+}
+
+/// Run efficiency jobs for every artifact whose key matches `task` at the
+/// given sequence lengths; returns the raw measured rows.
+pub fn efficiency_rows(
     artifacts_root: &Path,
     task: &str,
     seq_lens: &[usize],
     kind: JobKind,
     isolate: bool,
-    title: &str,
-) -> Result<RelativeTable> {
+) -> Result<Vec<BenchRow>> {
     let sweep = Sweep::new();
     let engine = Engine::auto()?;
-    let mut table = RelativeTable::new(title, "vanilla", seq_lens.to_vec());
     let task_owned = task.to_string();
     let wanted: Vec<usize> = seq_lens.to_vec();
     let jobs = jobs_matching(
@@ -43,23 +53,84 @@ pub fn efficiency_table(
     );
     anyhow::ensure!(
         !jobs.is_empty(),
-        "no artifacts for task {task:?} under {artifacts_root:?} — \
-         run `make artifacts-efficiency` first"
+        "no artifacts for task {task:?} at N={seq_lens:?} under {artifacts_root:?} — \
+         run `make artifacts-efficiency` (or `cast gen` for native smoke configs) first"
     );
+    let mut rows = Vec::new();
     for (job, res) in sweep.run_all(&engine, &jobs, isolate) {
         let key = job.artifact_dir.file_name().unwrap().to_string_lossy().to_string();
         match res {
             Ok(result) => {
                 if let Some((variant, seq)) = parse_key(&key) {
                     if seq_lens.contains(&seq) {
-                        table.insert(&variant, seq, result);
+                        rows.push(BenchRow { config: key, variant, seq_len: seq, result });
                     }
                 }
             }
             Err(e) => crate::info!("skipping {key}: {e:#}"),
         }
     }
-    Ok(table)
+    Ok(rows)
+}
+
+/// Assemble the paper-style relative table from raw rows.
+pub fn table_from_rows(
+    title: &str,
+    baseline: &str,
+    seq_lens: &[usize],
+    rows: &[BenchRow],
+) -> RelativeTable {
+    let mut table = RelativeTable::new(title, baseline, seq_lens.to_vec());
+    for row in rows {
+        table.insert(&row.variant, row.seq_len, row.result.clone());
+    }
+    table
+}
+
+/// Back-compat: measure and assemble the relative table in one call.
+pub fn efficiency_table(
+    artifacts_root: &Path,
+    task: &str,
+    seq_lens: &[usize],
+    kind: JobKind,
+    isolate: bool,
+    title: &str,
+) -> Result<RelativeTable> {
+    let rows = efficiency_rows(artifacts_root, task, seq_lens, kind, isolate)?;
+    Ok(table_from_rows(title, "vanilla", seq_lens, &rows))
+}
+
+/// Serialize measured rows as the `BENCH_native.json` schema:
+/// `{backend, threads, rows: [{config, variant, seq_len, steps_per_sec,
+/// peak_rss_mb, threads}]}` — one stable machine-readable file so the
+/// perf trajectory is comparable across PRs.
+pub fn bench_json(rows: &[BenchRow]) -> Json {
+    let threads = Engine::threads();
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("config", Json::str(&r.config)),
+                ("variant", Json::str(&r.variant)),
+                ("seq_len", Json::num(r.seq_len as f64)),
+                ("kind", Json::str(&r.result.kind)),
+                ("steps_per_sec", Json::num(r.result.steps_per_sec)),
+                ("peak_rss_mb", Json::num(r.result.peak_rss_bytes as f64 / 1e6)),
+                ("threads", Json::num(threads as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("backend", Json::str("native")),
+        ("threads", Json::num(threads as f64)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+}
+
+/// Write [`bench_json`] to `path`.
+pub fn write_bench_json(path: &Path, rows: &[BenchRow]) -> Result<()> {
+    std::fs::write(path, bench_json(rows).to_string() + "\n")
+        .with_context(|| format!("writing bench json {path:?}"))
 }
 
 /// Parse `(variant, seq_len)` out of an artifact key like

@@ -6,6 +6,9 @@ pub mod harness;
 pub mod memmodel;
 pub mod tables;
 
-pub use harness::{ablation_points, efficiency_table, parse_key};
+pub use harness::{
+    ablation_points, bench_json, efficiency_rows, efficiency_table, parse_key, table_from_rows,
+    write_bench_json, BenchRow,
+};
 pub use memmodel::{kernel_estimate, AttnShape};
 pub use tables::{AccuracyTable, RelativeTable};

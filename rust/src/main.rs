@@ -1,11 +1,14 @@
 //! `cast` — the L3 coordinator binary.
 //!
 //! Subcommands:
-//!   gen     --out <dir> [--variant V]     (write native-runnable manifests)
+//!   gen     --out <dir> [--variant V --seq N --nc C --kappa K --depth D]
+//!           (write native-runnable manifests; size flags scale the tiny
+//!            config, e.g. --seq 2048 --nc 16 --kappa 128 for perf runs)
 //!   train   --dir <artifact-dir> [--steps N --lr X --warmup N --seed S
 //!           --eval-every N --ckpt PATH --history PATH]
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
-//!   bench   --table {1,5} [--task text --steps N --isolate]
+//!   bench   --table {1,5} [--task text --steps N --isolate
+//!           --seq 1024,2048 --json BENCH_native.json]
 //!   sweep   --task <task> [--steps N --isolate]      (Figure-3 ablation)
 //!   viz     --dir <artifact-dir> --out <dir> [--seed S]   (Figure 4)
 //!   data    --task <task> [--n N --seq L]            (inspect generators)
@@ -18,7 +21,6 @@
 //! feature build, executes the AOT HLO files).
 
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -74,6 +76,9 @@ See rust/src/main.rs header or DESIGN.md for flags.";
 
 /// Write native-runnable artifact directories (manifest.json only) for
 /// the tiny smoke configs — the zero-Python path into train/eval/viz.
+/// Size flags (`--seq/--nc/--kappa/--depth/--d/--heads`) scale the tiny
+/// geometry so perf benches get e.g. N=2048 configs without the AOT
+/// pipeline.
 fn cmd_gen(args: &Args) -> Result<()> {
     use cast::runtime::native::{spec::tiny_meta, VARIANTS};
     let out = PathBuf::from(args.str("out", "artifacts"));
@@ -86,14 +91,29 @@ fn cmd_gen(args: &Args) -> Result<()> {
         }
         None => VARIANTS.iter().map(|s| s.to_string()).collect(),
     };
+    let sized = |variant: &str| {
+        let mut meta = tiny_meta(variant);
+        meta.seq_len = args.usize("seq", meta.seq_len);
+        // local attention requires seq_len % window == 0; shrink to the
+        // nearest divisor so every generated config is runnable
+        meta.window = meta.window.min(meta.seq_len).max(1);
+        while meta.seq_len % meta.window != 0 {
+            meta.window -= 1;
+        }
+        meta.n_c = args.usize("nc", meta.n_c);
+        meta.kappa = args.usize("kappa", meta.kappa);
+        meta.depth = args.usize("depth", meta.depth);
+        meta.heads = args.usize("heads", meta.heads);
+        meta.d = args.usize("d", meta.d);
+        meta
+    };
     let mut dirs = Vec::new();
     for variant in &wanted {
-        let meta = tiny_meta(variant);
-        dirs.push(Manifest::synthetic(meta).save(&out)?);
+        dirs.push(Manifest::synthetic(sized(variant)).save(&out)?);
     }
     if args.opt_str("variant").is_none() {
         // the decoder extension (paper §5.5) rides along in the full set
-        let mut meta = tiny_meta("cast_sa");
+        let mut meta = sized("cast_sa");
         meta.causal = true;
         dirs.push(Manifest::synthetic(meta).save(&out)?);
     }
@@ -164,14 +184,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let task = args.str("task", "text");
     let steps = args.usize("steps", 5);
     let isolate = args.has("isolate");
-    let seq_lens: Vec<usize> = vec![1024, 2048, 3072, 4096];
+    let seq_lens: Vec<usize> = match args.opt_str("seq") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().context("--seq expects comma-separated lengths"))
+            .collect::<Result<Vec<usize>>>()?,
+        None => vec![1024, 2048, 3072, 4096],
+    };
     let (kind, title) = match table {
         1 => (JobKind::TrainEfficiency { steps }, "Table 1: training efficiency (rel. to Transformer)"),
         5 => (JobKind::InferEfficiency { steps }, "Table 5: inference efficiency (rel. to Transformer)"),
         other => bail!("unknown table {other}; know 1 and 5"),
     };
-    let t = bench::efficiency_table(&root, &task, &seq_lens, kind, isolate, title)?;
+    let rows = bench::efficiency_rows(&root, &task, &seq_lens, kind, isolate)?;
+    let t = bench::table_from_rows(title, "vanilla", &seq_lens, &rows);
     println!("{}", t.render());
+    if let Some(path) = args.opt_str("json") {
+        bench::write_bench_json(&PathBuf::from(&path), &rows)?;
+        println!("bench json -> {path} ({} rows, {} threads)", rows.len(), Engine::threads());
+    }
     Ok(())
 }
 

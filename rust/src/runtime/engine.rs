@@ -49,12 +49,18 @@ impl Engine {
     }
 
     pub fn with_backend(backend: Box<dyn Backend>) -> Arc<Engine> {
-        crate::debug!("engine: backend={}", backend.name());
+        crate::debug!("engine: backend={} threads={}", backend.name(), Engine::threads());
         Arc::new(Engine { backend, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Worker count the native engine dispatches on (`CAST_NUM_THREADS`
+    /// override, else hardware parallelism) — reported by the bench JSON.
+    pub fn threads() -> usize {
+        crate::util::parallel::max_threads()
     }
 
     /// Whether `entry` is available for this config on this backend.

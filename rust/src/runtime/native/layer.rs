@@ -4,9 +4,19 @@
 //!
 //! Shapes are row-major flat `&[f32]`:
 //!   x (B,N,d) · q/k/v (B,N,h·d_h) · A_g (B,N,Nc) · idx/valid (B,Nc,κ).
+//!
+//! Execution model (DESIGN.md §Threading): every hot loop is dispatched
+//! over the `util::parallel` worker pool — per-row blocks for the
+//! projections/affinities, the B×Nc cluster grid for the fused
+//! intra-cluster attention, per-destination-token blocks for the
+//! combination scatter, and per-batch shards for the baselines.  Each
+//! task owns a disjoint `&mut` output chunk and per-worker scratch
+//! buffers, and all reductions keep a fixed order, so the output is
+//! bit-identical for any `CAST_NUM_THREADS`.
 
 use anyhow::{ensure, Result};
 
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
 use super::ops::{self, AttnFn, NEG_INF};
@@ -61,12 +71,46 @@ pub struct BaselineParams<'a> {
     pub wo_b: &'a [f32],
 }
 
+/// Reusable intermediate buffers for [`cast_layer`].  One instance per
+/// model-forward (reused across depth layers and calls) removes the
+/// per-layer-per-call `Vec` churn on the hot path; buffers are resized
+/// lazily so one scratch serves any layer geometry.
+#[derive(Default)]
+pub struct CastScratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    phi: Vec<f32>,
+    a_q: Vec<f32>,
+    a_k: Vec<f32>,
+    a_q_raw: Vec<f32>,
+    a_sum: Vec<f32>,
+    r_intra: Vec<f32>,
+    r_inter: Vec<f32>,
+    r: Vec<f32>,
+    slot_of: Vec<usize>,
+}
+
+impl CastScratch {
+    pub fn new() -> CastScratch {
+        CastScratch::default()
+    }
+}
+
+/// Clear + zero-fill a reusable buffer (keeps its allocation).
+fn zeroed<T: Copy + Default>(buf: &mut Vec<T>, len: usize) {
+    buf.clear();
+    buf.resize(len, T::default());
+}
+
 // ---------------------------------------------------------------------------
 // clustering mechanisms G (clustering.py)
 // ---------------------------------------------------------------------------
 
 /// Algorithm 1 (Top-K): every cluster independently takes its κ
 /// highest-affinity tokens; a token may land in several clusters or none.
+/// Batch elements are sharded across the worker pool; the per-cluster
+/// selection is O(N) quickselect instead of a full argsort.
 pub fn top_k_cluster(
     a_g: &[f32],
     b: usize,
@@ -76,22 +120,39 @@ pub fn top_k_cluster(
 ) -> (Vec<usize>, Vec<f32>) {
     let mut idx = vec![0usize; b * n_c * kappa];
     let valid = vec![1.0f32; b * n_c * kappa];
-    let mut col = vec![0.0f32; n];
-    for bb in 0..b {
-        for c in 0..n_c {
-            for (nn, cv) in col.iter_mut().enumerate() {
-                *cv = a_g[(bb * n + nn) * n_c + c];
+    parallel::par_chunks_mut_with(
+        idx.as_mut_slice(),
+        n_c * kappa,
+        || (vec![0.0f32; n], Vec::with_capacity(n)),
+        |scr, bb, idx_b| {
+            let (col, sel) = scr;
+            for c in 0..n_c {
+                for (nn, cv) in col.iter_mut().enumerate() {
+                    *cv = a_g[(bb * n + nn) * n_c + c];
+                }
+                ops::top_k_desc(col, kappa, sel);
+                idx_b[c * kappa..(c + 1) * kappa].copy_from_slice(&sel[..kappa]);
             }
-            let order = ops::argsort_desc(&col);
-            let base = (bb * n_c + c) * kappa;
-            idx[base..base + kappa].copy_from_slice(&order[..kappa]);
-        }
-    }
+        },
+    );
     (idx, valid)
+}
+
+/// Per-batch scratch for the greedy assignment (reused across batches by
+/// each worker, never reallocated per token).
+#[derive(Default)]
+struct GreedyScratch {
+    /// Flat (N, Nc) preference table: row t = clusters by desc affinity.
+    pref: Vec<usize>,
+    best: Vec<f32>,
+    order: Vec<usize>,
+    fill: Vec<usize>,
 }
 
 /// Greedy capacity-constrained assignment shared by SA Top-K (visit order =
 /// descending best affinity) and the causal variant (visit order = position).
+/// The greedy scan is inherently sequential per batch element, so the
+/// parallel grain is the batch dimension.
 fn greedy_assign(
     a_g: &[f32],
     b: usize,
@@ -102,30 +163,52 @@ fn greedy_assign(
 ) -> (Vec<usize>, Vec<f32>) {
     let mut idx = vec![0usize; b * n_c * kappa];
     let mut valid = vec![0.0f32; b * n_c * kappa];
-    let mut row = vec![0.0f32; n_c];
-    for bb in 0..b {
-        // per-token cluster preference (descending affinity)
-        let mut pref: Vec<Vec<usize>> = Vec::with_capacity(n);
-        let mut best = vec![0.0f32; n];
-        for nn in 0..n {
-            for (c, rv) in row.iter_mut().enumerate() {
-                *rv = a_g[(bb * n + nn) * n_c + c];
+    parallel::par_zip2_mut_with(
+        idx.as_mut_slice(),
+        n_c * kappa,
+        valid.as_mut_slice(),
+        n_c * kappa,
+        GreedyScratch::default,
+        |scr, bb, idx_b, valid_b| {
+            zeroed(&mut scr.pref, n * n_c);
+            zeroed(&mut scr.best, n);
+            zeroed(&mut scr.fill, n_c);
+            scr.order.clear();
+            for nn in 0..n {
+                let arow = &a_g[(bb * n + nn) * n_c..(bb * n + nn + 1) * n_c];
+                let prow = &mut scr.pref[nn * n_c..(nn + 1) * n_c];
+                for (c, pv) in prow.iter_mut().enumerate() {
+                    *pv = c;
+                }
+                prow.sort_unstable_by(|&x, &y| {
+                    arow[y]
+                        .partial_cmp(&arow[x])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(x.cmp(&y))
+                });
+                scr.best[nn] = arow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             }
-            best[nn] = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            pref.push(ops::argsort_desc(&row));
-        }
-        let order: Vec<usize> =
-            if by_position { (0..n).collect() } else { ops::argsort_desc(&best) };
-        let mut fill = vec![0usize; n_c];
-        for &t in &order {
-            if let Some(&c) = pref[t].iter().find(|&&c| fill[c] < kappa) {
-                let base = (bb * n_c + c) * kappa + fill[c];
-                idx[base] = t;
-                valid[base] = 1.0;
-                fill[c] += 1;
+            scr.order.extend(0..n);
+            if !by_position {
+                let best = &scr.best;
+                scr.order.sort_unstable_by(|&x, &y| {
+                    best[y]
+                        .partial_cmp(&best[x])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(x.cmp(&y))
+                });
             }
-        }
-    }
+            for &t in scr.order.iter() {
+                let prow = &scr.pref[t * n_c..(t + 1) * n_c];
+                if let Some(&c) = prow.iter().find(|&&c| scr.fill[c] < kappa) {
+                    let slot = c * kappa + scr.fill[c];
+                    idx_b[slot] = t;
+                    valid_b[slot] = 1.0;
+                    scr.fill[c] += 1;
+                }
+            }
+        },
+    );
     (idx, valid)
 }
 
@@ -198,82 +281,142 @@ fn cluster(
 // ---------------------------------------------------------------------------
 
 /// Full CAST attention layer.  Returns `(out (B,N,d), a_g (B,N,Nc))`.
-pub fn cast_layer(p: &CastParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, Vec<f32>)> {
+/// `ws` carries the reusable intermediates (see [`CastScratch`]).
+pub fn cast_layer(
+    p: &CastParams,
+    x: &[f32],
+    dims: &Dims,
+    ws: &mut CastScratch,
+) -> Result<(Vec<f32>, Vec<f32>)> {
     let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
     let d = dims.d();
     let kappa = dims.kappa.min(n);
     ensure!(kappa > 0 && n_c > 0, "CAST needs n_c>0 and kappa>0");
     let rows = b * n;
     let tau = (d_h as f32).sqrt();
+    let attn = dims.attn;
+    let causal = dims.causal;
+    let blk = parallel::row_block(rows);
 
-    // step 1: projections (eq. 1)
-    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
-    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
-    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
-    let phi = ops::dense(x, p.phi_w, p.phi_b, rows, d, 1); // (B·N,)
+    // step 1: projections (eq. 1) — row-parallel blocked matmuls
+    ops::dense_into(x, p.wq_w, p.wq_b, rows, d, d, &mut ws.q);
+    ops::dense_into(x, p.wk_w, p.wk_b, rows, d, d, &mut ws.k);
+    ops::dense_into(x, p.wv_w, p.wv_b, rows, d, d, &mut ws.v);
+    ops::dense_into(x, p.phi_w, p.phi_b, rows, d, 1, &mut ws.phi); // (B·N,)
 
-    // step 2: surrogate similarities A_q, A_k (eq. 6), per head
-    let mut a_q = vec![0.0f32; rows * h * n_c];
-    let mut a_k = vec![0.0f32; rows * h * n_c];
-    for r in 0..rows {
-        for hh in 0..h {
-            let qrow = &q[r * d + hh * d_h..r * d + (hh + 1) * d_h];
-            let krow = &k[r * d + hh * d_h..r * d + (hh + 1) * d_h];
-            for c in 0..n_c {
-                let srow = &p.s[(c * h + hh) * d_h..(c * h + hh + 1) * d_h];
-                let mut sq = 0.0f32;
-                let mut sk = 0.0f32;
-                for dd in 0..d_h {
-                    sq += qrow[dd] * srow[dd];
-                    sk += krow[dd] * srow[dd];
+    let CastScratch { q, k, v, phi, a_q, a_k, a_q_raw, a_sum, r_intra, r_inter, r, slot_of } = ws;
+    let q: &[f32] = q.as_slice();
+    let k: &[f32] = k.as_slice();
+    let v: &[f32] = v.as_slice();
+    let phi: &[f32] = phi.as_slice();
+
+    // step 2: surrogate similarities A_q, A_k (eq. 6), per head, sharded
+    // over row blocks
+    zeroed(a_q, rows * h * n_c);
+    zeroed(a_k, rows * h * n_c);
+    let s = p.s;
+    parallel::par_zip2_mut(
+        a_q.as_mut_slice(),
+        blk * h * n_c,
+        a_k.as_mut_slice(),
+        blk * h * n_c,
+        |ci, aq, ak| {
+            let r0 = ci * blk;
+            for rr in 0..aq.len() / (h * n_c) {
+                let rg = r0 + rr;
+                for hh in 0..h {
+                    let qrow = &q[rg * d + hh * d_h..][..d_h];
+                    let krow = &k[rg * d + hh * d_h..][..d_h];
+                    for c in 0..n_c {
+                        let srow = &s[(c * h + hh) * d_h..][..d_h];
+                        aq[(rr * h + hh) * n_c + c] = ops::dot(qrow, srow);
+                        ak[(rr * h + hh) * n_c + c] = ops::dot(krow, srow);
+                    }
                 }
-                a_q[(r * h + hh) * n_c + c] = sq;
-                a_k[(r * h + hh) * n_c + c] = sk;
             }
-        }
-    }
+        },
+    );
+    let a_q: &[f32] = a_q.as_slice();
+    let a_k: &[f32] = a_k.as_slice();
 
-    // head-summed raw similarities
-    let mut a_q_raw = vec![0.0f32; rows * n_c];
-    let mut a_k_raw = vec![0.0f32; rows * n_c];
-    for r in 0..rows {
-        for hh in 0..h {
-            for c in 0..n_c {
-                a_q_raw[r * n_c + c] += a_q[(r * h + hh) * n_c + c];
-                a_k_raw[r * n_c + c] += a_k[(r * h + hh) * n_c + c];
-            }
-        }
-    }
-
-    // step 3: gate + affinity A_g = sigm(phi)·f2(ΣA_q) + (1-sigm(phi))·f2(ΣA_k)
-    let mut f2q = a_q_raw.clone();
-    ops::attn_rows(&mut f2q, n_c, dims.attn);
-    let mut f2k = a_k_raw.clone();
-    ops::attn_rows(&mut f2k, n_c, dims.attn);
+    // step 3: head-summed raw similarities + gate
+    // A_g = sigm(phi)·f2(ΣA_q) + (1-sigm(phi))·f2(ΣA_k); the f2 rows are
+    // per-worker scratch (the k-sum is never materialized globally)
+    zeroed(a_q_raw, rows * n_c);
     let mut a_g = vec![0.0f32; rows * n_c];
-    for r in 0..rows {
-        let g = ops::sigmoid(phi[r]);
-        for c in 0..n_c {
-            a_g[r * n_c + c] = g * f2q[r * n_c + c] + (1.0 - g) * f2k[r * n_c + c];
-        }
-    }
+    parallel::par_zip2_mut_with(
+        a_q_raw.as_mut_slice(),
+        blk * n_c,
+        a_g.as_mut_slice(),
+        blk * n_c,
+        || vec![0.0f32; 2 * n_c],
+        |scr, ci, rawq, ag| {
+            let (f2q, f2k) = scr.split_at_mut(n_c);
+            let r0 = ci * blk;
+            for rr in 0..rawq.len() / n_c {
+                let rg = r0 + rr;
+                let rq = &mut rawq[rr * n_c..(rr + 1) * n_c];
+                for c in 0..n_c {
+                    rq[c] = 0.0;
+                    f2k[c] = 0.0;
+                }
+                for hh in 0..h {
+                    for c in 0..n_c {
+                        rq[c] += a_q[(rg * h + hh) * n_c + c];
+                        f2k[c] += a_k[(rg * h + hh) * n_c + c];
+                    }
+                }
+                f2q.copy_from_slice(rq);
+                ops::attn_rows(f2q, n_c, attn);
+                ops::attn_rows(f2k, n_c, attn);
+                let g = ops::sigmoid(phi[rg]);
+                let agrow = &mut ag[rr * n_c..(rr + 1) * n_c];
+                for c in 0..n_c {
+                    agrow[c] = g * f2q[c] + (1.0 - g) * f2k[c];
+                }
+            }
+        },
+    );
+    let a_q_raw_s: &[f32] = a_q_raw.as_slice();
 
     // step 4: clustering (indices are non-differentiable, paper §3.2)
     let (idx, valid) = cluster(&dims.clustering, &a_g, b, n, n_c, kappa)?;
-    let member = membership(&idx, &valid, b, n, n_c, kappa);
 
-    // step 5: fused intra-cluster attention + cluster summaries (eq. 3/4)
-    let mut r_intra = vec![0.0f32; b * n_c * kappa * d];
-    let mut r_inter = vec![0.0f32; b * n_c * d];
-    let mut scores = vec![0.0f32; kappa * kappa];
-    let mut wrow = vec![0.0f32; kappa];
+    // reverse map token→slot (+1; 0 = not a member) so the combination
+    // scatter can run token-parallel with disjoint writes
+    zeroed(slot_of, rows * n_c);
     for bb in 0..b {
         for c in 0..n_c {
+            for slot in 0..kappa {
+                let base = (bb * n_c + c) * kappa + slot;
+                if valid[base] > 0.0 {
+                    slot_of[(bb * n + idx[base]) * n_c + c] = slot + 1;
+                }
+            }
+        }
+    }
+
+    // step 5: fused intra-cluster attention + cluster summaries (eq. 3/4),
+    // one task per (batch, cluster) cell with per-worker κ×κ scratch
+    zeroed(r_intra, b * n_c * kappa * d);
+    zeroed(r_inter, b * n_c * d);
+    let idx_s: &[usize] = &idx;
+    let valid_s: &[f32] = &valid;
+    parallel::par_zip2_mut_with(
+        r_intra.as_mut_slice(),
+        kappa * d,
+        r_inter.as_mut_slice(),
+        d,
+        || (vec![0.0f32; kappa * kappa], vec![0.0f32; kappa]),
+        |scr, cell, intra, inter| {
+            let (scores, wrow) = scr;
+            let bb = cell / n_c;
+            let c = cell % n_c;
             let base = (bb * n_c + c) * kappa;
-            let slots = &idx[base..base + kappa];
-            let val = &valid[base..base + kappa];
+            let slots = &idx_s[base..base + kappa];
+            let val = &valid_s[base..base + kappa];
             let mask_ij = |i: usize, j: usize| -> f32 {
-                if dims.causal && slots[j] > slots[i] {
+                if causal && slots[j] > slots[i] {
                     0.0
                 } else {
                     val[j]
@@ -285,32 +428,29 @@ pub fn cast_layer(p: &CastParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, V
                     let qrow = &q[(bb * n + slots[i]) * d + hh * d_h..][..d_h];
                     for j in 0..kappa {
                         let krow = &k[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
-                        let mut dot = 0.0f32;
-                        for dd in 0..d_h {
-                            dot += qrow[dd] * krow[dd];
-                        }
-                        scores[i * kappa + j] = dot / tau + (1.0 - mask_ij(i, j)) * NEG_INF;
+                        scores[i * kappa + j] =
+                            ops::dot(qrow, krow) / tau + (1.0 - mask_ij(i, j)) * NEG_INF;
                     }
                 }
-                ops::attn_rows(&mut scores, kappa, dims.attn);
+                ops::attn_rows(scores.as_mut_slice(), kappa, attn);
                 for i in 0..kappa {
                     if val[i] == 0.0 {
                         continue; // padding rows stay zero (· valid)
                     }
-                    let out = ((bb * n_c + c) * kappa + i) * d + hh * d_h;
+                    let out0 = i * d + hh * d_h;
                     for j in 0..kappa {
                         let pij = scores[i * kappa + j] * mask_ij(i, j);
                         if pij != 0.0 {
                             let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
                             for dd in 0..d_h {
-                                r_intra[out + dd] += pij * vrow[dd];
+                                intra[out0 + dd] += pij * vrow[dd];
                             }
                         }
                     }
                 }
                 // eq. 4: cluster summary R_inter (omitted in causal mode —
                 // summaries would leak future tokens)
-                if !dims.causal {
+                if !causal {
                     for j in 0..kappa {
                         let t = slots[j];
                         wrow[j] = a_k[((bb * n + t) * h + hh) * n_c + c]
@@ -318,73 +458,79 @@ pub fn cast_layer(p: &CastParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, V
                             / tau
                             + (1.0 - val[j]) * NEG_INF;
                     }
-                    ops::attn_rows(&mut wrow, kappa, dims.attn);
-                    let out = (bb * n_c + c) * d + hh * d_h;
+                    ops::attn_rows(wrow.as_mut_slice(), kappa, attn);
+                    let out0 = hh * d_h;
                     for j in 0..kappa {
                         let pk = wrow[j] * val[j];
                         if pk != 0.0 {
                             let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
                             for dd in 0..d_h {
-                                r_inter[out + dd] += pk * vrow[dd];
+                                inter[out0 + dd] += pk * vrow[dd];
+                            }
+                        }
+                    }
+                }
+            }
+        },
+    );
+
+    // step 6a: combination weights A_sum (eq. 5), row-parallel
+    zeroed(a_sum, rows * n_c);
+    parallel::par_chunks_mut(a_sum.as_mut_slice(), blk * n_c, |ci, chunk| {
+        let r0 = ci * blk;
+        for rr in 0..chunk.len() / n_c {
+            let rg = r0 + rr;
+            let sp = ops::softplus1(phi[rg]) / tau;
+            let rowc = &mut chunk[rr * n_c..(rr + 1) * n_c];
+            for (c, rv) in rowc.iter_mut().enumerate() {
+                *rv = a_q_raw_s[rg * n_c + c] * sp;
+            }
+        }
+        ops::attn_rows(chunk, n_c, attn);
+    });
+
+    // step 6b: gather per destination token (disjoint writes; contribution
+    // order per token is fixed — intra over c ascending, then summaries of
+    // *other* clusters weighted by off-membership A_sum)
+    let a_sum_s: &[f32] = a_sum.as_slice();
+    let slot_s: &[usize] = slot_of.as_slice();
+    let r_intra_s: &[f32] = r_intra.as_slice();
+    let r_inter_s: &[f32] = r_inter.as_slice();
+    zeroed(r, rows * d);
+    parallel::par_chunks_mut(r.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            let gr = r0 + rr;
+            let bb = gr / n;
+            for c in 0..n_c {
+                let slot = slot_s[gr * n_c + c];
+                if slot > 0 {
+                    let wi = a_sum_s[gr * n_c + c];
+                    if wi != 0.0 {
+                        let src = ((bb * n_c + c) * kappa + (slot - 1)) * d;
+                        for (dd, dv) in dst.iter_mut().enumerate() {
+                            *dv += wi * r_intra_s[src + dd];
+                        }
+                    }
+                }
+            }
+            if !causal {
+                for c in 0..n_c {
+                    if slot_s[gr * n_c + c] == 0 {
+                        let ai = a_sum_s[gr * n_c + c];
+                        if ai != 0.0 {
+                            let src = (bb * n_c + c) * d;
+                            for (dd, dv) in dst.iter_mut().enumerate() {
+                                *dv += ai * r_inter_s[src + dd];
                             }
                         }
                     }
                 }
             }
         }
-    }
+    });
 
-    // step 6: combination (eq. 5)
-    let mut a_sum = vec![0.0f32; rows * n_c];
-    for r in 0..rows {
-        let sp = ops::softplus1(phi[r]) / tau;
-        for c in 0..n_c {
-            a_sum[r * n_c + c] = a_q_raw[r * n_c + c] * sp;
-        }
-    }
-    ops::attn_rows(&mut a_sum, n_c, dims.attn);
-
-    let mut r = vec![0.0f32; rows * d];
-    for bb in 0..b {
-        for c in 0..n_c {
-            let base = (bb * n_c + c) * kappa;
-            for slot in 0..kappa {
-                if valid[base + slot] == 0.0 {
-                    continue;
-                }
-                let t = idx[base + slot];
-                let wi = a_sum[(bb * n + t) * n_c + c];
-                if wi == 0.0 {
-                    continue;
-                }
-                let src = (base + slot) * d;
-                let dst = (bb * n + t) * d;
-                for dd in 0..d {
-                    r[dst + dd] += wi * r_intra[src + dd];
-                }
-            }
-        }
-    }
-    if !dims.causal {
-        // summaries of *other* clusters, weighted by off-membership A_sum
-        for bb in 0..b {
-            for nn in 0..n {
-                let dst = (bb * n + nn) * d;
-                for c in 0..n_c {
-                    let ai = a_sum[(bb * n + nn) * n_c + c]
-                        * (1.0 - member[(bb * n + nn) * n_c + c]);
-                    if ai != 0.0 {
-                        let src = (bb * n_c + c) * d;
-                        for dd in 0..d {
-                            r[dst + dd] += ai * r_inter[src + dd];
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    let out = ops::dense(&r, p.wo_w, p.wo_b, rows, d, d);
+    let out = ops::dense(r.as_slice(), p.wo_w, p.wo_b, rows, d, d);
     Ok((out, a_g))
 }
 
@@ -392,48 +538,62 @@ pub fn cast_layer(p: &CastParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, V
 // baselines (attention_baselines.py)
 // ---------------------------------------------------------------------------
 
-/// Row-wise softmax attention of `q` against keys/values restricted to the
-/// token range `[lo, hi)` of batch `bb` — the shared core of the vanilla
-/// and local baselines (row-wise so O(N) scratch, not O(N²)).
-fn attend_range(
+/// Row-parallel attention over per-row key windows — the shared core of
+/// the vanilla (`window = None`: full sequence) and local (`Some(w)`:
+/// enclosing non-overlapping window) baselines.  Scores live in
+/// per-worker scratch (O(window), not O(N²)) and honor `attn` (the
+/// baselines used to hardcode softmax, silently ignoring laplace configs).
+#[allow(clippy::too_many_arguments)]
+fn attend_windows(
     out: &mut [f32],
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    bb: usize,
+    b: usize,
     n: usize,
     h: usize,
     d_h: usize,
-    lo: usize,
-    hi: usize,
-    row_lo: usize,
-    row_hi: usize,
+    window: Option<usize>,
+    attn: AttnFn,
 ) {
     let d = h * d_h;
     let tau = (d_h as f32).sqrt();
-    let w = hi - lo;
-    let mut scores = vec![0.0f32; w];
-    for i in row_lo..row_hi {
-        for hh in 0..h {
-            let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
-            for (jj, sc) in scores.iter_mut().enumerate() {
-                let krow = &k[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
-                let mut dot = 0.0f32;
-                for dd in 0..d_h {
-                    dot += qrow[dd] * krow[dd];
+    let rows = b * n;
+    let max_w = window.unwrap_or(n);
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut_with(
+        out,
+        blk * d,
+        || vec![0.0f32; max_w],
+        |scores, ci, chunk| {
+            let r0 = ci * blk;
+            for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+                let gr = r0 + rr;
+                let (bb, i) = (gr / n, gr % n);
+                let (lo, hi) = match window {
+                    Some(w) => ((i / w) * w, (i / w) * w + w),
+                    None => (0, n),
+                };
+                let wlen = hi - lo;
+                let sc = &mut scores[..wlen];
+                for hh in 0..h {
+                    let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+                    for (jj, sv) in sc.iter_mut().enumerate() {
+                        let krow = &k[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
+                        *sv = ops::dot(qrow, krow) / tau;
+                    }
+                    ops::attn_rows(sc, wlen, attn);
+                    let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
+                    for (jj, &pj) in sc.iter().enumerate() {
+                        let vrow = &v[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
+                        for (dd, dv) in dsth.iter_mut().enumerate() {
+                            *dv += pj * vrow[dd];
+                        }
+                    }
                 }
-                *sc = dot / tau;
             }
-            ops::attn_rows(&mut scores, w, AttnFn::Softmax);
-            let dst = (bb * n + i) * d + hh * d_h;
-            for (jj, &pj) in scores.iter().enumerate() {
-                let vrow = &v[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
-                for dd in 0..d_h {
-                    out[dst + dd] += pj * vrow[dd];
-                }
-            }
-        }
-    }
+        },
+    );
 }
 
 /// The original O(N²) multi-head self-attention.
@@ -445,9 +605,7 @@ pub fn vanilla_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f
     let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
     let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
     let mut out = vec![0.0f32; rows * d];
-    for bb in 0..b {
-        attend_range(&mut out, &q, &k, &v, bb, n, h, d_h, 0, n, 0, n);
-    }
+    attend_windows(&mut out, &q, &k, &v, b, n, h, d_h, None, dims.attn);
     Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
 }
 
@@ -462,22 +620,28 @@ pub fn local_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32
     let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
     let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
     let mut out = vec![0.0f32; rows * d];
-    for bb in 0..b {
-        for chunk in 0..n / w {
-            let lo = chunk * w;
-            attend_range(&mut out, &q, &k, &v, bb, n, h, d_h, lo, lo + w, lo, lo + w);
-        }
-    }
+    attend_windows(&mut out, &q, &k, &v, b, n, h, d_h, Some(w), dims.attn);
     Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
 }
 
+/// Per-batch scratch for the LSH baseline (bucket-sorted token copies).
+struct LshScratch {
+    qk_s: Vec<f32>,
+    v_s: Vec<f32>,
+    chunk_out: Vec<f32>,
+    scores: Vec<f32>,
+    order: Vec<usize>,
+}
+
 /// Reformer-style LSH attention: shared Q/K projection, random-rotation
-/// hashing into Nc buckets, bucket-sorted κ-sized chunks.
+/// hashing into Nc buckets, bucket-sorted κ-sized chunks.  Hashing runs
+/// row-parallel; the bucket-sort + chunked attention shards per batch.
 pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
     let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
     let d = dims.d();
     let rows = b * n;
     let kappa = dims.kappa.min(n).max(1);
+    let attn = dims.attn;
     let qk = ops::dense(x, p.wq_w, p.wq_b, rows, d, d); // Reformer ties Q and K
     let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
 
@@ -487,81 +651,91 @@ pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>>
     let mut rng = Rng::new(0);
     let rot: Vec<f32> = (0..d * rc).map(|_| rng.gaussian() as f32).collect();
 
-    // bucket = argmax over [xR ; -xR]
+    // bucket = argmax over [xR ; -xR], row-parallel
     let mut buckets = vec![0usize; rows];
-    for r in 0..rows {
-        let mut best = f32::NEG_INFINITY;
-        let mut arg = 0usize;
-        for j in 0..2 * rc {
-            let col = j % rc;
-            let mut acc = 0.0f32;
-            for i in 0..d {
-                acc += qk[r * d + i] * rot[i * rc + col];
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut(buckets.as_mut_slice(), blk, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, bucket) in chunk.iter_mut().enumerate() {
+            let rg = r0 + rr;
+            let mut best = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for j in 0..2 * rc {
+                let col = j % rc;
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += qk[rg * d + i] * rot[i * rc + col];
+                }
+                if j >= rc {
+                    acc = -acc;
+                }
+                if acc > best {
+                    best = acc;
+                    arg = j;
+                }
             }
-            if j >= rc {
-                acc = -acc;
-            }
-            if acc > best {
-                best = acc;
-                arg = j;
-            }
+            *bucket = arg;
         }
-        buckets[r] = arg;
-    }
+    });
 
     let m = n.div_ceil(kappa) * kappa; // padded length
+    let tau = (d_h as f32).sqrt();
+    let buckets_s: &[usize] = &buckets;
     let mut out = vec![0.0f32; rows * d];
-    let mut qk_s = vec![0.0f32; m * d];
-    let mut v_s = vec![0.0f32; m * d];
-    let mut chunk_out = vec![0.0f32; m * d];
-    let mut scores = vec![0.0f32; kappa];
-    for bb in 0..b {
-        // stable ascending sort by bucket (ties keep sequence order)
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&i| buckets[bb * n + i]);
-        qk_s.iter_mut().for_each(|z| *z = 0.0);
-        v_s.iter_mut().for_each(|z| *z = 0.0);
-        chunk_out.iter_mut().for_each(|z| *z = 0.0);
-        for (pos, &t) in order.iter().enumerate() {
-            qk_s[pos * d..(pos + 1) * d].copy_from_slice(&qk[(bb * n + t) * d..][..d]);
-            v_s[pos * d..(pos + 1) * d].copy_from_slice(&v[(bb * n + t) * d..][..d]);
-        }
-        let tau = (d_h as f32).sqrt();
-        for chunk in 0..m / kappa {
-            let lo = chunk * kappa;
-            // rows past n are padding (dropped by the un-sort); pad *keys*
-            // must be masked so real tokens don't leak softmax mass to them
-            for i in lo..(lo + kappa).min(n) {
-                for hh in 0..h {
-                    let qrow = &qk_s[i * d + hh * d_h..][..d_h];
-                    for jj in 0..kappa {
-                        if lo + jj >= n {
-                            scores[jj] = NEG_INF;
-                            continue;
+    parallel::par_chunks_mut_with(
+        out.as_mut_slice(),
+        n * d,
+        || LshScratch {
+            qk_s: vec![0.0f32; m * d],
+            v_s: vec![0.0f32; m * d],
+            chunk_out: vec![0.0f32; m * d],
+            scores: vec![0.0f32; kappa],
+            order: Vec::with_capacity(n),
+        },
+        |scr, bb, out_b| {
+            // stable ascending sort by bucket (ties keep sequence order)
+            scr.order.clear();
+            scr.order.extend(0..n);
+            scr.order.sort_by_key(|&i| buckets_s[bb * n + i]);
+            scr.qk_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.v_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.chunk_out.iter_mut().for_each(|z| *z = 0.0);
+            for (pos, &t) in scr.order.iter().enumerate() {
+                scr.qk_s[pos * d..(pos + 1) * d].copy_from_slice(&qk[(bb * n + t) * d..][..d]);
+                scr.v_s[pos * d..(pos + 1) * d].copy_from_slice(&v[(bb * n + t) * d..][..d]);
+            }
+            for chunk in 0..m / kappa {
+                let lo = chunk * kappa;
+                // rows past n are padding (dropped by the un-sort); pad *keys*
+                // must be masked so real tokens don't leak attention mass
+                for i in lo..(lo + kappa).min(n) {
+                    for hh in 0..h {
+                        let qrow = &scr.qk_s[i * d + hh * d_h..][..d_h];
+                        for jj in 0..kappa {
+                            if lo + jj >= n {
+                                scr.scores[jj] = NEG_INF;
+                                continue;
+                            }
+                            let krow = &scr.qk_s[(lo + jj) * d + hh * d_h..][..d_h];
+                            scr.scores[jj] = ops::dot(qrow, krow) / tau;
                         }
-                        let krow = &qk_s[(lo + jj) * d + hh * d_h..][..d_h];
-                        let mut dot = 0.0f32;
-                        for dd in 0..d_h {
-                            dot += qrow[dd] * krow[dd];
-                        }
-                        scores[jj] = dot / tau;
-                    }
-                    ops::attn_rows(&mut scores, kappa, AttnFn::Softmax);
-                    let dst = i * d + hh * d_h;
-                    for (jj, &pj) in scores.iter().enumerate() {
-                        let vrow = &v_s[(lo + jj) * d + hh * d_h..][..d_h];
-                        for dd in 0..d_h {
-                            chunk_out[dst + dd] += pj * vrow[dd];
+                        ops::attn_rows(&mut scr.scores, kappa, attn);
+                        let dst = i * d + hh * d_h;
+                        for (jj, &pj) in scr.scores.iter().enumerate() {
+                            let vrow = &scr.v_s[(lo + jj) * d + hh * d_h..][..d_h];
+                            for dd in 0..d_h {
+                                scr.chunk_out[dst + dd] += pj * vrow[dd];
+                            }
                         }
                     }
                 }
             }
-        }
-        // un-sort back to sequence order (padding rows are dropped)
-        for (pos, &t) in order.iter().enumerate() {
-            out[(bb * n + t) * d..][..d].copy_from_slice(&chunk_out[pos * d..][..d]);
-        }
-    }
+            // un-sort back to sequence order (padding rows are dropped)
+            for (pos, &t) in scr.order.iter().enumerate() {
+                out_b[t * d..][..d].copy_from_slice(&scr.chunk_out[pos * d..][..d]);
+            }
+        },
+    );
     Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
 }
 
@@ -603,6 +777,25 @@ mod tests {
         assert_eq!(&idx[0..2], &[0, 1]); // cluster 0 top-2
         assert_eq!(&idx[2..4], &[2, 3]); // cluster 1 top-2
         assert!(valid.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn topk_matches_argsort_reference() {
+        // the select_nth fast path must reproduce the full-argsort answer
+        let (b, n, n_c, kappa) = (2usize, 13usize, 3usize, 5usize);
+        let a_g = ag_for(b * n, n_c, 21);
+        let (idx, _) = top_k_cluster(&a_g, b, n, n_c, kappa);
+        let mut col = vec![0.0f32; n];
+        for bb in 0..b {
+            for c in 0..n_c {
+                for (nn, cv) in col.iter_mut().enumerate() {
+                    *cv = a_g[(bb * n + nn) * n_c + c];
+                }
+                let expect = &ops::argsort_desc(&col)[..kappa];
+                let base = (bb * n_c + c) * kappa;
+                assert_eq!(&idx[base..base + kappa], expect, "bb={bb} c={c}");
+            }
+        }
     }
 
     #[test]
@@ -692,7 +885,8 @@ mod tests {
             let p = cast_params(&buf);
             let mut rng = Rng::new(5);
             let x: Vec<f32> = (0..dm.b * dm.n * d).map(|_| rng.gaussian() as f32).collect();
-            let (out, a_g) = cast_layer(&p, &x, &dm).unwrap();
+            let mut ws = CastScratch::new();
+            let (out, a_g) = cast_layer(&p, &x, &dm, &mut ws).unwrap();
             assert_eq!(out.len(), dm.b * dm.n * d, "{mech}");
             assert_eq!(a_g.len(), dm.b * dm.n * dm.n_c, "{mech}");
             assert!(out.iter().all(|v| v.is_finite()), "{mech}");
@@ -711,8 +905,10 @@ mod tests {
         let buf = rand_cast_params(d, dm.heads, dm.n_c, 2);
         let p = cast_params(&buf);
         let x: Vec<f32> = (0..dm.b * dm.n * d).map(|i| (i as f32 * 0.37).sin()).collect();
-        let (a, _) = cast_layer(&p, &x, &dm).unwrap();
-        let (b2, _) = cast_layer(&p, &x, &dm).unwrap();
+        let mut ws = CastScratch::new();
+        let (a, _) = cast_layer(&p, &x, &dm, &mut ws).unwrap();
+        // scratch reuse across calls must not change the result
+        let (b2, _) = cast_layer(&p, &x, &dm, &mut ws).unwrap();
         assert_eq!(a, b2);
     }
 
@@ -776,6 +972,35 @@ mod tests {
         let b = local_layer(&p, &x, &dm).unwrap();
         for (u, w) in a.iter().zip(&b) {
             assert!((u - w).abs() < 1e-4, "{u} vs {w}");
+        }
+    }
+
+    #[test]
+    fn baselines_honor_configured_attn_fn() {
+        // laplace configs must not silently run softmax (the old
+        // `attend_range`/`lsh_layer` hardcoded AttnFn::Softmax)
+        let mut soft = dims("topk");
+        soft.b = 2;
+        let mut lap = soft.clone();
+        lap.attn = AttnFn::Laplace;
+        let d = soft.d();
+        let buf = rand_baseline(d, 12);
+        let p = baseline_params(&buf);
+        let mut rng = Rng::new(13);
+        let x: Vec<f32> = (0..soft.b * soft.n * d).map(|_| rng.gaussian() as f32).collect();
+        let pairs = [
+            (
+                "vanilla",
+                vanilla_layer(&p, &x, &soft).unwrap(),
+                vanilla_layer(&p, &x, &lap).unwrap(),
+            ),
+            ("local", local_layer(&p, &x, &soft).unwrap(), local_layer(&p, &x, &lap).unwrap()),
+            ("lsh", lsh_layer(&p, &x, &soft).unwrap(), lsh_layer(&p, &x, &lap).unwrap()),
+        ];
+        for (name, a, b) in pairs {
+            let max_diff =
+                a.iter().zip(&b).map(|(u, w)| (u - w).abs()).fold(0.0f32, f32::max);
+            assert!(max_diff > 1e-6, "{name}: laplace output identical to softmax");
         }
     }
 }

@@ -8,6 +8,10 @@
 //! on disk, no Python, and no external crates — `Manifest::synthetic`
 //! plus this module is a complete zero-dependency runtime.  The PJRT
 //! backend (`runtime::pjrt`, `xla` feature) plugs into the same trait.
+//!
+//! Every hot path runs on the `util::parallel` worker pool (sized by
+//! `CAST_NUM_THREADS` / `available_parallelism`); outputs are
+//! bit-identical for any thread count — see DESIGN.md §Threading.
 
 pub mod layer;
 pub mod model;

@@ -23,9 +23,10 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::artifacts::{Manifest, ModelMeta, ParamSpec};
 use crate::runtime::tensor::HostTensor;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
-use super::layer::{self, BaselineParams, CastParams, Dims};
+use super::layer::{self, BaselineParams, CastParams, CastScratch, Dims};
 use super::ops::{self, AttnFn};
 
 const ADAM_B1: f32 = 0.9;
@@ -87,25 +88,81 @@ fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
     })
 }
 
+/// Per-forward reusable scratch: one instance serves every layer of one
+/// `encode` call, so the per-layer `Vec` allocations on the hot path
+/// collapse to one set per forward.  (Entry points are stateless by the
+/// program contract, so the workspace is rebuilt per call — cheap next
+/// to a forward; reusing it across calls would need caller-owned state
+/// behind the `Executable` seam.)
+#[derive(Default)]
+struct Workspace {
+    /// CAST attention intermediates (q/k/v/affinities/R-slabs).
+    cast: CastScratch,
+    /// Pre-norm input copy (prenorm blocks norm a copy, not the residual).
+    xn: Vec<f32>,
+    /// FFN hidden activations (rows, d_ff).
+    hid: Vec<f32>,
+    /// FFN output (rows, d).
+    ffn_out: Vec<f32>,
+}
+
 fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f32]) -> Result<()> {
+    let d = meta.d;
+    let blk = parallel::row_block(x.len() / d.max(1)) * d;
     if meta.norm == "scale" {
         let g = p.f(&format!("{prefix}.g"))?;
-        ops::scalenorm_rows(x, g[0], meta.d, NORM_EPS);
+        parallel::par_chunks_mut(x, blk, |_, chunk| {
+            ops::scalenorm_rows(chunk, g[0], d, NORM_EPS);
+        });
     } else {
         // "layer", and "batch" substituted by affine layernorm (DESIGN.md)
         let g = p.f(&format!("{prefix}.g"))?;
         let b = p.f(&format!("{prefix}.b"))?;
-        ops::layernorm_rows(x, g, b, meta.d, NORM_EPS);
+        parallel::par_chunks_mut(x, blk, |_, chunk| {
+            ops::layernorm_rows(chunk, g, b, d, NORM_EPS);
+        });
     }
     Ok(())
 }
 
-fn ffn(p: &Params, prefix: &str, x: &[f32], rows: usize, d: usize, d_ff: usize) -> Result<Vec<f32>> {
-    let mut h = ops::dense(x, p.f(&format!("{prefix}.in.w"))?, p.f(&format!("{prefix}.in.b"))?, rows, d, d_ff);
-    for v in h.iter_mut() {
-        *v = ops::gelu(*v);
-    }
-    Ok(ops::dense(&h, p.f(&format!("{prefix}.out.w"))?, p.f(&format!("{prefix}.out.b"))?, rows, d_ff, d))
+/// FFN into `out`, with hidden activations in the reusable `hid` buffer
+/// (both owned by the caller's [`Workspace`]).
+#[allow(clippy::too_many_arguments)]
+fn ffn(
+    p: &Params,
+    prefix: &str,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    d_ff: usize,
+    hid: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    ops::dense_into(
+        x,
+        p.f(&format!("{prefix}.in.w"))?,
+        p.f(&format!("{prefix}.in.b"))?,
+        rows,
+        d,
+        d_ff,
+        hid,
+    );
+    let blk = parallel::elem_block(hid.len());
+    parallel::par_chunks_mut(hid.as_mut_slice(), blk, |_, chunk| {
+        for v in chunk.iter_mut() {
+            *v = ops::gelu(*v);
+        }
+    });
+    ops::dense_into(
+        hid,
+        p.f(&format!("{prefix}.out.w"))?,
+        p.f(&format!("{prefix}.out.b"))?,
+        rows,
+        d_ff,
+        d,
+        out,
+    );
+    Ok(())
 }
 
 fn attn_apply(
@@ -114,6 +171,7 @@ fn attn_apply(
     prefix: &str,
     x: &[f32],
     dims: &Dims,
+    ws: &mut CastScratch,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     if meta.is_cast() {
         let cp = CastParams {
@@ -129,7 +187,7 @@ fn attn_apply(
             phi_w: p.f(&format!("{prefix}.phi.w"))?,
             phi_b: p.f(&format!("{prefix}.phi.b"))?,
         };
-        return layer::cast_layer(&cp, x, dims);
+        return layer::cast_layer(&cp, x, dims, ws);
     }
     let bp = BaselineParams {
         wq_w: p.f(&format!("{prefix}.wq.w"))?,
@@ -165,54 +223,57 @@ fn encode(
     let (d, d_emb) = (meta.d, meta.d_emb);
     let rows = b * n;
 
-    // embedding + fixed sinusoidal positions + input projection
+    // embedding + fixed sinusoidal positions + input projection, sharded
+    // over row blocks (the batch×sequence grid)
     let emb = p.f("embed.emb")?;
     let pe = ops::sinusoidal_positions(n, d_emb);
     let mut x = vec![0.0f32; rows * d_emb];
-    for bb in 0..b {
-        for nn in 0..n {
-            let tok = (tokens[bb * n + nn].max(0) as usize).min(meta.vocab.saturating_sub(1));
-            let dst = (bb * n + nn) * d_emb;
-            for j in 0..d_emb {
-                x[dst + j] = emb[tok * d_emb + j] + pe[nn * d_emb + j];
+    let vocab_max = meta.vocab.saturating_sub(1);
+    let rblk = parallel::row_block(rows);
+    parallel::par_chunks_mut(x.as_mut_slice(), rblk * d_emb, |ci, chunk| {
+        let r0 = ci * rblk;
+        for (rr, dst) in chunk.chunks_mut(d_emb).enumerate() {
+            let gr = r0 + rr;
+            let nn = gr % n;
+            let tok = (tokens[gr].max(0) as usize).min(vocab_max);
+            let erow = &emb[tok * d_emb..(tok + 1) * d_emb];
+            let prow = &pe[nn * d_emb..(nn + 1) * d_emb];
+            for (j, dv) in dst.iter_mut().enumerate() {
+                *dv = erow[j] + prow[j];
             }
         }
-    }
+    });
     let mut x = ops::dense(&x, p.f("proj.w")?, p.f("proj.b")?, rows, d_emb, d);
 
     let dims = dims_for(meta, b)?;
     let mut ags = Vec::new();
+    let mut ws = Workspace::default();
     for i in 0..meta.depth {
         let blk = format!("blocks.{i}");
         if meta.prenorm {
-            let mut xn = x.clone();
-            apply_norm(p, meta, &format!("{blk}.norm1"), &mut xn)?;
-            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &xn, &dims)?;
+            ws.xn.clear();
+            ws.xn.extend_from_slice(&x);
+            apply_norm(p, meta, &format!("{blk}.norm1"), &mut ws.xn)?;
+            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &ws.xn, &dims, &mut ws.cast)?;
             if collect_ag {
                 ags.push(ag);
             }
-            for (xv, av) in x.iter_mut().zip(&a) {
-                *xv += av;
-            }
-            let mut x2n = x.clone();
-            apply_norm(p, meta, &format!("{blk}.norm2"), &mut x2n)?;
-            let f = ffn(p, &format!("{blk}.ffn"), &x2n, rows, d, meta.d_ff)?;
-            for (xv, fv) in x.iter_mut().zip(&f) {
-                *xv += fv;
-            }
+            ops::add_assign(&mut x, &a);
+            ws.xn.clear();
+            ws.xn.extend_from_slice(&x);
+            apply_norm(p, meta, &format!("{blk}.norm2"), &mut ws.xn)?;
+            let name = format!("{blk}.ffn");
+            ffn(p, &name, &ws.xn, rows, d, meta.d_ff, &mut ws.hid, &mut ws.ffn_out)?;
+            ops::add_assign(&mut x, &ws.ffn_out);
         } else {
-            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &x, &dims)?;
+            let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &x, &dims, &mut ws.cast)?;
             if collect_ag {
                 ags.push(ag);
             }
-            for (xv, av) in x.iter_mut().zip(&a) {
-                *xv += av;
-            }
+            ops::add_assign(&mut x, &a);
             apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
-            let f = ffn(p, &format!("{blk}.ffn"), &x, rows, d, meta.d_ff)?;
-            for (xv, fv) in x.iter_mut().zip(&f) {
-                *xv += fv;
-            }
+            ffn(p, &format!("{blk}.ffn"), &x, rows, d, meta.d_ff, &mut ws.hid, &mut ws.ffn_out)?;
+            ops::add_assign(&mut x, &ws.ffn_out);
             apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
         }
     }
@@ -220,17 +281,18 @@ fn encode(
         apply_norm(p, meta, "out_norm", &mut x)?;
     }
 
-    // mean-pool over the sequence
+    // mean-pool over the sequence, one task per batch element
     let mut pooled = vec![0.0f32; b * d];
     let inv = 1.0 / n as f32;
-    for bb in 0..b {
+    let xs: &[f32] = &x;
+    parallel::par_chunks_mut(pooled.as_mut_slice(), d, |bb, prow| {
         for nn in 0..n {
             let src = (bb * n + nn) * d;
-            for j in 0..d {
-                pooled[bb * d + j] += x[src + j] * inv;
+            for (j, pv) in prow.iter_mut().enumerate() {
+                *pv += xs[src + j] * inv;
             }
         }
-    }
+    });
     Ok((pooled, ags))
 }
 

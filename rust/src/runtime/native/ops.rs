@@ -31,26 +31,91 @@ impl AttnFn {
 /// `y = x @ w + b` where `x` is (rows, d_in), `w` is (d_in, d_out),
 /// `b` is (d_out).
 pub fn dense(x: &[f32], w: &[f32], b: &[f32], rows: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut y = Vec::new();
+    dense_into(x, w, b, rows, d_in, d_out, &mut y);
+    y
+}
+
+/// [`dense`] writing into a reusable output buffer (cleared + resized) so
+/// callers with a `Workspace` avoid a fresh allocation per layer per call.
+///
+/// The weight matrix is transposed once into a (d_out, d_in) scratch so
+/// every output element is a unit-stride dot product, then the row range
+/// is dispatched across the worker pool in cache-sized row blocks.  The
+/// per-element arithmetic (a fixed 4-lane accumulator split) is identical
+/// on every path, so results are bit-for-bit equal for any thread count.
+pub fn dense_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    y: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), rows * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(b.len(), d_out);
-    let mut y = Vec::with_capacity(rows * d_out);
-    for _ in 0..rows {
-        y.extend_from_slice(b);
+    y.clear();
+    y.resize(rows * d_out, 0.0);
+    if rows == 0 || d_out == 0 {
+        return;
     }
-    for r in 0..rows {
-        let xrow = &x[r * d_in..(r + 1) * d_in];
-        let yrow = &mut y[r * d_out..(r + 1) * d_out];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv != 0.0 {
-                let wrow = &w[i * d_out..(i + 1) * d_out];
-                for (o, &wv) in wrow.iter().enumerate() {
-                    yrow[o] += xv * wv;
+    if rows < 16 {
+        // tiny row counts (e.g. the per-batch classifier head): the
+        // O(d_in·d_out) transpose would rival the matmul itself, so run
+        // the direct accumulate loop with no scratch allocation
+        for (r, yrow) in y.chunks_mut(d_out).enumerate() {
+            yrow.copy_from_slice(b);
+            for (i, &xv) in x[r * d_in..(r + 1) * d_in].iter().enumerate() {
+                if xv != 0.0 {
+                    for (yv, &wv) in yrow.iter_mut().zip(&w[i * d_out..(i + 1) * d_out]) {
+                        *yv += xv * wv;
+                    }
                 }
             }
         }
+        return;
     }
-    y
+    // wt[o][i] = w[i][o]
+    let mut wt = vec![0.0f32; d_in * d_out];
+    for i in 0..d_in {
+        let wrow = &w[i * d_out..(i + 1) * d_out];
+        for (o, &wv) in wrow.iter().enumerate() {
+            wt[o * d_in + i] = wv;
+        }
+    }
+    let block = crate::util::parallel::row_block(rows);
+    crate::util::parallel::par_chunks_mut(y.as_mut_slice(), block * d_out, |ci, out| {
+        let r0 = ci * block;
+        for (rr, yrow) in out.chunks_mut(d_out).enumerate() {
+            let xrow = &x[(r0 + rr) * d_in..(r0 + rr + 1) * d_in];
+            for (o, yv) in yrow.iter_mut().enumerate() {
+                *yv = b[o] + dot(xrow, &wt[o * d_in..(o + 1) * d_in]);
+            }
+        }
+    });
+}
+
+/// Unit-stride dot product with a fixed 4-lane accumulator split (ILP
+/// without changing the summation order between call sites).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let mut chunks_a = a.chunks_exact(4);
+    let mut chunks_b = b.chunks_exact(4);
+    for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut tail = 0.0f32;
+    for (&va, &vb) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+        tail += va * vb;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
 /// Normalize every `cols`-wide row of `x` in place with the given weight
@@ -199,6 +264,58 @@ pub fn argsort_desc(scores: &[f32]) -> Vec<usize> {
     idx
 }
 
+/// The `(score desc, index asc)` total order underlying [`argsort_desc`]
+/// — index tiebreak makes it equivalent to the stable sort without the
+/// stability (and allocation) cost.
+#[inline]
+fn desc_by(scores: &[f32]) -> impl Fn(&usize, &usize) -> std::cmp::Ordering + Copy + '_ {
+    move |&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    }
+}
+
+/// Fill `idx` so that `idx[..k]` holds the indices of the `k` largest
+/// entries of `scores` in stable descending order — identical to
+/// `argsort_desc(scores)[..k]` but O(N + k log k) via quickselect instead
+/// of a full O(N log N) sort, and allocation-free when `idx` is reused.
+pub fn top_k_desc(scores: &[f32], k: usize, idx: &mut Vec<usize>) {
+    let n = scores.len();
+    let k = k.min(n);
+    idx.clear();
+    idx.extend(0..n);
+    if k == 0 {
+        return;
+    }
+    let cmp = desc_by(scores);
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, cmp);
+    }
+    idx[..k].sort_unstable_by(cmp);
+}
+
+/// Fill `idx` with the full descending argsort of `scores`, reusing the
+/// buffer (same order as [`argsort_desc`]).
+pub fn argsort_desc_into(scores: &[f32], idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..scores.len());
+    idx.sort_unstable_by(desc_by(scores));
+}
+
+/// Elementwise `x += y`, dispatched across the worker pool.
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let block = crate::util::parallel::elem_block(x.len());
+    crate::util::parallel::par_chunks_mut(x, block, |ci, chunk| {
+        let off = ci * block;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v += y[off + j];
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +416,51 @@ mod tests {
     #[test]
     fn argsort_desc_stable_ties() {
         assert_eq!(argsort_desc(&[0.5, 0.9, 0.5, 0.1]), vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn top_k_matches_full_argsort_prefix() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut idx = Vec::new();
+        for n in [1usize, 2, 7, 33, 100] {
+            // include duplicates to exercise the index tiebreak
+            let scores: Vec<f32> = (0..n).map(|_| (rng.f32() * 8.0).floor() / 8.0).collect();
+            let full = argsort_desc(&scores);
+            for k in [0usize, 1, n / 2, n.saturating_sub(1), n] {
+                top_k_desc(&scores, k, &mut idx);
+                assert_eq!(&idx[..k], &full[..k], "n={n} k={k}");
+            }
+            argsort_desc_into(&scores, &mut idx);
+            assert_eq!(idx, full, "n={n} full argsort");
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..11).map(|i| (i as f32) * 0.5).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-4);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dense_into_reuses_buffer() {
+        let x = [1.0, 2.0, 3.0, 0.5, -1.0, 0.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = [10.0, 20.0];
+        let mut y = vec![99.0f32; 64];
+        dense_into(&x, &w, &b, 2, 3, 2, &mut y);
+        assert_eq!(y, vec![14.0, 25.0, 10.5, 19.0]);
+    }
+
+    #[test]
+    fn add_assign_elementwise() {
+        let mut x: Vec<f32> = (0..300).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..300).map(|i| 2.0 * i as f32).collect();
+        add_assign(&mut x, &y);
+        for (i, v) in x.iter().enumerate() {
+            assert_eq!(*v, 3.0 * i as f32);
+        }
     }
 }

@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod pgm;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,305 @@
+//! Dependency-free parallel execution subsystem for the native engine.
+//!
+//! A scoped fork/join pool built on `std::thread::scope`: every parallel
+//! region spawns up to [`max_threads`] workers that pull work items from a
+//! shared queue (a mutex-guarded chunk iterator or an atomic counter) and
+//! join before the call returns.  Spawn cost is a few microseconds per
+//! region — noise next to the millisecond-scale matmul / attention loops
+//! this serves — and in exchange the subsystem needs no channels, no
+//! `unsafe`, and no external crates (the build environment is offline;
+//! see DESIGN.md §Substitutions).
+//!
+//! Determinism contract (relied on by the parity tests and DESIGN.md
+//! §Threading): helpers hand each task a *disjoint* `&mut` chunk of the
+//! output, and every reduction stays inside one task in a fixed order, so
+//! results are bit-identical for any worker count and any scheduling
+//! interleaving.  `CAST_NUM_THREADS=1` (or [`set_threads`]) therefore
+//! reproduces the threaded output exactly.
+//!
+//! Sizing: `CAST_NUM_THREADS` env override (tests pin 1), else
+//! `std::thread::available_parallelism`.  [`set_threads`] is a
+//! process-global programmatic override used by the parity tests — safe
+//! to race precisely because results never depend on the worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Programmatic override; 0 = unset (fall through to env / hardware).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count for this process (0 clears the override).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Resolved worker count: `set_threads` override, else `CAST_NUM_THREADS`,
+/// else `available_parallelism` (≥ 1 always).
+pub fn max_threads() -> usize {
+    let over = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if over > 0 {
+        return over;
+    }
+    if let Ok(v) = std::env::var("CAST_NUM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Rows per task for a row-parallel loop: ~4 tasks per worker so the
+/// mutex handout amortizes while stragglers still rebalance.
+pub fn row_block(rows: usize) -> usize {
+    rows.div_ceil(max_threads() * 4).max(1)
+}
+
+/// Elements per task for a flat elementwise loop (≥ 4096 so task handout
+/// never dominates trivially cheap bodies).
+pub fn elem_block(len: usize) -> usize {
+    len.div_ceil(max_threads() * 4).max(4096)
+}
+
+/// Fork `threads` workers (worker 0 runs on the calling thread), join all.
+fn run_workers<F: Fn(usize) + Sync>(threads: usize, worker: F) {
+    if threads <= 1 {
+        worker(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for t in 1..threads {
+            let w = &worker;
+            s.spawn(move || w(t));
+        }
+        worker(0);
+    });
+}
+
+/// Parallel `for i in 0..n { f(i) }` with dynamic (atomic-counter) load
+/// balancing.  `f` must only touch state that is safe to share (reads,
+/// atomics) — for disjoint mutable output use the chunk helpers below.
+pub fn par_iter_indexed<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let threads = max_threads().min(n.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    run_workers(threads, |_| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        f(i);
+    });
+}
+
+/// Parallel loop over disjoint `chunk`-sized pieces of `data`; each task
+/// gets `(chunk_index, &mut chunk)`.  The last chunk may be shorter.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with(data, chunk, || (), |_s, i, c| f(i, c));
+}
+
+/// [`par_chunks_mut`] with a per-worker scratch value built by `make`
+/// (allocated once per worker, not once per task).
+pub fn par_chunks_mut_with<T, S, M, F>(data: &mut [T], chunk: usize, make: M, f: F)
+where
+    T: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
+    debug_assert!(chunk > 0, "chunk length must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk);
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        let mut scratch = make();
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(&mut scratch, i, c);
+        }
+        return;
+    }
+    let queue = Mutex::new(data.chunks_mut(chunk).enumerate());
+    run_workers(threads, |_| {
+        let mut scratch = make();
+        loop {
+            let item = queue.lock().unwrap().next();
+            match item {
+                Some((i, c)) => f(&mut scratch, i, c),
+                None => break,
+            }
+        }
+    });
+}
+
+/// Parallel loop over two lock-stepped chunked outputs: task `i` gets
+/// `(i, &mut a[i*ca..], &mut b[i*cb..])`.  Used when one logical task
+/// writes two disjoint result arrays (e.g. per-cluster `R_intra` and
+/// `R_inter` slabs).
+pub fn par_zip2_mut<A, B, F>(a: &mut [A], ca: usize, b: &mut [B], cb: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    par_zip2_mut_with(a, ca, b, cb, || (), |_s, i, x, y| f(i, x, y));
+}
+
+/// [`par_zip2_mut`] with a per-worker scratch value built by `make`.
+pub fn par_zip2_mut_with<A, B, S, M, F>(
+    a: &mut [A],
+    ca: usize,
+    b: &mut [B],
+    cb: usize,
+    make: M,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [A], &mut [B]) + Sync,
+{
+    debug_assert!(ca > 0 && cb > 0, "chunk lengths must be positive");
+    debug_assert_eq!(
+        a.len().div_ceil(ca),
+        b.len().div_ceil(cb),
+        "zip2 outputs must have the same task count"
+    );
+    if a.is_empty() {
+        return;
+    }
+    let n_chunks = a.len().div_ceil(ca);
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        let mut scratch = make();
+        for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate() {
+            f(&mut scratch, i, x, y);
+        }
+        return;
+    }
+    let queue = Mutex::new(a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate());
+    run_workers(threads, |_| {
+        let mut scratch = make();
+        loop {
+            let item = queue.lock().unwrap().next();
+            match item {
+                Some((i, (x, y))) => f(&mut scratch, i, x, y),
+                None => break,
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_chunks_visits_every_chunk_once() {
+        let mut data = vec![0u32; 1000];
+        par_chunks_mut(&mut data, 7, |_i, c| {
+            for v in c.iter_mut() {
+                *v += 1; // each element visited exactly once
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn par_chunks_indices_match_offsets() {
+        let mut data = vec![0usize; 103];
+        par_chunks_mut(&mut data, 10, |i, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = i * 10 + j;
+            }
+        });
+        let expect: Vec<usize> = (0..103).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn par_iter_indexed_covers_range() {
+        let sum = AtomicU64::new(0);
+        par_iter_indexed(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn zip2_chunks_stay_locked_step() {
+        let mut a = vec![0usize; 60]; // 6 tasks of 10
+        let mut b = vec![0usize; 12]; // 6 tasks of 2
+        par_zip2_mut(&mut a, 10, &mut b, 2, |i, x, y| {
+            for v in x.iter_mut() {
+                *v = i;
+            }
+            for v in y.iter_mut() {
+                *v = i;
+            }
+        });
+        for i in 0..6 {
+            assert!(a[i * 10..(i + 1) * 10].iter().all(|&v| v == i));
+            assert!(b[i * 2..(i + 1) * 2].iter().all(|&v| v == i));
+        }
+    }
+
+    #[test]
+    fn thread_override_blocks_and_scratch_reuse() {
+        // single test owns the process-global override (merging the
+        // override and scratch assertions here avoids cross-test races
+        // on THREAD_OVERRIDE within this test binary)
+        set_threads(3);
+        assert_eq!(max_threads(), 3);
+        let mut data = vec![0u32; 50];
+        par_chunks_mut(&mut data, 5, |_, c| c.iter_mut().for_each(|v| *v += 1));
+        assert!(data.iter().all(|&v| v == 1));
+
+        // the scratch closure runs at most once per worker (3 pinned
+        // workers, 64 tasks — a per-task impl would report 64 makes)
+        let makes = AtomicU64::new(0);
+        let mut data = vec![0u8; 64];
+        par_chunks_mut_with(
+            &mut data,
+            1,
+            || {
+                makes.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; 8]
+            },
+            |s, _i, c| {
+                s[0] += 1.0;
+                c[0] = 1;
+            },
+        );
+        assert!(makes.load(Ordering::Relaxed) <= 3);
+        assert!(data.iter().all(|&v| v == 1));
+
+        set_threads(1);
+        assert_eq!(max_threads(), 1);
+        assert!(row_block(100) >= 1 && elem_block(10) >= 1);
+        set_threads(0);
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_short_inputs_are_safe() {
+        let mut empty: Vec<f32> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no tasks expected"));
+        par_iter_indexed(0, |_| panic!("no tasks expected"));
+        let mut one = vec![0.0f32; 3];
+        par_chunks_mut(&mut one, 100, |i, c| {
+            assert_eq!(i, 0);
+            assert_eq!(c.len(), 3);
+        });
+    }
+}

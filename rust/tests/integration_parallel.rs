@@ -1,0 +1,244 @@
+//! Parallel-vs-serial parity for the native engine: with
+//! `CAST_NUM_THREADS=1` (here: `parallel::set_threads(1)`) and with a
+//! multi-worker pool, every layer and the full predict path must agree —
+//! bit-for-bit for `dense`, ≤ 1e-5 elsewhere (the engine's helpers are
+//! designed to be bit-identical for any worker count; the tolerance is
+//! headroom, not an excuse) — and repeated threaded runs must be
+//! bit-for-bit deterministic.
+//!
+//! The thread override is process-global, which is safe exactly because
+//! the engine's results never depend on the worker count.
+
+use cast::runtime::artifacts::Manifest;
+use cast::runtime::native::layer::{
+    cast_layer, local_layer, lsh_layer, vanilla_layer, BaselineParams, CastParams, CastScratch,
+    Dims,
+};
+use cast::runtime::native::model::{run_init, run_predict};
+use cast::runtime::native::ops::{self, AttnFn};
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::tensor::HostTensor;
+use cast::util::parallel;
+use cast::util::rng::Rng;
+
+const THREADED: usize = 4;
+
+/// Serializes every test body that touches the process-global thread
+/// override, so a concurrently-running test can never retarget the pool
+/// mid-comparison (which would silently turn a serial-vs-threaded parity
+/// check into threaded-vs-threaded).
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    parallel::set_threads(n);
+    let out = f();
+    parallel::set_threads(0);
+    out
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn dense_is_bit_for_bit_across_thread_counts() {
+    let mut rng = Rng::new(17);
+    // deliberately awkward sizes to exercise remainder chunks
+    let (rows, d_in, d_out) = (37usize, 19usize, 23usize);
+    let x: Vec<f32> = (0..rows * d_in).map(|_| rng.gaussian() as f32).collect();
+    let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.gaussian() as f32).collect();
+    let b: Vec<f32> = (0..d_out).map(|_| rng.gaussian() as f32).collect();
+    let serial = with_threads(1, || ops::dense(&x, &w, &b, rows, d_in, d_out));
+    let threaded = with_threads(THREADED, || ops::dense(&x, &w, &b, rows, d_in, d_out));
+    assert_eq!(serial, threaded, "dense must be bit-for-bit identical");
+}
+
+fn layer_dims(clustering: &str, attn: AttnFn) -> Dims {
+    Dims {
+        b: 2,
+        n: 24,
+        heads: 2,
+        d_h: 8,
+        n_c: 4,
+        kappa: 8,
+        attn,
+        clustering: clustering.to_string(),
+        causal: clustering == "causal",
+        window: 8,
+    }
+}
+
+fn rand_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+fn cast_param_bufs(d: usize, h: usize, n_c: usize, seed: u64) -> Vec<Vec<f32>> {
+    let d_h = d / h;
+    let mut rng = Rng::new(seed);
+    let s = 1.0 / (d as f32).sqrt();
+    vec![
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, n_c * h * d_h, 1.0 / (d_h as f32).sqrt()),
+        rand_vec(&mut rng, d, s),
+        vec![0.0; 1],
+    ]
+}
+
+fn cast_params(buf: &[Vec<f32>]) -> CastParams<'_> {
+    CastParams {
+        wq_w: &buf[0],
+        wq_b: &buf[1],
+        wk_w: &buf[2],
+        wk_b: &buf[3],
+        wv_w: &buf[4],
+        wv_b: &buf[5],
+        wo_w: &buf[6],
+        wo_b: &buf[7],
+        s: &buf[8],
+        phi_w: &buf[9],
+        phi_b: &buf[10],
+    }
+}
+
+fn baseline_param_bufs(d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let s = 1.0 / (d as f32).sqrt();
+    vec![
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+        rand_vec(&mut rng, d * d, s),
+        vec![0.0; d],
+    ]
+}
+
+fn baseline_params(buf: &[Vec<f32>]) -> BaselineParams<'_> {
+    BaselineParams {
+        wq_w: &buf[0],
+        wq_b: &buf[1],
+        wk_w: &buf[2],
+        wk_b: &buf[3],
+        wv_w: &buf[4],
+        wv_b: &buf[5],
+        wo_w: &buf[6],
+        wo_b: &buf[7],
+    }
+}
+
+#[test]
+fn cast_layer_parity_serial_vs_threaded() {
+    for mech in ["topk", "sa", "causal"] {
+        for attn in [AttnFn::Softmax, AttnFn::Laplace] {
+            let dm = layer_dims(mech, attn);
+            let d = dm.d();
+            let buf = cast_param_bufs(d, dm.heads, dm.n_c, 31);
+            let p = cast_params(&buf);
+            let mut rng = Rng::new(5);
+            let x: Vec<f32> = rand_vec(&mut rng, dm.b * dm.n * d, 1.0);
+            let (out1, ag1) = with_threads(1, || {
+                cast_layer(&p, &x, &dm, &mut CastScratch::new()).unwrap()
+            });
+            let (out4, ag4) = with_threads(THREADED, || {
+                cast_layer(&p, &x, &dm, &mut CastScratch::new()).unwrap()
+            });
+            assert!(
+                max_abs_diff(&out1, &out4) <= 1e-5,
+                "{mech}/{attn:?}: out diverged by {}",
+                max_abs_diff(&out1, &out4)
+            );
+            assert!(max_abs_diff(&ag1, &ag4) <= 1e-5, "{mech}/{attn:?}: a_g diverged");
+        }
+    }
+}
+
+#[test]
+fn baselines_parity_serial_vs_threaded() {
+    let dm = layer_dims("topk", AttnFn::Softmax);
+    let d = dm.d();
+    let buf = baseline_param_bufs(d, 77);
+    let p = baseline_params(&buf);
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = rand_vec(&mut rng, dm.b * dm.n * d, 1.0);
+    for name in ["vanilla", "local", "lsh"] {
+        let run = |threads: usize| {
+            with_threads(threads, || match name {
+                "vanilla" => vanilla_layer(&p, &x, &dm).unwrap(),
+                "local" => local_layer(&p, &x, &dm).unwrap(),
+                _ => lsh_layer(&p, &x, &dm).unwrap(),
+            })
+        };
+        let serial = run(1);
+        let threaded = run(THREADED);
+        assert!(
+            max_abs_diff(&serial, &threaded) <= 1e-5,
+            "{name}: diverged by {}",
+            max_abs_diff(&serial, &threaded)
+        );
+    }
+}
+
+fn predict_logits(variant: &str, threads: usize) -> Vec<f32> {
+    let man = Manifest::synthetic(tiny_meta(variant));
+    with_threads(threads, || {
+        let seed = HostTensor::u32(vec![], vec![11]);
+        let params = run_init(&man, &[&seed]).unwrap();
+        let n: usize = man.tokens_shape.iter().product();
+        let tokens = HostTensor::s32(
+            man.tokens_shape.clone(),
+            (0..n).map(|i| ((i * 13 + 5) % 97) as i32).collect(),
+        );
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        let out = run_predict(&man, &inputs).unwrap();
+        out[0].as_f32().unwrap().to_vec()
+    })
+}
+
+#[test]
+fn predict_parity_serial_vs_threaded() {
+    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        let serial = predict_logits(variant, 1);
+        let threaded = predict_logits(variant, THREADED);
+        assert!(
+            max_abs_diff(&serial, &threaded) <= 1e-5,
+            "{variant}: logits diverged by {}",
+            max_abs_diff(&serial, &threaded)
+        );
+    }
+}
+
+#[test]
+fn threaded_runs_are_bit_for_bit_deterministic() {
+    // repeated runs at the same worker count must agree exactly —
+    // dynamic task scheduling must never change any reduction order
+    let dm = layer_dims("topk", AttnFn::Softmax);
+    let d = dm.d();
+    let buf = cast_param_bufs(d, dm.heads, dm.n_c, 3);
+    let p = cast_params(&buf);
+    let x: Vec<f32> = (0..dm.b * dm.n * d).map(|i| (i as f32 * 0.11).sin()).collect();
+    let (a, ag_a) = with_threads(THREADED, || {
+        cast_layer(&p, &x, &dm, &mut CastScratch::new()).unwrap()
+    });
+    for _ in 0..3 {
+        let (b, ag_b) = with_threads(THREADED, || {
+            cast_layer(&p, &x, &dm, &mut CastScratch::new()).unwrap()
+        });
+        assert_eq!(a, b, "threaded cast_layer output must be deterministic");
+        assert_eq!(ag_a, ag_b, "threaded A_g must be deterministic");
+    }
+    let l1 = predict_logits("cast_topk", THREADED);
+    let l2 = predict_logits("cast_topk", THREADED);
+    assert_eq!(l1, l2, "threaded predict must be deterministic");
+}
