@@ -100,6 +100,27 @@ pub fn efficiency_table(
     Ok(table_from_rows(title, "vanilla", seq_lens, &rows))
 }
 
+/// One row of the `BENCH_native.json` schema.
+fn row_json(
+    config: &str,
+    variant: &str,
+    seq_len: usize,
+    kind: &str,
+    steps_per_sec: f64,
+    peak_rss_mb: f64,
+    threads: usize,
+) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(config)),
+        ("variant", Json::str(variant)),
+        ("seq_len", Json::num(seq_len as f64)),
+        ("kind", Json::str(kind)),
+        ("steps_per_sec", Json::num(steps_per_sec)),
+        ("peak_rss_mb", Json::num(peak_rss_mb)),
+        ("threads", Json::num(threads as f64)),
+    ])
+}
+
 /// Serialize measured rows as the `BENCH_native.json` schema:
 /// `{backend, threads, rows: [{config, variant, seq_len, steps_per_sec,
 /// peak_rss_mb, threads}]}` — one stable machine-readable file so the
@@ -109,15 +130,15 @@ pub fn bench_json(rows: &[BenchRow]) -> Json {
     let row_objs: Vec<Json> = rows
         .iter()
         .map(|r| {
-            Json::obj(vec![
-                ("config", Json::str(&r.config)),
-                ("variant", Json::str(&r.variant)),
-                ("seq_len", Json::num(r.seq_len as f64)),
-                ("kind", Json::str(&r.result.kind)),
-                ("steps_per_sec", Json::num(r.result.steps_per_sec)),
-                ("peak_rss_mb", Json::num(r.result.peak_rss_bytes as f64 / 1e6)),
-                ("threads", Json::num(threads as f64)),
-            ])
+            row_json(
+                &r.config,
+                &r.variant,
+                r.seq_len,
+                &r.result.kind,
+                r.result.steps_per_sec,
+                r.result.peak_rss_bytes as f64 / 1e6,
+                threads,
+            )
         })
         .collect();
     Json::obj(vec![
@@ -131,6 +152,55 @@ pub fn bench_json(rows: &[BenchRow]) -> Json {
 pub fn write_bench_json(path: &Path, rows: &[BenchRow]) -> Result<()> {
     std::fs::write(path, bench_json(rows).to_string() + "\n")
         .with_context(|| format!("writing bench json {path:?}"))
+}
+
+/// A `train_steps_per_sec` row in the same schema — what
+/// `cast train --bench-json` appends after an end-to-end training run.
+pub fn train_row_json(config: &str, variant: &str, seq_len: usize, steps_per_sec: f64) -> Json {
+    let peak_mb =
+        crate::util::peak_rss_bytes().map(|b| b as f64 / 1e6).unwrap_or(0.0);
+    row_json(
+        config,
+        variant,
+        seq_len,
+        "train_steps_per_sec",
+        steps_per_sec,
+        peak_mb,
+        Engine::threads(),
+    )
+}
+
+/// Append one row to a bench-json file, preserving any existing rows
+/// and the optional top-level `note` (the seed `BENCH_native.json`
+/// carries one); creates the file when absent.  An existing file that
+/// fails to parse is an error — this file is the cross-PR perf
+/// trajectory, never silently reset.
+pub fn append_bench_row(path: &Path, row: Json) -> Result<()> {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut note: Option<Json> = None;
+    if let Ok(text) = std::fs::read_to_string(path) {
+        let old = Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!(
+                "existing bench json {path:?} is unparseable ({e}); refusing to overwrite \
+                 the perf trajectory — fix or remove the file first"
+            )
+        })?;
+        if let Some(arr) = old.get("rows").and_then(Json::as_arr) {
+            rows.extend(arr.iter().cloned());
+        }
+        note = old.get("note").cloned();
+    }
+    rows.push(row);
+    let mut fields = vec![
+        ("backend", Json::str("native")),
+        ("threads", Json::num(Engine::threads() as f64)),
+        ("rows", Json::Arr(rows)),
+    ];
+    if let Some(n) = note {
+        fields.push(("note", n));
+    }
+    std::fs::write(path, Json::obj(fields).to_string() + "\n")
+        .with_context(|| format!("appending bench row to {path:?}"))
 }
 
 /// Parse `(variant, seq_len)` out of an artifact key like
@@ -239,5 +309,48 @@ mod tests {
         assert_eq!(field(key, 'c'), Some(10));
         assert_eq!(field(key, 'b'), Some(2));
         assert_eq!(field(key, 'z'), None);
+    }
+
+    #[test]
+    fn append_bench_row_preserves_rows_and_note() {
+        let dir = std::env::temp_dir().join("cast_bench_append_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        // seed file with a note and no rows (the BENCH_native.json shape)
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "threads": null, "rows": [], "note": "seed"}"#,
+        )
+        .unwrap();
+        append_bench_row(
+            &path,
+            train_row_json("text_cast_topk_n64_b2_c4_k16", "cast_topk", 64, 12.5),
+        )
+        .unwrap();
+        append_bench_row(
+            &path,
+            train_row_json("text_vanilla_n64_b2", "vanilla", 64, 3.25),
+        )
+        .unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = back.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("kind").and_then(Json::as_str), Some("train_steps_per_sec"));
+        assert_eq!(rows[0].get("steps_per_sec").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(rows[1].get("variant").and_then(Json::as_str), Some("vanilla"));
+        assert_eq!(back.get("note").and_then(Json::as_str), Some("seed"));
+        assert_eq!(back.get("backend").and_then(Json::as_str), Some("native"));
+    }
+
+    #[test]
+    fn append_bench_row_refuses_to_clobber_corrupt_file() {
+        let dir = std::env::temp_dir().join("cast_bench_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        std::fs::write(&path, "{ this is not json").unwrap();
+        let err = append_bench_row(&path, train_row_json("k", "v", 64, 1.0)).unwrap_err();
+        assert!(format!("{err:#}").contains("refusing"), "{err:#}");
+        // the corrupt file is left untouched for inspection
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{ this is not json");
     }
 }

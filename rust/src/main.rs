@@ -4,8 +4,14 @@
 //!   gen     --out <dir> [--variant V --seq N --nc C --kappa K --depth D]
 //!           (write native-runnable manifests; size flags scale the tiny
 //!            config, e.g. --seq 2048 --nc 16 --kappa 128 for perf runs)
-//!   train   --dir <artifact-dir> [--steps N --lr X --warmup N --seed S
-//!           --eval-every N --ckpt PATH --history PATH]
+//!   train   [--dir <artifact-dir>] [--steps N --lr X --warmup N --seed S
+//!           --eval-every N --ckpt PATH --history PATH --bench-json PATH
+//!           --assert-improves]
+//!           (without --dir: synthesize a native config from
+//!            --task/--variant/--seq/--nc/--kappa/--depth/--batch and
+//!            train end-to-end with zero artifacts; --ckpt resumes from
+//!            the checkpoint when the file exists; --bench-json appends
+//!            a train_steps_per_sec row, e.g. to BENCH_native.json)
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
 //!   bench   --table {1,5} [--task text --steps N --isolate
 //!           --seq 1024,2048 --json BENCH_native.json]
@@ -30,7 +36,7 @@ use cast::coordinator::sweep::Sweep;
 use cast::coordinator::{Job, JobKind};
 use cast::data;
 use cast::model::{checkpoint, ModelState};
-use cast::runtime::{Engine, Manifest};
+use cast::runtime::{Engine, Manifest, ModelMeta};
 use cast::train::{Schedule, TrainConfig, Trainer};
 use cast::util::cli::Args;
 use cast::util::rng::Rng;
@@ -91,29 +97,13 @@ fn cmd_gen(args: &Args) -> Result<()> {
         }
         None => VARIANTS.iter().map(|s| s.to_string()).collect(),
     };
-    let sized = |variant: &str| {
-        let mut meta = tiny_meta(variant);
-        meta.seq_len = args.usize("seq", meta.seq_len);
-        // local attention requires seq_len % window == 0; shrink to the
-        // nearest divisor so every generated config is runnable
-        meta.window = meta.window.min(meta.seq_len).max(1);
-        while meta.seq_len % meta.window != 0 {
-            meta.window -= 1;
-        }
-        meta.n_c = args.usize("nc", meta.n_c);
-        meta.kappa = args.usize("kappa", meta.kappa);
-        meta.depth = args.usize("depth", meta.depth);
-        meta.heads = args.usize("heads", meta.heads);
-        meta.d = args.usize("d", meta.d);
-        meta
-    };
     let mut dirs = Vec::new();
     for variant in &wanted {
-        dirs.push(Manifest::synthetic(sized(variant)).save(&out)?);
+        dirs.push(Manifest::synthetic(apply_size_flags(tiny_meta(variant), args)).save(&out)?);
     }
     if args.opt_str("variant").is_none() {
         // the decoder extension (paper §5.5) rides along in the full set
-        let mut meta = sized("cast_sa");
+        let mut meta = apply_size_flags(tiny_meta("cast_sa"), args);
         meta.causal = true;
         dirs.push(Manifest::synthetic(meta).save(&out)?);
     }
@@ -129,9 +119,43 @@ fn artifact_dir(args: &Args) -> Result<PathBuf> {
     Ok(PathBuf::from(dir))
 }
 
+/// Apply the CLI size flags (`--seq/--nc/--kappa/--depth/--heads/--d/
+/// --batch`) to a base config — the one place the geometry-scaling
+/// rules live, shared by `cast gen` and the artifact-less `cast train`.
+fn apply_size_flags(mut meta: ModelMeta, args: &Args) -> ModelMeta {
+    meta.seq_len = args.usize("seq", meta.seq_len);
+    // local attention requires seq_len % window == 0; shrink to the
+    // nearest divisor so every generated config is runnable
+    meta.window = meta.window.min(meta.seq_len).max(1);
+    while meta.seq_len % meta.window != 0 {
+        meta.window -= 1;
+    }
+    meta.n_c = args.usize("nc", meta.n_c);
+    meta.kappa = args.usize("kappa", meta.kappa);
+    meta.depth = args.usize("depth", meta.depth);
+    meta.heads = args.usize("heads", meta.heads);
+    meta.d = args.usize("d", meta.d);
+    meta.batch = args.usize("batch", meta.batch);
+    meta
+}
+
+/// Synthesize a native-runnable manifest from CLI size flags (the
+/// zero-artifact `cast train` path; same scaling rules as `cast gen`).
+fn synthetic_manifest(args: &Args) -> Result<Manifest> {
+    use cast::runtime::native::{spec, VARIANTS};
+    let variant = args.str("variant", "cast_topk");
+    if !VARIANTS.contains(&variant.as_str()) {
+        bail!("unknown variant {variant:?}; know {VARIANTS:?}");
+    }
+    let meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
+    Ok(Manifest::synthetic(apply_size_flags(meta, args)))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let dir = artifact_dir(args)?;
-    let manifest = Manifest::load(&dir)?;
+    let manifest = match args.opt_str("dir") {
+        Some(dir) => Manifest::load(&PathBuf::from(dir))?,
+        None => synthetic_manifest(args)?,
+    };
     let cfg = TrainConfig {
         steps: args.usize("steps", 200),
         schedule: Schedule::Warmup {
@@ -148,6 +172,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let engine = Engine::auto()?;
     let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
+    if let Some(ckpt) = args.opt_str("ckpt") {
+        let path = PathBuf::from(&ckpt);
+        if path.exists() {
+            trainer.load_checkpoint(&path)?;
+            println!("resumed from {ckpt} at step {}", trainer.state.step);
+        }
+    }
     let report = trainer.run()?;
     if let Some(path) = args.opt_str("history") {
         report.history.save_json(&PathBuf::from(&path))?;
@@ -160,6 +191,38 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.best_eval_acc,
         report.steps_per_sec
     );
+    if let Some(path) = args.opt_str("bench-json") {
+        let meta = &trainer.manifest.meta;
+        let row = cast::bench::train_row_json(
+            &trainer.manifest.key,
+            &meta.variant,
+            meta.seq_len,
+            report.steps_per_sec,
+        );
+        cast::bench::append_bench_row(&PathBuf::from(&path), row)?;
+        println!(
+            "train bench row -> {path} ({:.2} steps/s, {} threads)",
+            report.steps_per_sec,
+            Engine::threads()
+        );
+    }
+    if args.has("assert-improves") {
+        let first = report
+            .history
+            .steps
+            .first()
+            .map(|r| r.loss)
+            .context("no training steps recorded")?;
+        anyhow::ensure!(
+            report.final_train_loss < first,
+            "training did not improve: first-step loss {first:.4} vs final {:.4}",
+            report.final_train_loss
+        );
+        println!(
+            "improvement check passed: {first:.4} -> {:.4}",
+            report.final_train_loss
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,1272 @@
+//! Layer-level reverse passes: the CAST attention layer (paper §3.1–3.3)
+//! and the three baselines.
+//!
+//! **Tape policy** (DESIGN.md §Autograd): after a forward, the
+//! [`CastScratch`] *is* the tape — [`CastTape::capture`] snapshots the
+//! projections (q/k/v/φ), the surrogate affinities, the hard cluster
+//! assignment, the combination weights, and the R-slabs.  The κ×κ
+//! intra-cluster probability matrices and the summary weight rows are
+//! **recomputed** in the backward (they are cheap relative to storing
+//! B·Nc·h of them per layer).  Baselines store only the layer input and
+//! recompute projections + probabilities.
+//!
+//! **Straight-through clustering**: the assignment `(idx, valid)` and the
+//! LSH bucket sort are hard, non-differentiable selections and are treated
+//! as constants.  Gradients still flow through every *soft* use of the
+//! affinities — `A_q`-raw via the combination weights (eq. 5), `A_k` via
+//! the summary weight rows (eq. 4), and φ via both softplus gates — so
+//! the surrogate tokens S and the gate projection φ train.
+//!
+//! **Threading** mirrors the forward: dense backward ops shard over row /
+//! input-dim blocks, the attention backward shards over the B×Nc cluster
+//! grid into disjoint per-cell gradient slabs which a token-parallel
+//! gather (via the `slot_of` reverse map) folds back into per-token
+//! buffers.  Every reduction keeps a fixed order — backward results are
+//! bit-identical for any `CAST_NUM_THREADS`.
+
+use anyhow::{ensure, Result};
+
+use crate::util::parallel;
+
+use super::super::layer::{
+    attend_windows, lsh_attend, lsh_sort_order, BaselineParams, CastParams, CastScratch, Dims,
+};
+use super::super::ops::{self, NEG_INF};
+use super::ops as gops;
+
+/// Clear + zero-fill a reusable buffer (keeps its allocation).
+fn zeroed(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Fold a discrete assignment into a running FNV-1a fingerprint.
+pub(crate) fn fnv_fold(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+// ---------------------------------------------------------------------------
+// CAST layer
+// ---------------------------------------------------------------------------
+
+/// Snapshot of one CAST layer's forward intermediates (see module docs
+/// for what is stored vs recomputed).
+pub struct CastTape {
+    /// Layer input (B·N, d).
+    pub x: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    phi: Vec<f32>,
+    a_k: Vec<f32>,
+    a_q_raw: Vec<f32>,
+    a_sum: Vec<f32>,
+    r_intra: Vec<f32>,
+    r_inter: Vec<f32>,
+    r: Vec<f32>,
+    slot_of: Vec<usize>,
+    idx: Vec<usize>,
+    valid: Vec<f32>,
+}
+
+impl CastTape {
+    /// Capture the tape right after `cast_layer(p, x, dims, ws)` ran.
+    pub fn capture(x: &[f32], ws: &CastScratch) -> CastTape {
+        CastTape {
+            x: x.to_vec(),
+            q: ws.q.clone(),
+            k: ws.k.clone(),
+            v: ws.v.clone(),
+            phi: ws.phi.clone(),
+            a_k: ws.a_k.clone(),
+            a_q_raw: ws.a_q_raw.clone(),
+            a_sum: ws.a_sum.clone(),
+            r_intra: ws.r_intra.clone(),
+            r_inter: ws.r_inter.clone(),
+            r: ws.r.clone(),
+            slot_of: ws.slot_of.clone(),
+            idx: ws.idx.clone(),
+            valid: ws.valid.clone(),
+        }
+    }
+
+    /// FNV fingerprint of the discrete cluster assignment — gradient
+    /// checks skip coordinates whose perturbation flips it (the
+    /// derivative does not exist across that boundary).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &i in &self.idx {
+            h = fnv_fold(h, i as u64);
+        }
+        for &v in &self.valid {
+            h = fnv_fold(h, (v > 0.0) as u64);
+        }
+        h
+    }
+}
+
+/// Mutable views of one CAST layer's parameter-gradient buffers
+/// (accumulated into — the `+=` convention of `grad::ops`).
+pub struct CastGradRefs<'a> {
+    pub wq_w: &'a mut [f32],
+    pub wq_b: &'a mut [f32],
+    pub wk_w: &'a mut [f32],
+    pub wk_b: &'a mut [f32],
+    pub wv_w: &'a mut [f32],
+    pub wv_b: &'a mut [f32],
+    pub wo_w: &'a mut [f32],
+    pub wo_b: &'a mut [f32],
+    pub s: &'a mut [f32],
+    pub phi_w: &'a mut [f32],
+    pub phi_b: &'a mut [f32],
+}
+
+/// Reusable backward buffers for [`cast_layer_backward`] — the reverse
+/// analogue of [`CastScratch`], owned by the model-level `GradScratch`.
+#[derive(Default)]
+pub struct CastBwdScratch {
+    dr: Vec<f32>,
+    d_asum: Vec<f32>,
+    d_aq_raw: Vec<f32>,
+    d_phi: Vec<f32>,
+    d_r_intra: Vec<f32>,
+    d_r_inter: Vec<f32>,
+    /// Fused per-cell gradient slabs: `dq | dk | dv` (κ·d each) then
+    /// `d a_k` (h·κ) then `d φ` (κ), per (batch, cluster) cell.
+    cell: Vec<f32>,
+    d_ak: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+/// Per-worker recompute scratch for the B×Nc cell backward.
+struct CellScratch {
+    pre: Vec<f32>,
+    p: Vec<f32>,
+    dp: Vec<f32>,
+    ds: Vec<f32>,
+    wpre: Vec<f32>,
+    wpost: Vec<f32>,
+    dw: Vec<f32>,
+    dwpre: Vec<f32>,
+}
+
+/// Reverse pass of `layer::cast_layer`.  `d_out` is the gradient of the
+/// layer output (B·N, d); the input gradient is **accumulated** into
+/// `dx`, parameter gradients into `g`.
+pub fn cast_layer_backward(
+    p: &CastParams,
+    tape: &CastTape,
+    dims: &Dims,
+    d_out: &[f32],
+    dx: &mut [f32],
+    g: &mut CastGradRefs,
+    ws: &mut CastBwdScratch,
+) -> Result<()> {
+    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let kappa = dims.kappa.min(n);
+    ensure!(kappa > 0 && n_c > 0, "CAST needs n_c>0 and kappa>0");
+    let rows = b * n;
+    ensure!(d_out.len() == rows * d && dx.len() == rows * d, "cast backward shape");
+    let tau = (d_h as f32).sqrt();
+    let attn = dims.attn;
+    let causal = dims.causal;
+    let blk = parallel::row_block(rows);
+
+    let CastBwdScratch {
+        dr,
+        d_asum,
+        d_aq_raw,
+        d_phi,
+        d_r_intra,
+        d_r_inter,
+        cell,
+        d_ak,
+        dq,
+        dk,
+        dv,
+    } = ws;
+
+    // output projection: r -> out
+    zeroed(dr, rows * d);
+    gops::dense_grad_input_acc(d_out, p.wo_w, rows, d, d, dr);
+    gops::dense_grad_params(&tape.r, d_out, rows, d, d, g.wo_w, g.wo_b);
+    let dr_s: &[f32] = dr.as_slice();
+
+    // step 6b backward, token side: d A_sum (every (token, cluster) pair
+    // is written by exactly one task)
+    zeroed(d_asum, rows * n_c);
+    parallel::par_chunks_mut(d_asum.as_mut_slice(), blk * n_c, |ci, chunk| {
+        let r0 = ci * blk;
+        for rr in 0..chunk.len() / n_c {
+            let gr = r0 + rr;
+            let bb = gr / n;
+            let drrow = &dr_s[gr * d..(gr + 1) * d];
+            for c in 0..n_c {
+                let slot = tape.slot_of[gr * n_c + c];
+                chunk[rr * n_c + c] = if slot > 0 {
+                    let src = ((bb * n_c + c) * kappa + (slot - 1)) * d;
+                    ops::dot(drrow, &tape.r_intra[src..src + d])
+                } else if !causal {
+                    let src = (bb * n_c + c) * d;
+                    ops::dot(drrow, &tape.r_inter[src..src + d])
+                } else {
+                    0.0
+                };
+            }
+        }
+    });
+    let d_asum_s: &[f32] = d_asum.as_slice();
+
+    // step 6b backward, cluster side: d R_intra / d R_inter over the
+    // B×Nc grid (each slot receives from exactly one member token; the
+    // summary gradient reduces over non-member tokens in a fixed order)
+    zeroed(d_r_intra, b * n_c * kappa * d);
+    zeroed(d_r_inter, b * n_c * d);
+    parallel::par_zip2_mut(
+        d_r_intra.as_mut_slice(),
+        kappa * d,
+        d_r_inter.as_mut_slice(),
+        d,
+        |cell_i, dri, drc| {
+            let bb = cell_i / n_c;
+            let c = cell_i % n_c;
+            let base = (bb * n_c + c) * kappa;
+            for slot in 0..kappa {
+                if tape.valid[base + slot] > 0.0 {
+                    let gr = bb * n + tape.idx[base + slot];
+                    let w = tape.a_sum[gr * n_c + c];
+                    if w != 0.0 {
+                        let dst = &mut dri[slot * d..(slot + 1) * d];
+                        let src = &dr_s[gr * d..(gr + 1) * d];
+                        for (dv_, &sv) in dst.iter_mut().zip(src) {
+                            *dv_ = w * sv;
+                        }
+                    }
+                }
+            }
+            if !causal {
+                for t in 0..n {
+                    let gr = bb * n + t;
+                    if tape.slot_of[gr * n_c + c] == 0 {
+                        let a = tape.a_sum[gr * n_c + c];
+                        if a != 0.0 {
+                            let src = &dr_s[gr * d..(gr + 1) * d];
+                            for (dv_, &sv) in drc.iter_mut().zip(src) {
+                                *dv_ += a * sv;
+                            }
+                        }
+                    }
+                }
+            }
+        },
+    );
+
+    // step 6a backward: combination weights A_sum -> (A_q-raw, φ),
+    // token-parallel with a per-worker (pre, dpre) row pair
+    zeroed(d_aq_raw, rows * n_c);
+    zeroed(d_phi, rows);
+    parallel::par_zip2_mut_with(
+        d_aq_raw.as_mut_slice(),
+        blk * n_c,
+        d_phi.as_mut_slice(),
+        blk,
+        || vec![0.0f32; 2 * n_c],
+        |scr, ci, daqr, dphi_c| {
+            let (pre, dpre) = scr.split_at_mut(n_c);
+            let r0 = ci * blk;
+            for rr in 0..dphi_c.len() {
+                let gr = r0 + rr;
+                let phi_v = tape.phi[gr];
+                let sp = ops::softplus1(phi_v) / tau;
+                for c in 0..n_c {
+                    pre[c] = tape.a_q_raw[gr * n_c + c] * sp;
+                    dpre[c] = 0.0;
+                }
+                gops::attn_rows_backward(
+                    pre,
+                    &tape.a_sum[gr * n_c..(gr + 1) * n_c],
+                    &d_asum_s[gr * n_c..(gr + 1) * n_c],
+                    n_c,
+                    attn,
+                    dpre,
+                );
+                let sig = ops::sigmoid(phi_v) / tau;
+                let mut dphi_acc = 0.0f32;
+                for c in 0..n_c {
+                    daqr[rr * n_c + c] = dpre[c] * sp;
+                    dphi_acc += dpre[c] * tape.a_q_raw[gr * n_c + c] * sig;
+                }
+                dphi_c[rr] = dphi_acc;
+            }
+        },
+    );
+
+    // step 5 backward over the B×Nc grid: recompute the κ×κ probability
+    // matrix and the summary weight row per (cell, head), writing this
+    // cell's disjoint gradient slabs
+    let cell_stride = 3 * kappa * d + h * kappa + kappa;
+    zeroed(cell, b * n_c * cell_stride);
+    let d_r_intra_s: &[f32] = d_r_intra.as_slice();
+    let d_r_inter_s: &[f32] = d_r_inter.as_slice();
+    parallel::par_chunks_mut_with(
+        cell.as_mut_slice(),
+        cell_stride,
+        || CellScratch {
+            pre: vec![0.0f32; kappa * kappa],
+            p: vec![0.0f32; kappa * kappa],
+            dp: vec![0.0f32; kappa * kappa],
+            ds: vec![0.0f32; kappa * kappa],
+            wpre: vec![0.0f32; kappa],
+            wpost: vec![0.0f32; kappa],
+            dw: vec![0.0f32; kappa],
+            dwpre: vec![0.0f32; kappa],
+        },
+        |scr, cell_i, slab| {
+            let bb = cell_i / n_c;
+            let c = cell_i % n_c;
+            let (dq_c, rest) = slab.split_at_mut(kappa * d);
+            let (dk_c, rest) = rest.split_at_mut(kappa * d);
+            let (dv_c, rest) = rest.split_at_mut(kappa * d);
+            let (dak_c, dphi_c) = rest.split_at_mut(h * kappa);
+            let base = (bb * n_c + c) * kappa;
+            let slots = &tape.idx[base..base + kappa];
+            let val = &tape.valid[base..base + kappa];
+            let mask_ij = |i: usize, j: usize| -> f32 {
+                if causal && slots[j] > slots[i] {
+                    0.0
+                } else {
+                    val[j]
+                }
+            };
+            for hh in 0..h {
+                // recompute masked scores and their normalization
+                for i in 0..kappa {
+                    let qrow = &tape.q[(bb * n + slots[i]) * d + hh * d_h..][..d_h];
+                    for j in 0..kappa {
+                        let krow = &tape.k[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                        scr.pre[i * kappa + j] =
+                            ops::dot(qrow, krow) / tau + (1.0 - mask_ij(i, j)) * NEG_INF;
+                    }
+                }
+                scr.p.copy_from_slice(&scr.pre);
+                ops::attn_rows(&mut scr.p, kappa, attn);
+
+                // intra-cluster attention backward
+                for v_ in scr.dp.iter_mut() {
+                    *v_ = 0.0;
+                }
+                for i in 0..kappa {
+                    if val[i] == 0.0 {
+                        continue;
+                    }
+                    let dri = &d_r_intra_s[(base + i) * d + hh * d_h..][..d_h];
+                    for j in 0..kappa {
+                        let m = mask_ij(i, j);
+                        if m == 0.0 {
+                            continue;
+                        }
+                        let vrow = &tape.v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                        scr.dp[i * kappa + j] = m * ops::dot(dri, vrow);
+                        let pij = scr.p[i * kappa + j] * m;
+                        if pij != 0.0 {
+                            let dst = &mut dv_c[j * d + hh * d_h..][..d_h];
+                            for (dvv, &gv) in dst.iter_mut().zip(dri) {
+                                *dvv += pij * gv;
+                            }
+                        }
+                    }
+                }
+                for v_ in scr.ds.iter_mut() {
+                    *v_ = 0.0;
+                }
+                gops::attn_rows_backward(&scr.pre, &scr.p, &scr.dp, kappa, attn, &mut scr.ds);
+                for i in 0..kappa {
+                    for j in 0..kappa {
+                        let dsv = scr.ds[i * kappa + j];
+                        if dsv == 0.0 {
+                            continue;
+                        }
+                        let qrow = &tape.q[(bb * n + slots[i]) * d + hh * d_h..][..d_h];
+                        let krow = &tape.k[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                        let dqst = &mut dq_c[i * d + hh * d_h..][..d_h];
+                        for (dd, dvv) in dqst.iter_mut().enumerate() {
+                            *dvv += dsv * krow[dd] / tau;
+                        }
+                        let dkst = &mut dk_c[j * d + hh * d_h..][..d_h];
+                        for (dd, dvv) in dkst.iter_mut().enumerate() {
+                            *dvv += dsv * qrow[dd] / tau;
+                        }
+                    }
+                }
+
+                // cluster-summary backward (eq. 4; absent in causal mode)
+                if !causal {
+                    let drc = &d_r_inter_s[(bb * n_c + c) * d + hh * d_h..][..d_h];
+                    for j in 0..kappa {
+                        let t = slots[j];
+                        scr.wpre[j] = tape.a_k[((bb * n + t) * h + hh) * n_c + c]
+                            * ops::softplus1(-tape.phi[bb * n + t])
+                            / tau
+                            + (1.0 - val[j]) * NEG_INF;
+                    }
+                    scr.wpost.copy_from_slice(&scr.wpre);
+                    ops::attn_rows(&mut scr.wpost, kappa, attn);
+                    for j in 0..kappa {
+                        if val[j] == 0.0 {
+                            scr.dw[j] = 0.0;
+                            continue;
+                        }
+                        let vrow = &tape.v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
+                        scr.dw[j] = val[j] * ops::dot(drc, vrow);
+                        let pk = scr.wpost[j] * val[j];
+                        if pk != 0.0 {
+                            let dst = &mut dv_c[j * d + hh * d_h..][..d_h];
+                            for (dvv, &gv) in dst.iter_mut().zip(drc) {
+                                *dvv += pk * gv;
+                            }
+                        }
+                    }
+                    for v_ in scr.dwpre.iter_mut() {
+                        *v_ = 0.0;
+                    }
+                    gops::attn_rows_backward(
+                        &scr.wpre,
+                        &scr.wpost,
+                        &scr.dw,
+                        kappa,
+                        attn,
+                        &mut scr.dwpre,
+                    );
+                    for j in 0..kappa {
+                        let dwp = scr.dwpre[j];
+                        if dwp == 0.0 {
+                            continue;
+                        }
+                        let t = slots[j];
+                        let phi_t = tape.phi[bb * n + t];
+                        let ak = tape.a_k[((bb * n + t) * h + hh) * n_c + c];
+                        dak_c[hh * kappa + j] += dwp * ops::softplus1(-phi_t) / tau;
+                        dphi_c[j] -= dwp * ak * ops::sigmoid(-phi_t) / tau;
+                    }
+                }
+            }
+        },
+    );
+    let cell_s: &[f32] = cell.as_slice();
+
+    // token-parallel gathers via the slot_of reverse map: each token owns
+    // at most one slot per cluster, so every read is unique
+    let d_aq_raw_s: &[f32] = d_aq_raw.as_slice();
+    zeroed(d_ak, rows * h * n_c);
+    parallel::par_zip2_mut(
+        d_ak.as_mut_slice(),
+        blk * h * n_c,
+        d_phi.as_mut_slice(),
+        blk,
+        |ci, dak_chunk, dphi_chunk| {
+            let r0 = ci * blk;
+            for rr in 0..dphi_chunk.len() {
+                let gr = r0 + rr;
+                let bb = gr / n;
+                for c in 0..n_c {
+                    let slot = tape.slot_of[gr * n_c + c];
+                    if slot == 0 {
+                        continue;
+                    }
+                    let off = (bb * n_c + c) * cell_stride;
+                    dphi_chunk[rr] += cell_s[off + 3 * kappa * d + h * kappa + (slot - 1)];
+                    for hh in 0..h {
+                        dak_chunk[(rr * h + hh) * n_c + c] =
+                            cell_s[off + 3 * kappa * d + hh * kappa + (slot - 1)];
+                    }
+                }
+            }
+        },
+    );
+    let d_ak_s: &[f32] = d_ak.as_slice();
+
+    // per-token q/k/v gradients: cell-slab gather + the affinity terms
+    // (d A_q-raw broadcasts over heads; d A_k came from the gather above)
+    zeroed(dq, rows * d);
+    zeroed(dk, rows * d);
+    zeroed(dv, rows * d);
+    let s_w = p.s;
+    parallel::par_chunks_mut(dq.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            let gr = r0 + rr;
+            let bb = gr / n;
+            for c in 0..n_c {
+                let slot = tape.slot_of[gr * n_c + c];
+                if slot > 0 {
+                    let src = (bb * n_c + c) * cell_stride + (slot - 1) * d;
+                    for (dd, dvv) in dst.iter_mut().enumerate() {
+                        *dvv += cell_s[src + dd];
+                    }
+                }
+                let daq = d_aq_raw_s[gr * n_c + c];
+                if daq != 0.0 {
+                    for hh in 0..h {
+                        let srow = &s_w[(c * h + hh) * d_h..][..d_h];
+                        let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
+                        for (dd, dvv) in dsth.iter_mut().enumerate() {
+                            *dvv += daq * srow[dd];
+                        }
+                    }
+                }
+            }
+        }
+    });
+    parallel::par_chunks_mut(dk.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            let gr = r0 + rr;
+            let bb = gr / n;
+            for c in 0..n_c {
+                let slot = tape.slot_of[gr * n_c + c];
+                if slot > 0 {
+                    let src = (bb * n_c + c) * cell_stride + kappa * d + (slot - 1) * d;
+                    for (dd, dvv) in dst.iter_mut().enumerate() {
+                        *dvv += cell_s[src + dd];
+                    }
+                }
+                for hh in 0..h {
+                    let dak = d_ak_s[(gr * h + hh) * n_c + c];
+                    if dak != 0.0 {
+                        let srow = &s_w[(c * h + hh) * d_h..][..d_h];
+                        let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
+                        for (dd, dvv) in dsth.iter_mut().enumerate() {
+                            *dvv += dak * srow[dd];
+                        }
+                    }
+                }
+            }
+        }
+    });
+    parallel::par_chunks_mut(dv.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            let gr = r0 + rr;
+            let bb = gr / n;
+            for c in 0..n_c {
+                let slot = tape.slot_of[gr * n_c + c];
+                if slot > 0 {
+                    let src = (bb * n_c + c) * cell_stride + 2 * kappa * d + (slot - 1) * d;
+                    for (dd, dvv) in dst.iter_mut().enumerate() {
+                        *dvv += cell_s[src + dd];
+                    }
+                }
+            }
+        }
+    });
+
+    // surrogate-token gradients: one task per cluster, fixed token order
+    parallel::par_chunks_mut(g.s, h * d_h, |c, schunk| {
+        for gr in 0..rows {
+            let daq = d_aq_raw_s[gr * n_c + c];
+            for hh in 0..h {
+                let dak = d_ak_s[(gr * h + hh) * n_c + c];
+                if daq == 0.0 && dak == 0.0 {
+                    continue;
+                }
+                let qrow = &tape.q[gr * d + hh * d_h..][..d_h];
+                let krow = &tape.k[gr * d + hh * d_h..][..d_h];
+                let dst = &mut schunk[hh * d_h..(hh + 1) * d_h];
+                for (dd, dvv) in dst.iter_mut().enumerate() {
+                    *dvv += daq * qrow[dd] + dak * krow[dd];
+                }
+            }
+        }
+    });
+
+    // projection backward (eq. 1)
+    gops::dense_grad_params(&tape.x, dq, rows, d, d, g.wq_w, g.wq_b);
+    gops::dense_grad_input_acc(dq, p.wq_w, rows, d, d, dx);
+    gops::dense_grad_params(&tape.x, dk, rows, d, d, g.wk_w, g.wk_b);
+    gops::dense_grad_input_acc(dk, p.wk_w, rows, d, d, dx);
+    gops::dense_grad_params(&tape.x, dv, rows, d, d, g.wv_w, g.wv_b);
+    gops::dense_grad_input_acc(dv, p.wv_w, rows, d, d, dx);
+    gops::dense_grad_params(&tape.x, d_phi, rows, d, 1, g.phi_w, g.phi_b);
+    gops::dense_grad_input_acc(d_phi, p.phi_w, rows, d, 1, dx);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// baselines
+// ---------------------------------------------------------------------------
+
+/// Mutable views of a baseline layer's parameter-gradient buffers.
+pub struct BaselineGradRefs<'a> {
+    pub wq_w: &'a mut [f32],
+    pub wq_b: &'a mut [f32],
+    pub wk_w: &'a mut [f32],
+    pub wk_b: &'a mut [f32],
+    pub wv_w: &'a mut [f32],
+    pub wv_b: &'a mut [f32],
+    pub wo_w: &'a mut [f32],
+    pub wo_b: &'a mut [f32],
+}
+
+/// Reusable backward buffers for the baseline layers.
+#[derive(Default)]
+pub struct BaselineBwdScratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    dr: Vec<f32>,
+    /// Per-row fused `dq | dk | dv` slab (rows, 3d) — one window region
+    /// per task owns a disjoint row range of all three.
+    dqkv: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+/// Per-worker scratch for one window-attention backward task.
+struct WindowScratch {
+    pre: Vec<f32>,
+    p: Vec<f32>,
+    dp: Vec<f32>,
+    ds: Vec<f32>,
+}
+
+/// Reverse pass of the vanilla (`window = None`) and local (`Some(w)`)
+/// baselines.  Projections and attention probabilities are recomputed
+/// from the stored layer input `x`; the parallel grain is one attention
+/// window (the whole sequence for vanilla), whose q/k/v rows are
+/// touched by no other window.
+pub fn window_backward(
+    p: &BaselineParams,
+    x: &[f32],
+    dims: &Dims,
+    window: Option<usize>,
+    d_out: &[f32],
+    dx: &mut [f32],
+    g: &mut BaselineGradRefs,
+    ws: &mut BaselineBwdScratch,
+) -> Result<()> {
+    let (b, n, h, d_h) = (dims.b, dims.n, dims.heads, dims.d_h);
+    let d = dims.d();
+    let rows = b * n;
+    let w = window.unwrap_or(n);
+    ensure!(w > 0 && n % w == 0, "window {w} must divide seq_len {n}");
+    ensure!(d_out.len() == rows * d && dx.len() == rows * d, "window backward shape");
+    let tau = (d_h as f32).sqrt();
+    let attn = dims.attn;
+
+    let BaselineBwdScratch { q, k, v, attn_out, dr, dqkv, dq, dk, dv } = ws;
+
+    // recompute projections + the pre-projection attention output
+    ops::dense_into(x, p.wq_w, p.wq_b, rows, d, d, q);
+    ops::dense_into(x, p.wk_w, p.wk_b, rows, d, d, k);
+    ops::dense_into(x, p.wv_w, p.wv_b, rows, d, d, v);
+    zeroed(attn_out, rows * d);
+    attend_windows(attn_out.as_mut_slice(), q, k, v, b, n, h, d_h, window, attn);
+
+    zeroed(dr, rows * d);
+    gops::dense_grad_input_acc(d_out, p.wo_w, rows, d, d, dr);
+    gops::dense_grad_params(attn_out, d_out, rows, d, d, g.wo_w, g.wo_b);
+    let dr_s: &[f32] = dr.as_slice();
+    let q_s: &[f32] = q.as_slice();
+    let k_s: &[f32] = k.as_slice();
+    let v_s: &[f32] = v.as_slice();
+
+    // per-window backward into the fused dq|dk|dv row slab
+    zeroed(dqkv, rows * 3 * d);
+    parallel::par_chunks_mut_with(
+        dqkv.as_mut_slice(),
+        w * 3 * d,
+        || WindowScratch {
+            pre: vec![0.0f32; w],
+            p: vec![0.0f32; w],
+            dp: vec![0.0f32; w],
+            ds: vec![0.0f32; w],
+        },
+        |scr, wi, slab| {
+            let r0 = wi * w; // global first row of this window
+            for i in 0..w {
+                let gi = r0 + i;
+                for hh in 0..h {
+                    let qrow = &q_s[gi * d + hh * d_h..][..d_h];
+                    for j in 0..w {
+                        let krow = &k_s[(r0 + j) * d + hh * d_h..][..d_h];
+                        scr.pre[j] = ops::dot(qrow, krow) / tau;
+                    }
+                    scr.p.copy_from_slice(&scr.pre);
+                    ops::attn_rows(&mut scr.p, w, attn);
+                    let dro = &dr_s[gi * d + hh * d_h..][..d_h];
+                    for j in 0..w {
+                        let vrow = &v_s[(r0 + j) * d + hh * d_h..][..d_h];
+                        scr.dp[j] = ops::dot(dro, vrow);
+                        let pj = scr.p[j];
+                        if pj != 0.0 {
+                            let dst = &mut slab[j * 3 * d + 2 * d + hh * d_h..][..d_h];
+                            for (dvv, &gv) in dst.iter_mut().zip(dro) {
+                                *dvv += pj * gv;
+                            }
+                        }
+                    }
+                    for v_ in scr.ds.iter_mut() {
+                        *v_ = 0.0;
+                    }
+                    gops::attn_rows_backward(&scr.pre, &scr.p, &scr.dp, w, attn, &mut scr.ds);
+                    for j in 0..w {
+                        let dsv = scr.ds[j];
+                        if dsv == 0.0 {
+                            continue;
+                        }
+                        let krow = &k_s[(r0 + j) * d + hh * d_h..][..d_h];
+                        let dqst = &mut slab[i * 3 * d + hh * d_h..][..d_h];
+                        for (dd, dvv) in dqst.iter_mut().enumerate() {
+                            *dvv += dsv * krow[dd] / tau;
+                        }
+                        let dkst = &mut slab[j * 3 * d + d + hh * d_h..][..d_h];
+                        for (dd, dvv) in dkst.iter_mut().enumerate() {
+                            *dvv += dsv * qrow[dd] / tau;
+                        }
+                    }
+                }
+            }
+        },
+    );
+
+    // unpack the slab and run the projection backward
+    let dqkv_s: &[f32] = dqkv.as_slice();
+    let blk = parallel::row_block(rows);
+    zeroed(dq, rows * d);
+    zeroed(dk, rows * d);
+    zeroed(dv, rows * d);
+    parallel::par_chunks_mut(dq.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            dst.copy_from_slice(&dqkv_s[(r0 + rr) * 3 * d..][..d]);
+        }
+    });
+    parallel::par_chunks_mut(dk.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            dst.copy_from_slice(&dqkv_s[(r0 + rr) * 3 * d + d..][..d]);
+        }
+    });
+    parallel::par_chunks_mut(dv.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            dst.copy_from_slice(&dqkv_s[(r0 + rr) * 3 * d + 2 * d..][..d]);
+        }
+    });
+    gops::dense_grad_params(x, dq, rows, d, d, g.wq_w, g.wq_b);
+    gops::dense_grad_input_acc(dq, p.wq_w, rows, d, d, dx);
+    gops::dense_grad_params(x, dk, rows, d, d, g.wk_w, g.wk_b);
+    gops::dense_grad_input_acc(dk, p.wk_w, rows, d, d, dx);
+    gops::dense_grad_params(x, dv, rows, d, d, g.wv_w, g.wv_b);
+    gops::dense_grad_input_acc(dv, p.wv_w, rows, d, d, dx);
+    Ok(())
+}
+
+/// Forward intermediates of one LSH baseline layer: the tied Q/K and V
+/// projections plus the (non-differentiable, straight-through) bucket
+/// sort order.  The chunked attention probabilities are recomputed.
+pub struct LshTape {
+    pub x: Vec<f32>,
+    qk: Vec<f32>,
+    v: Vec<f32>,
+    order: Vec<usize>,
+    attn_out: Vec<f32>,
+}
+
+impl LshTape {
+    /// Fingerprint of the bucket-sort order (for gradient checks).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &i in &self.order {
+            h = fnv_fold(h, i as u64);
+        }
+        h
+    }
+}
+
+/// Forward of the LSH baseline with tape capture — same pieces as
+/// `layer::lsh_layer`, so outputs match it exactly.
+pub fn lsh_forward_tape(
+    p: &BaselineParams,
+    x: &[f32],
+    dims: &Dims,
+) -> Result<(Vec<f32>, LshTape)> {
+    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let rows = b * n;
+    let kappa = dims.kappa.min(n).max(1);
+    let qk = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let order = lsh_sort_order(&qk, b, n, d, n_c);
+    let attn_out = lsh_attend(&qk, &v, &order, b, n, h, d_h, kappa, dims.attn);
+    let out = ops::dense(&attn_out, p.wo_w, p.wo_b, rows, d, d);
+    Ok((out, LshTape { x: x.to_vec(), qk, v, order, attn_out }))
+}
+
+/// Per-worker scratch for one batch of the LSH backward.
+struct LshBwdWorker {
+    qk_s: Vec<f32>,
+    v_s: Vec<f32>,
+    dro_s: Vec<f32>,
+    dqk_s: Vec<f32>,
+    dv_s: Vec<f32>,
+    pre: Vec<f32>,
+    p: Vec<f32>,
+    dp: Vec<f32>,
+    ds: Vec<f32>,
+}
+
+/// Reverse pass of the LSH baseline with the bucket assignment held
+/// constant.  The tied Q/K projection accumulates both roles' gradients
+/// into `wq`; `wk` is unused by this layer and receives none.
+pub fn lsh_backward(
+    p: &BaselineParams,
+    tape: &LshTape,
+    dims: &Dims,
+    d_out: &[f32],
+    dx: &mut [f32],
+    g: &mut BaselineGradRefs,
+    ws: &mut BaselineBwdScratch,
+) -> Result<()> {
+    let (b, n, h, d_h) = (dims.b, dims.n, dims.heads, dims.d_h);
+    let d = dims.d();
+    let rows = b * n;
+    let kappa = dims.kappa.min(n).max(1);
+    ensure!(d_out.len() == rows * d && dx.len() == rows * d, "lsh backward shape");
+    let m = n.div_ceil(kappa) * kappa;
+    let tau = (d_h as f32).sqrt();
+    let attn = dims.attn;
+
+    let BaselineBwdScratch { dr, dq, dv, .. } = ws;
+
+    zeroed(dr, rows * d);
+    gops::dense_grad_input_acc(d_out, p.wo_w, rows, d, d, dr);
+    gops::dense_grad_params(&tape.attn_out, d_out, rows, d, d, g.wo_w, g.wo_b);
+    let dr_s: &[f32] = dr.as_slice();
+
+    // per-batch chunked-attention backward into sorted copies, then
+    // un-sorted into the per-token dqk (reusing the dq buffer) and dv
+    zeroed(dq, rows * d);
+    zeroed(dv, rows * d);
+    parallel::par_zip2_mut_with(
+        dq.as_mut_slice(),
+        n * d,
+        dv.as_mut_slice(),
+        n * d,
+        || LshBwdWorker {
+            qk_s: vec![0.0f32; m * d],
+            v_s: vec![0.0f32; m * d],
+            dro_s: vec![0.0f32; m * d],
+            dqk_s: vec![0.0f32; m * d],
+            dv_s: vec![0.0f32; m * d],
+            pre: vec![0.0f32; kappa],
+            p: vec![0.0f32; kappa],
+            dp: vec![0.0f32; kappa],
+            ds: vec![0.0f32; kappa],
+        },
+        |scr, bb, dqk_b, dv_b| {
+            let ord = &tape.order[bb * n..(bb + 1) * n];
+            scr.qk_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.v_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.dro_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.dqk_s.iter_mut().for_each(|z| *z = 0.0);
+            scr.dv_s.iter_mut().for_each(|z| *z = 0.0);
+            for (pos, &t) in ord.iter().enumerate() {
+                scr.qk_s[pos * d..(pos + 1) * d]
+                    .copy_from_slice(&tape.qk[(bb * n + t) * d..][..d]);
+                scr.v_s[pos * d..(pos + 1) * d]
+                    .copy_from_slice(&tape.v[(bb * n + t) * d..][..d]);
+                scr.dro_s[pos * d..(pos + 1) * d]
+                    .copy_from_slice(&dr_s[(bb * n + t) * d..][..d]);
+            }
+            for chunk in 0..m / kappa {
+                let lo = chunk * kappa;
+                for i in lo..(lo + kappa).min(n) {
+                    for hh in 0..h {
+                        let qrow = &scr.qk_s[i * d + hh * d_h..][..d_h];
+                        for jj in 0..kappa {
+                            scr.pre[jj] = if lo + jj >= n {
+                                NEG_INF
+                            } else {
+                                let krow = &scr.qk_s[(lo + jj) * d + hh * d_h..][..d_h];
+                                ops::dot(qrow, krow) / tau
+                            };
+                        }
+                        scr.p.copy_from_slice(&scr.pre);
+                        ops::attn_rows(&mut scr.p, kappa, attn);
+                        let dro0 = i * d + hh * d_h;
+                        for jj in 0..kappa {
+                            let vrow = &scr.v_s[(lo + jj) * d + hh * d_h..][..d_h];
+                            scr.dp[jj] =
+                                ops::dot(&scr.dro_s[dro0..dro0 + d_h], vrow);
+                            let pj = scr.p[jj];
+                            if pj != 0.0 {
+                                for dd in 0..d_h {
+                                    scr.dv_s[(lo + jj) * d + hh * d_h + dd] +=
+                                        pj * scr.dro_s[dro0 + dd];
+                                }
+                            }
+                        }
+                        for v_ in scr.ds.iter_mut() {
+                            *v_ = 0.0;
+                        }
+                        gops::attn_rows_backward(
+                            &scr.pre,
+                            &scr.p,
+                            &scr.dp,
+                            kappa,
+                            attn,
+                            &mut scr.ds,
+                        );
+                        for jj in 0..kappa {
+                            let dsv = scr.ds[jj];
+                            if dsv == 0.0 {
+                                continue;
+                            }
+                            // tied Q/K: both roles' gradients land in qk
+                            for dd in 0..d_h {
+                                scr.dqk_s[i * d + hh * d_h + dd] +=
+                                    dsv * scr.qk_s[(lo + jj) * d + hh * d_h + dd] / tau;
+                            }
+                            for dd in 0..d_h {
+                                scr.dqk_s[(lo + jj) * d + hh * d_h + dd] +=
+                                    dsv * scr.qk_s[i * d + hh * d_h + dd] / tau;
+                            }
+                        }
+                    }
+                }
+            }
+            for (pos, &t) in ord.iter().enumerate() {
+                dqk_b[t * d..][..d].copy_from_slice(&scr.dqk_s[pos * d..][..d]);
+                dv_b[t * d..][..d].copy_from_slice(&scr.dv_s[pos * d..][..d]);
+            }
+        },
+    );
+
+    gops::dense_grad_params(&tape.x, dq, rows, d, d, g.wq_w, g.wq_b);
+    gops::dense_grad_input_acc(dq, p.wq_w, rows, d, d, dx);
+    gops::dense_grad_params(&tape.x, dv, rows, d, d, g.wv_w, g.wv_b);
+    gops::dense_grad_input_acc(dv, p.wv_w, rows, d, d, dx);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::layer::{cast_layer, local_layer, vanilla_layer};
+    use super::super::super::ops::AttnFn;
+    use super::*;
+    use crate::util::prop::{assert_grads_close, GradCheckCfg};
+    use crate::util::rng::Rng;
+
+    /// Layer-level checks use a larger step than the primitive ops: the
+    /// loss sums ~64 outputs, so the f32 evaluation noise divided by 2ε
+    /// needs ε ≈ 1e-2 to stay under the absolute tolerance.  Cluster
+    /// flips induced by the larger step are caught by the fingerprint.
+    fn layer_cfg() -> GradCheckCfg {
+        GradCheckCfg { eps: 1e-2, rel_tol: 1e-2, abs_tol: 1e-3, max_per_block: 8 }
+    }
+
+    fn dims(clustering: &str, attn: AttnFn) -> Dims {
+        Dims {
+            b: 1,
+            n: 8,
+            heads: 2,
+            d_h: 4,
+            n_c: 2,
+            kappa: 4,
+            attn,
+            clustering: clustering.to_string(),
+            causal: clustering == "causal",
+            window: 4,
+        }
+    }
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    fn split<'a>(t: &'a [f32], lens: &[usize]) -> Vec<&'a [f32]> {
+        let mut out = Vec::with_capacity(lens.len());
+        let mut off = 0usize;
+        for &l in lens {
+            out.push(&t[off..off + l]);
+            off += l;
+        }
+        out
+    }
+
+    fn cast_lens(dm: &Dims) -> Vec<(String, usize)> {
+        let d = dm.d();
+        vec![
+            ("wq.w".into(), d * d),
+            ("wq.b".into(), d),
+            ("wk.w".into(), d * d),
+            ("wk.b".into(), d),
+            ("wv.w".into(), d * d),
+            ("wv.b".into(), d),
+            ("wo.w".into(), d * d),
+            ("wo.b".into(), d),
+            ("s".into(), dm.n_c * dm.heads * dm.d_h),
+            ("phi.w".into(), d),
+            ("phi.b".into(), 1),
+        ]
+    }
+
+    fn cast_params_of<'a>(parts: &[&'a [f32]]) -> CastParams<'a> {
+        CastParams {
+            wq_w: parts[0],
+            wq_b: parts[1],
+            wk_w: parts[2],
+            wk_b: parts[3],
+            wv_w: parts[4],
+            wv_b: parts[5],
+            wo_w: parts[6],
+            wo_b: parts[7],
+            s: parts[8],
+            phi_w: parts[9],
+            phi_b: parts[10],
+        }
+    }
+
+    fn random_theta(rng: &mut Rng, lens: &[(String, usize)], d: usize) -> Vec<f32> {
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut theta = Vec::new();
+        for (name, len) in lens {
+            let s = if name.ends_with(".b") { 0.1 } else { scale };
+            theta.extend(randn(rng, *len, s));
+        }
+        theta
+    }
+
+    fn scratch_fingerprint(ws: &CastScratch) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &i in &ws.idx {
+            h = fnv_fold(h, i as u64);
+        }
+        for &v in &ws.valid {
+            h = fnv_fold(h, (v > 0.0) as u64);
+        }
+        h
+    }
+
+    /// Analytic parameter gradients + input gradient of one cast layer
+    /// under the linear loss `<c, out>`.
+    fn cast_analytic(
+        theta: &[f32],
+        lens: &[(String, usize)],
+        x: &[f32],
+        c: &[f32],
+        dm: &Dims,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let lens_only: Vec<usize> = lens.iter().map(|(_, l)| *l).collect();
+        let parts = split(theta, &lens_only);
+        let p = cast_params_of(&parts);
+        let mut ws = CastScratch::new();
+        cast_layer(&p, x, dm, &mut ws).unwrap();
+        let tape = CastTape::capture(x, &ws);
+        let mut gbufs: Vec<Vec<f32>> = lens_only.iter().map(|&l| vec![0.0; l]).collect();
+        let mut dx = vec![0.0f32; x.len()];
+        let [wq_w, wq_b, wk_w, wk_b, wv_w, wv_b, wo_w, wo_b, s, phi_w, phi_b] =
+            &mut gbufs[..]
+        else {
+            unreachable!()
+        };
+        let mut g = CastGradRefs {
+            wq_w: wq_w.as_mut_slice(),
+            wq_b: wq_b.as_mut_slice(),
+            wk_w: wk_w.as_mut_slice(),
+            wk_b: wk_b.as_mut_slice(),
+            wv_w: wv_w.as_mut_slice(),
+            wv_b: wv_b.as_mut_slice(),
+            wo_w: wo_w.as_mut_slice(),
+            wo_b: wo_b.as_mut_slice(),
+            s: s.as_mut_slice(),
+            phi_w: phi_w.as_mut_slice(),
+            phi_b: phi_b.as_mut_slice(),
+        };
+        cast_layer_backward(&p, &tape, dm, c, &mut dx, &mut g, &mut CastBwdScratch::default())
+            .unwrap();
+        (gbufs.concat(), dx)
+    }
+
+    fn check_cast_layer(clustering: &str, attn: AttnFn, seed: u64) {
+        let dm = dims(clustering, attn);
+        let d = dm.d();
+        let rows = dm.b * dm.n;
+        let mut rng = Rng::new(seed);
+        let lens = cast_lens(&dm);
+        let theta = random_theta(&mut rng, &lens, d);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 0.5);
+        let (analytic, _) = cast_analytic(&theta, &lens, &x, &c, &dm);
+        let lens_only: Vec<usize> = lens.iter().map(|(_, l)| *l).collect();
+        assert_grads_close(&layer_cfg(), &theta, &lens, &analytic, |t| {
+            let parts = split(t, &lens_only);
+            let p = cast_params_of(&parts);
+            let mut ws = CastScratch::new();
+            let (out, _) = cast_layer(&p, &x, &dm, &mut ws).unwrap();
+            (ops::dot(&c, &out), scratch_fingerprint(&ws))
+        });
+    }
+
+    #[test]
+    fn cast_topk_softmax_parameter_gradients() {
+        check_cast_layer("topk", AttnFn::Softmax, 101);
+    }
+
+    #[test]
+    fn cast_topk_laplace_parameter_gradients() {
+        check_cast_layer("topk", AttnFn::Laplace, 102);
+    }
+
+    #[test]
+    fn cast_sa_softmax_parameter_gradients() {
+        check_cast_layer("sa", AttnFn::Softmax, 103);
+    }
+
+    #[test]
+    fn cast_causal_softmax_parameter_gradients() {
+        check_cast_layer("causal", AttnFn::Softmax, 104);
+    }
+
+    #[test]
+    fn cast_input_gradient_through_combination_scatter() {
+        // perturbing x moves every path at once — the combination
+        // scatter (member R_intra rows + non-member R_inter summaries)
+        // must agree with the numeric derivative
+        let dm = dims("topk", AttnFn::Softmax);
+        let d = dm.d();
+        let rows = dm.b * dm.n;
+        let mut rng = Rng::new(77);
+        let lens = cast_lens(&dm);
+        let theta = random_theta(&mut rng, &lens, d);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 0.5);
+        let (_, dx) = cast_analytic(&theta, &lens, &x, &c, &dm);
+        let lens_only: Vec<usize> = lens.iter().map(|(_, l)| *l).collect();
+        let blocks = vec![("x".to_string(), rows * d)];
+        assert_grads_close(&layer_cfg(), &x, &blocks, &dx, |xt| {
+            let parts = split(&theta, &lens_only);
+            let p = cast_params_of(&parts);
+            let mut ws = CastScratch::new();
+            let (out, _) = cast_layer(&p, xt, &dm, &mut ws).unwrap();
+            (ops::dot(&c, &out), scratch_fingerprint(&ws))
+        });
+    }
+
+    fn baseline_lens(d: usize) -> Vec<(String, usize)> {
+        vec![
+            ("wq.w".into(), d * d),
+            ("wq.b".into(), d),
+            ("wk.w".into(), d * d),
+            ("wk.b".into(), d),
+            ("wv.w".into(), d * d),
+            ("wv.b".into(), d),
+            ("wo.w".into(), d * d),
+            ("wo.b".into(), d),
+        ]
+    }
+
+    fn baseline_params_of<'a>(parts: &[&'a [f32]]) -> BaselineParams<'a> {
+        BaselineParams {
+            wq_w: parts[0],
+            wq_b: parts[1],
+            wk_w: parts[2],
+            wk_b: parts[3],
+            wv_w: parts[4],
+            wv_b: parts[5],
+            wo_w: parts[6],
+            wo_b: parts[7],
+        }
+    }
+
+    fn baseline_analytic(
+        theta: &[f32],
+        lens_only: &[usize],
+        x: &[f32],
+        c: &[f32],
+        dm: &Dims,
+        which: &str,
+    ) -> Vec<f32> {
+        let parts = split(theta, lens_only);
+        let p = baseline_params_of(&parts);
+        let mut gbufs: Vec<Vec<f32>> = lens_only.iter().map(|&l| vec![0.0; l]).collect();
+        let mut dx = vec![0.0f32; x.len()];
+        let [wq_w, wq_b, wk_w, wk_b, wv_w, wv_b, wo_w, wo_b] = &mut gbufs[..] else {
+            unreachable!()
+        };
+        let mut g = BaselineGradRefs {
+            wq_w: wq_w.as_mut_slice(),
+            wq_b: wq_b.as_mut_slice(),
+            wk_w: wk_w.as_mut_slice(),
+            wk_b: wk_b.as_mut_slice(),
+            wv_w: wv_w.as_mut_slice(),
+            wv_b: wv_b.as_mut_slice(),
+            wo_w: wo_w.as_mut_slice(),
+            wo_b: wo_b.as_mut_slice(),
+        };
+        let mut ws = BaselineBwdScratch::default();
+        match which {
+            "vanilla" => window_backward(&p, x, dm, None, c, &mut dx, &mut g, &mut ws).unwrap(),
+            "local" => {
+                window_backward(&p, x, dm, Some(dm.window), c, &mut dx, &mut g, &mut ws).unwrap()
+            }
+            _ => {
+                let (_, tape) = lsh_forward_tape(&p, x, dm).unwrap();
+                lsh_backward(&p, &tape, dm, c, &mut dx, &mut g, &mut ws).unwrap()
+            }
+        }
+        gbufs.concat()
+    }
+
+    #[test]
+    fn baseline_parameter_gradients_match_central_difference() {
+        for (which, attn) in
+            [("vanilla", AttnFn::Softmax), ("local", AttnFn::Laplace), ("lsh", AttnFn::Softmax)]
+        {
+            let dm = dims("topk", attn);
+            let d = dm.d();
+            let rows = dm.b * dm.n;
+            let mut rng = Rng::new(301);
+            let lens = baseline_lens(d);
+            let lens_only: Vec<usize> = lens.iter().map(|(_, l)| *l).collect();
+            let theta = random_theta(&mut rng, &lens, d);
+            let x = randn(&mut rng, rows * d, 1.0);
+            let c = randn(&mut rng, rows * d, 0.5);
+            let analytic = baseline_analytic(&theta, &lens_only, &x, &c, &dm, which);
+            assert_grads_close(&layer_cfg(), &theta, &lens, &analytic, |t| {
+                let parts = split(t, &lens_only);
+                let p = baseline_params_of(&parts);
+                match which {
+                    "vanilla" => (ops::dot(&c, &vanilla_layer(&p, &x, &dm).unwrap()), 0),
+                    "local" => (ops::dot(&c, &local_layer(&p, &x, &dm).unwrap()), 0),
+                    _ => {
+                        let (out, tape) = lsh_forward_tape(&p, &x, &dm).unwrap();
+                        (ops::dot(&c, &out), tape.fingerprint())
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn lsh_tape_forward_matches_layer_forward() {
+        let dm = dims("topk", AttnFn::Softmax);
+        let d = dm.d();
+        let mut rng = Rng::new(9);
+        let lens = baseline_lens(d);
+        let lens_only: Vec<usize> = lens.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &lens, d);
+        let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+        let parts = split(&theta, &lens_only);
+        let p = baseline_params_of(&parts);
+        let direct = super::super::super::layer::lsh_layer(&p, &x, &dm).unwrap();
+        let (taped, _) = lsh_forward_tape(&p, &x, &dm).unwrap();
+        assert_eq!(direct, taped, "tape forward must be bit-identical to the layer");
+    }
+}

@@ -1,0 +1,32 @@
+//! Native autograd: exact reverse-mode differentiation through the whole
+//! CAST stack — embedding + positional lookup, every attention variant
+//! (CAST Top-K / SA / causal, vanilla, local, LSH), both attention
+//! weight functions (softmax, laplace), layer/scale norms, GELU FFNs,
+//! residuals, mean-pooling, and the classifier head (single and dual).
+//!
+//! Three layers (DESIGN.md §Autograd):
+//!
+//! * [`ops`] — backward primitives (dense input/parameter grads, the
+//!   attention-row normalizations, the norms), all accumulate-convention
+//!   and threaded like their forwards.
+//! * [`layer`] — per-layer tapes and reverse passes.  The forward
+//!   scratch ([`super::layer::CastScratch`]) doubles as the tape source;
+//!   probability matrices are recomputed, hard cluster assignments are
+//!   straight-through constants.
+//! * [`model`] — the whole-model taped forward + backward behind
+//!   [`loss_and_grads`], which `run_train_step` drives for the default
+//!   full-parameter training scope.
+//!
+//! Determinism: every backward pass shards over disjoint output chunks
+//! (row blocks, the B×Nc cluster grid, per-window / per-batch regions)
+//! with fixed reduction orders, so gradients are bit-identical for any
+//! `CAST_NUM_THREADS` — asserted by `tests/integration_parallel.rs`.
+//! Gradients are validated against central differences via
+//! `util::prop::grad_check` (tolerance-aware, per-parameter-block,
+//! fingerprint-guarded against cluster-assignment flips).
+
+pub mod layer;
+pub mod model;
+pub mod ops;
+
+pub use model::{loss_and_grads, GradScratch, LossAndGrads};

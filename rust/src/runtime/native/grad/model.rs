@@ -1,0 +1,1114 @@
+//! Whole-model reverse pass: a taped forward through the native encoder
+//! (embedding + positions → proj → blocks → pool → head, including the
+//! dual-tower retrieval head) followed by exact backpropagation into
+//! every parameter, in manifest order.
+//!
+//! The taped forward calls the *same* layer code the `predict` path
+//! uses (`layer::cast_layer`, the baselines, `model::apply_norm`), so
+//! training and inference can never drift; the tape captures layer
+//! inputs, norm inputs, FFN pre-activations, and the attention
+//! intermediates described in `grad::layer`.  [`loss_and_grads`] is the
+//! single entry `run_train_step` (and the tests) drive.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::artifacts::{Manifest, ModelMeta};
+use crate::runtime::tensor::HostTensor;
+use crate::util::parallel;
+
+use super::super::layer as flayer;
+use super::super::layer::{CastScratch, Dims};
+use super::super::model::{apply_norm, dims_for, head_forward, softmax_xent, Params, NORM_EPS};
+use super::super::ops;
+use super::layer as glayer;
+use super::layer::fnv_fold;
+use super::ops as gops;
+
+/// Clear + zero-fill a reusable buffer (keeps its allocation).
+fn zeroed(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Reusable backward buffers — the reverse analogue of the forward
+/// `Workspace`: one instance serves every layer of every backward call.
+#[derive(Default)]
+pub struct GradScratch {
+    cast_fwd: CastScratch,
+    cast_bwd: glayer::CastBwdScratch,
+    base_bwd: glayer::BaselineBwdScratch,
+    /// Running activation gradient (B·N, d).
+    dx: Vec<f32>,
+    /// Norm-input gradient staging buffer (swapped with `dx`).
+    dnorm: Vec<f32>,
+    /// Copy of `dx` handed to a residual branch as its output gradient.
+    dbranch: Vec<f32>,
+    /// FFN input gradient (B·N, d).
+    dffn_in: Vec<f32>,
+    /// FFN hidden gradient (B·N, d_ff).
+    dhid: Vec<f32>,
+    /// Recomputed FFN activations gelu(hid_pre) (B·N, d_ff).
+    act: Vec<f32>,
+    /// Embedding-space gradient (B·N, d_emb).
+    dx0: Vec<f32>,
+}
+
+impl GradScratch {
+    pub fn new() -> GradScratch {
+        GradScratch::default()
+    }
+}
+
+/// The result of one forward+backward pass.
+pub struct LossAndGrads {
+    pub loss: f32,
+    pub acc: f32,
+    /// Per-parameter gradients, aligned with `manifest.params`.
+    pub grads: Vec<Vec<f32>>,
+    /// FNV fingerprint of every discrete forward choice (cluster
+    /// assignments, LSH sort orders).  Gradient checks skip coordinates
+    /// whose perturbation flips it — the loss is not differentiable
+    /// across those boundaries (straight-through estimator).
+    pub fingerprint: u64,
+}
+
+// ---------------------------------------------------------------------------
+// gradient store
+// ---------------------------------------------------------------------------
+
+/// Zeroed gradient buffers in manifest order, addressable by name.
+struct GradStore {
+    bufs: Vec<Vec<f32>>,
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl GradStore {
+    fn new(manifest: &Manifest) -> GradStore {
+        let mut bufs = Vec::with_capacity(manifest.params.len());
+        let mut names = Vec::with_capacity(manifest.params.len());
+        let mut index = HashMap::with_capacity(manifest.params.len());
+        for (i, spec) in manifest.params.iter().enumerate() {
+            bufs.push(vec![0.0f32; spec.shape.iter().product()]);
+            names.push(spec.name.clone());
+            index.insert(spec.name.clone(), i);
+        }
+        GradStore { bufs, names, index }
+    }
+
+    fn idx(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .with_context(|| format!("gradient buffer {name:?} missing from manifest"))
+    }
+
+    fn one(&mut self, name: &str) -> Result<&mut Vec<f32>> {
+        let i = self.idx(name)?;
+        Ok(&mut self.bufs[i])
+    }
+
+    /// Mutable views of a run of manifest-consecutive parameters —
+    /// verifies each requested name actually sits at `base + k` so the
+    /// layout assumption can never silently drift from `spec.rs`.
+    fn consecutive(&mut self, names: &[String]) -> Result<&mut [Vec<f32>]> {
+        let base = self.idx(&names[0])?;
+        for (k, name) in names.iter().enumerate() {
+            ensure!(
+                base + k < self.names.len() && self.names[base + k] == *name,
+                "parameter {name:?} is not at manifest position {} (layout drift?)",
+                base + k
+            );
+        }
+        Ok(&mut self.bufs[base..base + names.len()])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// taped forward
+// ---------------------------------------------------------------------------
+
+enum AttnTape {
+    Cast(glayer::CastTape),
+    /// Vanilla/local: only the layer input is stored (projections and
+    /// probabilities are recomputed).
+    Window(Vec<f32>),
+    Lsh(glayer::LshTape),
+}
+
+struct BlockTape {
+    attn: AttnTape,
+    /// Input of norm1 (postnorm: x + a; prenorm: the block input).
+    norm1_in: Vec<f32>,
+    /// Input of the FFN (postnorm: norm1 output; prenorm: norm2 output).
+    ffn_in: Vec<f32>,
+    /// FFN hidden pre-activations (B·N, d_ff).
+    hid_pre: Vec<f32>,
+    /// Input of norm2 (postnorm: y1 + f; prenorm: x after attn residual).
+    norm2_in: Vec<f32>,
+}
+
+struct EncodeTape {
+    /// Embedding + positional sum (B·N, d_emb) — the proj input.
+    x0: Vec<f32>,
+    blocks: Vec<BlockTape>,
+    out_norm_in: Option<Vec<f32>>,
+    /// Mean-pooled features (B, d).
+    pooled: Vec<f32>,
+    fingerprint: u64,
+}
+
+fn embed_tokens(p: &Params, meta: &ModelMeta, tokens: &[i32], b: usize) -> Result<Vec<f32>> {
+    let n = meta.seq_len;
+    ensure!(tokens.len() == b * n, "tokens length {} != {}x{}", tokens.len(), b, n);
+    let d_emb = meta.d_emb;
+    let rows = b * n;
+    let emb = p.f("embed.emb")?;
+    let pe = ops::sinusoidal_positions(n, d_emb);
+    let mut x = vec![0.0f32; rows * d_emb];
+    let vocab_max = meta.vocab.saturating_sub(1);
+    let rblk = parallel::row_block(rows);
+    parallel::par_chunks_mut(x.as_mut_slice(), rblk * d_emb, |ci, chunk| {
+        let r0 = ci * rblk;
+        for (rr, dst) in chunk.chunks_mut(d_emb).enumerate() {
+            let gr = r0 + rr;
+            let nn = gr % n;
+            let tok = (tokens[gr].max(0) as usize).min(vocab_max);
+            let erow = &emb[tok * d_emb..(tok + 1) * d_emb];
+            let prow = &pe[nn * d_emb..(nn + 1) * d_emb];
+            for (j, dv) in dst.iter_mut().enumerate() {
+                *dv = erow[j] + prow[j];
+            }
+        }
+    });
+    Ok(x)
+}
+
+fn attn_forward_tape(
+    p: &Params,
+    meta: &ModelMeta,
+    prefix: &str,
+    x: &[f32],
+    dims: &Dims,
+    cast_fwd: &mut CastScratch,
+) -> Result<(Vec<f32>, AttnTape)> {
+    if meta.is_cast() {
+        let cp = flayer::CastParams {
+            wq_w: p.f(&format!("{prefix}.wq.w"))?,
+            wq_b: p.f(&format!("{prefix}.wq.b"))?,
+            wk_w: p.f(&format!("{prefix}.wk.w"))?,
+            wk_b: p.f(&format!("{prefix}.wk.b"))?,
+            wv_w: p.f(&format!("{prefix}.wv.w"))?,
+            wv_b: p.f(&format!("{prefix}.wv.b"))?,
+            wo_w: p.f(&format!("{prefix}.wo.w"))?,
+            wo_b: p.f(&format!("{prefix}.wo.b"))?,
+            s: p.f(&format!("{prefix}.s"))?,
+            phi_w: p.f(&format!("{prefix}.phi.w"))?,
+            phi_b: p.f(&format!("{prefix}.phi.b"))?,
+        };
+        let (out, _ag) = flayer::cast_layer(&cp, x, dims, cast_fwd)?;
+        let tape = glayer::CastTape::capture(x, cast_fwd);
+        return Ok((out, AttnTape::Cast(tape)));
+    }
+    let bp = flayer::BaselineParams {
+        wq_w: p.f(&format!("{prefix}.wq.w"))?,
+        wq_b: p.f(&format!("{prefix}.wq.b"))?,
+        wk_w: p.f(&format!("{prefix}.wk.w"))?,
+        wk_b: p.f(&format!("{prefix}.wk.b"))?,
+        wv_w: p.f(&format!("{prefix}.wv.w"))?,
+        wv_b: p.f(&format!("{prefix}.wv.b"))?,
+        wo_w: p.f(&format!("{prefix}.wo.w"))?,
+        wo_b: p.f(&format!("{prefix}.wo.b"))?,
+    };
+    match meta.variant.as_str() {
+        "vanilla" => Ok((flayer::vanilla_layer(&bp, x, dims)?, AttnTape::Window(x.to_vec()))),
+        "local" => Ok((flayer::local_layer(&bp, x, dims)?, AttnTape::Window(x.to_vec()))),
+        "lsh" => {
+            let (out, tape) = glayer::lsh_forward_tape(&bp, x, dims)?;
+            Ok((out, AttnTape::Lsh(tape)))
+        }
+        other => bail!("unknown model variant {other:?}"),
+    }
+}
+
+/// FFN with pre-activation capture: identical arithmetic to the forward
+/// `model::ffn` (dense → gelu → dense), but the hidden pre-activations
+/// survive for the backward.
+fn ffn_forward_tape(
+    p: &Params,
+    prefix: &str,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    d_ff: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut hid_pre = Vec::new();
+    ops::dense_into(
+        x,
+        p.f(&format!("{prefix}.in.w"))?,
+        p.f(&format!("{prefix}.in.b"))?,
+        rows,
+        d,
+        d_ff,
+        &mut hid_pre,
+    );
+    let mut act = hid_pre.clone();
+    let blk = parallel::elem_block(act.len());
+    parallel::par_chunks_mut(act.as_mut_slice(), blk, |_, chunk| {
+        for v in chunk.iter_mut() {
+            *v = ops::gelu(*v);
+        }
+    });
+    let mut out = Vec::new();
+    ops::dense_into(
+        &act,
+        p.f(&format!("{prefix}.out.w"))?,
+        p.f(&format!("{prefix}.out.b"))?,
+        rows,
+        d_ff,
+        d,
+        &mut out,
+    );
+    Ok((out, hid_pre))
+}
+
+fn attn_fingerprint(tape: &AttnTape) -> u64 {
+    match tape {
+        AttnTape::Cast(t) => t.fingerprint(),
+        AttnTape::Window(_) => 0,
+        AttnTape::Lsh(t) => t.fingerprint(),
+    }
+}
+
+/// Taped encoder forward: tokens (b·N) → pooled features (b, d).
+fn encode_tape(
+    p: &Params,
+    meta: &ModelMeta,
+    tokens: &[i32],
+    b: usize,
+    ws: &mut GradScratch,
+) -> Result<EncodeTape> {
+    let n = meta.seq_len;
+    let (d, d_ff) = (meta.d, meta.d_ff);
+    let rows = b * n;
+    let x0 = embed_tokens(p, meta, tokens, b)?;
+    let mut x = ops::dense(&x0, p.f("proj.w")?, p.f("proj.b")?, rows, meta.d_emb, d);
+
+    let dims = dims_for(meta, b)?;
+    let mut blocks = Vec::with_capacity(meta.depth);
+    let mut fingerprint = 0xcbf2_9ce4_8422_2325u64;
+    for i in 0..meta.depth {
+        let blk = format!("blocks.{i}");
+        let tape = if meta.prenorm {
+            let norm1_in = x.clone();
+            let mut xn = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm1"), &mut xn)?;
+            let (a, attn) =
+                attn_forward_tape(p, meta, &format!("{blk}.attn"), &xn, &dims, &mut ws.cast_fwd)?;
+            ops::add_assign(&mut x, &a);
+            let norm2_in = x.clone();
+            let mut xn2 = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm2"), &mut xn2)?;
+            let (f, hid_pre) = ffn_forward_tape(p, &format!("{blk}.ffn"), &xn2, rows, d, d_ff)?;
+            ops::add_assign(&mut x, &f);
+            BlockTape { attn, norm1_in, ffn_in: xn2, hid_pre, norm2_in }
+        } else {
+            let (a, attn) =
+                attn_forward_tape(p, meta, &format!("{blk}.attn"), &x, &dims, &mut ws.cast_fwd)?;
+            ops::add_assign(&mut x, &a);
+            let norm1_in = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
+            let ffn_in = x.clone();
+            let (f, hid_pre) = ffn_forward_tape(p, &format!("{blk}.ffn"), &ffn_in, rows, d, d_ff)?;
+            ops::add_assign(&mut x, &f);
+            let norm2_in = x.clone();
+            apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
+            BlockTape { attn, norm1_in, ffn_in, hid_pre, norm2_in }
+        };
+        fingerprint = fnv_fold(fingerprint, attn_fingerprint(&tape.attn));
+        blocks.push(tape);
+    }
+    let out_norm_in = if meta.prenorm {
+        let keep = x.clone();
+        apply_norm(p, meta, "out_norm", &mut x)?;
+        Some(keep)
+    } else {
+        None
+    };
+
+    // mean-pool over the sequence, one task per batch element
+    let mut pooled = vec![0.0f32; b * d];
+    let inv = 1.0 / n as f32;
+    let xs: &[f32] = &x;
+    parallel::par_chunks_mut(pooled.as_mut_slice(), d, |bb, prow| {
+        for nn in 0..n {
+            let src = (bb * n + nn) * d;
+            for (j, pv) in prow.iter_mut().enumerate() {
+                *pv += xs[src + j] * inv;
+            }
+        }
+    });
+    Ok(EncodeTape { x0, blocks, out_norm_in, pooled, fingerprint })
+}
+
+// ---------------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------------
+
+fn norm_backward(
+    p: &Params,
+    meta: &ModelMeta,
+    store: &mut GradStore,
+    prefix: &str,
+    x_in: &[f32],
+    dy: &[f32],
+    dx_acc: &mut [f32],
+) -> Result<()> {
+    let d = meta.d;
+    if meta.norm == "scale" {
+        let gval = p.f(&format!("{prefix}.g"))?[0];
+        let mut dg = 0.0f32;
+        gops::scalenorm_backward(x_in, gval, dy, d, NORM_EPS, dx_acc, &mut dg);
+        store.one(&format!("{prefix}.g"))?[0] += dg;
+    } else {
+        let g = p.f(&format!("{prefix}.g"))?;
+        let pair = store.consecutive(&[format!("{prefix}.b"), format!("{prefix}.g")])?;
+        let [b_buf, g_buf] = pair else { unreachable!() };
+        gops::layernorm_backward(
+            x_in,
+            g,
+            dy,
+            d,
+            NORM_EPS,
+            dx_acc,
+            g_buf.as_mut_slice(),
+            b_buf.as_mut_slice(),
+        );
+    }
+    Ok(())
+}
+
+/// FFN backward: `dy` is the gradient of the FFN output; the input
+/// gradient lands in `ws_dffn_in` (zeroed here).
+fn ffn_backward(
+    p: &Params,
+    store: &mut GradStore,
+    prefix: &str,
+    block: &BlockTape,
+    rows: usize,
+    d: usize,
+    d_ff: usize,
+    dy: &[f32],
+    dhid: &mut Vec<f32>,
+    act: &mut Vec<f32>,
+    dffn_in: &mut Vec<f32>,
+) -> Result<()> {
+    // recompute the hidden activations from the taped pre-activations
+    act.clear();
+    act.extend_from_slice(&block.hid_pre);
+    let eblk = parallel::elem_block(act.len());
+    parallel::par_chunks_mut(act.as_mut_slice(), eblk, |_, chunk| {
+        for v in chunk.iter_mut() {
+            *v = ops::gelu(*v);
+        }
+    });
+    let out_w = p.f(&format!("{prefix}.out.w"))?;
+    let in_w = p.f(&format!("{prefix}.in.w"))?;
+    {
+        let quad = store.consecutive(&[
+            format!("{prefix}.in.b"),
+            format!("{prefix}.in.w"),
+            format!("{prefix}.out.b"),
+            format!("{prefix}.out.w"),
+        ])?;
+        let [in_b_g, in_w_g, out_b_g, out_w_g] = quad else { unreachable!() };
+        gops::dense_grad_params(
+            act,
+            dy,
+            rows,
+            d_ff,
+            d,
+            out_w_g.as_mut_slice(),
+            out_b_g.as_mut_slice(),
+        );
+        zeroed(dhid, rows * d_ff);
+        gops::dense_grad_input_acc(dy, out_w, rows, d_ff, d, dhid);
+        let hid_pre: &[f32] = &block.hid_pre;
+        let hblk = parallel::elem_block(dhid.len());
+        parallel::par_chunks_mut(dhid.as_mut_slice(), hblk, |ci, chunk| {
+            let off = ci * hblk;
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v *= ops::gelu_prime(hid_pre[off + j]);
+            }
+        });
+        gops::dense_grad_params(
+            &block.ffn_in,
+            dhid,
+            rows,
+            d,
+            d_ff,
+            in_w_g.as_mut_slice(),
+            in_b_g.as_mut_slice(),
+        );
+    }
+    zeroed(dffn_in, rows * d);
+    gops::dense_grad_input_acc(dhid, in_w, rows, d, d_ff, dffn_in);
+    Ok(())
+}
+
+fn attn_backward(
+    p: &Params,
+    meta: &ModelMeta,
+    store: &mut GradStore,
+    prefix: &str,
+    tape: &AttnTape,
+    dims: &Dims,
+    d_out: &[f32],
+    dx_acc: &mut [f32],
+    cast_bwd: &mut glayer::CastBwdScratch,
+    base_bwd: &mut glayer::BaselineBwdScratch,
+) -> Result<()> {
+    match tape {
+        AttnTape::Cast(t) => {
+            let cp = flayer::CastParams {
+                wq_w: p.f(&format!("{prefix}.wq.w"))?,
+                wq_b: p.f(&format!("{prefix}.wq.b"))?,
+                wk_w: p.f(&format!("{prefix}.wk.w"))?,
+                wk_b: p.f(&format!("{prefix}.wk.b"))?,
+                wv_w: p.f(&format!("{prefix}.wv.w"))?,
+                wv_b: p.f(&format!("{prefix}.wv.b"))?,
+                wo_w: p.f(&format!("{prefix}.wo.w"))?,
+                wo_b: p.f(&format!("{prefix}.wo.b"))?,
+                s: p.f(&format!("{prefix}.s"))?,
+                phi_w: p.f(&format!("{prefix}.phi.w"))?,
+                phi_b: p.f(&format!("{prefix}.phi.b"))?,
+            };
+            let run = store.consecutive(&[
+                format!("{prefix}.phi.b"),
+                format!("{prefix}.phi.w"),
+                format!("{prefix}.s"),
+                format!("{prefix}.wk.b"),
+                format!("{prefix}.wk.w"),
+                format!("{prefix}.wo.b"),
+                format!("{prefix}.wo.w"),
+                format!("{prefix}.wq.b"),
+                format!("{prefix}.wq.w"),
+                format!("{prefix}.wv.b"),
+                format!("{prefix}.wv.w"),
+            ])?;
+            let [phi_b, phi_w, s, wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = run else {
+                unreachable!()
+            };
+            let mut g = glayer::CastGradRefs {
+                wq_w: wq_w.as_mut_slice(),
+                wq_b: wq_b.as_mut_slice(),
+                wk_w: wk_w.as_mut_slice(),
+                wk_b: wk_b.as_mut_slice(),
+                wv_w: wv_w.as_mut_slice(),
+                wv_b: wv_b.as_mut_slice(),
+                wo_w: wo_w.as_mut_slice(),
+                wo_b: wo_b.as_mut_slice(),
+                s: s.as_mut_slice(),
+                phi_w: phi_w.as_mut_slice(),
+                phi_b: phi_b.as_mut_slice(),
+            };
+            glayer::cast_layer_backward(&cp, t, dims, d_out, dx_acc, &mut g, cast_bwd)
+        }
+        AttnTape::Window(x) | AttnTape::Lsh(glayer::LshTape { x, .. }) => {
+            let bp = flayer::BaselineParams {
+                wq_w: p.f(&format!("{prefix}.wq.w"))?,
+                wq_b: p.f(&format!("{prefix}.wq.b"))?,
+                wk_w: p.f(&format!("{prefix}.wk.w"))?,
+                wk_b: p.f(&format!("{prefix}.wk.b"))?,
+                wv_w: p.f(&format!("{prefix}.wv.w"))?,
+                wv_b: p.f(&format!("{prefix}.wv.b"))?,
+                wo_w: p.f(&format!("{prefix}.wo.w"))?,
+                wo_b: p.f(&format!("{prefix}.wo.b"))?,
+            };
+            let run = store.consecutive(&[
+                format!("{prefix}.wk.b"),
+                format!("{prefix}.wk.w"),
+                format!("{prefix}.wo.b"),
+                format!("{prefix}.wo.w"),
+                format!("{prefix}.wq.b"),
+                format!("{prefix}.wq.w"),
+                format!("{prefix}.wv.b"),
+                format!("{prefix}.wv.w"),
+            ])?;
+            let [wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = run else { unreachable!() };
+            let mut g = glayer::BaselineGradRefs {
+                wq_w: wq_w.as_mut_slice(),
+                wq_b: wq_b.as_mut_slice(),
+                wk_w: wk_w.as_mut_slice(),
+                wk_b: wk_b.as_mut_slice(),
+                wv_w: wv_w.as_mut_slice(),
+                wv_b: wv_b.as_mut_slice(),
+                wo_w: wo_w.as_mut_slice(),
+                wo_b: wo_b.as_mut_slice(),
+            };
+            match (meta.variant.as_str(), tape) {
+                ("vanilla", _) => {
+                    glayer::window_backward(&bp, x, dims, None, d_out, dx_acc, &mut g, base_bwd)
+                }
+                ("local", _) => {
+                    let w = dims.window.min(dims.n).max(1);
+                    glayer::window_backward(&bp, x, dims, Some(w), d_out, dx_acc, &mut g, base_bwd)
+                }
+                ("lsh", AttnTape::Lsh(t)) => {
+                    glayer::lsh_backward(&bp, t, dims, d_out, dx_acc, &mut g, base_bwd)
+                }
+                (other, _) => bail!("unknown model variant {other:?}"),
+            }
+        }
+    }
+}
+
+/// Backward through one taped encoder: `d_pooled` (b, d) → parameter
+/// gradients (into `store`) and the embedding-table gradient.
+fn encode_backward(
+    p: &Params,
+    meta: &ModelMeta,
+    store: &mut GradStore,
+    tape: &EncodeTape,
+    tokens: &[i32],
+    b: usize,
+    d_pooled: &[f32],
+    ws: &mut GradScratch,
+) -> Result<()> {
+    let n = meta.seq_len;
+    let (d, d_ff, d_emb) = (meta.d, meta.d_ff, meta.d_emb);
+    let rows = b * n;
+    let dims = dims_for(meta, b)?;
+    ensure!(d_pooled.len() == b * d, "pooled gradient shape");
+
+    let GradScratch { cast_bwd, base_bwd, dx, dnorm, dbranch, dffn_in, dhid, act, dx0, .. } = ws;
+
+    // mean-pool backward: every token row gets its batch row / n
+    zeroed(dx, rows * d);
+    let inv = 1.0 / n as f32;
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut(dx.as_mut_slice(), blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+            let bb = (r0 + rr) / n;
+            for (j, dv) in dst.iter_mut().enumerate() {
+                *dv = d_pooled[bb * d + j] * inv;
+            }
+        }
+    });
+
+    if let Some(x_in) = &tape.out_norm_in {
+        zeroed(dnorm, rows * d);
+        norm_backward(p, meta, store, "out_norm", x_in, dx, dnorm)?;
+        std::mem::swap(dx, dnorm);
+    }
+
+    for (i, block) in tape.blocks.iter().enumerate().rev() {
+        let blk_name = format!("blocks.{i}");
+        if meta.prenorm {
+            // out = x_mid + ffn(norm2(x_mid)); x_mid = x_in + attn(norm1(x_in))
+            ffn_backward(
+                p,
+                store,
+                &format!("{blk_name}.ffn"),
+                block,
+                rows,
+                d,
+                d_ff,
+                dx,
+                dhid,
+                act,
+                dffn_in,
+            )?;
+            norm_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.norm2"),
+                &block.norm2_in,
+                dffn_in,
+                dx,
+            )?;
+            dbranch.clear();
+            dbranch.extend_from_slice(dx);
+            zeroed(dnorm, rows * d);
+            attn_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.attn"),
+                &block.attn,
+                &dims,
+                dbranch,
+                dnorm,
+                cast_bwd,
+                base_bwd,
+            )?;
+            norm_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.norm1"),
+                &block.norm1_in,
+                dnorm,
+                dx,
+            )?;
+        } else {
+            // out = norm2(y1 + ffn(y1)); y1 = norm1(x + attn(x))
+            zeroed(dnorm, rows * d);
+            norm_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.norm2"),
+                &block.norm2_in,
+                dx,
+                dnorm,
+            )?;
+            std::mem::swap(dx, dnorm);
+            ffn_backward(
+                p,
+                store,
+                &format!("{blk_name}.ffn"),
+                block,
+                rows,
+                d,
+                d_ff,
+                dx,
+                dhid,
+                act,
+                dffn_in,
+            )?;
+            ops::add_assign(dx, dffn_in);
+            zeroed(dnorm, rows * d);
+            norm_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.norm1"),
+                &block.norm1_in,
+                dx,
+                dnorm,
+            )?;
+            std::mem::swap(dx, dnorm);
+            dbranch.clear();
+            dbranch.extend_from_slice(dx);
+            attn_backward(
+                p,
+                meta,
+                store,
+                &format!("{blk_name}.attn"),
+                &block.attn,
+                &dims,
+                dbranch,
+                dx,
+                cast_bwd,
+                base_bwd,
+            )?;
+        }
+    }
+
+    // input projection backward
+    {
+        let pair = store.consecutive(&["proj.b".to_string(), "proj.w".to_string()])?;
+        let [proj_b, proj_w] = pair else { unreachable!() };
+        gops::dense_grad_params(
+            &tape.x0,
+            dx,
+            rows,
+            d_emb,
+            d,
+            proj_w.as_mut_slice(),
+            proj_b.as_mut_slice(),
+        );
+    }
+    zeroed(dx0, rows * d_emb);
+    gops::dense_grad_input_acc(dx, p.f("proj.w")?, rows, d_emb, d, dx0);
+
+    // embedding backward: serial scatter-add in fixed row order (several
+    // rows share a token id, so this reduction cannot shard by row)
+    let g_emb = store.one("embed.emb")?;
+    let vocab_max = meta.vocab.saturating_sub(1);
+    for r in 0..rows {
+        let tok = (tokens[r].max(0) as usize).min(vocab_max);
+        let dst = &mut g_emb[tok * d_emb..(tok + 1) * d_emb];
+        let src = &dx0[r * d_emb..(r + 1) * d_emb];
+        for (dv, &sv) in dst.iter_mut().zip(src) {
+            *dv += sv;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the public entry point
+// ---------------------------------------------------------------------------
+
+/// Full forward + exact backward through the native model for one batch:
+/// returns the mean cross-entropy loss, the batch accuracy, and the
+/// gradient of every parameter in manifest order.
+pub fn loss_and_grads(
+    manifest: &Manifest,
+    params: &[&HostTensor],
+    tokens: &HostTensor,
+    labels: &[i32],
+    ws: &mut GradScratch,
+) -> Result<LossAndGrads> {
+    let meta = &manifest.meta;
+    let p = Params::bind(&manifest.params, params)?;
+    let mut store = GradStore::new(manifest);
+    let b = labels.len();
+    let n = meta.seq_len;
+    let d = meta.d;
+    let toks = tokens.as_s32().context("tokens tensor")?;
+
+    let (feats, d_in, tapes, t1, t2) = if meta.dual {
+        ensure!(
+            tokens.shape.len() == 3
+                && tokens.shape[0] == b
+                && tokens.shape[1] == 2
+                && tokens.shape[2] == n,
+            "dual tokens must be ({b},2,{n}), got {:?}",
+            tokens.shape
+        );
+        let mut a = vec![0i32; b * n];
+        let mut c2 = vec![0i32; b * n];
+        for bb in 0..b {
+            a[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2) * n..(bb * 2 + 1) * n]);
+            c2[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2 + 1) * n..(bb * 2 + 2) * n]);
+        }
+        let tape1 = encode_tape(&p, meta, &a, b, ws)?;
+        let tape2 = encode_tape(&p, meta, &c2, b, ws)?;
+        let mut f = vec![0.0f32; b * 4 * d];
+        for bb in 0..b {
+            for j in 0..d {
+                let (u, v) = (tape1.pooled[bb * d + j], tape2.pooled[bb * d + j]);
+                f[bb * 4 * d + j] = u;
+                f[bb * 4 * d + d + j] = v;
+                f[bb * 4 * d + 2 * d + j] = u * v;
+                f[bb * 4 * d + 3 * d + j] = u - v;
+            }
+        }
+        (f, 4 * d, vec![tape1, tape2], a, c2)
+    } else {
+        ensure!(
+            tokens.shape.len() == 2 && tokens.shape[0] == b && tokens.shape[1] == n,
+            "tokens must be ({b},{n}), got {:?}",
+            tokens.shape
+        );
+        let tape = encode_tape(&p, meta, toks, b, ws)?;
+        let feats = tape.pooled.clone();
+        (feats, d, vec![tape], toks.to_vec(), Vec::new())
+    };
+
+    let head = head_forward(&p, meta, &feats, b, d_in)?;
+    let nc = meta.n_classes;
+    let (loss, acc, dlogits) = softmax_xent(&head.logits, labels, nc)?;
+
+    // head backward
+    let mut dh = vec![0.0f32; b * d];
+    {
+        let pair = store.consecutive(&["head.out.b".to_string(), "head.out.w".to_string()])?;
+        let [out_b, out_w] = pair else { unreachable!() };
+        gops::dense_grad_params(
+            &head.h,
+            &dlogits,
+            b,
+            d,
+            nc,
+            out_w.as_mut_slice(),
+            out_b.as_mut_slice(),
+        );
+    }
+    gops::dense_grad_input_acc(&dlogits, p.f("head.out.w")?, b, d, nc, &mut dh);
+    for (v, &pre) in dh.iter_mut().zip(&head.h_pre) {
+        *v *= ops::gelu_prime(pre);
+    }
+    let mut dfeats = vec![0.0f32; b * d_in];
+    {
+        let pair = store.consecutive(&["head.fc.b".to_string(), "head.fc.w".to_string()])?;
+        let [fc_b, fc_w] = pair else { unreachable!() };
+        gops::dense_grad_params(&feats, &dh, b, d_in, d, fc_w.as_mut_slice(), fc_b.as_mut_slice());
+    }
+    gops::dense_grad_input_acc(&dh, p.f("head.fc.w")?, b, d_in, d, &mut dfeats);
+
+    let mut fingerprint = 0xcbf2_9ce4_8422_2325u64;
+    for t in &tapes {
+        fingerprint = fnv_fold(fingerprint, t.fingerprint);
+    }
+
+    if meta.dual {
+        // feats = [u, v, u*v, u-v] per batch row
+        let mut df1 = vec![0.0f32; b * d];
+        let mut df2 = vec![0.0f32; b * d];
+        for bb in 0..b {
+            for j in 0..d {
+                let u = tapes[0].pooled[bb * d + j];
+                let v = tapes[1].pooled[bb * d + j];
+                let g0 = dfeats[bb * 4 * d + j];
+                let g1 = dfeats[bb * 4 * d + d + j];
+                let g2 = dfeats[bb * 4 * d + 2 * d + j];
+                let g3 = dfeats[bb * 4 * d + 3 * d + j];
+                df1[bb * d + j] = g0 + g2 * v + g3;
+                df2[bb * d + j] = g1 + g2 * u - g3;
+            }
+        }
+        encode_backward(&p, meta, &mut store, &tapes[0], &t1, b, &df1, ws)?;
+        encode_backward(&p, meta, &mut store, &tapes[1], &t2, b, &df2, ws)?;
+    } else {
+        encode_backward(&p, meta, &mut store, &tapes[0], &t1, b, &dfeats, ws)?;
+    }
+
+    Ok(LossAndGrads { loss, acc, grads: store.bufs, fingerprint })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::model::run_init;
+    use super::*;
+    use crate::util::prop::{assert_grads_close, GradCheckCfg};
+
+    fn small_meta(variant: &str) -> ModelMeta {
+        ModelMeta {
+            task: "text".to_string(),
+            variant: variant.to_string(),
+            seq_len: 8,
+            batch: 2,
+            n_c: 2,
+            kappa: 4,
+            depth: 2,
+            heads: 2,
+            d: 8,
+            d_ff: 16,
+            d_emb: 8,
+            vocab: 16,
+            n_classes: 2,
+            dual: false,
+            norm: "layer".to_string(),
+            prenorm: false,
+            attn_fn: "softmax".to_string(),
+            window: 4,
+            causal: false,
+        }
+    }
+
+    fn flat_theta(params: &[HostTensor]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for t in params {
+            out.extend_from_slice(t.as_f32().unwrap());
+        }
+        out
+    }
+
+    fn tensors_from_flat(man: &Manifest, theta: &[f32]) -> Vec<HostTensor> {
+        let mut out = Vec::with_capacity(man.params.len());
+        let mut off = 0usize;
+        for spec in &man.params {
+            let l: usize = spec.shape.iter().product();
+            out.push(HostTensor::f32(spec.shape.clone(), theta[off..off + l].to_vec()));
+            off += l;
+        }
+        out
+    }
+
+    fn name_blocks(man: &Manifest) -> Vec<(String, usize)> {
+        man.params
+            .iter()
+            .map(|s| (s.name.clone(), s.shape.iter().product()))
+            .collect()
+    }
+
+    fn tokens_for(man: &Manifest, stride: usize) -> HostTensor {
+        let n: usize = man.tokens_shape.iter().product();
+        let vocab = man.meta.vocab as i32;
+        HostTensor::s32(
+            man.tokens_shape.clone(),
+            (0..n).map(|i| ((i * stride + 3) % vocab as usize) as i32).collect(),
+        )
+    }
+
+    /// Model-level checks: ε balances f32 loss-evaluation noise against
+    /// truncation error at loss magnitudes ~ln(2); the fingerprint skips
+    /// coordinates that flip a cluster assignment.
+    fn model_cfg() -> GradCheckCfg {
+        GradCheckCfg { eps: 5e-3, rel_tol: 1e-2, abs_tol: 1e-4, max_per_block: 4 }
+    }
+
+    fn check_model(meta: ModelMeta, seed: u32) {
+        let man = Manifest::synthetic(meta);
+        let params = run_init(&man, &[&HostTensor::u32(vec![], vec![seed])]).unwrap();
+        let theta = flat_theta(&params);
+        let tokens = tokens_for(&man, 7);
+        let labels: Vec<i32> = (0..man.meta.batch).map(|i| (i % 2) as i32).collect();
+        let refs: Vec<&HostTensor> = params.iter().collect();
+        let mut ws = GradScratch::new();
+        let out = loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        let analytic: Vec<f32> = out.grads.concat();
+        let blocks = name_blocks(&man);
+        let reports =
+            assert_grads_close(&model_cfg(), &theta, &blocks, &analytic, |t| {
+                let tensors = tensors_from_flat(&man, t);
+                let r: Vec<&HostTensor> = tensors.iter().collect();
+                let mut ws = GradScratch::new();
+                let o = loss_and_grads(&man, &r, &tokens, &labels, &mut ws).unwrap();
+                (o.loss, o.fingerprint)
+            });
+        // every block must have had at least one comparable coordinate
+        let unchecked: Vec<&str> = reports
+            .iter()
+            .filter(|r| r.checked == 0)
+            .map(|r| r.name.as_str())
+            .collect();
+        assert!(
+            unchecked.is_empty(),
+            "blocks with no comparable coordinate (all flipped clusters?): {unchecked:?}"
+        );
+    }
+
+    #[test]
+    fn full_model_gradients_cast_topk_postnorm_softmax() {
+        check_model(small_meta("cast_topk"), 11);
+    }
+
+    #[test]
+    fn full_model_gradients_cast_sa_prenorm_scale_laplace() {
+        let mut meta = small_meta("cast_sa");
+        meta.prenorm = true;
+        meta.norm = "scale".to_string();
+        meta.attn_fn = "laplace".to_string();
+        meta.depth = 1;
+        check_model(meta, 12);
+    }
+
+    #[test]
+    fn full_model_gradients_causal_cast() {
+        let mut meta = small_meta("cast_sa");
+        meta.causal = true;
+        meta.depth = 1;
+        check_model(meta, 15);
+    }
+
+    #[test]
+    fn full_model_gradients_dual_vanilla() {
+        let mut meta = small_meta("vanilla");
+        meta.task = "retrieval".to_string();
+        meta.dual = true;
+        meta.depth = 1;
+        check_model(meta, 13);
+    }
+
+    #[test]
+    fn full_model_gradients_lsh() {
+        let mut meta = small_meta("lsh");
+        meta.depth = 1;
+        check_model(meta, 14);
+    }
+
+    #[test]
+    fn taped_forward_is_bit_identical_to_predict_forward() {
+        // the taped forward must never drift from the forward that
+        // `predict`/eval run: same loss (and accuracy) bit-for-bit,
+        // for every variant, prenorm/scale, and the dual head
+        use super::super::super::model::run_predict;
+        let mut metas = vec![
+            small_meta("cast_topk"),
+            small_meta("cast_sa"),
+            small_meta("vanilla"),
+            small_meta("local"),
+            small_meta("lsh"),
+        ];
+        let mut prenorm = small_meta("cast_topk");
+        prenorm.prenorm = true;
+        prenorm.norm = "scale".to_string();
+        metas.push(prenorm);
+        let mut dual = small_meta("vanilla");
+        dual.task = "retrieval".to_string();
+        dual.dual = true;
+        metas.push(dual);
+        for meta in metas {
+            let tag = format!("{} prenorm={} dual={}", meta.variant, meta.prenorm, meta.dual);
+            let man = Manifest::synthetic(meta);
+            let params = run_init(&man, &[&HostTensor::u32(vec![], vec![7])]).unwrap();
+            let tokens = tokens_for(&man, 11);
+            let labels = vec![0, 1];
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.push(&tokens);
+            let logits = run_predict(&man, &inputs).unwrap();
+            let (ploss, pacc, _) =
+                softmax_xent(logits[0].as_f32().unwrap(), &labels, man.meta.n_classes)
+                    .unwrap();
+            let refs: Vec<&HostTensor> = params.iter().collect();
+            let mut ws = GradScratch::new();
+            let out = loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap();
+            assert_eq!(out.loss, ploss, "{tag}: taped forward drifted from predict");
+            assert_eq!(out.acc, pacc, "{tag}: accuracy drifted from predict");
+        }
+    }
+
+    #[test]
+    fn gradient_descent_on_one_batch_reduces_loss() {
+        // plain SGD along the returned gradients must overfit one batch —
+        // the whole-pipeline sanity the pointwise checks cannot give
+        let man = Manifest::synthetic(small_meta("cast_topk"));
+        let params = run_init(&man, &[&HostTensor::u32(vec![], vec![21])]).unwrap();
+        let mut theta = flat_theta(&params);
+        let tokens = tokens_for(&man, 5);
+        let labels = vec![0, 1];
+        let mut ws = GradScratch::new();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for it in 0..60 {
+            let tensors = tensors_from_flat(&man, &theta);
+            let refs: Vec<&HostTensor> = tensors.iter().collect();
+            let out = loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap();
+            if it == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+            let flat_grad: Vec<f32> = out.grads.concat();
+            for (p, g) in theta.iter_mut().zip(&flat_grad) {
+                *p -= 0.2 * g;
+            }
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(
+            last < first * 0.8,
+            "SGD on one batch must cut the loss: {first:.4} -> {last:.4}"
+        );
+    }
+
+    #[test]
+    fn grads_align_with_manifest_and_are_finite_for_every_variant() {
+        for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+            let man = Manifest::synthetic(small_meta(variant));
+            let params = run_init(&man, &[&HostTensor::u32(vec![], vec![3])]).unwrap();
+            let refs: Vec<&HostTensor> = params.iter().collect();
+            let tokens = tokens_for(&man, 3);
+            let mut ws = GradScratch::new();
+            let out = loss_and_grads(&man, &refs, &tokens, &[1, 0], &mut ws).unwrap();
+            assert_eq!(out.grads.len(), man.n_params(), "{variant}");
+            for (g, spec) in out.grads.iter().zip(&man.params) {
+                assert_eq!(
+                    g.len(),
+                    spec.shape.iter().product::<usize>(),
+                    "{variant}:{}",
+                    spec.name
+                );
+                assert!(
+                    g.iter().all(|v| v.is_finite()),
+                    "{variant}:{} has non-finite gradients",
+                    spec.name
+                );
+            }
+            // the backbone actually receives gradient signal
+            let idx = man.params.iter().position(|p| p.name == "embed.emb").unwrap();
+            assert!(
+                out.grads[idx].iter().any(|&v| v != 0.0),
+                "{variant}: embedding gradient is all-zero"
+            );
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! Backward counterparts of the forward building blocks in
+//! `runtime::native::ops` — dense matmul input/parameter gradients, the
+//! attention-row normalizations (softmax and MEGA's laplace), and the two
+//! norms.  Every function follows one convention: **gradients accumulate**
+//! (`+=`) into the caller's buffers, so a parameter touched from several
+//! places (residual branches, dual encoders, shared projections) sums its
+//! contributions naturally; callers zero buffers at the start of a
+//! backward pass.
+//!
+//! Threading mirrors the forward (DESIGN.md §Threading): input gradients
+//! shard over row blocks with disjoint `&mut` chunks, weight gradients
+//! shard over input-dimension blocks with a fixed row-accumulation order
+//! inside each task — bit-identical for any `CAST_NUM_THREADS`.  The
+//! cheap cross-row reductions (biases, norm gains) stay serial.
+
+use crate::util::parallel;
+
+use super::super::ops::{self, AttnFn};
+
+/// `dx += dy @ w^T` where `dy` is (rows, d_out) and `w` is (d_in, d_out):
+/// the input gradient of `y = x @ w + b`.  Each `dx` element is a
+/// unit-stride dot against a row of `w`, dispatched over row blocks.
+pub fn dense_grad_input_acc(
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(dx.len(), rows * d_in);
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut(dx, blk * d_in, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dxrow) in chunk.chunks_mut(d_in).enumerate() {
+            let dyrow = &dy[(r0 + rr) * d_out..(r0 + rr + 1) * d_out];
+            for (i, dv) in dxrow.iter_mut().enumerate() {
+                *dv += ops::dot(dyrow, &w[i * d_out..(i + 1) * d_out]);
+            }
+        }
+    });
+}
+
+/// Parameter gradients of `y = x @ w + b`:
+/// `dw[i,o] += sum_r x[r,i] * dy[r,o]`, `db[o] += sum_r dy[r,o]`.
+/// `dw` is sharded over input-dimension blocks; each task walks the rows
+/// in ascending order, so the accumulation order is fixed for any worker
+/// count.  The (cheap) bias reduction is serial.
+pub fn dense_grad_params(
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(dw.len(), d_in * d_out);
+    debug_assert_eq!(db.len(), d_out);
+    let iblk = parallel::row_block(d_in);
+    parallel::par_chunks_mut(dw, iblk * d_out, |ci, chunk| {
+        let i0 = ci * iblk;
+        let ni = chunk.len() / d_out;
+        for r in 0..rows {
+            let dyrow = &dy[r * d_out..(r + 1) * d_out];
+            for ii in 0..ni {
+                let xv = x[r * d_in + i0 + ii];
+                if xv != 0.0 {
+                    let dst = &mut chunk[ii * d_out..(ii + 1) * d_out];
+                    for (o, dv) in dst.iter_mut().enumerate() {
+                        *dv += xv * dyrow[o];
+                    }
+                }
+            }
+        }
+    });
+    for r in 0..rows {
+        let dyrow = &dy[r * d_out..(r + 1) * d_out];
+        for (o, dv) in db.iter_mut().enumerate() {
+            *dv += dyrow[o];
+        }
+    }
+}
+
+/// Backward of `ops::attn_rows` over every `cols`-wide row: given the
+/// raw scores `pre`, the normalized output `post`, and the upstream
+/// gradient `dy`, **accumulates** `d pre` into `dpre`.
+///
+/// Softmax rows use only `post`; laplace rows recompute the
+/// unnormalized CDF values from `pre` (the same recompute-over-store
+/// choice the layer backward makes for the score matrices).  Rows whose
+/// normalizer hit the forward clamp are degenerate (fully masked) and
+/// receive ~zero gradient either way.
+pub fn attn_rows_backward(
+    pre: &[f32],
+    post: &[f32],
+    dy: &[f32],
+    cols: usize,
+    f: AttnFn,
+    dpre: &mut [f32],
+) {
+    debug_assert!(cols > 0 && pre.len() % cols == 0);
+    debug_assert_eq!(pre.len(), post.len());
+    debug_assert_eq!(pre.len(), dy.len());
+    debug_assert_eq!(pre.len(), dpre.len());
+    match f {
+        AttnFn::Softmax => {
+            for ((yrow, gyrow), drow) in
+                post.chunks(cols).zip(dy.chunks(cols)).zip(dpre.chunks_mut(cols))
+            {
+                let mut s = 0.0f32;
+                for (y, gy) in yrow.iter().zip(gyrow) {
+                    s += y * gy;
+                }
+                for ((d, y), gy) in drow.iter_mut().zip(yrow).zip(gyrow) {
+                    *d += y * (gy - s);
+                }
+            }
+        }
+        AttnFn::Laplace => {
+            let mu = 0.5f32.sqrt();
+            let sigma = (0.25 / std::f32::consts::PI).sqrt();
+            let denom = sigma * 2.0f32.sqrt();
+            for (((xrow, yrow), gyrow), drow) in pre
+                .chunks(cols)
+                .zip(post.chunks(cols))
+                .zip(dy.chunks(cols))
+                .zip(dpre.chunks_mut(cols))
+            {
+                // recompute the unnormalized row and its normalizer
+                let mut z_raw = 0.0f32;
+                for &x in xrow {
+                    z_raw += 0.5 * (1.0 + ops::erf((x - mu) / denom));
+                }
+                let z = z_raw.max(1e-6);
+                // when the forward clamp engaged, the normalizer is a
+                // *constant* — the quotient-rule coupling term vanishes
+                let s = if z_raw < 1e-6 {
+                    0.0
+                } else {
+                    let mut s = 0.0f32;
+                    for (y, gy) in yrow.iter().zip(gyrow) {
+                        s += y * gy;
+                    }
+                    s
+                };
+                for ((d, &x), gy) in drow.iter_mut().zip(xrow).zip(gyrow) {
+                    let uprime = 0.5 * ops::erf_prime((x - mu) / denom) / denom;
+                    *d += (gy - s) / z * uprime;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of `ops::layernorm_rows`: `x` is the **pre-norm** input (the
+/// per-row mean/variance are recomputed rather than stored), `g` the
+/// gain.  Accumulates `dx` (row-parallel), `dg`, and `db` (serial
+/// cross-row reduction).
+pub fn layernorm_backward(
+    x: &[f32],
+    g: &[f32],
+    dy: &[f32],
+    d: usize,
+    eps: f32,
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert!(d > 0 && x.len() % d == 0);
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    debug_assert_eq!(dg.len(), d);
+    debug_assert_eq!(db.len(), d);
+    let rows = x.len() / d;
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut(dx, blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dxrow) in chunk.chunks_mut(d).enumerate() {
+            let xrow = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let dyrow = &dy[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let mu = xrow.iter().sum::<f32>() / d as f32;
+            let var = xrow.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            let mut mean_dyh = 0.0f32;
+            let mut mean_dyh_xhat = 0.0f32;
+            for i in 0..d {
+                let xhat = (xrow[i] - mu) * inv;
+                let dyh = dyrow[i] * g[i];
+                mean_dyh += dyh;
+                mean_dyh_xhat += dyh * xhat;
+            }
+            mean_dyh /= d as f32;
+            mean_dyh_xhat /= d as f32;
+            for (i, dv) in dxrow.iter_mut().enumerate() {
+                let xhat = (xrow[i] - mu) * inv;
+                let dyh = dyrow[i] * g[i];
+                *dv += inv * (dyh - mean_dyh - xhat * mean_dyh_xhat);
+            }
+        }
+    });
+    for r in 0..rows {
+        let xrow = &x[r * d..(r + 1) * d];
+        let dyrow = &dy[r * d..(r + 1) * d];
+        let mu = xrow.iter().sum::<f32>() / d as f32;
+        let var = xrow.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for i in 0..d {
+            dg[i] += dyrow[i] * (xrow[i] - mu) * inv;
+            db[i] += dyrow[i];
+        }
+    }
+}
+
+/// Backward of `ops::scalenorm_rows` (`y = g * sqrt(d) * x / ||x||`):
+/// accumulates `dx` row-parallel and the scalar `dg` serially.
+pub fn scalenorm_backward(
+    x: &[f32],
+    g: f32,
+    dy: &[f32],
+    d: usize,
+    eps: f32,
+    dx: &mut [f32],
+    dg: &mut f32,
+) {
+    debug_assert!(d > 0 && x.len() % d == 0);
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    let rows = x.len() / d;
+    let sqrt_d = (d as f32).sqrt();
+    let blk = parallel::row_block(rows);
+    parallel::par_chunks_mut(dx, blk * d, |ci, chunk| {
+        let r0 = ci * blk;
+        for (rr, dxrow) in chunk.chunks_mut(d).enumerate() {
+            let xrow = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let dyrow = &dy[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let rms = (xrow.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
+            let xdy = ops::dot(xrow, dyrow);
+            let inv = 1.0 / rms;
+            let inv3 = inv * inv * inv;
+            for (i, dv) in dxrow.iter_mut().enumerate() {
+                *dv += g * sqrt_d * (dyrow[i] * inv - xrow[i] * xdy * inv3);
+            }
+        }
+    });
+    for r in 0..rows {
+        let xrow = &x[r * d..(r + 1) * d];
+        let dyrow = &dy[r * d..(r + 1) * d];
+        let rms = (xrow.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
+        *dg += sqrt_d * ops::dot(xrow, dyrow) / rms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_grads_close, GradCheckCfg};
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    /// `L(theta) = <c, f(theta)>` — a fixed random cotangent turns any
+    /// forward op into a scalar loss whose exact gradient the backward
+    /// op must reproduce.
+    fn inner(c: &[f32], y: &[f32]) -> f32 {
+        ops::dot(c, y)
+    }
+
+    #[test]
+    fn dense_param_gradients_match_central_difference() {
+        let (rows, d_in, d_out) = (3usize, 4usize, 5usize);
+        let mut rng = Rng::new(11);
+        let x = randn(&mut rng, rows * d_in, 1.0);
+        let c = randn(&mut rng, rows * d_out, 1.0);
+        let w = randn(&mut rng, d_in * d_out, 0.5);
+        let b = randn(&mut rng, d_out, 0.5);
+
+        let mut dw = vec![0.0f32; d_in * d_out];
+        let mut db = vec![0.0f32; d_out];
+        dense_grad_params(&x, &c, rows, d_in, d_out, &mut dw, &mut db);
+        let mut analytic = dw.clone();
+        analytic.extend_from_slice(&db);
+        let mut theta = w.clone();
+        theta.extend_from_slice(&b);
+        let blocks = vec![("w".to_string(), d_in * d_out), ("b".to_string(), d_out)];
+        assert_grads_close(&GradCheckCfg::default(), &theta, &blocks, &analytic, |t| {
+            let y = ops::dense(&x, &t[..d_in * d_out], &t[d_in * d_out..], rows, d_in, d_out);
+            (inner(&c, &y), 0)
+        });
+    }
+
+    #[test]
+    fn dense_input_gradient_matches_central_difference() {
+        let (rows, d_in, d_out) = (2usize, 5usize, 3usize);
+        let mut rng = Rng::new(7);
+        let x = randn(&mut rng, rows * d_in, 1.0);
+        let w = randn(&mut rng, d_in * d_out, 0.7);
+        let b = randn(&mut rng, d_out, 0.3);
+        let c = randn(&mut rng, rows * d_out, 1.0);
+
+        let mut dx = vec![0.0f32; rows * d_in];
+        dense_grad_input_acc(&c, &w, rows, d_in, d_out, &mut dx);
+        let blocks = vec![("x".to_string(), rows * d_in)];
+        assert_grads_close(&GradCheckCfg::default(), &x, &blocks, &dx, |t| {
+            let y = ops::dense(t, &w, &b, rows, d_in, d_out);
+            (inner(&c, &y), 0)
+        });
+    }
+
+    #[test]
+    fn attn_rows_backward_matches_central_difference_both_fns() {
+        let (rows, cols) = (3usize, 5usize);
+        let mut rng = Rng::new(23);
+        for f in [AttnFn::Softmax, AttnFn::Laplace] {
+            let mut pre = randn(&mut rng, rows * cols, 1.0);
+            pre[cols - 1] = ops::NEG_INF; // one masked entry in row 0
+            let c = randn(&mut rng, rows * cols, 1.0);
+            let mut post = pre.clone();
+            ops::attn_rows(&mut post, cols, f);
+            let mut dpre = vec![0.0f32; rows * cols];
+            attn_rows_backward(&pre, &post, &c, cols, f, &mut dpre);
+            let blocks = vec![(format!("{f:?}-scores"), rows * cols)];
+            assert_grads_close(&GradCheckCfg::default(), &pre, &blocks, &dpre, |t| {
+                let mut y = t.to_vec();
+                ops::attn_rows(&mut y, cols, f);
+                (inner(&c, &y), 0)
+            });
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_central_difference() {
+        let (rows, d) = (3usize, 6usize);
+        let mut rng = Rng::new(41);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let g = randn(&mut rng, d, 0.8);
+        let b = randn(&mut rng, d, 0.2);
+        let c = randn(&mut rng, rows * d, 1.0);
+        let eps = 1e-5;
+
+        let mut dx = vec![0.0f32; rows * d];
+        let mut dg = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        layernorm_backward(&x, &g, &c, d, eps, &mut dx, &mut dg, &mut db);
+
+        // input gradient
+        let blocks = vec![("x".to_string(), rows * d)];
+        assert_grads_close(&GradCheckCfg::default(), &x, &blocks, &dx, |t| {
+            let mut y = t.to_vec();
+            ops::layernorm_rows(&mut y, &g, &b, d, eps);
+            (inner(&c, &y), 0)
+        });
+
+        // gain/bias gradients
+        let mut theta = g.clone();
+        theta.extend_from_slice(&b);
+        let mut analytic = dg.clone();
+        analytic.extend_from_slice(&db);
+        let blocks = vec![("g".to_string(), d), ("b".to_string(), d)];
+        assert_grads_close(&GradCheckCfg::default(), &theta, &blocks, &analytic, |t| {
+            let mut y = x.clone();
+            ops::layernorm_rows(&mut y, &t[..d], &t[d..], d, eps);
+            (inner(&c, &y), 0)
+        });
+    }
+
+    #[test]
+    fn scalenorm_backward_matches_central_difference() {
+        let (rows, d) = (2usize, 5usize);
+        let mut rng = Rng::new(55);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 1.0);
+        let g = 1.3f32;
+        let eps = 1e-5;
+
+        let mut dx = vec![0.0f32; rows * d];
+        let mut dg = 0.0f32;
+        scalenorm_backward(&x, g, &c, d, eps, &mut dx, &mut dg);
+
+        let blocks = vec![("x".to_string(), rows * d)];
+        assert_grads_close(&GradCheckCfg::default(), &x, &blocks, &dx, |t| {
+            let mut y = t.to_vec();
+            ops::scalenorm_rows(&mut y, g, d, eps);
+            (inner(&c, &y), 0)
+        });
+
+        let blocks = vec![("g".to_string(), 1)];
+        assert_grads_close(&GradCheckCfg::default(), &[g], &blocks, &[dg], |t| {
+            let mut y = x.clone();
+            ops::scalenorm_rows(&mut y, t[0], d, eps);
+            (inner(&c, &y), 0)
+        });
+    }
+
+    #[test]
+    fn gradients_accumulate_rather_than_overwrite() {
+        // the += convention: running a backward twice doubles the result
+        let (rows, d_in, d_out) = (2usize, 3usize, 2usize);
+        let mut rng = Rng::new(3);
+        let dy = randn(&mut rng, rows * d_out, 1.0);
+        let w = randn(&mut rng, d_in * d_out, 1.0);
+        let mut once = vec![0.0f32; rows * d_in];
+        dense_grad_input_acc(&dy, &w, rows, d_in, d_out, &mut once);
+        let mut twice = vec![0.0f32; rows * d_in];
+        dense_grad_input_acc(&dy, &w, rows, d_in, d_out, &mut twice);
+        dense_grad_input_acc(&dy, &w, rows, d_in, d_out, &mut twice);
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((2.0 * a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -75,20 +75,28 @@ pub struct BaselineParams<'a> {
 /// model-forward (reused across depth layers and calls) removes the
 /// per-layer-per-call `Vec` churn on the hot path; buffers are resized
 /// lazily so one scratch serves any layer geometry.
+///
+/// Fields are crate-visible because after a forward the scratch *is* the
+/// autograd tape: `grad::layer::CastTape::capture` snapshots exactly
+/// these buffers (plus the layer input) for the reverse pass.
 #[derive(Default)]
 pub struct CastScratch {
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    phi: Vec<f32>,
-    a_q: Vec<f32>,
-    a_k: Vec<f32>,
-    a_q_raw: Vec<f32>,
-    a_sum: Vec<f32>,
-    r_intra: Vec<f32>,
-    r_inter: Vec<f32>,
-    r: Vec<f32>,
-    slot_of: Vec<usize>,
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) phi: Vec<f32>,
+    pub(crate) a_q: Vec<f32>,
+    pub(crate) a_k: Vec<f32>,
+    pub(crate) a_q_raw: Vec<f32>,
+    pub(crate) a_sum: Vec<f32>,
+    pub(crate) r_intra: Vec<f32>,
+    pub(crate) r_inter: Vec<f32>,
+    pub(crate) r: Vec<f32>,
+    pub(crate) slot_of: Vec<usize>,
+    /// Cluster slot → token assignment (B, Nc, κ) from step 4.
+    pub(crate) idx: Vec<usize>,
+    /// 1.0 where the slot holds a real token, 0.0 for padding.
+    pub(crate) valid: Vec<f32>,
 }
 
 impl CastScratch {
@@ -304,7 +312,22 @@ pub fn cast_layer(
     ops::dense_into(x, p.wv_w, p.wv_b, rows, d, d, &mut ws.v);
     ops::dense_into(x, p.phi_w, p.phi_b, rows, d, 1, &mut ws.phi); // (B·N,)
 
-    let CastScratch { q, k, v, phi, a_q, a_k, a_q_raw, a_sum, r_intra, r_inter, r, slot_of } = ws;
+    let CastScratch {
+        q,
+        k,
+        v,
+        phi,
+        a_q,
+        a_k,
+        a_q_raw,
+        a_sum,
+        r_intra,
+        r_inter,
+        r,
+        slot_of,
+        idx,
+        valid,
+    } = ws;
     let q: &[f32] = q.as_slice();
     let k: &[f32] = k.as_slice();
     let v: &[f32] = v.as_slice();
@@ -379,8 +402,11 @@ pub fn cast_layer(
     );
     let a_q_raw_s: &[f32] = a_q_raw.as_slice();
 
-    // step 4: clustering (indices are non-differentiable, paper §3.2)
-    let (idx, valid) = cluster(&dims.clustering, &a_g, b, n, n_c, kappa)?;
+    // step 4: clustering (indices are non-differentiable, paper §3.2);
+    // the assignment stays in the scratch so the autograd tape sees it
+    let (idx_new, valid_new) = cluster(&dims.clustering, &a_g, b, n, n_c, kappa)?;
+    *idx = idx_new;
+    *valid = valid_new;
 
     // reverse map token→slot (+1; 0 = not a member) so the combination
     // scatter can run token-parallel with disjoint writes
@@ -400,8 +426,8 @@ pub fn cast_layer(
     // one task per (batch, cluster) cell with per-worker κ×κ scratch
     zeroed(r_intra, b * n_c * kappa * d);
     zeroed(r_inter, b * n_c * d);
-    let idx_s: &[usize] = &idx;
-    let valid_s: &[f32] = &valid;
+    let idx_s: &[usize] = idx.as_slice();
+    let valid_s: &[f32] = valid.as_slice();
     parallel::par_zip2_mut_with(
         r_intra.as_mut_slice(),
         kappa * d,
@@ -543,8 +569,10 @@ pub fn cast_layer(
 /// enclosing non-overlapping window) baselines.  Scores live in
 /// per-worker scratch (O(window), not O(N²)) and honor `attn` (the
 /// baselines used to hardcode softmax, silently ignoring laplace configs).
+/// Crate-visible so the autograd tape (`grad::layer`) can recompute the
+/// pre-projection attention output instead of storing it.
 #[allow(clippy::too_many_arguments)]
-fn attend_windows(
+pub(crate) fn attend_windows(
     out: &mut [f32],
     q: &[f32],
     k: &[f32],
@@ -630,23 +658,17 @@ struct LshScratch {
     v_s: Vec<f32>,
     chunk_out: Vec<f32>,
     scores: Vec<f32>,
-    order: Vec<usize>,
 }
 
-/// Reformer-style LSH attention: shared Q/K projection, random-rotation
-/// hashing into Nc buckets, bucket-sorted κ-sized chunks.  Hashing runs
-/// row-parallel; the bucket-sort + chunked attention shards per batch.
-pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
-    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
-    let d = dims.d();
+/// Bucket-sorted token order of the LSH baseline: random-rotation
+/// hashing into Nc buckets (fixed pseudorandom rotation — python uses
+/// PRNGKey(0); a fixed draw keeps the layer deterministic), then a
+/// stable ascending per-batch sort by bucket (ties keep sequence
+/// order).  Returns the flat (B, N) order.  Crate-visible so the
+/// autograd tape treats the (non-differentiable) sort as a constant and
+/// shares this exact code with the forward.
+pub(crate) fn lsh_sort_order(qk: &[f32], b: usize, n: usize, d: usize, n_c: usize) -> Vec<usize> {
     let rows = b * n;
-    let kappa = dims.kappa.min(n).max(1);
-    let attn = dims.attn;
-    let qk = ops::dense(x, p.wq_w, p.wq_b, rows, d, d); // Reformer ties Q and K
-    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
-
-    // fixed pseudorandom rotation (python uses PRNGKey(0); a fixed draw
-    // keeps the layer deterministic — the property that matters)
     let rc = (n_c / 2).max(1);
     let mut rng = Rng::new(0);
     let rot: Vec<f32> = (0..d * rc).map(|_| rng.gaussian() as f32).collect();
@@ -678,9 +700,37 @@ pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>>
         }
     });
 
+    let buckets_s: &[usize] = &buckets;
+    let mut order = vec![0usize; rows];
+    parallel::par_chunks_mut(order.as_mut_slice(), n, |bb, ord| {
+        for (pos, o) in ord.iter_mut().enumerate() {
+            *o = pos;
+        }
+        ord.sort_by_key(|&i| buckets_s[bb * n + i]);
+    });
+    order
+}
+
+/// The bucket-chunked attention core of the LSH baseline: tokens are
+/// copied into `order`, attended in κ-sized chunks (padding keys masked),
+/// and un-sorted back to sequence order.  Shards per batch.  Shared by
+/// [`lsh_layer`] and the autograd backward's recompute path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lsh_attend(
+    qk: &[f32],
+    v: &[f32],
+    order: &[usize],
+    b: usize,
+    n: usize,
+    h: usize,
+    d_h: usize,
+    kappa: usize,
+    attn: AttnFn,
+) -> Vec<f32> {
+    let d = h * d_h;
+    let rows = b * n;
     let m = n.div_ceil(kappa) * kappa; // padded length
     let tau = (d_h as f32).sqrt();
-    let buckets_s: &[usize] = &buckets;
     let mut out = vec![0.0f32; rows * d];
     parallel::par_chunks_mut_with(
         out.as_mut_slice(),
@@ -690,17 +740,13 @@ pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>>
             v_s: vec![0.0f32; m * d],
             chunk_out: vec![0.0f32; m * d],
             scores: vec![0.0f32; kappa],
-            order: Vec::with_capacity(n),
         },
         |scr, bb, out_b| {
-            // stable ascending sort by bucket (ties keep sequence order)
-            scr.order.clear();
-            scr.order.extend(0..n);
-            scr.order.sort_by_key(|&i| buckets_s[bb * n + i]);
+            let ord = &order[bb * n..(bb + 1) * n];
             scr.qk_s.iter_mut().for_each(|z| *z = 0.0);
             scr.v_s.iter_mut().for_each(|z| *z = 0.0);
             scr.chunk_out.iter_mut().for_each(|z| *z = 0.0);
-            for (pos, &t) in scr.order.iter().enumerate() {
+            for (pos, &t) in ord.iter().enumerate() {
                 scr.qk_s[pos * d..(pos + 1) * d].copy_from_slice(&qk[(bb * n + t) * d..][..d]);
                 scr.v_s[pos * d..(pos + 1) * d].copy_from_slice(&v[(bb * n + t) * d..][..d]);
             }
@@ -731,11 +777,26 @@ pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>>
                 }
             }
             // un-sort back to sequence order (padding rows are dropped)
-            for (pos, &t) in scr.order.iter().enumerate() {
+            for (pos, &t) in ord.iter().enumerate() {
                 out_b[t * d..][..d].copy_from_slice(&scr.chunk_out[pos * d..][..d]);
             }
         },
     );
+    out
+}
+
+/// Reformer-style LSH attention: shared Q/K projection, random-rotation
+/// hashing into Nc buckets, bucket-sorted κ-sized chunks.  Hashing runs
+/// row-parallel; the bucket-sort + chunked attention shards per batch.
+pub fn lsh_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
+    let (b, n, h, d_h, n_c) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let rows = b * n;
+    let kappa = dims.kappa.min(n).max(1);
+    let qk = ops::dense(x, p.wq_w, p.wq_b, rows, d, d); // Reformer ties Q and K
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let order = lsh_sort_order(&qk, b, n, d, n_c);
+    let out = lsh_attend(&qk, &v, &order, b, n, h, d_h, kappa, dims.attn);
     Ok(ops::dense(&out, p.wo_w, p.wo_b, rows, d, d))
 }
 

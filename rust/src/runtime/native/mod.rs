@@ -12,7 +12,13 @@
 //! Every hot path runs on the `util::parallel` worker pool (sized by
 //! `CAST_NUM_THREADS` / `available_parallelism`); outputs are
 //! bit-identical for any thread count — see DESIGN.md §Threading.
+//!
+//! `train_step` backpropagates through the full model by default via the
+//! [`grad`] autograd subsystem (tape capture + threaded reverse passes,
+//! DESIGN.md §Autograd); `CAST_TRAIN_SCOPE=head` selects the PR-1
+//! head-only regression path.
 
+pub mod grad;
 pub mod layer;
 pub mod model;
 pub mod ops;

@@ -11,11 +11,14 @@
 //!   train_step (P params, P m, P v, step, lr, tokens, labels)
 //!                                                  → (P, P, P, step', loss, acc)
 //!
-//! Training scope: the forward pass is the full CAST model; the gradient
-//! is exact for the classifier head (`head.fc`, `head.out`) with the
-//! encoder backbone frozen (AdamW + global-norm clipping, as in
-//! `python/compile/train.py`).  Full native backpropagation through the
-//! attention stack is a ROADMAP item; the PJRT backend trains everything.
+//! Training scope: by default `train_step` backpropagates through the
+//! **whole model** (`runtime::native::grad` — every CAST layer, norms,
+//! FFNs, embedding, pooling, head) and applies a full-parameter AdamW
+//! update with the same global-norm clipping as
+//! `python/compile/train.py`.  The PR-1 head-only path (exact classifier
+//! gradients, frozen backbone) is kept for regression comparison behind
+//! `CAST_TRAIN_SCOPE=head` or a `train_scope: "head"` entry in the
+//! manifest's `config` object.
 
 use std::collections::HashMap;
 
@@ -23,9 +26,11 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::artifacts::{Manifest, ModelMeta, ParamSpec};
 use crate::runtime::tensor::HostTensor;
+use crate::util::json::Json;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 
+use super::grad;
 use super::layer::{self, BaselineParams, CastParams, CastScratch, Dims};
 use super::ops::{self, AttnFn};
 
@@ -34,7 +39,7 @@ const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 const WEIGHT_DECAY: f32 = 1e-2;
 const GRAD_CLIP: f32 = 1.0;
-const NORM_EPS: f32 = 1e-5;
+pub(crate) const NORM_EPS: f32 = 1e-5;
 
 /// Borrowed flat parameter list, addressable by manifest name.
 pub struct Params<'a> {
@@ -63,7 +68,7 @@ impl<'a> Params<'a> {
         Ok(Params { by_name })
     }
 
-    fn f(&self, name: &str) -> Result<&'a [f32]> {
+    pub(crate) fn f(&self, name: &str) -> Result<&'a [f32]> {
         self.by_name
             .get(name)
             .with_context(|| format!("model parameter {name:?} missing from manifest"))?
@@ -72,7 +77,7 @@ impl<'a> Params<'a> {
     }
 }
 
-fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
+pub(crate) fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
     ensure!(meta.heads > 0 && meta.d % meta.heads == 0, "d={} not divisible by h={}", meta.d, meta.heads);
     Ok(Dims {
         b,
@@ -106,7 +111,7 @@ struct Workspace {
     ffn_out: Vec<f32>,
 }
 
-fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f32]) -> Result<()> {
+pub(crate) fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f32]) -> Result<()> {
     let d = meta.d;
     let blk = parallel::row_block(x.len() / d.max(1)) * d;
     if meta.norm == "scale" {
@@ -341,13 +346,19 @@ fn pooled_features(p: &Params, meta: &ModelMeta, tokens: &HostTensor) -> Result<
     }
 }
 
-struct HeadForward {
-    h_pre: Vec<f32>,
-    h: Vec<f32>,
-    logits: Vec<f32>,
+pub(crate) struct HeadForward {
+    pub(crate) h_pre: Vec<f32>,
+    pub(crate) h: Vec<f32>,
+    pub(crate) logits: Vec<f32>,
 }
 
-fn head_forward(p: &Params, meta: &ModelMeta, feats: &[f32], b: usize, d_in: usize) -> Result<HeadForward> {
+pub(crate) fn head_forward(
+    p: &Params,
+    meta: &ModelMeta,
+    feats: &[f32],
+    b: usize,
+    d_in: usize,
+) -> Result<HeadForward> {
     let d = meta.d;
     let h_pre = ops::dense(feats, p.f("head.fc.w")?, p.f("head.fc.b")?, b, d_in, d);
     let h: Vec<f32> = h_pre.iter().map(|&v| ops::gelu(v)).collect();
@@ -445,39 +456,21 @@ pub fn run_predict_ag(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
     )])
 }
 
-/// `train_step`: one AdamW update with exact classifier-head gradients
-/// (backbone frozen — see module docs).  Input/output arity matches the
-/// AOT train_step program.
-pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    let p_count = manifest.n_params();
-    ensure!(
-        inputs.len() == 3 * p_count + 4,
-        "train_step takes 3x{} params + (step, lr, tokens, labels), got {} inputs",
-        p_count,
-        inputs.len()
-    );
-    let params = &inputs[..p_count];
-    let m_in = &inputs[p_count..2 * p_count];
-    let v_in = &inputs[2 * p_count..3 * p_count];
-    let step = inputs[3 * p_count].scalar().context("step")?;
-    let lr = inputs[3 * p_count + 1].scalar().context("lr")?;
-    let tokens = inputs[3 * p_count + 2];
-    let labels = inputs[3 * p_count + 3].as_s32().context("labels")?;
-
-    let meta = &manifest.meta;
-    let p = Params::bind(&manifest.params, params)?;
-    let (feats, d_in) = pooled_features(&p, meta, tokens)?;
+/// Softmax cross-entropy over a (B, nc) logit block: returns the mean
+/// loss, the argmax accuracy, and `dL/dlogits` (already scaled by 1/B).
+/// Shared by the full-backprop and head-only training paths.
+pub(crate) fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    nc: usize,
+) -> Result<(f32, f32, Vec<f32>)> {
     let b = labels.len();
-    ensure!(feats.len() == b * d_in, "feature/label batch mismatch");
-    let head = head_forward(&p, meta, &feats, b, d_in)?;
-    let (d, nc) = (meta.d, meta.n_classes);
-
-    // softmax cross-entropy + accuracy + dL/dlogits
+    ensure!(logits.len() == b * nc, "logits length {} != {}x{}", logits.len(), b, nc);
     let mut loss = 0.0f64;
     let mut correct = 0usize;
     let mut dlogits = vec![0.0f32; b * nc];
     for i in 0..b {
-        let row = &head.logits[i * nc..(i + 1) * nc];
+        let row = &logits[i * nc..(i + 1) * nc];
         let label = labels[i];
         ensure!(
             label >= 0 && (label as usize) < nc,
@@ -502,49 +495,112 @@ pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
     for g in dlogits.iter_mut() {
         *g *= inv_b;
     }
-    let loss = (loss / b as f64) as f32;
-    let acc = correct as f32 / b as f32;
+    Ok(((loss / b as f64) as f32, correct as f32 / b as f32, dlogits))
+}
 
-    // exact head gradients
-    let out_w = p.f("head.out.w")?; // (d, nc)
+/// What `train_step` differentiates (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TrainScope {
+    /// Exact gradients for every parameter (default).
+    Full,
+    /// PR-1 regression path: classifier head only, backbone frozen.
+    Head,
+}
+
+/// Scope resolution: `CAST_TRAIN_SCOPE` env var, else a `train_scope`
+/// key in the manifest's `config` object, else full backprop.
+fn train_scope(manifest: &Manifest) -> Result<TrainScope> {
+    let choice = std::env::var("CAST_TRAIN_SCOPE").ok().or_else(|| {
+        manifest
+            .raw
+            .path("config.train_scope")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    });
+    match choice.as_deref() {
+        None | Some("full") => Ok(TrainScope::Full),
+        Some("head") => Ok(TrainScope::Head),
+        Some(other) => bail!("unknown train scope {other:?} (know \"full\", \"head\")"),
+    }
+}
+
+/// Head-only gradients (the frozen-backbone regression path): exact for
+/// `head.fc` / `head.out`, `None` for everything else.
+fn head_only_grads(
+    manifest: &Manifest,
+    p: &Params,
+    tokens: &HostTensor,
+    labels: &[i32],
+) -> Result<(f32, f32, Vec<Option<Vec<f32>>>)> {
+    let meta = &manifest.meta;
+    let (feats, d_in) = pooled_features(p, meta, tokens)?;
+    let b = labels.len();
+    ensure!(feats.len() == b * d_in, "feature/label batch mismatch");
+    let head = head_forward(p, meta, &feats, b, d_in)?;
+    let (d, nc) = (meta.d, meta.n_classes);
+    let (loss, acc, dlogits) = softmax_xent(&head.logits, labels, nc)?;
+
     let mut g_out_w = vec![0.0f32; d * nc];
     let mut g_out_b = vec![0.0f32; nc];
-    let mut dh_pre = vec![0.0f32; b * d];
-    for i in 0..b {
-        for o in 0..nc {
-            let gl = dlogits[i * nc + o];
-            if gl == 0.0 {
-                continue;
-            }
-            g_out_b[o] += gl;
-            for j in 0..d {
-                g_out_w[j * nc + o] += head.h[i * d + j] * gl;
-                dh_pre[i * d + j] += gl * out_w[j * nc + o];
-            }
-        }
+    grad::ops::dense_grad_params(&head.h, &dlogits, b, d, nc, &mut g_out_w, &mut g_out_b);
+    let mut dh = vec![0.0f32; b * d];
+    grad::ops::dense_grad_input_acc(&dlogits, p.f("head.out.w")?, b, d, nc, &mut dh);
+    for (v, &pre) in dh.iter_mut().zip(&head.h_pre) {
+        *v *= ops::gelu_prime(pre);
     }
-    for (i, g) in dh_pre.iter_mut().enumerate() {
-        *g *= ops::gelu_prime(head.h_pre[i]);
-    }
-    let mut g_fc_w = vec![0.0f32; d_in * d]; // (d_in, d)
+    let mut g_fc_w = vec![0.0f32; d_in * d];
     let mut g_fc_b = vec![0.0f32; d];
-    for i in 0..b {
-        for j in 0..d {
-            let g = dh_pre[i * d + j];
-            if g == 0.0 {
-                continue;
-            }
-            g_fc_b[j] += g;
-            for k in 0..d_in {
-                g_fc_w[k * d + j] += feats[i * d_in + k] * g;
-            }
+    grad::ops::dense_grad_params(&feats, &dh, b, d_in, d, &mut g_fc_w, &mut g_fc_b);
+
+    let mut by_name: HashMap<&str, Vec<f32>> = HashMap::new();
+    by_name.insert("head.fc.b", g_fc_b);
+    by_name.insert("head.fc.w", g_fc_w);
+    by_name.insert("head.out.b", g_out_b);
+    by_name.insert("head.out.w", g_out_w);
+    let grads = manifest
+        .params
+        .iter()
+        .map(|spec| by_name.remove(spec.name.as_str()))
+        .collect();
+    Ok((loss, acc, grads))
+}
+
+/// `train_step`: one AdamW update (global-norm clip 1.0, decay on `.w`
+/// weights only, as in `python/compile/train.py`).  The gradient scope
+/// is full-model backprop by default, head-only behind the regression
+/// flag — see module docs.  Input/output arity matches the AOT program.
+pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let p_count = manifest.n_params();
+    ensure!(
+        inputs.len() == 3 * p_count + 4,
+        "train_step takes 3x{} params + (step, lr, tokens, labels), got {} inputs",
+        p_count,
+        inputs.len()
+    );
+    let params = &inputs[..p_count];
+    let m_in = &inputs[p_count..2 * p_count];
+    let v_in = &inputs[2 * p_count..3 * p_count];
+    let step = inputs[3 * p_count].scalar().context("step")?;
+    let lr = inputs[3 * p_count + 1].scalar().context("lr")?;
+    let tokens = inputs[3 * p_count + 2];
+    let labels = inputs[3 * p_count + 3].as_s32().context("labels")?;
+
+    let (loss, acc, grads) = match train_scope(manifest)? {
+        TrainScope::Full => {
+            let mut ws = grad::GradScratch::new();
+            let out = grad::loss_and_grads(manifest, params, tokens, labels, &mut ws)?;
+            (out.loss, out.acc, out.grads.into_iter().map(Some).collect::<Vec<_>>())
         }
-    }
+        TrainScope::Head => {
+            let p = Params::bind(&manifest.params, params)?;
+            head_only_grads(manifest, &p, tokens, labels)?
+        }
+    };
 
     // global-norm clip over the trained subset (train.py: clip = 1.0)
     let mut sq = 0.0f64;
-    for grads in [&g_out_w, &g_out_b, &g_fc_w, &g_fc_b] {
-        sq += grads.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+    for g in grads.iter().flatten() {
+        sq += g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
     }
     let gnorm = sq.sqrt() as f32;
     let clip_scale = (GRAD_CLIP / gnorm.max(1e-6)).min(1.0);
@@ -552,17 +608,12 @@ pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
     let t = step + 1.0;
     let bc1 = 1.0 - ADAM_B1.powf(t);
     let bc2 = 1.0 - ADAM_B2.powf(t);
-    let mut grads_by_name: HashMap<&str, Vec<f32>> = HashMap::new();
-    grads_by_name.insert("head.fc.b", g_fc_b);
-    grads_by_name.insert("head.fc.w", g_fc_w);
-    grads_by_name.insert("head.out.b", g_out_b);
-    grads_by_name.insert("head.out.w", g_out_w);
 
     let mut p_out = Vec::with_capacity(p_count);
     let mut m_out = Vec::with_capacity(p_count);
     let mut v_out = Vec::with_capacity(p_count);
     for (i, spec) in manifest.params.iter().enumerate() {
-        match grads_by_name.get(spec.name.as_str()) {
+        match &grads[i] {
             Some(grad) => {
                 let pv = params[i].as_f32()?;
                 let mv = m_in[i].as_f32()?;
@@ -700,17 +751,26 @@ mod tests {
         assert!(run_predict_ag(&man, &inputs).is_err());
     }
 
-    #[test]
-    fn train_step_arity_and_counters() {
-        let man = tiny_manifest("cast_topk");
-        let params = init_params(&man, 5);
+    /// A manifest whose config pins the PR-1 head-only regression scope
+    /// (the raw-JSON route — no process-global env mutation in tests).
+    fn head_scope_manifest(variant: &str) -> Manifest {
+        let mut man = tiny_manifest(variant);
+        man.raw = Json::obj(vec![(
+            "config",
+            Json::obj(vec![("train_scope", Json::str("head"))]),
+        )]);
+        man
+    }
+
+    fn train_step_once(man: &Manifest, seed: u32) -> (Vec<HostTensor>, Vec<HostTensor>) {
+        let params = init_params(man, seed);
         let zeros: Vec<HostTensor> = params
             .iter()
             .map(|t| HostTensor::zeros(t.dtype(), t.shape.clone()))
             .collect();
         let step = HostTensor::scalar_f32(0.0);
         let lr = HostTensor::scalar_f32(1e-2);
-        let tokens = tokens_for(&man, |i| (i % 29) as i32);
+        let tokens = tokens_for(man, |i| (i % 29) as i32);
         let labels = HostTensor::s32(vec![2], vec![0, 1]);
         let mut inputs: Vec<&HostTensor> = params.iter().collect();
         inputs.extend(zeros.iter());
@@ -719,7 +779,14 @@ mod tests {
         inputs.push(&lr);
         inputs.push(&tokens);
         inputs.push(&labels);
-        let out = run_train_step(&man, &inputs).unwrap();
+        let out = run_train_step(man, &inputs).unwrap();
+        (params, out)
+    }
+
+    #[test]
+    fn train_step_full_scope_updates_the_whole_model() {
+        let man = tiny_manifest("cast_topk");
+        let (params, out) = train_step_once(&man, 5);
         let p = man.n_params();
         assert_eq!(out.len(), 3 * p + 3);
         assert_eq!(out[3 * p].scalar().unwrap(), 1.0); // step'
@@ -727,7 +794,34 @@ mod tests {
         let acc = out[3 * p + 2].scalar().unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&acc));
-        // head params moved, backbone untouched
+        // full backprop: backbone weights move too (embedding, attention
+        // projections, surrogate tokens, norms, FFN, head)
+        for probe in [
+            "embed.emb",
+            "proj.w",
+            "blocks.0.attn.wq.w",
+            "blocks.0.attn.s",
+            "blocks.0.attn.phi.w",
+            "blocks.1.ffn.in.w",
+            "blocks.1.norm2.g",
+            "head.out.w",
+        ] {
+            let i = man.params.iter().position(|s| s.name == probe).unwrap();
+            assert_ne!(
+                params[i].as_f32().unwrap(),
+                out[i].as_f32().unwrap(),
+                "{probe} should update under full backprop"
+            );
+        }
+        for t in out.iter().take(p) {
+            assert!(t.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn train_step_head_scope_keeps_backbone_frozen() {
+        let man = head_scope_manifest("cast_topk");
+        let (params, out) = train_step_once(&man, 5);
         for (i, spec) in man.params.iter().enumerate() {
             let before = params[i].as_f32().unwrap();
             let after = out[i].as_f32().unwrap();
@@ -750,7 +844,7 @@ mod tests {
         let mut v = m.clone();
         let tokens = tokens_for(&man, |i| ((i * 7 + 3) % 90) as i32);
         let labels = HostTensor::s32(vec![2], vec![0, 1]);
-        let lr = HostTensor::scalar_f32(1e-2);
+        let lr = HostTensor::scalar_f32(3e-3);
         let mut step = HostTensor::scalar_f32(0.0);
         let mut first = f32::NAN;
         let mut last = f32::NAN;

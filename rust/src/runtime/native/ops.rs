@@ -171,6 +171,11 @@ pub fn erf(x: f32) -> f32 {
     (sign * (1.0 - poly * (-x * x).exp())) as f32
 }
 
+/// d erf / dx = 2/sqrt(pi) * exp(-x^2) (the laplace attention backward).
+pub fn erf_prime(x: f32) -> f32 {
+    std::f32::consts::FRAC_2_SQRT_PI * (-x * x).exp()
+}
+
 pub fn sigmoid(x: f32) -> f32 {
     if x >= 0.0 {
         1.0 / (1.0 + (-x).exp())
@@ -358,6 +363,21 @@ mod tests {
         assert!((erf(1.0) - 0.8427).abs() < 1e-3);
         assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
         assert!((erf(3.0) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erf_prime_matches_numeric_derivative() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let num = (erf(x + h) - erf(x - h)) / (2.0 * h);
+            assert!(
+                (num - erf_prime(x)).abs() < 1e-2,
+                "x={x}: {num} vs {}",
+                erf_prime(x)
+            );
+        }
+        // vanishes fast in the tails (masked scores must not explode)
+        assert_eq!(erf_prime(-1e6), 0.0);
     }
 
     #[test]

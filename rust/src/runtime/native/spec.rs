@@ -7,6 +7,8 @@
 //! Keeping this order bit-identical to the AOT pipeline means one
 //! `ModelState` / checkpoint layout serves both backends.
 
+use anyhow::Result;
+
 use crate::runtime::artifacts::{ModelMeta, ParamSpec};
 use crate::runtime::tensor::DType;
 
@@ -91,6 +93,20 @@ pub fn tiny_meta(variant: &str) -> ModelMeta {
     }
 }
 
+/// [`tiny_meta`] adapted to another LRA task's token space: the vocab,
+/// class count, and dual-encoder shape come from the task generator, so
+/// `cast train --task <t>` can synthesize a runnable config for any
+/// task with zero artifacts on disk.
+pub fn tiny_meta_for_task(task: &str, variant: &str) -> Result<ModelMeta> {
+    let gen = crate::data::task(task)?;
+    let mut meta = tiny_meta(variant);
+    meta.task = task.to_string();
+    meta.vocab = gen.vocab().max(1);
+    meta.n_classes = gen.n_classes().max(2);
+    meta.dual = gen.dual();
+    Ok(meta)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +143,18 @@ mod tests {
         assert_eq!(cast.len() - vanilla.len(), 2 * 3);
         assert_eq!(vanilla[0].name, "blocks.0.attn.wk.b");
         assert!(vanilla.iter().all(|p| !p.name.contains(".phi.") && !p.name.ends_with(".s")));
+    }
+
+    #[test]
+    fn tiny_meta_for_task_inherits_task_token_space() {
+        let m = tiny_meta_for_task("listops", "cast_topk").unwrap();
+        assert_eq!(m.task, "listops");
+        assert_eq!(m.n_classes, 10);
+        assert!(!m.dual);
+        let r = tiny_meta_for_task("retrieval", "vanilla").unwrap();
+        assert!(r.dual);
+        assert_eq!(r.tokens_shape()[1], 2);
+        assert!(tiny_meta_for_task("nope", "vanilla").is_err());
     }
 
     #[test]

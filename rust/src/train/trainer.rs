@@ -2,7 +2,7 @@
 //! batch pipeline, schedules the learning rate, runs held-out evaluation
 //! through the `predict` artifact, and records metrics.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -94,6 +94,34 @@ impl Trainer {
             manifest.meta.batch
         );
         Ok(Trainer { engine, manifest, train_exe, predict_exe, state, gen, cfg })
+    }
+
+    /// Load a checkpoint into the trainer: parameters, AdamW moment
+    /// buffers (`m`/`v`), and the step counter all restore, so the
+    /// optimizer state is complete — every subsequent `train_step` is
+    /// bit-identical to the one an uninterrupted process would run from
+    /// the same state (see `integration_native.rs`).  Note that `run()`
+    /// itself restarts the batch stream and LR schedule at position 0;
+    /// continuing a schedule mid-flight is the caller's choice of
+    /// `--steps`/`--warmup`/`--seed`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let (state, names) = checkpoint::load(path)?;
+        anyhow::ensure!(
+            names.len() == self.manifest.params.len(),
+            "checkpoint has {} params, manifest {} — wrong model?",
+            names.len(),
+            self.manifest.params.len()
+        );
+        for (name, spec) in names.iter().zip(&self.manifest.params) {
+            anyhow::ensure!(
+                name == &spec.name,
+                "checkpoint parameter {name:?} does not match manifest {:?}",
+                spec.name
+            );
+        }
+        crate::info!("resume: {} params from {:?} at step {}", names.len(), path, state.step);
+        self.state = state;
+        Ok(())
     }
 
     /// One optimization step on the given batch. Returns (loss, acc).

@@ -4,6 +4,14 @@
 //! drawn by `gen`; on failure it performs a bounded greedy shrink using the
 //! caller-provided `shrink` candidates (if any) and panics with the seed so
 //! the case is reproducible: rerun with `PROP_SEED=<seed>`.
+//!
+//! Also home to the reusable central-difference gradient checker
+//! ([`grad_check`]) the native autograd subsystem validates itself with:
+//! tolerance-aware, per-parameter-block reporting, and robust to the
+//! non-differentiable points of hard clustering via a caller-supplied
+//! discrete-state fingerprint (coordinates whose perturbation flips the
+//! cluster assignment are skipped, not failed — the derivative genuinely
+//! does not exist there).
 
 use super::rng::Rng;
 
@@ -76,6 +84,134 @@ pub fn check_shrink<T: std::fmt::Debug + Clone>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// central-difference gradient checking
+// ---------------------------------------------------------------------------
+
+/// Tolerances and sampling policy for [`grad_check`].
+#[derive(Clone, Debug)]
+pub struct GradCheckCfg {
+    /// Central-difference step.
+    pub eps: f32,
+    /// Relative tolerance: a coordinate passes when
+    /// `|num - ana| <= abs_tol + rel_tol * max(|num|, |ana|)`.
+    pub rel_tol: f32,
+    /// Absolute floor of the tolerance (f32 loss evaluations are noisy
+    /// near zero gradients).
+    pub abs_tol: f32,
+    /// Coordinates checked per block (evenly strided; every coordinate
+    /// when the block is smaller).
+    pub max_per_block: usize,
+}
+
+impl Default for GradCheckCfg {
+    fn default() -> Self {
+        GradCheckCfg { eps: 1e-3, rel_tol: 1e-2, abs_tol: 1e-4, max_per_block: 16 }
+    }
+}
+
+/// Outcome of checking one named parameter block.
+#[derive(Clone, Debug)]
+pub struct GradBlockReport {
+    pub name: String,
+    /// Coordinates actually compared.
+    pub checked: usize,
+    /// Coordinates skipped because the perturbation changed the discrete
+    /// state fingerprint (clustering flip — no derivative there).
+    pub skipped: usize,
+    /// Largest `|num - ana| / max(|num|, |ana|, 1e-6)` over the block.
+    pub max_rel_err: f32,
+    /// `(flat index, analytic, numeric)` of the worst coordinate.
+    pub worst: Option<(usize, f32, f32)>,
+}
+
+/// Central-difference check of `analytic` (the gradient of `eval`'s loss
+/// at `theta`).  `blocks` is a `(name, len)` partition of `theta` in
+/// order — per-parameter-block reporting comes back in the same order.
+/// `eval` returns `(loss, discrete-state fingerprint)`; a coordinate is
+/// skipped when the two perturbed fingerprints differ.  Returns `Err`
+/// naming every out-of-tolerance block.
+pub fn grad_check(
+    cfg: &GradCheckCfg,
+    theta: &[f32],
+    blocks: &[(String, usize)],
+    analytic: &[f32],
+    mut eval: impl FnMut(&[f32]) -> (f32, u64),
+) -> Result<Vec<GradBlockReport>, String> {
+    let total: usize = blocks.iter().map(|(_, len)| len).sum();
+    assert_eq!(total, theta.len(), "blocks must partition theta");
+    assert_eq!(analytic.len(), theta.len(), "analytic gradient length");
+    let mut work = theta.to_vec();
+    let mut reports = Vec::with_capacity(blocks.len());
+    let mut failures = Vec::new();
+    let mut offset = 0usize;
+    for (name, len) in blocks {
+        let stride = (len / cfg.max_per_block.max(1)).max(1);
+        let mut report = GradBlockReport {
+            name: name.clone(),
+            checked: 0,
+            skipped: 0,
+            max_rel_err: 0.0,
+            worst: None,
+        };
+        let mut block_fail: Option<String> = None;
+        for j in (0..*len).step_by(stride) {
+            let i = offset + j;
+            let saved = work[i];
+            work[i] = saved + cfg.eps;
+            let (lp, fp_plus) = eval(&work);
+            work[i] = saved - cfg.eps;
+            let (lm, fp_minus) = eval(&work);
+            work[i] = saved;
+            if fp_plus != fp_minus {
+                report.skipped += 1;
+                continue;
+            }
+            let num = (lp - lm) / (2.0 * cfg.eps);
+            let ana = analytic[i];
+            let diff = (num - ana).abs();
+            let rel = diff / num.abs().max(ana.abs()).max(1e-6);
+            report.checked += 1;
+            if rel > report.max_rel_err {
+                report.max_rel_err = rel;
+                report.worst = Some((i, ana, num));
+            }
+            let tol = cfg.abs_tol + cfg.rel_tol * num.abs().max(ana.abs());
+            if diff > tol && block_fail.is_none() {
+                block_fail = Some(format!(
+                    "block {name:?} coord {i}: analytic {ana:.6} vs numeric {num:.6} \
+                     (diff {diff:.2e} > tol {tol:.2e})"
+                ));
+            }
+        }
+        if let Some(msg) = block_fail {
+            failures.push(msg);
+        }
+        reports.push(report);
+        offset += len;
+    }
+    if failures.is_empty() {
+        Ok(reports)
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
+/// [`grad_check`] that panics with the full report on failure — the
+/// assertion form the grad tests use.
+pub fn assert_grads_close(
+    cfg: &GradCheckCfg,
+    theta: &[f32],
+    blocks: &[(String, usize)],
+    analytic: &[f32],
+    eval: impl FnMut(&[f32]) -> (f32, u64),
+) -> Vec<GradBlockReport> {
+    match grad_check(cfg, theta, blocks, analytic, eval) {
+        Ok(reports) => reports,
+        Err(msg) => panic!("gradient check failed:\n{msg}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +252,63 @@ mod tests {
             |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
             |_| Err("fails everywhere".into()),
         );
+    }
+
+    #[test]
+    fn grad_check_accepts_exact_quadratic_gradient() {
+        // L = sum(a_i * x_i^2): dL/dx_i = 2 a_i x_i, exactly representable
+        let a = [0.5f32, -1.0, 2.0, 0.25, 1.5];
+        let theta = [0.3f32, -0.7, 0.9, 1.1, -0.2];
+        let analytic: Vec<f32> =
+            theta.iter().zip(&a).map(|(&x, &c)| 2.0 * c * x).collect();
+        let blocks = vec![("w".to_string(), 3), ("b".to_string(), 2)];
+        let reports = assert_grads_close(
+            &GradCheckCfg::default(),
+            &theta,
+            &blocks,
+            &analytic,
+            |t| (t.iter().zip(&a).map(|(&x, &c)| c * x * x).sum(), 0),
+        );
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].checked, 3);
+        assert_eq!(reports[1].checked, 2);
+        assert!(reports.iter().all(|r| r.skipped == 0));
+    }
+
+    #[test]
+    fn grad_check_rejects_wrong_gradient_and_names_block() {
+        let theta = [0.5f32, 0.5];
+        let analytic = [1.0f32, 99.0]; // second entry is wrong
+        let blocks = vec![("ok".to_string(), 1), ("bad".to_string(), 1)];
+        let err = grad_check(
+            &GradCheckCfg::default(),
+            &theta,
+            &blocks,
+            &analytic,
+            |t| (t.iter().sum(), 0),
+        )
+        .unwrap_err();
+        assert!(err.contains("bad"), "failure must name the block: {err}");
+        assert!(!err.contains("\"ok\""), "passing block must not be reported: {err}");
+    }
+
+    #[test]
+    fn grad_check_skips_fingerprint_flips() {
+        // loss jumps discontinuously when x crosses 0 — the fingerprint
+        // marks the branch, so the coordinate is skipped, not failed
+        let theta = [1e-4f32];
+        let blocks = vec![("x".to_string(), 1)];
+        let reports = assert_grads_close(
+            &GradCheckCfg { eps: 1e-2, ..Default::default() },
+            &theta,
+            &blocks,
+            &[0.0],
+            |t| {
+                let branch = if t[0] >= 0.0 { 1u64 } else { 0 };
+                (if t[0] >= 0.0 { 5.0 } else { -3.0 }, branch)
+            },
+        );
+        assert_eq!(reports[0].skipped, 1);
+        assert_eq!(reports[0].checked, 0);
     }
 }

@@ -207,6 +207,124 @@ fn checkpoint_roundtrip_on_native_state() {
     );
 }
 
+/// One full-backprop train_step on a fixed batch, via the engine path.
+fn fixed_batch_step(
+    exe: &std::sync::Arc<dyn cast::runtime::Executable>,
+    state: &mut ModelState,
+    tokens: &HostTensor,
+    labels: &HostTensor,
+) {
+    let scalars = (HostTensor::scalar_f32(state.step), HostTensor::scalar_f32(2e-3));
+    let inputs = state.train_inputs_refs(&scalars, tokens, labels);
+    let outputs = exe.run_refs(&inputs).unwrap();
+    state.absorb(outputs).unwrap();
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_including_adam_moments() {
+    // 3 steps -> checkpoint -> 2 more must equal 5 uninterrupted steps
+    // exactly: the checkpoint carries params, m, v, AND the step counter,
+    // so bias correction and momentum resume mid-flight.
+    let manifest = tiny_manifest("cast_topk");
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(&manifest, "train_step").unwrap();
+    let tokens = HostTensor::s32(
+        manifest.tokens_shape.clone(),
+        (0..128).map(|i| ((i * 13 + 1) % 90) as i32).collect(),
+    );
+    let labels = HostTensor::s32(vec![2], vec![0, 1]);
+
+    let mut state = ModelState::init(&engine, &manifest, 3).unwrap();
+    for _ in 0..3 {
+        fixed_batch_step(&exe, &mut state, &tokens, &labels);
+    }
+    let names: Vec<String> = manifest.params.iter().map(|p| p.name.clone()).collect();
+    let dir = std::env::temp_dir().join("cast_native_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    cast::model::checkpoint::save(&state, &names, &path).unwrap();
+
+    // uninterrupted continuation
+    for _ in 0..2 {
+        fixed_batch_step(&exe, &mut state, &tokens, &labels);
+    }
+    // resumed continuation
+    let (mut resumed, loaded_names) = cast::model::checkpoint::load(&path).unwrap();
+    assert_eq!(loaded_names, names);
+    assert_eq!(resumed.step, 3.0);
+    for _ in 0..2 {
+        fixed_batch_step(&exe, &mut resumed, &tokens, &labels);
+    }
+
+    assert_eq!(state.step, resumed.step);
+    for i in 0..state.n_params() {
+        assert_eq!(
+            state.params[i].as_f32().unwrap(),
+            resumed.params[i].as_f32().unwrap(),
+            "param {} diverged after resume",
+            names[i]
+        );
+        assert_eq!(
+            state.m[i].as_f32().unwrap(),
+            resumed.m[i].as_f32().unwrap(),
+            "adam m {} diverged after resume",
+            names[i]
+        );
+        assert_eq!(
+            state.v[i].as_f32().unwrap(),
+            resumed.v[i].as_f32().unwrap(),
+            "adam v {} diverged after resume",
+            names[i]
+        );
+    }
+}
+
+#[test]
+fn full_backprop_beats_frozen_backbone_on_equal_budget() {
+    // the acceptance bar for the autograd subsystem: 200 native steps of
+    // full backprop reach strictly higher training accuracy than the
+    // same budget with the PR-1 head-only (frozen backbone) path
+    use cast::util::json::Json;
+    let steps = 200;
+    let run = |head_only: bool| -> (f32, f32) {
+        // fresh engine per run: the executable cache keys on the model
+        // config, and the two runs differ only in the train-scope flag
+        let engine = Engine::cpu().unwrap();
+        let mut man = tiny_manifest("cast_topk");
+        if head_only {
+            man.raw = Json::obj(vec![(
+                "config",
+                Json::obj(vec![("train_scope", Json::str("head"))]),
+            )]);
+        }
+        let cfg = TrainConfig {
+            steps,
+            schedule: Schedule::Warmup { lr: 1e-3, warmup: 20 },
+            seed: 5,
+            eval_every: 0,
+            eval_batches: 0,
+            data_workers: 2,
+            queue_depth: 2,
+            log_every: 0,
+            checkpoint: None,
+        };
+        let mut t = Trainer::new(engine, man, cfg, 5).unwrap();
+        let report = t.run().unwrap();
+        (report.history.recent_acc(100), report.history.recent_loss(100))
+    };
+    let (full_acc, full_loss) = run(false);
+    let (head_acc, head_loss) = run(true);
+    assert!(
+        full_acc > head_acc,
+        "full backprop must beat the frozen backbone: acc {full_acc:.3} vs {head_acc:.3} \
+         (loss {full_loss:.4} vs {head_loss:.4})"
+    );
+    assert!(
+        full_loss < head_loss,
+        "full backprop must reach lower loss: {full_loss:.4} vs {head_loss:.4}"
+    );
+}
+
 #[test]
 fn dual_encoder_retrieval_config_predicts_natively() {
     // Retrieval-style dual tower: tokens (B,2,N), 4d head features.

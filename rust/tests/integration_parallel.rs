@@ -10,6 +10,7 @@
 //! the engine's results never depend on the worker count.
 
 use cast::runtime::artifacts::Manifest;
+use cast::runtime::native::grad;
 use cast::runtime::native::layer::{
     cast_layer, local_layer, lsh_layer, vanilla_layer, BaselineParams, CastParams, CastScratch,
     Dims,
@@ -216,6 +217,59 @@ fn predict_parity_serial_vs_threaded() {
             "{variant}: logits diverged by {}",
             max_abs_diff(&serial, &threaded)
         );
+    }
+}
+
+/// Full forward+backward gradients of the tiny config at a given worker
+/// count (the autograd mirror of `predict_logits`).
+fn full_grads(variant: &str, threads: usize) -> (f32, Vec<Vec<f32>>) {
+    let man = Manifest::synthetic(tiny_meta(variant));
+    with_threads(threads, || {
+        let seed = HostTensor::u32(vec![], vec![7]);
+        let params = run_init(&man, &[&seed]).unwrap();
+        let refs: Vec<&HostTensor> = params.iter().collect();
+        let n: usize = man.tokens_shape.iter().product();
+        let tokens = HostTensor::s32(
+            man.tokens_shape.clone(),
+            (0..n).map(|i| ((i * 11 + 2) % 97) as i32).collect(),
+        );
+        let labels = [0i32, 1];
+        let mut ws = grad::GradScratch::new();
+        let out = grad::loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap();
+        (out.loss, out.grads)
+    })
+}
+
+/// Backward mirror of the forward parity suite: serial (1 worker) vs
+/// threaded (2 and 8 workers) gradients must agree for every variant —
+/// the reverse passes keep every reduction in a fixed order, so the
+/// tolerance is headroom, not an excuse (see DESIGN.md §Autograd).
+#[test]
+fn backward_parity_across_thread_counts() {
+    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        let (loss1, g1) = full_grads(variant, 1);
+        for threads in [2usize, 8] {
+            let (loss_t, g_t) = full_grads(variant, threads);
+            assert_eq!(loss1, loss_t, "{variant}@{threads}: loss must be bit-identical");
+            assert_eq!(g1.len(), g_t.len(), "{variant}@{threads}");
+            for (i, (a, b)) in g1.iter().zip(&g_t).enumerate() {
+                let diff = max_abs_diff(a, b);
+                assert!(
+                    diff <= 1e-5,
+                    "{variant}@{threads}: grad tensor {i} diverged by {diff}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_backward_is_bit_for_bit_deterministic() {
+    let (loss_a, ga) = full_grads("cast_topk", THREADED);
+    let (loss_b, gb) = full_grads("cast_topk", THREADED);
+    assert_eq!(loss_a, loss_b, "threaded backward loss must be deterministic");
+    for (a, b) in ga.iter().zip(&gb) {
+        assert_eq!(a, b, "threaded backward gradients must be deterministic");
     }
 }
 
