@@ -2,13 +2,19 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json
+.PHONY: build test test-simd gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# SIMD parity + determinism suite under both dispatch modes (the lane
+# kernels and the CAST_NO_SIMD=1 scalar reference; see DESIGN.md §SIMD).
+test-simd:
+	cargo test -q --test integration_simd
+	CAST_NO_SIMD=1 cargo test -q --test integration_simd
 
 clippy:
 	cargo clippy --all-targets -- -D warnings
@@ -24,6 +30,14 @@ bench-json: build
 	./target/release/cast gen --out bench_artifacts --seq 2048 --nc 16 --kappa 128
 	CAST_NUM_THREADS=1 ./target/release/cast bench --table 5 --artifacts bench_artifacts --seq 2048 --steps 3 --json BENCH_native_t1.json
 	./target/release/cast bench --table 5 --artifacts bench_artifacts --seq 2048 --steps 3 --json BENCH_native.json
+
+# SIMD speedup measurement: the seq=1024 CAST config once with the lane
+# kernels and once with the scalar reference, appended as a row pair to
+# BENCH_native.json (acceptance: simd steps_per_sec >= 1.5x scalar).
+bench-simd: build
+	./target/release/cast gen --out bench_simd_artifacts --variant cast_topk --seq 1024 --nc 8 --kappa 128
+	./target/release/cast bench --table 5 --artifacts bench_simd_artifacts --seq 1024 --steps 5 --append-json BENCH_native.json
+	CAST_NO_SIMD=1 ./target/release/cast bench --table 5 --artifacts bench_simd_artifacts --seq 1024 --steps 5 --append-json BENCH_native.json
 
 artifacts:
 	cd python && python -m compile.aot --suite default --out-root ../artifacts

@@ -100,7 +100,10 @@ pub fn efficiency_table(
     Ok(table_from_rows(title, "vanilla", seq_lens, &rows))
 }
 
-/// One row of the `BENCH_native.json` schema.
+/// One row of the `BENCH_native.json` schema.  `simd` records whether
+/// the 8-lane kernels were live (false = `CAST_NO_SIMD=1` scalar
+/// reference), so SIMD-vs-scalar pairs are distinguishable in the
+/// trajectory file.
 fn row_json(
     config: &str,
     variant: &str,
@@ -118,7 +121,24 @@ fn row_json(
         ("steps_per_sec", Json::num(steps_per_sec)),
         ("peak_rss_mb", Json::num(peak_rss_mb)),
         ("threads", Json::num(threads as f64)),
+        ("simd", Json::Bool(crate::util::simd::enabled())),
     ])
+}
+
+/// One measured efficiency row in the `BENCH_native.json` schema — the
+/// `cast bench --append-json` form of [`bench_json`], for appending a
+/// SIMD/scalar measurement pair to the cross-PR trajectory file via
+/// [`append_bench_row`].
+pub fn bench_row_json(row: &BenchRow) -> Json {
+    row_json(
+        &row.config,
+        &row.variant,
+        row.seq_len,
+        &row.result.kind,
+        row.result.steps_per_sec,
+        row.result.peak_rss_bytes as f64 / 1e6,
+        Engine::threads(),
+    )
 }
 
 /// Serialize measured rows as the `BENCH_native.json` schema:
@@ -126,25 +146,10 @@ fn row_json(
 /// peak_rss_mb, threads}]}` — one stable machine-readable file so the
 /// perf trajectory is comparable across PRs.
 pub fn bench_json(rows: &[BenchRow]) -> Json {
-    let threads = Engine::threads();
-    let row_objs: Vec<Json> = rows
-        .iter()
-        .map(|r| {
-            row_json(
-                &r.config,
-                &r.variant,
-                r.seq_len,
-                &r.result.kind,
-                r.result.steps_per_sec,
-                r.result.peak_rss_bytes as f64 / 1e6,
-                threads,
-            )
-        })
-        .collect();
     Json::obj(vec![
         ("backend", Json::str("native")),
-        ("threads", Json::num(threads as f64)),
-        ("rows", Json::Arr(row_objs)),
+        ("threads", Json::num(Engine::threads() as f64)),
+        ("rows", Json::Arr(rows.iter().map(bench_row_json).collect())),
     ])
 }
 
@@ -170,12 +175,17 @@ pub fn train_row_json(config: &str, variant: &str, seq_len: usize, steps_per_sec
     )
 }
 
-/// Append one row to a bench-json file, preserving any existing rows
-/// and the optional top-level `note` (the seed `BENCH_native.json`
-/// carries one); creates the file when absent.  An existing file that
-/// fails to parse is an error — this file is the cross-PR perf
-/// trajectory, never silently reset.
+/// Append one row to a bench-json file — see [`append_bench_rows`].
 pub fn append_bench_row(path: &Path, row: Json) -> Result<()> {
+    append_bench_rows(path, vec![row])
+}
+
+/// Append rows to a bench-json file in one read-extend-write, preserving
+/// any existing rows and the optional top-level `note` (the seed
+/// `BENCH_native.json` carries one); creates the file when absent.  An
+/// existing file that fails to parse is an error — this file is the
+/// cross-PR perf trajectory, never silently reset.
+pub fn append_bench_rows(path: &Path, new_rows: Vec<Json>) -> Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut note: Option<Json> = None;
     if let Ok(text) = std::fs::read_to_string(path) {
@@ -190,7 +200,7 @@ pub fn append_bench_row(path: &Path, row: Json) -> Result<()> {
         }
         note = old.get("note").cloned();
     }
-    rows.push(row);
+    rows.extend(new_rows);
     let mut fields = vec![
         ("backend", Json::str("native")),
         ("threads", Json::num(Engine::threads() as f64)),

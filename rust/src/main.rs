@@ -14,7 +14,10 @@
 //!            a train_steps_per_sec row, e.g. to BENCH_native.json)
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
 //!   bench   --table {1,5} [--task text --steps N --isolate
-//!           --seq 1024,2048 --json BENCH_native.json]
+//!           --seq 1024,2048 --json out.json --append-json BENCH_native.json]
+//!           (--json overwrites; --append-json appends measured rows to
+//!            the cross-PR trajectory file — run once normally and once
+//!            under CAST_NO_SIMD=1 for the SIMD speedup pair)
 //!   sweep   --task <task> [--steps N --isolate]      (Figure-3 ablation)
 //!   viz     --dir <artifact-dir> --out <dir> [--seed S]   (Figure 4)
 //!   data    --task <task> [--n N --seq L]            (inspect generators)
@@ -265,6 +268,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(path) = args.opt_str("json") {
         bench::write_bench_json(&PathBuf::from(&path), &rows)?;
         println!("bench json -> {path} ({} rows, {} threads)", rows.len(), Engine::threads());
+    }
+    if let Some(path) = args.opt_str("append-json") {
+        // append to the cross-PR trajectory file (rows + note preserved),
+        // e.g. the SIMD vs CAST_NO_SIMD=1 measurement pair in
+        // BENCH_native.json
+        let p = PathBuf::from(&path);
+        bench::append_bench_rows(&p, rows.iter().map(bench::bench_row_json).collect())?;
+        println!(
+            "appended {} bench row(s) -> {path} (simd={}, {} threads)",
+            rows.len(),
+            cast::util::simd::enabled(),
+            Engine::threads()
+        );
     }
     Ok(())
 }

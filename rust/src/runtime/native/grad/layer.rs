@@ -22,11 +22,14 @@
 //! grid into disjoint per-cell gradient slabs which a token-parallel
 //! gather (via the `slot_of` reverse map) folds back into per-token
 //! buffers.  Every reduction keeps a fixed order — backward results are
-//! bit-identical for any `CAST_NUM_THREADS`.
+//! bit-identical for any `CAST_NUM_THREADS`.  The inner d_h/d-length
+//! accumulations run on the same `util::simd` kernels as the forward
+//! (DESIGN.md §SIMD), so `CAST_NO_SIMD=1` flips both passes together.
 
 use anyhow::{ensure, Result};
 
 use crate::util::parallel;
+use crate::util::simd;
 
 use super::super::layer::{
     attend_windows, lsh_attend, lsh_sort_order, BaselineParams, CastParams, CastScratch, Dims,
@@ -239,11 +242,11 @@ pub fn cast_layer_backward(
                     let gr = bb * n + tape.idx[base + slot];
                     let w = tape.a_sum[gr * n_c + c];
                     if w != 0.0 {
-                        let dst = &mut dri[slot * d..(slot + 1) * d];
-                        let src = &dr_s[gr * d..(gr + 1) * d];
-                        for (dv_, &sv) in dst.iter_mut().zip(src) {
-                            *dv_ = w * sv;
-                        }
+                        simd::axpy8(
+                            &mut dri[slot * d..(slot + 1) * d],
+                            w,
+                            &dr_s[gr * d..(gr + 1) * d],
+                        );
                     }
                 }
             }
@@ -253,10 +256,7 @@ pub fn cast_layer_backward(
                     if tape.slot_of[gr * n_c + c] == 0 {
                         let a = tape.a_sum[gr * n_c + c];
                         if a != 0.0 {
-                            let src = &dr_s[gr * d..(gr + 1) * d];
-                            for (dv_, &sv) in drc.iter_mut().zip(src) {
-                                *dv_ += a * sv;
-                            }
+                            simd::axpy8(drc, a, &dr_s[gr * d..(gr + 1) * d]);
                         }
                     }
                 }
@@ -372,10 +372,7 @@ pub fn cast_layer_backward(
                         scr.dp[i * kappa + j] = m * ops::dot(dri, vrow);
                         let pij = scr.p[i * kappa + j] * m;
                         if pij != 0.0 {
-                            let dst = &mut dv_c[j * d + hh * d_h..][..d_h];
-                            for (dvv, &gv) in dst.iter_mut().zip(dri) {
-                                *dvv += pij * gv;
-                            }
+                            simd::axpy8(&mut dv_c[j * d + hh * d_h..][..d_h], pij, dri);
                         }
                     }
                 }
@@ -391,14 +388,9 @@ pub fn cast_layer_backward(
                         }
                         let qrow = &tape.q[(bb * n + slots[i]) * d + hh * d_h..][..d_h];
                         let krow = &tape.k[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
-                        let dqst = &mut dq_c[i * d + hh * d_h..][..d_h];
-                        for (dd, dvv) in dqst.iter_mut().enumerate() {
-                            *dvv += dsv * krow[dd] / tau;
-                        }
-                        let dkst = &mut dk_c[j * d + hh * d_h..][..d_h];
-                        for (dd, dvv) in dkst.iter_mut().enumerate() {
-                            *dvv += dsv * qrow[dd] / tau;
-                        }
+                        let coef = dsv / tau;
+                        simd::axpy8(&mut dq_c[i * d + hh * d_h..][..d_h], coef, krow);
+                        simd::axpy8(&mut dk_c[j * d + hh * d_h..][..d_h], coef, qrow);
                     }
                 }
 
@@ -423,10 +415,7 @@ pub fn cast_layer_backward(
                         scr.dw[j] = val[j] * ops::dot(drc, vrow);
                         let pk = scr.wpost[j] * val[j];
                         if pk != 0.0 {
-                            let dst = &mut dv_c[j * d + hh * d_h..][..d_h];
-                            for (dvv, &gv) in dst.iter_mut().zip(drc) {
-                                *dvv += pk * gv;
-                            }
+                            simd::axpy8(&mut dv_c[j * d + hh * d_h..][..d_h], pk, drc);
                         }
                     }
                     for v_ in scr.dwpre.iter_mut() {
@@ -503,18 +492,13 @@ pub fn cast_layer_backward(
                 let slot = tape.slot_of[gr * n_c + c];
                 if slot > 0 {
                     let src = (bb * n_c + c) * cell_stride + (slot - 1) * d;
-                    for (dd, dvv) in dst.iter_mut().enumerate() {
-                        *dvv += cell_s[src + dd];
-                    }
+                    simd::add8(dst, &cell_s[src..src + d]);
                 }
                 let daq = d_aq_raw_s[gr * n_c + c];
                 if daq != 0.0 {
                     for hh in 0..h {
                         let srow = &s_w[(c * h + hh) * d_h..][..d_h];
-                        let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
-                        for (dd, dvv) in dsth.iter_mut().enumerate() {
-                            *dvv += daq * srow[dd];
-                        }
+                        simd::axpy8(&mut dst[hh * d_h..(hh + 1) * d_h], daq, srow);
                     }
                 }
             }
@@ -529,18 +513,13 @@ pub fn cast_layer_backward(
                 let slot = tape.slot_of[gr * n_c + c];
                 if slot > 0 {
                     let src = (bb * n_c + c) * cell_stride + kappa * d + (slot - 1) * d;
-                    for (dd, dvv) in dst.iter_mut().enumerate() {
-                        *dvv += cell_s[src + dd];
-                    }
+                    simd::add8(dst, &cell_s[src..src + d]);
                 }
                 for hh in 0..h {
                     let dak = d_ak_s[(gr * h + hh) * n_c + c];
                     if dak != 0.0 {
                         let srow = &s_w[(c * h + hh) * d_h..][..d_h];
-                        let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
-                        for (dd, dvv) in dsth.iter_mut().enumerate() {
-                            *dvv += dak * srow[dd];
-                        }
+                        simd::axpy8(&mut dst[hh * d_h..(hh + 1) * d_h], dak, srow);
                     }
                 }
             }
@@ -555,9 +534,7 @@ pub fn cast_layer_backward(
                 let slot = tape.slot_of[gr * n_c + c];
                 if slot > 0 {
                     let src = (bb * n_c + c) * cell_stride + 2 * kappa * d + (slot - 1) * d;
-                    for (dd, dvv) in dst.iter_mut().enumerate() {
-                        *dvv += cell_s[src + dd];
-                    }
+                    simd::add8(dst, &cell_s[src..src + d]);
                 }
             }
         }
@@ -575,9 +552,8 @@ pub fn cast_layer_backward(
                 let qrow = &tape.q[gr * d + hh * d_h..][..d_h];
                 let krow = &tape.k[gr * d + hh * d_h..][..d_h];
                 let dst = &mut schunk[hh * d_h..(hh + 1) * d_h];
-                for (dd, dvv) in dst.iter_mut().enumerate() {
-                    *dvv += daq * qrow[dd] + dak * krow[dd];
-                }
+                simd::axpy8(dst, daq, qrow);
+                simd::axpy8(dst, dak, krow);
             }
         }
     });
@@ -704,10 +680,7 @@ pub fn window_backward(
                         scr.dp[j] = ops::dot(dro, vrow);
                         let pj = scr.p[j];
                         if pj != 0.0 {
-                            let dst = &mut slab[j * 3 * d + 2 * d + hh * d_h..][..d_h];
-                            for (dvv, &gv) in dst.iter_mut().zip(dro) {
-                                *dvv += pj * gv;
-                            }
+                            simd::axpy8(&mut slab[j * 3 * d + 2 * d + hh * d_h..][..d_h], pj, dro);
                         }
                     }
                     for v_ in scr.ds.iter_mut() {
@@ -720,14 +693,9 @@ pub fn window_backward(
                             continue;
                         }
                         let krow = &k_s[(r0 + j) * d + hh * d_h..][..d_h];
-                        let dqst = &mut slab[i * 3 * d + hh * d_h..][..d_h];
-                        for (dd, dvv) in dqst.iter_mut().enumerate() {
-                            *dvv += dsv * krow[dd] / tau;
-                        }
-                        let dkst = &mut slab[j * 3 * d + d + hh * d_h..][..d_h];
-                        for (dd, dvv) in dkst.iter_mut().enumerate() {
-                            *dvv += dsv * qrow[dd] / tau;
-                        }
+                        let coef = dsv / tau;
+                        simd::axpy8(&mut slab[i * 3 * d + hh * d_h..][..d_h], coef, krow);
+                        simd::axpy8(&mut slab[j * 3 * d + d + hh * d_h..][..d_h], coef, qrow);
                     }
                 }
             }
@@ -906,10 +874,11 @@ pub fn lsh_backward(
                                 ops::dot(&scr.dro_s[dro0..dro0 + d_h], vrow);
                             let pj = scr.p[jj];
                             if pj != 0.0 {
-                                for dd in 0..d_h {
-                                    scr.dv_s[(lo + jj) * d + hh * d_h + dd] +=
-                                        pj * scr.dro_s[dro0 + dd];
-                                }
+                                simd::axpy8(
+                                    &mut scr.dv_s[(lo + jj) * d + hh * d_h..][..d_h],
+                                    pj,
+                                    &scr.dro_s[dro0..dro0 + d_h],
+                                );
                             }
                         }
                         for v_ in scr.ds.iter_mut() {
@@ -929,14 +898,17 @@ pub fn lsh_backward(
                                 continue;
                             }
                             // tied Q/K: both roles' gradients land in qk
-                            for dd in 0..d_h {
-                                scr.dqk_s[i * d + hh * d_h + dd] +=
-                                    dsv * scr.qk_s[(lo + jj) * d + hh * d_h + dd] / tau;
-                            }
-                            for dd in 0..d_h {
-                                scr.dqk_s[(lo + jj) * d + hh * d_h + dd] +=
-                                    dsv * scr.qk_s[i * d + hh * d_h + dd] / tau;
-                            }
+                            let coef = dsv / tau;
+                            simd::axpy8(
+                                &mut scr.dqk_s[i * d + hh * d_h..][..d_h],
+                                coef,
+                                &scr.qk_s[(lo + jj) * d + hh * d_h..][..d_h],
+                            );
+                            simd::axpy8(
+                                &mut scr.dqk_s[(lo + jj) * d + hh * d_h..][..d_h],
+                                coef,
+                                &scr.qk_s[i * d + hh * d_h..][..d_h],
+                            );
                         }
                     }
                 }

@@ -17,6 +17,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::runtime::artifacts::{Manifest, ModelMeta};
 use crate::runtime::tensor::HostTensor;
 use crate::util::parallel;
+use crate::util::simd;
 
 use super::super::layer as flayer;
 use super::super::layer::{CastScratch, Dims};
@@ -178,9 +179,8 @@ fn embed_tokens(p: &Params, meta: &ModelMeta, tokens: &[i32], b: usize) -> Resul
             let tok = (tokens[gr].max(0) as usize).min(vocab_max);
             let erow = &emb[tok * d_emb..(tok + 1) * d_emb];
             let prow = &pe[nn * d_emb..(nn + 1) * d_emb];
-            for (j, dv) in dst.iter_mut().enumerate() {
-                *dv = erow[j] + prow[j];
-            }
+            dst.copy_from_slice(erow);
+            simd::add8(dst, prow);
         }
     });
     Ok(x)
@@ -257,9 +257,7 @@ fn ffn_forward_tape(
     let mut act = hid_pre.clone();
     let blk = parallel::elem_block(act.len());
     parallel::par_chunks_mut(act.as_mut_slice(), blk, |_, chunk| {
-        for v in chunk.iter_mut() {
-            *v = ops::gelu(*v);
-        }
+        ops::gelu_rows(chunk);
     });
     let mut out = Vec::new();
     ops::dense_into(
@@ -345,9 +343,7 @@ fn encode_tape(
     parallel::par_chunks_mut(pooled.as_mut_slice(), d, |bb, prow| {
         for nn in 0..n {
             let src = (bb * n + nn) * d;
-            for (j, pv) in prow.iter_mut().enumerate() {
-                *pv += xs[src + j] * inv;
-            }
+            simd::axpy8(prow, inv, &xs[src..src + d]);
         }
     });
     Ok(EncodeTape { x0, blocks, out_norm_in, pooled, fingerprint })
@@ -410,9 +406,7 @@ fn ffn_backward(
     act.extend_from_slice(&block.hid_pre);
     let eblk = parallel::elem_block(act.len());
     parallel::par_chunks_mut(act.as_mut_slice(), eblk, |_, chunk| {
-        for v in chunk.iter_mut() {
-            *v = ops::gelu(*v);
-        }
+        ops::gelu_rows(chunk);
     });
     let out_w = p.f(&format!("{prefix}.out.w"))?;
     let in_w = p.f(&format!("{prefix}.in.w"))?;
@@ -593,9 +587,8 @@ fn encode_backward(
         let r0 = ci * blk;
         for (rr, dst) in chunk.chunks_mut(d).enumerate() {
             let bb = (r0 + rr) / n;
-            for (j, dv) in dst.iter_mut().enumerate() {
-                *dv = d_pooled[bb * d + j] * inv;
-            }
+            dst.copy_from_slice(&d_pooled[bb * d..(bb + 1) * d]);
+            simd::scale8(dst, inv);
         }
     });
 
@@ -734,10 +727,7 @@ fn encode_backward(
     for r in 0..rows {
         let tok = (tokens[r].max(0) as usize).min(vocab_max);
         let dst = &mut g_emb[tok * d_emb..(tok + 1) * d_emb];
-        let src = &dx0[r * d_emb..(r + 1) * d_emb];
-        for (dv, &sv) in dst.iter_mut().zip(src) {
-            *dv += sv;
-        }
+        simd::add8(dst, &dx0[r * d_emb..(r + 1) * d_emb]);
     }
     Ok(())
 }

@@ -12,8 +12,14 @@
 //! shard over input-dimension blocks with a fixed row-accumulation order
 //! inside each task — bit-identical for any `CAST_NUM_THREADS`.  The
 //! cheap cross-row reductions (biases, norm gains) stay serial.
+//!
+//! Vectorization mirrors the forward too (DESIGN.md §SIMD): the same
+//! `util::simd` 8-lane kernels drive the dot/axpy/row-reduction inner
+//! loops here, and `CAST_NO_SIMD=1` routes backward and forward to the
+//! scalar reference together — the two passes never run in mixed modes.
 
 use crate::util::parallel;
+use crate::util::simd;
 
 use super::super::ops::{self, AttnFn};
 
@@ -70,19 +76,13 @@ pub fn dense_grad_params(
             for ii in 0..ni {
                 let xv = x[r * d_in + i0 + ii];
                 if xv != 0.0 {
-                    let dst = &mut chunk[ii * d_out..(ii + 1) * d_out];
-                    for (o, dv) in dst.iter_mut().enumerate() {
-                        *dv += xv * dyrow[o];
-                    }
+                    simd::axpy8(&mut chunk[ii * d_out..(ii + 1) * d_out], xv, dyrow);
                 }
             }
         }
     });
     for r in 0..rows {
-        let dyrow = &dy[r * d_out..(r + 1) * d_out];
-        for (o, dv) in db.iter_mut().enumerate() {
-            *dv += dyrow[o];
-        }
+        simd::add8(db, &dy[r * d_out..(r + 1) * d_out]);
     }
 }
 
@@ -112,10 +112,7 @@ pub fn attn_rows_backward(
             for ((yrow, gyrow), drow) in
                 post.chunks(cols).zip(dy.chunks(cols)).zip(dpre.chunks_mut(cols))
             {
-                let mut s = 0.0f32;
-                for (y, gy) in yrow.iter().zip(gyrow) {
-                    s += y * gy;
-                }
+                let s = simd::dot8(yrow, gyrow);
                 for ((d, y), gy) in drow.iter_mut().zip(yrow).zip(gyrow) {
                     *d += y * (gy - s);
                 }
@@ -131,23 +128,17 @@ pub fn attn_rows_backward(
                 .zip(dy.chunks(cols))
                 .zip(dpre.chunks_mut(cols))
             {
-                // recompute the unnormalized row and its normalizer
-                let mut z_raw = 0.0f32;
-                for &x in xrow {
-                    z_raw += 0.5 * (1.0 + ops::erf((x - mu) / denom));
-                }
+                // recompute the normalizer in *the same summation order*
+                // as the forward's `simd::sum8`, so forward and backward
+                // agree on z bit-for-bit in either SIMD mode (sum8_map
+                // computes the CDF terms on the fly — no scratch row)
+                let z_raw = simd::sum8_map(cols, |i| {
+                    0.5 * (1.0 + ops::erf((xrow[i] - mu) / denom))
+                });
                 let z = z_raw.max(1e-6);
                 // when the forward clamp engaged, the normalizer is a
                 // *constant* — the quotient-rule coupling term vanishes
-                let s = if z_raw < 1e-6 {
-                    0.0
-                } else {
-                    let mut s = 0.0f32;
-                    for (y, gy) in yrow.iter().zip(gyrow) {
-                        s += y * gy;
-                    }
-                    s
-                };
+                let s = if z_raw < 1e-6 { 0.0 } else { simd::dot8(yrow, gyrow) };
                 for ((d, &x), gy) in drow.iter_mut().zip(xrow).zip(gyrow) {
                     let uprime = 0.5 * ops::erf_prime((x - mu) / denom) / denom;
                     *d += (gy - s) / z * uprime;
@@ -183,8 +174,10 @@ pub fn layernorm_backward(
         for (rr, dxrow) in chunk.chunks_mut(d).enumerate() {
             let xrow = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
             let dyrow = &dy[(r0 + rr) * d..(r0 + rr + 1) * d];
-            let mu = xrow.iter().sum::<f32>() / d as f32;
-            let var = xrow.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            // same lane reductions as the forward norm, so the recomputed
+            // statistics match it bit-for-bit in either SIMD mode
+            let mu = simd::sum8(xrow) / d as f32;
+            let var = simd::sumsq_diff8(xrow, mu) / d as f32;
             let inv = 1.0 / (var + eps).sqrt();
             let mut mean_dyh = 0.0f32;
             let mut mean_dyh_xhat = 0.0f32;
@@ -206,8 +199,8 @@ pub fn layernorm_backward(
     for r in 0..rows {
         let xrow = &x[r * d..(r + 1) * d];
         let dyrow = &dy[r * d..(r + 1) * d];
-        let mu = xrow.iter().sum::<f32>() / d as f32;
-        let var = xrow.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let mu = simd::sum8(xrow) / d as f32;
+        let var = simd::sumsq_diff8(xrow, mu) / d as f32;
         let inv = 1.0 / (var + eps).sqrt();
         for i in 0..d {
             dg[i] += dyrow[i] * (xrow[i] - mu) * inv;
@@ -238,7 +231,7 @@ pub fn scalenorm_backward(
         for (rr, dxrow) in chunk.chunks_mut(d).enumerate() {
             let xrow = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
             let dyrow = &dy[(r0 + rr) * d..(r0 + rr + 1) * d];
-            let rms = (xrow.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
+            let rms = (simd::sumsq_diff8(xrow, 0.0) + eps).sqrt();
             let xdy = ops::dot(xrow, dyrow);
             let inv = 1.0 / rms;
             let inv3 = inv * inv * inv;
@@ -250,7 +243,7 @@ pub fn scalenorm_backward(
     for r in 0..rows {
         let xrow = &x[r * d..(r + 1) * d];
         let dyrow = &dy[r * d..(r + 1) * d];
-        let rms = (xrow.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
+        let rms = (simd::sumsq_diff8(xrow, 0.0) + eps).sqrt();
         *dg += sqrt_d * ops::dot(xrow, dyrow) / rms;
     }
 }

@@ -18,6 +18,7 @@ use anyhow::{ensure, Result};
 
 use crate::util::parallel;
 use crate::util::rng::Rng;
+use crate::util::simd;
 
 use super::ops::{self, AttnFn, NEG_INF};
 
@@ -468,9 +469,7 @@ pub fn cast_layer(
                         let pij = scores[i * kappa + j] * mask_ij(i, j);
                         if pij != 0.0 {
                             let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
-                            for dd in 0..d_h {
-                                intra[out0 + dd] += pij * vrow[dd];
-                            }
+                            simd::axpy8(&mut intra[out0..out0 + d_h], pij, vrow);
                         }
                     }
                 }
@@ -490,9 +489,7 @@ pub fn cast_layer(
                         let pk = wrow[j] * val[j];
                         if pk != 0.0 {
                             let vrow = &v[(bb * n + slots[j]) * d + hh * d_h..][..d_h];
-                            for dd in 0..d_h {
-                                inter[out0 + dd] += pk * vrow[dd];
-                            }
+                            simd::axpy8(&mut inter[out0..out0 + d_h], pk, vrow);
                         }
                     }
                 }
@@ -534,9 +531,7 @@ pub fn cast_layer(
                     let wi = a_sum_s[gr * n_c + c];
                     if wi != 0.0 {
                         let src = ((bb * n_c + c) * kappa + (slot - 1)) * d;
-                        for (dd, dv) in dst.iter_mut().enumerate() {
-                            *dv += wi * r_intra_s[src + dd];
-                        }
+                        simd::axpy8(dst, wi, &r_intra_s[src..src + d]);
                     }
                 }
             }
@@ -546,9 +541,7 @@ pub fn cast_layer(
                         let ai = a_sum_s[gr * n_c + c];
                         if ai != 0.0 {
                             let src = (bb * n_c + c) * d;
-                            for (dd, dv) in dst.iter_mut().enumerate() {
-                                *dv += ai * r_inter_s[src + dd];
-                            }
+                            simd::axpy8(dst, ai, &r_inter_s[src..src + d]);
                         }
                     }
                 }
@@ -614,9 +607,7 @@ pub(crate) fn attend_windows(
                     let dsth = &mut dst[hh * d_h..(hh + 1) * d_h];
                     for (jj, &pj) in sc.iter().enumerate() {
                         let vrow = &v[(bb * n + lo + jj) * d + hh * d_h..][..d_h];
-                        for (dd, dv) in dsth.iter_mut().enumerate() {
-                            *dv += pj * vrow[dd];
-                        }
+                        simd::axpy8(dsth, pj, vrow);
                     }
                 }
             }
@@ -768,10 +759,9 @@ pub(crate) fn lsh_attend(
                         ops::attn_rows(&mut scr.scores, kappa, attn);
                         let dst = i * d + hh * d_h;
                         for (jj, &pj) in scr.scores.iter().enumerate() {
-                            let vrow = &scr.v_s[(lo + jj) * d + hh * d_h..][..d_h];
-                            for dd in 0..d_h {
-                                scr.chunk_out[dst + dd] += pj * vrow[dd];
-                            }
+                            let (v_s, out_s) = (&scr.v_s, &mut scr.chunk_out);
+                            let vrow = &v_s[(lo + jj) * d + hh * d_h..][..d_h];
+                            simd::axpy8(&mut out_s[dst..dst + d_h], pj, vrow);
                         }
                     }
                 }

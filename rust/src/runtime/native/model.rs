@@ -29,6 +29,7 @@ use crate::runtime::tensor::HostTensor;
 use crate::util::json::Json;
 use crate::util::parallel;
 use crate::util::rng::Rng;
+use crate::util::simd;
 
 use super::grad;
 use super::layer::{self, BaselineParams, CastParams, CastScratch, Dims};
@@ -154,9 +155,7 @@ fn ffn(
     );
     let blk = parallel::elem_block(hid.len());
     parallel::par_chunks_mut(hid.as_mut_slice(), blk, |_, chunk| {
-        for v in chunk.iter_mut() {
-            *v = ops::gelu(*v);
-        }
+        ops::gelu_rows(chunk);
     });
     ops::dense_into(
         hid,
@@ -243,9 +242,8 @@ fn encode(
             let tok = (tokens[gr].max(0) as usize).min(vocab_max);
             let erow = &emb[tok * d_emb..(tok + 1) * d_emb];
             let prow = &pe[nn * d_emb..(nn + 1) * d_emb];
-            for (j, dv) in dst.iter_mut().enumerate() {
-                *dv = erow[j] + prow[j];
-            }
+            dst.copy_from_slice(erow);
+            simd::add8(dst, prow);
         }
     });
     let mut x = ops::dense(&x, p.f("proj.w")?, p.f("proj.b")?, rows, d_emb, d);
@@ -293,9 +291,7 @@ fn encode(
     parallel::par_chunks_mut(pooled.as_mut_slice(), d, |bb, prow| {
         for nn in 0..n {
             let src = (bb * n + nn) * d;
-            for (j, pv) in prow.iter_mut().enumerate() {
-                *pv += xs[src + j] * inv;
-            }
+            simd::axpy8(prow, inv, &xs[src..src + d]);
         }
     });
     Ok((pooled, ags))
@@ -361,7 +357,8 @@ pub(crate) fn head_forward(
 ) -> Result<HeadForward> {
     let d = meta.d;
     let h_pre = ops::dense(feats, p.f("head.fc.w")?, p.f("head.fc.b")?, b, d_in, d);
-    let h: Vec<f32> = h_pre.iter().map(|&v| ops::gelu(v)).collect();
+    let mut h = h_pre.clone();
+    ops::gelu_rows(&mut h);
     let logits = ops::dense(&h, p.f("head.out.w")?, p.f("head.out.b")?, b, d, meta.n_classes);
     Ok(HeadForward { h_pre, h, logits })
 }

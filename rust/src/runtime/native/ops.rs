@@ -1,12 +1,22 @@
-//! Scalar f32 building blocks for the native CPU engine.
+//! f32 building blocks for the native CPU engine.
 //!
 //! Semantics mirror `python/compile/layers.py` and
 //! `python/compile/kernels/ref.py` (the correctness oracles of the AOT
 //! path): same activation definitions, same normalizations, same masking
 //! conventions.  Everything is dense row-major `Vec<f32>`; shapes are
 //! carried by the callers.
+//!
+//! Inner loops run on the `util::simd` 8-lane kernel subsystem
+//! (DESIGN.md §SIMD): reductions (dot / row sums / row max / squared
+//! norms) and the dense matmul microkernel dispatch to explicit lane
+//! kernels, with `CAST_NO_SIMD=1` routing every call to the sequential
+//! scalar reference.  Transcendentals (`exp`, `erf`, `tanh`) stay
+//! scalar-libm on both paths, so lanes-vs-scalar differences come only
+//! from the documented reduction reassociation.
 
 use anyhow::{bail, Result};
+
+use crate::util::simd;
 
 /// Additive mask value (matches `kernel_ref.NEG_INF`).
 pub const NEG_INF: f32 = -1e9;
@@ -39,11 +49,13 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], rows: usize, d_in: usize, d_out: u
 /// [`dense`] writing into a reusable output buffer (cleared + resized) so
 /// callers with a `Workspace` avoid a fresh allocation per layer per call.
 ///
-/// The weight matrix is transposed once into a (d_out, d_in) scratch so
-/// every output element is a unit-stride dot product, then the row range
-/// is dispatched across the worker pool in cache-sized row blocks.  The
-/// per-element arithmetic (a fixed 4-lane accumulator split) is identical
-/// on every path, so results are bit-for-bit equal for any thread count.
+/// The row range is dispatched across the worker pool in cache-sized row
+/// blocks; each block runs the `simd::matmul_rows8` rank-1-update
+/// microkernel (weight rows streamed once per 8 output rows, no
+/// transpose scratch).  The per-element accumulation order — ascending
+/// input dimension — is independent of both the row blocking and the
+/// lane/scalar dispatch, so results are bit-for-bit equal for any
+/// thread count *and* for `CAST_NO_SIMD` on or off.
 pub fn dense_into(
     x: &[f32],
     w: &[f32],
@@ -62,61 +74,23 @@ pub fn dense_into(
         return;
     }
     if rows < 16 {
-        // tiny row counts (e.g. the per-batch classifier head): the
-        // O(d_in·d_out) transpose would rival the matmul itself, so run
-        // the direct accumulate loop with no scratch allocation
-        for (r, yrow) in y.chunks_mut(d_out).enumerate() {
-            yrow.copy_from_slice(b);
-            for (i, &xv) in x[r * d_in..(r + 1) * d_in].iter().enumerate() {
-                if xv != 0.0 {
-                    for (yv, &wv) in yrow.iter_mut().zip(&w[i * d_out..(i + 1) * d_out]) {
-                        *yv += xv * wv;
-                    }
-                }
-            }
-        }
+        // tiny row counts (e.g. the per-batch classifier head): skip the
+        // thread-pool dispatch entirely
+        simd::matmul_rows8(x, w, b, rows, d_in, d_out, y);
         return;
-    }
-    // wt[o][i] = w[i][o]
-    let mut wt = vec![0.0f32; d_in * d_out];
-    for i in 0..d_in {
-        let wrow = &w[i * d_out..(i + 1) * d_out];
-        for (o, &wv) in wrow.iter().enumerate() {
-            wt[o * d_in + i] = wv;
-        }
     }
     let block = crate::util::parallel::row_block(rows);
     crate::util::parallel::par_chunks_mut(y.as_mut_slice(), block * d_out, |ci, out| {
         let r0 = ci * block;
-        for (rr, yrow) in out.chunks_mut(d_out).enumerate() {
-            let xrow = &x[(r0 + rr) * d_in..(r0 + rr + 1) * d_in];
-            for (o, yv) in yrow.iter_mut().enumerate() {
-                *yv = b[o] + dot(xrow, &wt[o * d_in..(o + 1) * d_in]);
-            }
-        }
+        let nr = out.len() / d_out;
+        simd::matmul_rows8(&x[r0 * d_in..(r0 + nr) * d_in], w, b, nr, d_in, d_out, out);
     });
 }
 
-/// Unit-stride dot product with a fixed 4-lane accumulator split (ILP
-/// without changing the summation order between call sites).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let mut chunks_a = a.chunks_exact(4);
-    let mut chunks_b = b.chunks_exact(4);
-    for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
-        acc[0] += ca[0] * cb[0];
-        acc[1] += ca[1] * cb[1];
-        acc[2] += ca[2] * cb[2];
-        acc[3] += ca[3] * cb[3];
-    }
-    let mut tail = 0.0f32;
-    for (&va, &vb) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
-        tail += va * vb;
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
-}
+/// Unit-stride dot product — the single chunked-reduction implementation
+/// every call site shares (8-lane accumulators, or the sequential scalar
+/// reference under `CAST_NO_SIMD=1`; see `util::simd`).
+pub use crate::util::simd::dot8 as dot;
 
 /// Normalize every `cols`-wide row of `x` in place with the given weight
 /// function.  Rows that are entirely masked to `NEG_INF` become uniform
@@ -127,16 +101,15 @@ pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
     match f {
         AttnFn::Softmax => {
             for row in x.chunks_mut(cols) {
-                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut z = 0.0f32;
+                // row max and normalizer are lane reductions; the subtract
+                // rides the (scalar-libm) exp pass — elementwise, so still
+                // bit-identical across SIMD modes
+                let m = simd::max8(row);
                 for v in row.iter_mut() {
                     *v = (*v - m).exp();
-                    z += *v;
                 }
-                let inv = 1.0 / z.max(1e-30);
-                for v in row.iter_mut() {
-                    *v *= inv;
-                }
+                let z = simd::sum8(row);
+                simd::scale8(row, 1.0 / z.max(1e-30));
             }
         }
         AttnFn::Laplace => {
@@ -146,15 +119,11 @@ pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
             let sigma = (0.25 / std::f32::consts::PI).sqrt();
             let denom = sigma * 2.0f32.sqrt();
             for row in x.chunks_mut(cols) {
-                let mut z = 0.0f32;
                 for v in row.iter_mut() {
                     *v = 0.5 * (1.0 + erf((*v - mu) / denom));
-                    z += *v;
                 }
-                let inv = 1.0 / z.max(1e-6);
-                for v in row.iter_mut() {
-                    *v *= inv;
-                }
+                let z = simd::sum8(row);
+                simd::scale8(row, 1.0 / z.max(1e-6));
             }
         }
     }
@@ -207,6 +176,16 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
 }
 
+/// Apply [`gelu`] to every element in place — the one FFN-activation
+/// loop the forward, the taped forward, and the backward recompute all
+/// share.  Elementwise with a scalar-libm `tanh`, so it is bit-identical
+/// across SIMD modes and thread counts by construction.
+pub fn gelu_rows(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
 /// d gelu / dx for the tanh approximation (the head-gradient path).
 pub fn gelu_prime(x: f32) -> f32 {
     const C: f32 = 0.797_884_6;
@@ -220,12 +199,10 @@ pub fn gelu_prime(x: f32) -> f32 {
 pub fn layernorm_rows(x: &mut [f32], g: &[f32], b: &[f32], d: usize, eps: f32) {
     debug_assert!(x.len() % d == 0);
     for row in x.chunks_mut(d) {
-        let mu = row.iter().sum::<f32>() / d as f32;
-        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let mu = simd::sum8(row) / d as f32;
+        let var = simd::sumsq_diff8(row, mu) / d as f32;
         let inv = 1.0 / (var + eps).sqrt();
-        for (i, v) in row.iter_mut().enumerate() {
-            *v = g[i] * (*v - mu) * inv + b[i];
-        }
+        simd::norm_affine8(row, g, b, mu, inv);
     }
 }
 
@@ -234,11 +211,8 @@ pub fn scalenorm_rows(x: &mut [f32], g: f32, d: usize, eps: f32) {
     debug_assert!(x.len() % d == 0);
     let sqrt_d = (d as f32).sqrt();
     for row in x.chunks_mut(d) {
-        let rms = (row.iter().map(|&v| v * v).sum::<f32>() + eps).sqrt();
-        let s = g * sqrt_d / rms;
-        for v in row.iter_mut() {
-            *v *= s;
-        }
+        let rms = (simd::sumsq_diff8(row, 0.0) + eps).sqrt();
+        simd::scale8(row, g * sqrt_d / rms);
     }
 }
 
@@ -315,9 +289,7 @@ pub fn add_assign(x: &mut [f32], y: &[f32]) {
     let block = crate::util::parallel::elem_block(x.len());
     crate::util::parallel::par_chunks_mut(x, block, |ci, chunk| {
         let off = ci * block;
-        for (j, v) in chunk.iter_mut().enumerate() {
-            *v += y[off + j];
-        }
+        simd::add8(chunk, &y[off..off + chunk.len()]);
     });
 }
 

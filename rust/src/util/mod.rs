@@ -8,6 +8,7 @@ pub mod parallel;
 pub mod pgm;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 
 use std::time::Instant;
 

@@ -197,6 +197,79 @@ pub fn grad_check(
     }
 }
 
+/// Per-block divergence between the SIMD and scalar backward passes
+/// (see [`grad_check_modes`]).
+#[derive(Clone, Debug)]
+pub struct ModeDivergence {
+    pub name: String,
+    /// Largest `|g_simd - g_scalar|` over the block.
+    pub max_abs: f32,
+    /// Largest `|g_simd - g_scalar| / max(|g_simd|, |g_scalar|, 1e-6)`.
+    pub max_rel: f32,
+}
+
+/// Run the central-difference check **twice** — once with the
+/// `util::simd` lane kernels forced on and once forced to the scalar
+/// reference (`CAST_NO_SIMD`'s code path) — and report the per-block
+/// maximum divergence between the two analytic backward passes.
+///
+/// `analytic` recomputes the gradient under the currently-forced mode;
+/// `eval` is the loss for the numeric check (also re-run per mode, so
+/// each pass is self-consistent).  The forced override is cleared on
+/// every exit path — including panics inside the closures — via a drop
+/// guard, so the dispatch mode re-resolves from the environment
+/// afterwards.  The caller asserts on the returned divergences (the
+/// reassociation contract: ≤ ~1e-5 relative at layer shapes).
+///
+/// NOTE: this flips the process-global SIMD mode — callers serialize
+/// against any concurrent test that asserts bit-exact determinism
+/// (see `util::simd` module docs).
+pub fn grad_check_modes(
+    cfg: &GradCheckCfg,
+    theta: &[f32],
+    blocks: &[(String, usize)],
+    mut analytic: impl FnMut() -> Vec<f32>,
+    mut eval: impl FnMut(&[f32]) -> (f32, u64),
+) -> Vec<ModeDivergence> {
+    /// Clears the forced SIMD mode even when a closure panics.
+    struct ModeRestore;
+    impl Drop for ModeRestore {
+        fn drop(&mut self) {
+            crate::util::simd::set_forced(None);
+        }
+    }
+    let _restore = ModeRestore;
+    let mut per_mode: Vec<Vec<f32>> = Vec::with_capacity(2);
+    for lanes in [true, false] {
+        crate::util::simd::set_forced(Some(lanes));
+        let ana = analytic();
+        if let Err(msg) = grad_check(cfg, theta, blocks, &ana, &mut eval) {
+            panic!(
+                "gradient check failed with SIMD {}:\n{msg}",
+                if lanes { "lanes" } else { "scalar reference" }
+            );
+        }
+        per_mode.push(ana);
+    }
+    let (g_simd, g_scalar) = (&per_mode[0], &per_mode[1]);
+    assert_eq!(g_simd.len(), g_scalar.len(), "mode gradients must align");
+    let mut out = Vec::with_capacity(blocks.len());
+    let mut off = 0usize;
+    for (name, len) in blocks {
+        let mut max_abs = 0.0f32;
+        let mut max_rel = 0.0f32;
+        for i in off..off + len {
+            let (a, b) = (g_simd[i], g_scalar[i]);
+            let diff = (a - b).abs();
+            max_abs = max_abs.max(diff);
+            max_rel = max_rel.max(diff / a.abs().max(b.abs()).max(1e-6));
+        }
+        out.push(ModeDivergence { name: name.clone(), max_abs, max_rel });
+        off += len;
+    }
+    out
+}
+
 /// [`grad_check`] that panics with the full report on failure — the
 /// assertion form the grad tests use.
 pub fn assert_grads_close(

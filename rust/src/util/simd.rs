@@ -1,0 +1,674 @@
+//! Portable explicit 8-lane f32 kernels for the native engine's inner
+//! loops — the constant-factor lever under the thread pool (DESIGN.md
+//! §SIMD).  No intrinsics, no nightly `std::simd`, no external crates:
+//! every kernel is written over fixed-shape `[f32; 8]` lane groups with
+//! a deterministic, fixed-order reduction, which stable rustc reliably
+//! lowers to vector instructions on any target that has them (and to
+//! plain scalar code on any that doesn't).
+//!
+//! **Two implementations per kernel.**  Every public kernel `k8` has a
+//! `k8_lanes` (vector) and a `k8_scalar` (sequential reference) variant
+//! and dispatches on [`enabled`].  The scalar variants are the
+//! correctness oracles of the parity harness (`tests/integration_simd.rs`)
+//! and the escape hatch: `CAST_NO_SIMD=1` (or [`set_forced`]) routes every
+//! call to them.
+//!
+//! **Exactness contract** (relied on by the parity tests):
+//!
+//! * *Elementwise* kernels ([`axpy8`], [`add8`], [`scale8`],
+//!   [`scale_add8`], [`norm_affine8`]), [`max8`] (max is
+//!   order-insensitive), and the [`matmul_rows8`] microkernel (its
+//!   per-element accumulation order — ascending input dimension — is
+//!   identical in both variants) are **bit-identical** between lanes and
+//!   scalar.
+//! * *Reduction* kernels ([`dot8`], [`sum8`], [`sumsq_diff8`]) reassociate
+//!   the sum into 8 lanes (tree-combined `((0+1)+(2+3)) + ((4+5)+(6+7))`,
+//!   then a sequential tail), so lanes-vs-scalar may differ by f32
+//!   rounding — the documented reassociation tolerance (≤ 1e-5 relative
+//!   at layer shapes).  Each variant is individually deterministic: the
+//!   reduction order never depends on thread count or scheduling.
+//!
+//! **Mode is process-global.**  Unlike `parallel::set_threads` (safe to
+//! race because results never depend on the worker count), the SIMD mode
+//! *does* move results within the tolerance above, so tests that flip it
+//! serialize on their own lock and restore the prior mode.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of every kernel in this module.
+pub const LANES: usize = 8;
+
+const MODE_UNSET: u8 = 0;
+const MODE_LANES: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+/// Resolved dispatch mode, cached after the first env read.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+fn env_mode() -> u8 {
+    match std::env::var("CAST_NO_SIMD") {
+        Ok(v) if !matches!(v.trim(), "" | "0" | "false") => MODE_SCALAR,
+        _ => MODE_LANES,
+    }
+}
+
+/// Whether calls dispatch to the lane kernels (`true`) or the scalar
+/// reference path (`false`): [`set_forced`] override, else `CAST_NO_SIMD`.
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_LANES => true,
+        MODE_SCALAR => false,
+        _ => {
+            let m = env_mode();
+            MODE.store(m, Ordering::Relaxed);
+            m == MODE_LANES
+        }
+    }
+}
+
+/// Force the dispatch mode for this process: `Some(true)` = lanes,
+/// `Some(false)` = scalar reference, `None` = re-resolve from
+/// `CAST_NO_SIMD` on the next call.  Test/tool hook — see the module
+/// docs for the serialization caveat.
+pub fn set_forced(mode: Option<bool>) {
+    let v = match mode {
+        Some(true) => MODE_LANES,
+        Some(false) => MODE_SCALAR,
+        None => MODE_UNSET,
+    };
+    MODE.store(v, Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------------------
+// reductions (lanes-vs-scalar differ by reassociation tolerance)
+// ---------------------------------------------------------------------------
+
+/// Fixed-order combine of one lane accumulator block.
+#[inline]
+fn reduce_lanes(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Unit-stride dot product.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    if enabled() {
+        dot8_lanes(a, b)
+    } else {
+        dot8_scalar(a, b)
+    }
+}
+
+/// [`dot8`], 8-lane accumulators + tree reduction + sequential tail.
+#[inline]
+pub fn dot8_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    reduce_lanes(acc) + tail
+}
+
+/// [`dot8`], sequential scalar reference.
+#[inline]
+pub fn dot8_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Sum of a slice.
+#[inline]
+pub fn sum8(x: &[f32]) -> f32 {
+    if enabled() {
+        sum8_lanes(x)
+    } else {
+        sum8_scalar(x)
+    }
+}
+
+/// [`sum8`], 8-lane accumulators + tree reduction + sequential tail.
+#[inline]
+pub fn sum8_lanes(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    for xa in &mut cx {
+        for l in 0..LANES {
+            acc[l] += xa[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for &v in cx.remainder() {
+        tail += v;
+    }
+    reduce_lanes(acc) + tail
+}
+
+/// [`sum8`], sequential scalar reference.
+#[inline]
+pub fn sum8_scalar(x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &v in x {
+        acc += v;
+    }
+    acc
+}
+
+/// `Σ (x_i - mu)²` — the shared variance / squared-norm reduction of the
+/// layer and scale norms (`mu = 0` gives the plain sum of squares).
+#[inline]
+pub fn sumsq_diff8(x: &[f32], mu: f32) -> f32 {
+    if enabled() {
+        sumsq_diff8_lanes(x, mu)
+    } else {
+        sumsq_diff8_scalar(x, mu)
+    }
+}
+
+/// [`sumsq_diff8`], 8-lane accumulators + tree reduction + tail.
+#[inline]
+pub fn sumsq_diff8_lanes(x: &[f32], mu: f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    for xa in &mut cx {
+        for l in 0..LANES {
+            let d = xa[l] - mu;
+            acc[l] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for &v in cx.remainder() {
+        let d = v - mu;
+        tail += d * d;
+    }
+    reduce_lanes(acc) + tail
+}
+
+/// [`sumsq_diff8`], sequential scalar reference.
+#[inline]
+pub fn sumsq_diff8_scalar(x: &[f32], mu: f32) -> f32 {
+    let mut acc = 0.0f32;
+    for &v in x {
+        let d = v - mu;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Sum of `f(0..n)` with **exactly** the summation order of [`sum8`] in
+/// the corresponding mode — for callers that compute terms on the fly
+/// (e.g. the laplace backward recomputing a normalizer the forward
+/// produced via [`sum8`]) without materializing a scratch row.
+#[inline]
+pub fn sum8_map(n: usize, f: impl FnMut(usize) -> f32) -> f32 {
+    if enabled() {
+        sum8_map_lanes(n, f)
+    } else {
+        sum8_map_scalar(n, f)
+    }
+}
+
+/// [`sum8_map`], lane order (matches [`sum8_lanes`] term for term).
+#[inline]
+pub fn sum8_map_lanes(n: usize, mut f: impl FnMut(usize) -> f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0usize;
+    while i + LANES <= n {
+        for l in 0..LANES {
+            acc[l] += f(i + l);
+        }
+        i += LANES;
+    }
+    let mut tail = 0.0f32;
+    while i < n {
+        tail += f(i);
+        i += 1;
+    }
+    reduce_lanes(acc) + tail
+}
+
+/// [`sum8_map`], sequential order (matches [`sum8_scalar`]).
+#[inline]
+pub fn sum8_map_scalar(n: usize, mut f: impl FnMut(usize) -> f32) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..n {
+        acc += f(i);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// order-insensitive / elementwise kernels (bit-identical across modes)
+// ---------------------------------------------------------------------------
+
+/// Row maximum with a `-∞` identity (softmax row max).  Max is
+/// order-insensitive, so lanes and scalar agree exactly.
+#[inline]
+pub fn max8(x: &[f32]) -> f32 {
+    if enabled() {
+        max8_lanes(x)
+    } else {
+        max8_scalar(x)
+    }
+}
+
+/// [`max8`], lane-blocked.
+#[inline]
+pub fn max8_lanes(x: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    for xa in &mut cx {
+        for l in 0..LANES {
+            acc[l] = acc[l].max(xa[l]);
+        }
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &v in cx.remainder() {
+        m = m.max(v);
+    }
+    for a in acc {
+        m = m.max(a);
+    }
+    m
+}
+
+/// [`max8`], sequential scalar reference.
+#[inline]
+pub fn max8_scalar(x: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &v in x {
+        m = m.max(v);
+    }
+    m
+}
+
+/// `y[i] += a · x[i]` — the scaled-accumulate of the attention AV loops,
+/// the combination scatter, and the dense parameter gradients.
+#[inline]
+pub fn axpy8(y: &mut [f32], a: f32, x: &[f32]) {
+    if enabled() {
+        axpy8_lanes(y, a, x)
+    } else {
+        axpy8_scalar(y, a, x)
+    }
+}
+
+/// [`axpy8`], lane-blocked (identical per-element arithmetic).
+#[inline]
+pub fn axpy8_lanes(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (ya, xa) in (&mut cy).zip(&mut cx) {
+        for l in 0..LANES {
+            ya[l] += a * xa[l];
+        }
+    }
+    for (yv, &xv) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yv += a * xv;
+    }
+}
+
+/// [`axpy8`], sequential scalar reference.
+#[inline]
+pub fn axpy8_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// `y[i] += x[i]` — residual adds, slab gathers, bias gradients.
+#[inline]
+pub fn add8(y: &mut [f32], x: &[f32]) {
+    if enabled() {
+        add8_lanes(y, x)
+    } else {
+        add8_scalar(y, x)
+    }
+}
+
+/// [`add8`], lane-blocked.
+#[inline]
+pub fn add8_lanes(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (ya, xa) in (&mut cy).zip(&mut cx) {
+        for l in 0..LANES {
+            ya[l] += xa[l];
+        }
+    }
+    for (yv, &xv) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yv += xv;
+    }
+}
+
+/// [`add8`], sequential scalar reference.
+#[inline]
+pub fn add8_scalar(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += xv;
+    }
+}
+
+/// `y[i] *= a` — the row renormalization of softmax / laplace / scalenorm.
+#[inline]
+pub fn scale8(y: &mut [f32], a: f32) {
+    if enabled() {
+        scale8_lanes(y, a)
+    } else {
+        scale8_scalar(y, a)
+    }
+}
+
+/// [`scale8`], lane-blocked.
+#[inline]
+pub fn scale8_lanes(y: &mut [f32], a: f32) {
+    let mut cy = y.chunks_exact_mut(LANES);
+    for ya in &mut cy {
+        for l in 0..LANES {
+            ya[l] *= a;
+        }
+    }
+    for yv in cy.into_remainder() {
+        *yv *= a;
+    }
+}
+
+/// [`scale8`], sequential scalar reference.
+#[inline]
+pub fn scale8_scalar(y: &mut [f32], a: f32) {
+    for yv in y {
+        *yv *= a;
+    }
+}
+
+/// `y[i] = a · y[i] + b` — the scalar-affine in-place row update
+/// (rescale + shift in one pass).
+#[inline]
+pub fn scale_add8(y: &mut [f32], a: f32, b: f32) {
+    if enabled() {
+        scale_add8_lanes(y, a, b)
+    } else {
+        scale_add8_scalar(y, a, b)
+    }
+}
+
+/// [`scale_add8`], lane-blocked.
+#[inline]
+pub fn scale_add8_lanes(y: &mut [f32], a: f32, b: f32) {
+    let mut cy = y.chunks_exact_mut(LANES);
+    for ya in &mut cy {
+        for l in 0..LANES {
+            ya[l] = a * ya[l] + b;
+        }
+    }
+    for yv in cy.into_remainder() {
+        *yv = a * *yv + b;
+    }
+}
+
+/// [`scale_add8`], sequential scalar reference.
+#[inline]
+pub fn scale_add8_scalar(y: &mut [f32], a: f32, b: f32) {
+    for yv in y {
+        *yv = a * *yv + b;
+    }
+}
+
+/// `row[i] = g[i] · (row[i] - mu) · inv + b[i]` — the fused affine tail
+/// of a layernorm row.
+#[inline]
+pub fn norm_affine8(row: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+    if enabled() {
+        norm_affine8_lanes(row, g, b, mu, inv)
+    } else {
+        norm_affine8_scalar(row, g, b, mu, inv)
+    }
+}
+
+/// [`norm_affine8`], lane-blocked.
+#[inline]
+pub fn norm_affine8_lanes(row: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+    debug_assert_eq!(row.len(), g.len());
+    debug_assert_eq!(row.len(), b.len());
+    let mut cr = row.chunks_exact_mut(LANES);
+    let mut cg = g.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for ((ra, ga), ba) in (&mut cr).zip(&mut cg).zip(&mut cb) {
+        for l in 0..LANES {
+            ra[l] = ga[l] * (ra[l] - mu) * inv + ba[l];
+        }
+    }
+    let (rem_g, rem_b) = (cg.remainder(), cb.remainder());
+    for ((rv, &gv), &bv) in cr.into_remainder().iter_mut().zip(rem_g).zip(rem_b) {
+        *rv = gv * (*rv - mu) * inv + bv;
+    }
+}
+
+/// [`norm_affine8`], sequential scalar reference.
+#[inline]
+pub fn norm_affine8_scalar(row: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+    debug_assert_eq!(row.len(), g.len());
+    debug_assert_eq!(row.len(), b.len());
+    for ((rv, &gv), &bv) in row.iter_mut().zip(g).zip(b) {
+        *rv = gv * (*rv - mu) * inv + bv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the matmul microkernel
+// ---------------------------------------------------------------------------
+
+/// `out = x @ w + bias` over row-major slices — `x` is (rows, d_in),
+/// `w` is (d_in, d_out), `bias` is (d_out), `out` is (rows, d_out).
+///
+/// Rank-1-update formulation in 8-row blocks: the outer loop walks the
+/// input dimension so each weight row `w[i, :]` is streamed once per
+/// 8-row block (instead of once per output row) and accumulated into the
+/// block's output rows as a unit-stride [`axpy8`].  Per output element
+/// the accumulation order is ascending `i` in **both** variants and is
+/// independent of row blocking, so results are bit-identical across
+/// lanes/scalar dispatch, thread counts, and caller chunking.  Zero
+/// input activations are skipped on both paths (identical arithmetic:
+/// the skipped update is an exact `+ 0`).
+pub fn matmul_rows8(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    debug_assert_eq!(out.len(), rows * d_out);
+    let lanes = enabled();
+    for yrow in out.chunks_mut(d_out) {
+        yrow.copy_from_slice(bias);
+    }
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = (rows - r0).min(LANES);
+        let block = &mut out[r0 * d_out..(r0 + rb) * d_out];
+        for i in 0..d_in {
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            for rr in 0..rb {
+                let xv = x[(r0 + rr) * d_in + i];
+                if xv != 0.0 {
+                    let yrow = &mut block[rr * d_out..(rr + 1) * d_out];
+                    if lanes {
+                        axpy8_lanes(yrow, xv, wrow);
+                    } else {
+                        axpy8_scalar(yrow, xv, wrow);
+                    }
+                }
+            }
+        }
+        r0 += rb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // NOTE: these tests compare the `_lanes` and `_scalar` variants
+    // directly and never call `set_forced` — the dispatch mode is
+    // process-global and other lib tests run concurrently (the forced
+    // modes are exercised in `tests/integration_simd.rs`, which owns its
+    // whole process).
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    /// Ragged lengths around the lane width.
+    const LENS: [usize; 10] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 100];
+
+    #[test]
+    fn reductions_match_f64_reference_on_ragged_lengths() {
+        let mut rng = Rng::new(42);
+        for &n in &LENS {
+            let a = randn(&mut rng, n);
+            let b = randn(&mut rng, n);
+            let dot_ref: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let sum_ref: f64 = a.iter().map(|&x| x as f64).sum();
+            let mu = 0.25f32;
+            let ssq_ref: f64 =
+                a.iter().map(|&x| (x as f64 - mu as f64) * (x as f64 - mu as f64)).sum();
+            for (name, got) in [
+                ("dot.lanes", dot8_lanes(&a, &b) as f64 - dot_ref),
+                ("dot.scalar", dot8_scalar(&a, &b) as f64 - dot_ref),
+                ("sum.lanes", sum8_lanes(&a) as f64 - sum_ref),
+                ("sum.scalar", sum8_scalar(&a) as f64 - sum_ref),
+                ("ssq.lanes", sumsq_diff8_lanes(&a, mu) as f64 - ssq_ref),
+                ("ssq.scalar", sumsq_diff8_scalar(&a, mu) as f64 - ssq_ref),
+            ] {
+                assert!(got.abs() < 1e-3 * (n as f64 + 1.0), "n={n} {name}: off by {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_map_matches_materialized_sum_exactly() {
+        // same summation order as sum8 in each mode, term for term
+        let mut rng = Rng::new(58);
+        for &n in &LENS {
+            let a = randn(&mut rng, n);
+            assert_eq!(sum8_map_lanes(n, |i| a[i]), sum8_lanes(&a), "lanes n={n}");
+            assert_eq!(sum8_map_scalar(n, |i| a[i]), sum8_scalar(&a), "scalar n={n}");
+        }
+    }
+
+    #[test]
+    fn max_is_exact_across_variants() {
+        let mut rng = Rng::new(7);
+        for &n in &LENS {
+            let mut a = randn(&mut rng, n);
+            if n > 2 {
+                a[n / 2] = f32::NEG_INFINITY;
+            }
+            assert_eq!(max8_lanes(&a), max8_scalar(&a), "n={n}");
+        }
+        assert_eq!(max8_lanes(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bit_identical_across_variants() {
+        let mut rng = Rng::new(19);
+        for &n in &LENS {
+            let x = randn(&mut rng, n);
+            let base = randn(&mut rng, n);
+            let a = 0.73f32;
+
+            let mut y1 = base.clone();
+            let mut y2 = base.clone();
+            axpy8_lanes(&mut y1, a, &x);
+            axpy8_scalar(&mut y2, a, &x);
+            assert_eq!(y1, y2, "axpy n={n}");
+
+            let mut y1 = base.clone();
+            let mut y2 = base.clone();
+            add8_lanes(&mut y1, &x);
+            add8_scalar(&mut y2, &x);
+            assert_eq!(y1, y2, "add n={n}");
+
+            let mut y1 = base.clone();
+            let mut y2 = base.clone();
+            scale8_lanes(&mut y1, a);
+            scale8_scalar(&mut y2, a);
+            assert_eq!(y1, y2, "scale n={n}");
+
+            let mut y1 = base.clone();
+            let mut y2 = base.clone();
+            scale_add8_lanes(&mut y1, a, -0.4);
+            scale_add8_scalar(&mut y2, a, -0.4);
+            assert_eq!(y1, y2, "scale_add n={n}");
+
+            let g = randn(&mut rng, n);
+            let b = randn(&mut rng, n);
+            let mut y1 = base.clone();
+            let mut y2 = base;
+            norm_affine8_lanes(&mut y1, &g, &b, 0.2, 1.7);
+            norm_affine8_scalar(&mut y2, &g, &b, 0.2, 1.7);
+            assert_eq!(y1, y2, "norm_affine n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_reference() {
+        let mut rng = Rng::new(33);
+        // ragged row counts and dims around the 8-row block
+        for &(rows, d_in, d_out) in
+            &[(1usize, 1usize, 1usize), (3, 5, 2), (8, 8, 8), (9, 7, 5), (17, 13, 11), (2, 4, 1)]
+        {
+            let x = randn(&mut rng, rows * d_in);
+            let w = randn(&mut rng, d_in * d_out);
+            let b = randn(&mut rng, d_out);
+            let mut naive = vec![0.0f32; rows * d_out];
+            for r in 0..rows {
+                for o in 0..d_out {
+                    let mut acc = b[o] as f64;
+                    for i in 0..d_in {
+                        acc += x[r * d_in + i] as f64 * w[i * d_out + o] as f64;
+                    }
+                    naive[r * d_out + o] = acc as f32;
+                }
+            }
+            let mut got = vec![0.0f32; rows * d_out];
+            matmul_rows8(&x, &w, &b, rows, d_in, d_out, &mut got);
+            for (g, n) in got.iter().zip(&naive) {
+                assert!(
+                    (g - n).abs() <= 1e-4 * (1.0 + n.abs()),
+                    "({rows},{d_in},{d_out}): {g} vs {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn enabled_resolves_without_panicking() {
+        // value depends on the environment (CI runs the suite under both
+        // CAST_NO_SIMD settings); only the dispatch machinery is asserted
+        let _ = enabled();
+    }
+}

@@ -3,6 +3,18 @@
 //! `make artifacts` (AOT HLO) nor `cast gen` (native manifests) has run.
 //! The native-backend suite (`integration_native.rs`) needs no disk
 //! artifacts at all — it synthesizes manifests in memory.
+//!
+//! Also home to the golden-fingerprint helpers (`golden_*` /
+//! [`Fingerprint`]): fixed-seed forward-logit and gradient-norm
+//! fingerprints for one tiny config per attention variant, so kernel
+//! rewrites diff against the committed baseline in
+//! `tests/goldens/fingerprints.json` instead of only self-consistency
+//! (used by `integration_simd.rs`).
+//!
+//! Every test binary that declares `mod common` compiles this whole
+//! file, and each binary uses a different subset of the helpers — so
+//! dead-code analysis is per-binary noise here, not signal.
+#![allow(dead_code)]
 
 use std::path::PathBuf;
 
@@ -30,6 +42,105 @@ pub fn tiny_dir(variant: &str) -> Option<PathBuf> {
     } else {
         None
     }
+}
+
+// ---------------------------------------------------------------------------
+// golden fingerprints
+// ---------------------------------------------------------------------------
+
+/// The attention variants the golden suite pins, in fingerprint order
+/// ("causal" is the `cast_sa` mechanism with the causal flag).
+pub const GOLDEN_VARIANTS: [&str; 6] = ["topk", "sa", "causal", "vanilla", "local", "lsh"];
+
+/// Fixed-seed forward + backward fingerprint of one tiny config.
+pub struct Fingerprint {
+    pub loss: f32,
+    /// Global L2 norm over every parameter gradient, accumulated in f64.
+    pub grad_norm: f64,
+    /// The full logit block (B=2 × 2 classes).
+    pub logits: Vec<f32>,
+}
+
+/// One tiny config per variant × attention fn: seq 16, batch 2, depth 1,
+/// h 2, d 8, Nc 2, κ 4 — small enough that the whole 12-entry suite runs
+/// in well under a second, big enough that every kernel participates.
+pub fn golden_meta(variant: &str, attn_fn: &str) -> cast::runtime::ModelMeta {
+    let (var, causal) = match variant {
+        "topk" => ("cast_topk", false),
+        "sa" => ("cast_sa", false),
+        "causal" => ("cast_sa", true),
+        other => (other, false), // vanilla | local | lsh
+    };
+    cast::runtime::ModelMeta {
+        task: "text".to_string(),
+        variant: var.to_string(),
+        seq_len: 16,
+        batch: 2,
+        n_c: 2,
+        kappa: 4,
+        depth: 1,
+        heads: 2,
+        d: 8,
+        d_ff: 16,
+        d_emb: 8,
+        vocab: 32,
+        n_classes: 2,
+        dual: false,
+        norm: "layer".to_string(),
+        prenorm: false,
+        attn_fn: attn_fn.to_string(),
+        window: 8,
+        causal,
+    }
+}
+
+/// Compute the fingerprint of one golden config under the *current*
+/// SIMD/thread settings (the comparison tolerance absorbs the documented
+/// reassociation drift between modes).
+pub fn compute_fingerprint(variant: &str, attn_fn: &str) -> Fingerprint {
+    use cast::runtime::native::grad;
+    use cast::runtime::native::model::{run_init, run_predict};
+    use cast::runtime::tensor::HostTensor;
+    let man = cast::runtime::Manifest::synthetic(golden_meta(variant, attn_fn));
+    let seed = HostTensor::u32(vec![], vec![1234]);
+    let params = run_init(&man, &[&seed]).unwrap();
+    let n: usize = man.tokens_shape.iter().product();
+    let tokens = HostTensor::s32(
+        man.tokens_shape.clone(),
+        (0..n).map(|i| ((i * 7 + 3) % 32) as i32).collect(),
+    );
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&tokens);
+    let logits = run_predict(&man, &inputs).unwrap()[0].as_f32().unwrap().to_vec();
+    let refs: Vec<&HostTensor> = params.iter().collect();
+    let labels = vec![0i32, 1];
+    let mut ws = grad::GradScratch::new();
+    let out = grad::loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap();
+    let mut sq = 0.0f64;
+    for g in &out.grads {
+        for &v in g {
+            sq += (v as f64) * (v as f64);
+        }
+    }
+    Fingerprint { loss: out.loss, grad_norm: sq.sqrt(), logits }
+}
+
+/// Committed baseline location (checked in once generated; the golden
+/// test writes it with instructions when missing).
+pub fn goldens_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("goldens")
+        .join("fingerprints.json")
+}
+
+pub fn fingerprint_json(fp: &Fingerprint) -> cast::util::json::Json {
+    use cast::util::json::Json;
+    Json::obj(vec![
+        ("loss", Json::num(fp.loss as f64)),
+        ("grad_norm", Json::num(fp.grad_norm)),
+        ("logits", Json::Arr(fp.logits.iter().map(|&v| Json::num(v as f64)).collect())),
+    ])
 }
 
 /// Skip (with a loud message) when artifacts are missing — integration

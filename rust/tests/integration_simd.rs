@@ -1,0 +1,391 @@
+//! SIMD kernel subsystem proof: every `util::simd` lane kernel against
+//! its sequential scalar reference (randomized shapes, ragged < 8
+//! remainders), the forced-dispatch escape hatch, a full-model
+//! forward+backward determinism cross-matrix over
+//! `SIMD × CAST_NUM_THREADS ∈ {1,4}`, the SIMD-vs-scalar grad-check
+//! divergence report, and the golden-fingerprint regression gate.
+//!
+//! Exactness contract under test (see `util::simd` module docs):
+//! elementwise kernels, `max8`, and the matmul microkernel are
+//! bit-identical across modes; the reductions (`dot8`/`sum8`/
+//! `sumsq_diff8`) may differ only by reassociation, bounded here by
+//! 1e-5 relative to the condition scale `Σ|terms|`.
+//!
+//! The SIMD mode and thread count are process-global, so every test that
+//! touches either serializes on one lock — this binary owns its process
+//! (each integration test file is a separate binary), so no other suite
+//! can observe the flips.
+
+mod common;
+
+use cast::runtime::native::grad;
+use cast::runtime::native::model::{run_init, run_predict};
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::tensor::HostTensor;
+use cast::runtime::Manifest;
+use cast::util::json::Json;
+use cast::util::parallel;
+use cast::util::prop::{grad_check_modes, GradCheckCfg};
+use cast::util::rng::Rng;
+use cast::util::simd;
+
+/// Serializes every test that flips the process-global SIMD mode or
+/// thread count (results *do* depend on the SIMD mode, within tolerance,
+/// so unsynchronized flips could turn a determinism check flaky).
+static GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn with_settings<T>(lanes: Option<bool>, threads: usize, f: impl FnOnce() -> T) -> T {
+    /// Clears both overrides even when `f` panics (an assertion failure
+    /// must not leak a forced mode into the tests that run afterwards).
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::set_forced(None);
+            parallel::set_threads(0);
+        }
+    }
+    let _guard = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = Restore;
+    simd::set_forced(lanes);
+    parallel::set_threads(threads);
+    f()
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32).collect()
+}
+
+/// Ragged lengths straddling the 8-lane width, plus layer-sized rows.
+const LENS: [usize; 12] = [0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 129];
+
+// ---------------------------------------------------------------------------
+// kernel-level parity: lanes vs scalar reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reduction_kernels_match_scalar_reference_within_tolerance() {
+    let mut rng = Rng::new(101);
+    for trial in 0..20 {
+        for &n in &LENS {
+            let a = randn(&mut rng, n);
+            let b = randn(&mut rng, n);
+            // condition scale: reassociation error is relative to the sum
+            // of |terms|, not to the (possibly cancelled) result
+            let dot_scale: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f32>() + 1.0;
+            let sum_scale: f32 = a.iter().map(|x| x.abs()).sum::<f32>() + 1.0;
+            let d = (simd::dot8_lanes(&a, &b) - simd::dot8_scalar(&a, &b)).abs();
+            assert!(d <= 1e-5 * dot_scale, "dot8 n={n} trial={trial}: {d} vs scale {dot_scale}");
+            let s = (simd::sum8_lanes(&a) - simd::sum8_scalar(&a)).abs();
+            assert!(s <= 1e-5 * sum_scale, "sum8 n={n} trial={trial}: {s}");
+            let mu = 0.3f32;
+            let q = (simd::sumsq_diff8_lanes(&a, mu) - simd::sumsq_diff8_scalar(&a, mu)).abs();
+            let q_scale: f32 = a.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() + 1.0;
+            assert!(q <= 1e-5 * q_scale, "sumsq_diff8 n={n} trial={trial}: {q}");
+        }
+    }
+}
+
+#[test]
+fn order_preserving_kernels_are_bit_exact_across_modes() {
+    let mut rng = Rng::new(202);
+    for &n in &LENS {
+        let x = randn(&mut rng, n);
+        let base = randn(&mut rng, n);
+        let g = randn(&mut rng, n);
+        let bv = randn(&mut rng, n);
+        let a = -1.37f32;
+
+        assert_eq!(simd::max8_lanes(&x), simd::max8_scalar(&x), "max8 n={n}");
+
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        simd::axpy8_lanes(&mut y1, a, &x);
+        simd::axpy8_scalar(&mut y2, a, &x);
+        assert_eq!(y1, y2, "axpy8 n={n}");
+
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        simd::add8_lanes(&mut y1, &x);
+        simd::add8_scalar(&mut y2, &x);
+        assert_eq!(y1, y2, "add8 n={n}");
+
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        simd::scale8_lanes(&mut y1, a);
+        simd::scale8_scalar(&mut y2, a);
+        assert_eq!(y1, y2, "scale8 n={n}");
+
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        simd::scale_add8_lanes(&mut y1, a, 0.21);
+        simd::scale_add8_scalar(&mut y2, a, 0.21);
+        assert_eq!(y1, y2, "scale_add8 n={n}");
+
+        let mut y1 = base.clone();
+        let mut y2 = base;
+        simd::norm_affine8_lanes(&mut y1, &g, &bv, 0.4, 2.3);
+        simd::norm_affine8_scalar(&mut y2, &g, &bv, 0.4, 2.3);
+        assert_eq!(y1, y2, "norm_affine8 n={n}");
+    }
+}
+
+#[test]
+fn matmul_microkernel_is_bit_exact_across_modes() {
+    // the per-element accumulation order (ascending input dim) is the
+    // same in both dispatch modes, so the full matmul must agree exactly
+    let mut rng = Rng::new(303);
+    for &(rows, d_in, d_out) in &[
+        (1usize, 1usize, 1usize),
+        (2, 3, 1),
+        (7, 5, 3),
+        (8, 8, 8),
+        (9, 16, 7),
+        (23, 13, 17),
+        (64, 16, 32),
+    ] {
+        let x = randn(&mut rng, rows * d_in);
+        let w = randn(&mut rng, d_in * d_out);
+        let b = randn(&mut rng, d_out);
+        let lanes = with_settings(Some(true), 1, || {
+            let mut y = vec![0.0f32; rows * d_out];
+            simd::matmul_rows8(&x, &w, &b, rows, d_in, d_out, &mut y);
+            y
+        });
+        let scalar = with_settings(Some(false), 1, || {
+            let mut y = vec![0.0f32; rows * d_out];
+            simd::matmul_rows8(&x, &w, &b, rows, d_in, d_out, &mut y);
+            y
+        });
+        assert_eq!(lanes, scalar, "matmul ({rows},{d_in},{d_out})");
+    }
+}
+
+#[test]
+fn forced_dispatch_routes_to_the_requested_variant() {
+    let mut rng = Rng::new(404);
+    let a = randn(&mut rng, 100);
+    let b = randn(&mut rng, 100);
+    let via_scalar = with_settings(Some(false), 1, || simd::dot8(&a, &b));
+    let via_lanes = with_settings(Some(true), 1, || simd::dot8(&a, &b));
+    assert_eq!(via_scalar, simd::dot8_scalar(&a, &b), "forced scalar must hit the reference");
+    assert_eq!(via_lanes, simd::dot8_lanes(&a, &b), "forced lanes must hit the lane kernel");
+}
+
+// ---------------------------------------------------------------------------
+// full-model determinism cross-matrix: SIMD × CAST_NUM_THREADS
+// ---------------------------------------------------------------------------
+
+/// Forward logits + loss + full-parameter gradients of the tiny config
+/// under explicit SIMD/thread settings.
+fn model_pass(variant: &str, lanes: bool, threads: usize) -> (Vec<f32>, f32, Vec<Vec<f32>>) {
+    let man = Manifest::synthetic(tiny_meta(variant));
+    with_settings(Some(lanes), threads, || {
+        let seed = HostTensor::u32(vec![], vec![11]);
+        let params = run_init(&man, &[&seed]).unwrap();
+        let n: usize = man.tokens_shape.iter().product();
+        let tokens = HostTensor::s32(
+            man.tokens_shape.clone(),
+            (0..n).map(|i| ((i * 13 + 5) % 97) as i32).collect(),
+        );
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        let logits = run_predict(&man, &inputs).unwrap()[0].as_f32().unwrap().to_vec();
+        let refs: Vec<&HostTensor> = params.iter().collect();
+        let mut ws = grad::GradScratch::new();
+        let out = grad::loss_and_grads(&man, &refs, &tokens, &[0, 1], &mut ws).unwrap();
+        (logits, out.loss, out.grads)
+    })
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn model_determinism_cross_matrix_simd_by_threads() {
+    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        let mut per_mode = Vec::new();
+        for lanes in [true, false] {
+            // within one SIMD mode, the thread count must not move a bit
+            let (lg1, loss1, g1) = model_pass(variant, lanes, 1);
+            let (lg4, loss4, g4) = model_pass(variant, lanes, 4);
+            assert_eq!(lg1, lg4, "{variant} lanes={lanes}: logits vary with threads");
+            assert_eq!(loss1, loss4, "{variant} lanes={lanes}: loss varies with threads");
+            for (i, (a, b)) in g1.iter().zip(&g4).enumerate() {
+                assert_eq!(a, b, "{variant} lanes={lanes}: grad tensor {i} varies with threads");
+            }
+            per_mode.push((lg1, loss1, g1));
+        }
+        // across SIMD modes, only the documented reassociation drift
+        let (lg_s, loss_s, g_s) = &per_mode[0];
+        let (lg_n, loss_n, g_n) = &per_mode[1];
+        assert!(
+            max_abs_diff(lg_s, lg_n) <= 1e-4,
+            "{variant}: SIMD-vs-scalar logits diverged by {}",
+            max_abs_diff(lg_s, lg_n)
+        );
+        assert!(
+            (loss_s - loss_n).abs() <= 1e-4,
+            "{variant}: SIMD-vs-scalar loss diverged: {loss_s} vs {loss_n}"
+        );
+        for (i, (a, b)) in g_s.iter().zip(g_n).enumerate() {
+            let scale = a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+            let diff = max_abs_diff(a, b);
+            assert!(
+                diff <= 1e-4 * scale,
+                "{variant}: grad tensor {i} SIMD-vs-scalar diverged by {diff} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_simd_runs_are_bit_for_bit_deterministic() {
+    let (lg_a, loss_a, g_a) = model_pass("cast_topk", true, 4);
+    let (lg_b, loss_b, g_b) = model_pass("cast_topk", true, 4);
+    assert_eq!(lg_a, lg_b);
+    assert_eq!(loss_a, loss_b);
+    for (a, b) in g_a.iter().zip(&g_b) {
+        assert_eq!(a, b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// grad-check under both modes + per-block backward divergence report
+// ---------------------------------------------------------------------------
+
+#[test]
+fn central_difference_passes_in_both_modes_with_bounded_divergence() {
+    let man = Manifest::synthetic(common::golden_meta("topk", "softmax"));
+    let params = {
+        let _guard = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        run_init(&man, &[&HostTensor::u32(vec![], vec![5])]).unwrap()
+    };
+    let mut theta = Vec::new();
+    for t in &params {
+        theta.extend_from_slice(t.as_f32().unwrap());
+    }
+    let blocks: Vec<(String, usize)> = man
+        .params
+        .iter()
+        .map(|s| (s.name.clone(), s.shape.iter().product()))
+        .collect();
+    let n: usize = man.tokens_shape.iter().product();
+    let tokens = HostTensor::s32(
+        man.tokens_shape.clone(),
+        (0..n).map(|i| ((i * 7 + 3) % 32) as i32).collect(),
+    );
+    let labels = vec![0i32, 1];
+
+    let rebuild = |t: &[f32]| -> Vec<HostTensor> {
+        let mut out = Vec::with_capacity(man.params.len());
+        let mut off = 0usize;
+        for spec in &man.params {
+            let l: usize = spec.shape.iter().product();
+            out.push(HostTensor::f32(spec.shape.clone(), t[off..off + l].to_vec()));
+            off += l;
+        }
+        out
+    };
+    let run = |t: &[f32]| -> grad::LossAndGrads {
+        let tensors = rebuild(t);
+        let refs: Vec<&HostTensor> = tensors.iter().collect();
+        let mut ws = grad::GradScratch::new();
+        grad::loss_and_grads(&man, &refs, &tokens, &labels, &mut ws).unwrap()
+    };
+
+    // grad_check_modes flips the global SIMD mode — hold the lock
+    let _guard = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = GradCheckCfg { eps: 5e-3, rel_tol: 1e-2, abs_tol: 1e-4, max_per_block: 2 };
+    let report = grad_check_modes(
+        &cfg,
+        &theta,
+        &blocks,
+        || run(&theta).grads.concat(),
+        |t| {
+            let o = run(t);
+            (o.loss, o.fingerprint)
+        },
+    );
+    for d in &report {
+        eprintln!(
+            "simd-vs-scalar backward divergence {:<24} max_abs {:.3e} max_rel {:.3e}",
+            d.name, d.max_abs, d.max_rel
+        );
+        assert!(
+            d.max_abs <= 1e-4,
+            "block {:?}: backward passes diverged across SIMD modes by {}",
+            d.name,
+            d.max_abs
+        );
+    }
+    assert_eq!(report.len(), blocks.len());
+}
+
+// ---------------------------------------------------------------------------
+// golden fingerprints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_fingerprints_match_committed_baseline() {
+    // ambient mode, default threads: the tolerance absorbs the
+    // documented SIMD-vs-scalar drift, so one baseline serves both CI
+    // legs; the lock keeps concurrent mode flips out of the computation
+    let _guard = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut computed: Vec<(String, common::Fingerprint)> = Vec::new();
+    for variant in common::GOLDEN_VARIANTS {
+        for attn in ["softmax", "laplace"] {
+            let fp = common::compute_fingerprint(variant, attn);
+            computed.push((format!("{variant}_{attn}"), fp));
+        }
+    }
+    let path = common::goldens_path();
+    if !path.exists() {
+        let pairs: Vec<(&str, Json)> = computed
+            .iter()
+            .map(|(k, fp)| (k.as_str(), common::fingerprint_json(fp)))
+            .collect();
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, Json::obj(pairs).to_string() + "\n").unwrap();
+        eprintln!(
+            "golden baseline was missing — wrote {} entries to {} (commit this file so \
+             future kernel rewrites diff against it)",
+            computed.len(),
+            path.display()
+        );
+        return;
+    }
+    let base = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .unwrap_or_else(|e| panic!("unparseable golden baseline {}: {e}", path.display()));
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-4 + 1e-3 * a.abs().max(b.abs());
+    for (key, fp) in &computed {
+        let entry = base.get(key).unwrap_or_else(|| {
+            panic!(
+                "golden baseline has no entry {key:?} — delete {} to regenerate",
+                path.display()
+            )
+        });
+        let loss = entry.get("loss").and_then(Json::as_f64).unwrap();
+        let gnorm = entry.get("grad_norm").and_then(Json::as_f64).unwrap();
+        assert!(
+            close(loss, fp.loss as f64),
+            "{key}: loss drifted from baseline: {loss} -> {}",
+            fp.loss
+        );
+        assert!(
+            close(gnorm, fp.grad_norm),
+            "{key}: gradient norm drifted from baseline: {gnorm} -> {}",
+            fp.grad_norm
+        );
+        let logits = entry.get("logits").and_then(Json::as_arr).unwrap();
+        assert_eq!(logits.len(), fp.logits.len(), "{key}: logit arity changed");
+        for (i, (lv, &cv)) in logits.iter().zip(&fp.logits).enumerate() {
+            let lv = lv.as_f64().unwrap();
+            assert!(
+                close(lv, cv as f64),
+                "{key}: logit {i} drifted from baseline: {lv} -> {cv}"
+            );
+        }
+    }
+}
