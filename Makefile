@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test test-simd gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd
+.PHONY: build test test-simd test-serve gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve
 
 build:
 	cargo build --release
@@ -38,6 +38,30 @@ bench-simd: build
 	./target/release/cast gen --out bench_simd_artifacts --variant cast_topk --seq 1024 --nc 8 --kappa 128
 	./target/release/cast bench --table 5 --artifacts bench_simd_artifacts --seq 1024 --steps 5 --append-json BENCH_native.json
 	CAST_NO_SIMD=1 ./target/release/cast bench --table 5 --artifacts bench_simd_artifacts --seq 1024 --steps 5 --append-json BENCH_native.json
+
+# Serve-stack integration suite (HTTP parser, TCP round trips, batching
+# determinism, graceful drain).
+test-serve:
+	cargo test -q --test integration_serve
+
+# Run the inference server on a zero-artifact seq-1024 CAST config
+# (ctrl-c drains gracefully; see DESIGN.md §Serving for the endpoints).
+serve: build
+	./target/release/cast serve --variant cast_topk --seq 1024 --nc 8 --kappa 128 --max-batch 8
+
+# Serve throughput measurement: the seq-1024 CAST config under 16
+# concurrent loadgen connections, once with --max-batch 8 and once with
+# --max-batch 1, appended as a serve_reqs_per_sec row pair to
+# BENCH_native.json (acceptance: batched >= 2x unbatched req/s).
+bench-serve: build
+	for mb in 8 1; do \
+	  ./target/release/cast serve --variant cast_topk --seq 1024 --nc 8 --kappa 128 \
+	    --addr 127.0.0.1:8477 --max-batch $$mb & pid=$$!; \
+	  sleep 2; \
+	  ./target/release/cast loadgen --addr 127.0.0.1:8477 --conns 16 --requests 25 \
+	    --bench-json BENCH_native.json || { kill $$pid 2>/dev/null; exit 1; }; \
+	  kill $$pid 2>/dev/null; wait $$pid 2>/dev/null || true; \
+	done
 
 artifacts:
 	cd python && python -m compile.aot --suite default --out-root ../artifacts

@@ -175,6 +175,31 @@ pub fn train_row_json(config: &str, variant: &str, seq_len: usize, steps_per_sec
     )
 }
 
+/// A `serve_reqs_per_sec` row in the same schema — what `cast loadgen
+/// --bench-json` appends after driving a running server.  The shared
+/// `steps_per_sec` field carries requests/sec so cross-PR tooling reads
+/// one schema; the serve-specific fields (client-side exact latency
+/// percentiles, the loadgen concurrency) ride alongside.
+pub fn serve_row_json(report: &crate::serve::LoadReport) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(&report.model)),
+        ("variant", Json::str("serve")),
+        ("seq_len", Json::num(report.seq_len as f64)),
+        ("kind", Json::str("serve_reqs_per_sec")),
+        ("steps_per_sec", Json::num(report.reqs_per_sec)),
+        ("p50_ms", Json::num(report.p50_ms)),
+        ("p99_ms", Json::num(report.p99_ms)),
+        ("max_batch", Json::num(report.server_max_batch as f64)),
+        ("batch_rows_max", Json::num(report.batch_rows_max as f64)),
+        ("conns", Json::num(report.conns as f64)),
+        ("requests", Json::num((report.ok + report.errors) as f64)),
+        ("errors", Json::num(report.errors as f64)),
+        ("peak_rss_mb", Json::num(0.0)),
+        ("threads", Json::num(Engine::threads() as f64)),
+        ("simd", Json::Bool(crate::util::simd::enabled())),
+    ])
+}
+
 /// Append one row to a bench-json file — see [`append_bench_rows`].
 pub fn append_bench_row(path: &Path, row: Json) -> Result<()> {
     append_bench_rows(path, vec![row])

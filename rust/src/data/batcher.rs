@@ -15,9 +15,30 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 
 use super::{make_batch, Batch, TaskGen};
+
+/// Right-pad token rows with `pad` to a fixed `seq_len` and pack them
+/// into one `(B, seq_len)` s32 tensor — the batch-assembly step shared
+/// by the serve micro-batcher (CAST's per-cluster geometry requires
+/// every row of a batch to share one sequence length, so ragged client
+/// requests are padded up to the model's length).  Rows longer than
+/// `seq_len`, and empty row sets, are errors.
+pub fn pad_rows(rows: &[Vec<i32>], seq_len: usize, pad: i32) -> anyhow::Result<HostTensor> {
+    anyhow::ensure!(!rows.is_empty(), "no token rows to batch");
+    let mut data = vec![pad; rows.len() * seq_len];
+    for (i, row) in rows.iter().enumerate() {
+        anyhow::ensure!(
+            row.len() <= seq_len,
+            "token row {i} has {} tokens but the model sequence length is {seq_len}",
+            row.len()
+        );
+        data[i * seq_len..i * seq_len + row.len()].copy_from_slice(row);
+    }
+    Ok(HostTensor::s32(vec![rows.len(), seq_len], data))
+}
 
 pub struct Batcher {
     rx: Receiver<(u64, Batch)>,
@@ -146,6 +167,15 @@ mod tests {
             let b = batcher.next();
             assert_eq!(b.tokens.shape, vec![1, 64]);
         }
+    }
+
+    #[test]
+    fn pad_rows_pads_and_packs() {
+        let t = pad_rows(&[vec![1, 2, 3], vec![4], vec![5, 6, 7, 8]], 4, 0).unwrap();
+        assert_eq!(t.shape, vec![3, 4]);
+        assert_eq!(t.as_s32().unwrap(), &[1, 2, 3, 0, 4, 0, 0, 0, 5, 6, 7, 8]);
+        assert!(pad_rows(&[vec![1; 5]], 4, 0).is_err(), "overlong row must fail");
+        assert!(pad_rows(&[], 4, 0).is_err(), "empty batch must fail");
     }
 
     #[test]

@@ -32,5 +32,6 @@ pub mod coordinator;
 pub mod data;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;

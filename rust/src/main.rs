@@ -23,6 +23,20 @@
 //!   data    --task <task> [--n N --seq L]            (inspect generators)
 //!   inspect --dir <artifact-dir>                      (manifest summary)
 //!   memmodel [--seq N --kappa K]                      (§3.4 predictions)
+//!   serve   [--addr H:P --dir <d1,d2,..> --ckpt PATH --max-batch N
+//!           --max-wait-us U --queue N --conn-workers N --infer-workers N
+//!           --seed S | size flags as in train]
+//!           (HTTP inference server with dynamic micro-batching; without
+//!            --dir it serves a synthetic config built from
+//!            --task/--variant/--seq/--nc/--kappa/--depth — zero
+//!            artifacts.  Endpoints: POST /predict, GET /models,
+//!            POST /models/reload, GET /healthz, GET /metrics,
+//!            POST /admin/shutdown.  SIGINT/SIGTERM drain gracefully.)
+//!   loadgen [--addr H:P --conns N --requests N --model KEY --seq N
+//!           --seed S --bench-json PATH --allow-errors]
+//!           (closed-loop client driving a running server; --bench-json
+//!            appends a serve_reqs_per_sec row, e.g. to BENCH_native.json
+//!            — `make bench-serve` records the batched/unbatched pair)
 //!   _job    (internal: isolated child for peak-RSS measurement)
 //!
 //! Backend selection: CAST_BACKEND=native (default, pure-Rust engine, no
@@ -68,6 +82,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "data" => cmd_data(args),
         "inspect" => cmd_inspect(args),
         "memmodel" => cmd_memmodel(args),
+        "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "_job" => cmd_job(args),
         "help" | "--help" => {
             println!("{}", HELP);
@@ -78,10 +94,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "cast — CAST reproduction coordinator
-  gen | train | eval | bench | sweep | viz | data | inspect | memmodel
+  gen | train | eval | bench | sweep | viz | data | inspect | memmodel | serve | loadgen
 Quickstart (no artifacts needed — native backend):
   cast gen --out artifacts && cast train --dir artifacts/text_cast_topk_n64_b2_c4_k16
-See rust/src/main.rs header or DESIGN.md for flags.";
+Serving (zero-artifact smoke):
+  cast serve --seq 128 --max-batch 8 &   then   cast loadgen --conns 16 --requests 25
+See rust/src/main.rs header or DESIGN.md §Serving for flags.";
 
 /// Write native-runnable artifact directories (manifest.json only) for
 /// the tiny smoke configs — the zero-Python path into train/eval/viz.
@@ -399,6 +417,94 @@ fn cmd_memmodel(args: &Args) -> Result<()> {
             est.hbm_bytes,
             est.arithmetic_intensity
         );
+    }
+    Ok(())
+}
+
+/// `cast serve`: load the requested models into a registry and run the
+/// micro-batching HTTP server until SIGINT/SIGTERM or /admin/shutdown.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cast::serve::{install_signal_handlers, ModelSource, Registry, ServeConfig, Server};
+    let engine = Engine::auto()?;
+    let registry = std::sync::Arc::new(Registry::new(engine));
+    let seed = args.u64("seed", 0) as u32;
+    match args.opt_str("dir") {
+        Some(dirs) => {
+            let ckpt = args.opt_str("ckpt").map(PathBuf::from);
+            let list: Vec<&str> =
+                dirs.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+            anyhow::ensure!(!list.is_empty(), "--dir got no directories");
+            anyhow::ensure!(
+                ckpt.is_none() || list.len() == 1,
+                "--ckpt applies to exactly one --dir (got {})",
+                list.len()
+            );
+            for d in &list {
+                registry.load(
+                    None,
+                    ModelSource::Dir { dir: PathBuf::from(d), ckpt: ckpt.clone(), seed },
+                )?;
+            }
+        }
+        None => {
+            // zero-artifact path: synthesize from the size flags, like
+            // the artifact-less `cast train`
+            let manifest = synthetic_manifest(args)?;
+            registry.load(None, ModelSource::Synthetic { meta: manifest.meta.clone(), seed })?;
+        }
+    }
+    let cfg = ServeConfig {
+        addr: args.str("addr", "127.0.0.1:8477"),
+        max_batch: args.usize("max-batch", 8),
+        max_wait: std::time::Duration::from_micros(args.u64("max-wait-us", 2000)),
+        queue_cap: args.usize("queue", 256),
+        conn_workers: args.usize("conn-workers", 32),
+        infer_workers: args.usize("infer-workers", 1),
+        max_body: args.usize("max-body", 8 << 20),
+    };
+    install_signal_handlers();
+    let server = Server::bind(cfg, registry)?;
+    println!(
+        "serving on http://{} — endpoints: POST /predict, GET /models, POST /models/reload, \
+         GET /healthz, GET /metrics, POST /admin/shutdown (ctrl-c drains gracefully)",
+        server.local_addr()
+    );
+    server.run()
+}
+
+/// `cast loadgen`: drive a running server closed-loop and report
+/// requests/sec + exact client-side p50/p99 latency.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = cast::serve::LoadgenConfig {
+        addr: args.str("addr", "127.0.0.1:8477"),
+        conns: args.usize("conns", 16),
+        requests: args.usize("requests", 25),
+        model: args.opt_str("model"),
+        seq: if args.has("seq") { Some(args.usize("seq", 0)) } else { None },
+        seed: args.u64("seed", 0),
+    };
+    let report = cast::serve::loadgen::run(&cfg)?;
+    println!(
+        "loadgen: {} ok / {} errors in {:.2}s -> {:.2} req/s  p50 {:.2} ms  p99 {:.2} ms  \
+         (model {}, {} tokens/req, {} conns, server max_batch {}, largest batch seen {})",
+        report.ok,
+        report.errors,
+        report.elapsed_s,
+        report.reqs_per_sec,
+        report.p50_ms,
+        report.p99_ms,
+        report.model,
+        report.seq_len,
+        report.conns,
+        report.server_max_batch,
+        report.batch_rows_max
+    );
+    if let Some(path) = args.opt_str("bench-json") {
+        cast::bench::append_bench_row(&PathBuf::from(&path), cast::bench::serve_row_json(&report))?;
+        println!("serve bench row -> {path}");
+    }
+    if report.errors > 0 && !args.has("allow-errors") {
+        bail!("{} of {} requests failed", report.errors, report.ok + report.errors);
     }
     Ok(())
 }

@@ -18,6 +18,11 @@ use crate::util::json::Json;
 use super::params::ModelState;
 
 const MAGIC: &[u8; 8] = b"CAST0001";
+/// Sanity caps applied while loading: a corrupt or truncated file must
+/// surface as a proper error (the serve registry rejects the upload),
+/// never as a panic or an absurd allocation.
+const MAX_HEADER_BYTES: usize = 64 << 20;
+const MAX_TENSOR_ELEMS: usize = 1 << 31;
 
 pub fn save(state: &ModelState, names: &[String], path: &Path) -> Result<()> {
     if names.len() != state.params.len() {
@@ -64,6 +69,13 @@ pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
     let mut len_bytes = [0u8; 8];
     f.read_exact(&mut len_bytes)?;
     let header_len = u64::from_le_bytes(len_bytes) as usize;
+    // cap before allocating: a corrupt length field must not trigger a
+    // multi-GB allocation
+    if header_len > MAX_HEADER_BYTES {
+        bail!(
+            "{path:?} is corrupt: header length {header_len} exceeds the {MAX_HEADER_BYTES}-byte cap"
+        );
+    }
     let mut header = vec![0u8; header_len];
     f.read_exact(&mut header)?;
     let header = Json::parse(std::str::from_utf8(&header)?)?;
@@ -74,16 +86,37 @@ pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
     let mut names = Vec::new();
     let mut shapes: Vec<(Vec<usize>, DType)> = Vec::new();
     for s in specs {
-        names.push(s.get("name").and_then(Json::as_str).context("name")?.to_string());
-        let shape: Vec<usize> = s
-            .get("shape")
-            .and_then(Json::as_arr)
-            .context("shape")?
+        let name = s.get("name").and_then(Json::as_str).context("header param name")?;
+        let mut shape = Vec::new();
+        for d in s.get("shape").and_then(Json::as_arr).with_context(|| format!("header shape for {name:?}"))? {
+            shape.push(parse_dim(d).with_context(|| format!("header shape for {name:?}"))?);
+        }
+        let elems = shape
             .iter()
-            .map(|d| d.as_usize().unwrap())
-            .collect();
-        let dtype = DType::parse(s.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .unwrap_or(usize::MAX);
+        if elems > MAX_TENSOR_ELEMS {
+            bail!("{path:?} is corrupt: {name:?} shape {shape:?} exceeds the element cap");
+        }
+        let dtype = DType::parse(s.get("dtype").and_then(Json::as_str).context("header dtype")?)?;
+        names.push(name.to_string());
         shapes.push((shape, dtype));
+    }
+
+    // before allocating any payload buffer, check the header's declared
+    // sizes against the actual file length — a corrupt header must not
+    // trigger a multi-GB zero-fill, and truncation surfaces up front
+    let declared: u64 = shapes
+        .iter()
+        .map(|(shape, _)| 4 * shape.iter().map(|&d| d as u64).product::<u64>())
+        .sum::<u64>()
+        * 3; // params + m + v
+    let expected = 8 + 8 + header_len as u64 + declared;
+    let file_len = std::fs::metadata(path)?.len();
+    if file_len < expected {
+        bail!(
+            "{path:?} is corrupt or truncated: {file_len} bytes on disk, header declares {expected}"
+        );
     }
 
     let mut read_group = |f: &mut dyn Read| -> Result<Vec<HostTensor>> {
@@ -114,6 +147,17 @@ pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
         state = ModelState::from_params(state.params);
     }
     Ok((state, names))
+}
+
+/// Parse one shape dimension from the checkpoint header, rejecting the
+/// values a corrupt file can smuggle through the f64-backed JSON layer
+/// (negatives, fractions, non-numbers) instead of panicking.
+fn parse_dim(d: &Json) -> Result<usize> {
+    let n = d.as_f64().context("shape dim is not a number")?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > MAX_TENSOR_ELEMS as f64 {
+        bail!("shape dim {n} is not a valid tensor dimension");
+    }
+    Ok(n as usize)
 }
 
 fn tensor_bytes(t: &HostTensor) -> &[u8] {
@@ -165,6 +209,76 @@ mod tests {
         assert_eq!(loaded.params[0].as_f32().unwrap(), state.params[0].as_f32().unwrap());
         assert_eq!(loaded.m[0].as_f32().unwrap(), &[0.1, 0.2, 0.3, 0.4]);
         assert_eq!(loaded.v[1].as_f32().unwrap(), &[0.0, 0.0, 0.0]);
+    }
+
+    /// Assemble a file with valid magic + the given header JSON text.
+    fn write_with_header(path: &std::path::Path, header: &str, payload: &[u8]) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(payload);
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn corrupt_shapes_error_instead_of_panicking() {
+        let dir = std::env::temp_dir().join("cast_ckpt_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_shape.ckpt");
+        for bad in [
+            r#"{"step":0,"params":[{"name":"w","shape":["x",2],"dtype":"f32"}]}"#,
+            r#"{"step":0,"params":[{"name":"w","shape":[-4],"dtype":"f32"}]}"#,
+            r#"{"step":0,"params":[{"name":"w","shape":[2.5],"dtype":"f32"}]}"#,
+            r#"{"step":0,"params":[{"name":"w","shape":[1e18],"dtype":"f32"}]}"#,
+            r#"{"step":0,"params":[{"name":"w","shape":{"not":"arr"},"dtype":"f32"}]}"#,
+        ] {
+            write_with_header(&path, bad, &[]);
+            assert!(load(&path).is_err(), "header {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn huge_declared_shape_errors_before_allocating() {
+        let dir = std::env::temp_dir().join("cast_ckpt_huge_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("huge.ckpt");
+        // a ~4 GiB declared tensor in a tiny file must fail the
+        // file-length check up front, not zero-fill gigabytes first
+        write_with_header(
+            &path,
+            r#"{"step":0,"params":[{"name":"w","shape":[1073741824],"dtype":"f32"}]}"#,
+            &[0u8; 16],
+        );
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let dir = std::env::temp_dir().join("cast_ckpt_trunc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.ckpt");
+        // header declares 3 f32s; payload carries only one
+        write_with_header(
+            &path,
+            r#"{"step":0,"params":[{"name":"w","shape":[3],"dtype":"f32"}]}"#,
+            &[0u8; 4],
+        );
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn absurd_header_length_is_an_error() {
+        let dir = std::env::temp_dir().join("cast_ckpt_hdrlen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hdrlen.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("header length"), "{err:#}");
     }
 
     #[test]

@@ -10,12 +10,34 @@
 //! this seam (`ModelState`, the trainer, the bench harness, analysis) is
 //! backend-agnostic.
 
+use std::any::Any;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::artifacts::Manifest;
 use super::tensor::HostTensor;
+
+/// Opaque per-worker scratch an [`Executable`] may reuse across calls.
+/// Program entry points are stateless by contract, so any reusable
+/// working memory (the native engine's `Workspace`/`CastScratch`) has to
+/// be owned by the *caller* and threaded back in — this trait is that
+/// hand-back channel, kept opaque so the seam stays backend-agnostic.
+/// A long-lived serving worker allocates one scratch per model it runs
+/// and hands it to every batch, collapsing the per-call hot-path
+/// allocations to zero.
+pub trait Scratch: Send {
+    fn as_any(&mut self) -> &mut dyn Any;
+}
+
+/// The no-op scratch backends without reusable state hand out.
+struct NoScratch;
+
+impl Scratch for NoScratch {
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
 
 /// A loaded, runnable program.
 pub trait Executable: Send + Sync {
@@ -30,6 +52,24 @@ pub trait Executable: Send + Sync {
     fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let refs: Vec<&HostTensor> = inputs.iter().collect();
         self.run_refs(&refs)
+    }
+
+    /// Allocate a reusable scratch for this program.  Callers that run
+    /// the same program repeatedly (the serve inference workers) keep one
+    /// per worker and pass it to [`Executable::run_refs_scratch`].
+    fn make_scratch(&self) -> Box<dyn Scratch> {
+        Box::new(NoScratch)
+    }
+
+    /// Execute with borrowed inputs, reusing `scratch` for working
+    /// memory.  The default ignores the scratch — backends without
+    /// reusable state stay correct for free.
+    fn run_refs_scratch(
+        &self,
+        inputs: &[&HostTensor],
+        _scratch: &mut dyn Scratch,
+    ) -> Result<Vec<HostTensor>> {
+        self.run_refs(inputs)
     }
 }
 

@@ -29,7 +29,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, Executable};
+use super::backend::{Backend, Executable, Scratch};
 use super::tensor::HostTensor;
 
 /// The model variants the engine implements (mirrors configs.VARIANTS).
@@ -106,6 +106,25 @@ impl Executable for NativeExecutable {
             other => bail!("unknown entry {other:?}"),
         }
     }
+
+    /// `predict` hands out a reusable forward [`model::Workspace`]; the
+    /// other entry points have no cross-call state worth keeping.
+    fn make_scratch(&self) -> Box<dyn Scratch> {
+        Box::new(model::Workspace::default())
+    }
+
+    fn run_refs_scratch(
+        &self,
+        inputs: &[&HostTensor],
+        scratch: &mut dyn Scratch,
+    ) -> Result<Vec<HostTensor>> {
+        if self.entry == "predict" {
+            if let Some(ws) = scratch.as_any().downcast_mut::<model::Workspace>() {
+                return model::run_predict_ws(&self.manifest, inputs, ws);
+            }
+        }
+        self.run_refs(inputs)
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +145,25 @@ mod tests {
         assert!(!b.supports(&cast, "nonsense"));
         assert!(b.load(&vanilla, "predict_ag").is_err());
         assert!(b.load(&cast, "predict_ag").is_ok());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_stateless_predict() {
+        let b = NativeBackend;
+        let man = Manifest::synthetic(spec::tiny_meta("cast_topk"));
+        let init = b.load(&man, "init").unwrap();
+        let params = init.run(&[HostTensor::u32(vec![], vec![7])]).unwrap();
+        let exe = b.load(&man, "predict").unwrap();
+        let tokens = HostTensor::s32(vec![2, 64], (0..128).map(|i| i % 50).collect());
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens);
+        let plain = exe.run_refs(&inputs).unwrap();
+        let mut scratch = exe.make_scratch();
+        // same workspace across repeated calls: bit-identical logits
+        for _ in 0..2 {
+            let reused = exe.run_refs_scratch(&inputs, scratch.as_mut()).unwrap();
+            assert_eq!(reused[0].as_f32().unwrap(), plain[0].as_f32().unwrap());
+        }
     }
 
     #[test]

@@ -94,14 +94,17 @@ pub(crate) fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
     })
 }
 
-/// Per-forward reusable scratch: one instance serves every layer of one
+/// Reusable forward scratch: one instance serves every layer of an
 /// `encode` call, so the per-layer `Vec` allocations on the hot path
-/// collapse to one set per forward.  (Entry points are stateless by the
-/// program contract, so the workspace is rebuilt per call — cheap next
-/// to a forward; reusing it across calls would need caller-owned state
-/// behind the `Executable` seam.)
+/// collapse to one set per forward.  Entry points are stateless by the
+/// program contract, so `run_predict` builds one per call — but callers
+/// that run the same program repeatedly (the serve inference workers)
+/// own one per worker and thread it back in through the
+/// `Executable::run_refs_scratch` seam (`run_predict_ws`), dropping the
+/// per-batch allocations too.  Buffers resize lazily, so one workspace
+/// serves any batch size or model geometry.
 #[derive(Default)]
-struct Workspace {
+pub struct Workspace {
     /// CAST attention intermediates (q/k/v/affinities/R-slabs).
     cast: CastScratch,
     /// Pre-norm input copy (prenorm blocks norm a copy, not the residual).
@@ -110,6 +113,12 @@ struct Workspace {
     hid: Vec<f32>,
     /// FFN output (rows, d).
     ffn_out: Vec<f32>,
+}
+
+impl crate::runtime::backend::Scratch for Workspace {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
 }
 
 pub(crate) fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f32]) -> Result<()> {
@@ -221,6 +230,7 @@ fn encode(
     tokens: &[i32],
     b: usize,
     collect_ag: bool,
+    ws: &mut Workspace,
 ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
     let n = meta.seq_len;
     ensure!(tokens.len() == b * n, "tokens length {} != {}x{}", tokens.len(), b, n);
@@ -250,7 +260,6 @@ fn encode(
 
     let dims = dims_for(meta, b)?;
     let mut ags = Vec::new();
-    let mut ws = Workspace::default();
     for i in 0..meta.depth {
         let blk = format!("blocks.{i}");
         if meta.prenorm {
@@ -298,7 +307,12 @@ fn encode(
 }
 
 /// Pooled classifier features (B, d or 4d for dual), from a token tensor.
-fn pooled_features(p: &Params, meta: &ModelMeta, tokens: &HostTensor) -> Result<(Vec<f32>, usize)> {
+fn pooled_features(
+    p: &Params,
+    meta: &ModelMeta,
+    tokens: &HostTensor,
+    ws: &mut Workspace,
+) -> Result<(Vec<f32>, usize)> {
     let toks = tokens.as_s32().context("tokens tensor")?;
     let n = meta.seq_len;
     if meta.dual {
@@ -315,8 +329,8 @@ fn pooled_features(p: &Params, meta: &ModelMeta, tokens: &HostTensor) -> Result<
             t1[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2) * n..(bb * 2 + 1) * n]);
             t2[bb * n..(bb + 1) * n].copy_from_slice(&toks[(bb * 2 + 1) * n..(bb * 2 + 2) * n]);
         }
-        let (f1, _) = encode(p, meta, &t1, b, false)?;
-        let (f2, _) = encode(p, meta, &t2, b, false)?;
+        let (f1, _) = encode(p, meta, &t1, b, false, ws)?;
+        let (f2, _) = encode(p, meta, &t2, b, false, ws)?;
         let d = meta.d;
         let mut feats = vec![0.0f32; b * 4 * d];
         for bb in 0..b {
@@ -337,7 +351,7 @@ fn pooled_features(p: &Params, meta: &ModelMeta, tokens: &HostTensor) -> Result<
             tokens.shape
         );
         let b = tokens.shape[0];
-        let (feats, _) = encode(p, meta, toks, b, false)?;
+        let (feats, _) = encode(p, meta, toks, b, false, ws)?;
         Ok((feats, meta.d))
     }
 }
@@ -405,6 +419,17 @@ pub fn run_init(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostT
 
 /// `predict`: (P params, tokens) → logits (B, n_classes).
 pub fn run_predict(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let mut ws = Workspace::default();
+    run_predict_ws(manifest, inputs, &mut ws)
+}
+
+/// [`run_predict`] with a caller-owned reusable [`Workspace`] — the
+/// serve inference workers' hot path (no per-batch scratch allocation).
+pub fn run_predict_ws(
+    manifest: &Manifest,
+    inputs: &[&HostTensor],
+    ws: &mut Workspace,
+) -> Result<Vec<HostTensor>> {
     let p_count = manifest.n_params();
     ensure!(
         inputs.len() == p_count + 1,
@@ -414,7 +439,7 @@ pub fn run_predict(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec<Ho
     );
     let p = Params::bind(&manifest.params, &inputs[..p_count])?;
     let meta = &manifest.meta;
-    let (feats, d_in) = pooled_features(&p, meta, inputs[p_count])?;
+    let (feats, d_in) = pooled_features(&p, meta, inputs[p_count], ws)?;
     let b = feats.len() / d_in;
     let head = head_forward(&p, meta, &feats, b, d_in)?;
     Ok(vec![HostTensor::f32(vec![b, meta.n_classes], head.logits)])
@@ -441,7 +466,7 @@ pub fn run_predict_ag(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
         tokens.shape
     );
     let b = tokens.shape[0];
-    let (_, ags) = encode(&p, meta, toks, b, true)?;
+    let (_, ags) = encode(&p, meta, toks, b, true, &mut Workspace::default())?;
     ensure!(ags.len() == meta.depth, "collected {} A_g layers, expected {}", ags.len(), meta.depth);
     let mut stacked = Vec::with_capacity(meta.depth * b * meta.seq_len * meta.n_c);
     for ag in &ags {
@@ -530,7 +555,7 @@ fn head_only_grads(
     labels: &[i32],
 ) -> Result<(f32, f32, Vec<Option<Vec<f32>>>)> {
     let meta = &manifest.meta;
-    let (feats, d_in) = pooled_features(p, meta, tokens)?;
+    let (feats, d_in) = pooled_features(p, meta, tokens, &mut Workspace::default())?;
     let b = labels.len();
     ensure!(feats.len() == b * d_in, "feature/label batch mismatch");
     let head = head_forward(p, meta, &feats, b, d_in)?;

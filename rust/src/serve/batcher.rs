@@ -1,0 +1,311 @@
+//! The dynamic micro-batcher: concurrent `/predict` requests are
+//! coalesced into padded batches and run through the shared engine in
+//! one forward, then the logits are demultiplexed back to each waiting
+//! connection.
+//!
+//! Shape: connection workers `push` [`PredictJob`]s into one bounded
+//! [`Queue`] (backpressure: pushes block when the queue is full);
+//! inference workers pull with a [`BatchFormer`] that waits at most
+//! `max_wait` for the batch to fill to `max_batch` rows.  Batches are
+//! bucketed by model *snapshot* (the exact `Arc<ModelEntry>`, so a hot
+//! reload never mixes weights inside one batch) — and since a model
+//! pins one sequence length, buckets are uniform in geometry, keeping
+//! CAST's per-cluster shapes identical across the batch.
+//!
+//! Determinism: the native forward treats batch rows independently and
+//! is bit-identical for any thread count (DESIGN.md §Threading), so a
+//! row's logits do not depend on which micro-batch it rode in — batched
+//! serving returns exactly what sequential `cast eval` would
+//! (`tests/integration_serve.rs` pins this down).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{HostTensor, Scratch};
+use crate::util::parallel::{Pop, Queue};
+
+use super::metrics::Metrics;
+use super::registry::ModelEntry;
+
+/// One client request waiting for inference.
+pub struct PredictJob {
+    /// The model snapshot the request resolved to.
+    pub entry: Arc<ModelEntry>,
+    /// Padded `(rows, seq_len)` token tensor (`data::batcher::pad_rows`).
+    pub tokens: HostTensor,
+    /// Sequences in this request.
+    pub rows: usize,
+    /// Where the connection worker is blocked waiting.
+    pub reply: SyncSender<Reply>,
+}
+
+/// What each job gets back.
+pub type Reply = Result<ReplyOk, String>;
+
+pub struct ReplyOk {
+    /// This job's logits, row-major `(rows, n_classes)`.
+    pub logits: Vec<f32>,
+    pub n_classes: usize,
+    /// Total rows in the micro-batch the job rode in (observability).
+    pub batch_rows: usize,
+    pub model: String,
+    pub version: u64,
+}
+
+/// Same snapshot ⇒ same bucket (name + version via pointer identity).
+fn same_bucket(a: &PredictJob, entry: &Arc<ModelEntry>) -> bool {
+    Arc::ptr_eq(&a.entry, entry)
+}
+
+/// Pulls jobs off the queue and forms row-bounded, deadline-bounded,
+/// single-bucket batches.  One former per inference worker; jobs of a
+/// *different* bucket encountered while filling a batch are held over
+/// locally and lead the next batch, so nothing is starved.
+pub struct BatchFormer {
+    queue: Arc<Queue<PredictJob>>,
+    held: VecDeque<PredictJob>,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl BatchFormer {
+    pub fn new(queue: Arc<Queue<PredictJob>>, max_batch: usize, max_wait: Duration) -> BatchFormer {
+        BatchFormer { queue, held: VecDeque::new(), max_batch: max_batch.max(1), max_wait }
+    }
+
+    /// Next micro-batch (≥ 1 job, all one bucket), or `None` once the
+    /// queue is closed and everything — including held-over jobs — has
+    /// been drained.
+    pub fn next_batch(&mut self) -> Option<Vec<PredictJob>> {
+        let first = match self.held.pop_front() {
+            Some(j) => j,
+            None => self.queue.pop()?,
+        };
+        let entry = first.entry.clone();
+        let mut rows = first.rows;
+        let mut batch = vec![first];
+        // held-over jobs from a previous fill get first claim
+        let mut i = 0;
+        while i < self.held.len() && rows < self.max_batch {
+            if same_bucket(&self.held[i], &entry) && rows + self.held[i].rows <= self.max_batch {
+                let j = self.held.remove(i).unwrap();
+                rows += j.rows;
+                batch.push(j);
+            } else {
+                i += 1;
+            }
+        }
+        let deadline = Instant::now() + self.max_wait;
+        while rows < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.queue.pop_timeout(deadline - now) {
+                Pop::Item(j) => {
+                    if same_bucket(&j, &entry) && rows + j.rows <= self.max_batch {
+                        rows += j.rows;
+                        batch.push(j);
+                    } else {
+                        self.held.push_back(j);
+                    }
+                }
+                Pop::Empty | Pop::Closed => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+/// Execute one formed batch and demultiplex the logits.  Never panics:
+/// engine errors are fanned out to every waiting job as `Err`.
+pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Metrics) {
+    let entry = batch[0].entry.clone();
+    let meta = &entry.manifest.meta;
+    let n = meta.seq_len;
+    let total: usize = batch.iter().map(|j| j.rows).sum();
+    metrics.observe_batch(total);
+
+    // single-job batches (the --max-batch 1 baseline) reuse the job's
+    // own tensor; multi-job batches concatenate the padded rows
+    let merged: Option<HostTensor> = if batch.len() > 1 {
+        let mut data = vec![0i32; total * n];
+        let mut off = 0;
+        let mut ok = true;
+        for job in &batch {
+            match job.tokens.as_s32() {
+                Ok(src) => {
+                    data[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+                Err(_) => ok = false,
+            }
+        }
+        if !ok {
+            fail_all(&batch, "internal: job tokens were not s32".to_string());
+            return;
+        }
+        Some(HostTensor::s32(vec![total, n], data))
+    } else {
+        None
+    };
+    let tokens = merged.as_ref().unwrap_or(&batch[0].tokens);
+
+    let inputs = entry.predict_inputs(tokens);
+    let logits = match entry.exe.run_refs_scratch(&inputs, scratch) {
+        Ok(mut out) if !out.is_empty() => out.swap_remove(0),
+        Ok(_) => return fail_all(&batch, "predict returned no outputs".to_string()),
+        Err(e) => return fail_all(&batch, format!("predict failed: {e:#}")),
+    };
+    let nc = meta.n_classes;
+    let values = match logits.as_f32() {
+        Ok(v) if v.len() == total * nc => v,
+        Ok(v) => {
+            return fail_all(
+                &batch,
+                format!("predict returned {} logits for {} rows x {} classes", v.len(), total, nc),
+            )
+        }
+        Err(e) => return fail_all(&batch, format!("predict output: {e:#}")),
+    };
+    let mut off = 0;
+    for job in &batch {
+        let span = job.rows * nc;
+        let reply = ReplyOk {
+            logits: values[off..off + span].to_vec(),
+            n_classes: nc,
+            batch_rows: total,
+            model: entry.name.clone(),
+            version: entry.version,
+        };
+        off += span;
+        // a vanished client (dropped receiver) is not an error
+        let _ = job.reply.send(Ok(reply));
+    }
+}
+
+fn fail_all(batch: &[PredictJob], msg: String) {
+    for job in batch {
+        let _ = job.reply.send(Err(msg.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batcher::pad_rows;
+    use crate::runtime::native::spec::tiny_meta;
+    use crate::runtime::Engine;
+    use crate::serve::registry::{ModelSource, Registry};
+    use crate::util::rng::Rng;
+    use std::sync::mpsc::{sync_channel, Receiver};
+
+    fn tiny_entry(reg: &Registry, variant: &str) -> Arc<ModelEntry> {
+        reg.load(None, ModelSource::Synthetic { meta: tiny_meta(variant), seed: 3 }).unwrap()
+    }
+
+    fn job(entry: &Arc<ModelEntry>, seed: u64) -> (PredictJob, Receiver<Reply>) {
+        let n = entry.manifest.meta.seq_len;
+        let mut rng = Rng::new(seed);
+        let row: Vec<i32> = (0..n).map(|_| rng.below(50) as i32).collect();
+        let tokens = pad_rows(&[row], n, 0).unwrap();
+        let (tx, rx) = sync_channel(1);
+        (PredictJob { entry: entry.clone(), tokens, rows: 1, reply: tx }, rx)
+    }
+
+    #[test]
+    fn former_coalesces_up_to_max_batch() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let entry = tiny_entry(&reg, "cast_topk");
+        let queue = Arc::new(Queue::bounded(16));
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (j, rx) = job(&entry, i);
+            queue.push(j).unwrap();
+            rxs.push(rx);
+        }
+        let mut former = BatchFormer::new(queue.clone(), 8, Duration::from_millis(20));
+        let batch = former.next_batch().unwrap();
+        assert_eq!(batch.len(), 5, "everything already queued coalesces");
+        // cap at max_batch rows
+        for i in 0..5 {
+            let (j, rx) = job(&entry, 100 + i);
+            queue.push(j).unwrap();
+            rxs.push(rx);
+        }
+        let mut capped = BatchFormer::new(queue.clone(), 2, Duration::from_millis(20));
+        assert_eq!(capped.next_batch().unwrap().len(), 2);
+        assert_eq!(capped.next_batch().unwrap().len(), 2);
+        assert_eq!(capped.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn former_separates_buckets_and_drains_after_close() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let a = tiny_entry(&reg, "cast_topk");
+        let b = tiny_entry(&reg, "vanilla");
+        let queue = Arc::new(Queue::bounded(16));
+        let mut rxs = Vec::new();
+        for (entry, seed) in [(&a, 1u64), (&b, 2), (&a, 3), (&b, 4)] {
+            let (j, rx) = job(entry, seed);
+            queue.push(j).unwrap();
+            rxs.push(rx);
+        }
+        queue.close();
+        let mut former = BatchFormer::new(queue, 8, Duration::from_millis(5));
+        let first = former.next_batch().unwrap();
+        assert_eq!(first.len(), 2, "both jobs of bucket A");
+        assert!(first.iter().all(|j| Arc::ptr_eq(&j.entry, &a)));
+        let second = former.next_batch().unwrap();
+        assert_eq!(second.len(), 2, "held-over bucket B jobs");
+        assert!(second.iter().all(|j| Arc::ptr_eq(&j.entry, &b)));
+        assert!(former.next_batch().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn run_batch_demux_matches_individual_predicts() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let entry = tiny_entry(&reg, "cast_topk");
+        let metrics = Metrics::new();
+        let mut scratch = entry.exe.make_scratch();
+
+        let jobs: Vec<(PredictJob, Receiver<Reply>)> =
+            (0..3).map(|i| job(&entry, 1000 + i)).collect();
+        // reference: each request alone through the stateless path
+        let mut want = Vec::new();
+        for (j, _) in &jobs {
+            let inputs = entry.predict_inputs(&j.tokens);
+            let out = entry.exe.run_refs(&inputs).unwrap();
+            want.push(out[0].as_f32().unwrap().to_vec());
+        }
+        let (batch, rxs): (Vec<_>, Vec<_>) = jobs.into_iter().unzip();
+        run_batch(batch, scratch.as_mut(), &metrics);
+        for (rx, want) in rxs.iter().zip(&want) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got.batch_rows, 3);
+            assert_eq!(&got.logits, want, "batched logits must equal solo logits exactly");
+        }
+        assert_eq!(metrics.predict_requests(), 0, "run_batch does not count requests");
+        assert_eq!(metrics.batch_rows.count(), 1);
+    }
+
+    #[test]
+    fn engine_errors_fan_out_to_every_job() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let entry = tiny_entry(&reg, "cast_topk");
+        let metrics = Metrics::new();
+        let mut scratch = entry.exe.make_scratch();
+        // wrong sequence length: the engine rejects the tokens tensor
+        let badtok = pad_rows(&[vec![1, 2, 3]], 3, 0).unwrap();
+        let (tx1, rx1) = sync_channel(1);
+        let (tx2, rx2) = sync_channel(1);
+        let mk = |tx| PredictJob { entry: entry.clone(), tokens: badtok.clone(), rows: 1, reply: tx };
+        run_batch(vec![mk(tx1), mk(tx2)], scratch.as_mut(), &metrics);
+        for rx in [rx1, rx2] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(err.contains("predict failed"), "{err}");
+        }
+    }
+}

@@ -1,0 +1,552 @@
+//! Minimal HTTP/1.1 substrate (hyper/axum are unavailable offline).
+//!
+//! Exactly the subset the serve subsystem needs: an incremental request
+//! parser that survives split reads and read timeouts (`HttpConn::recv`
+//! buffers partial bytes and reports `Idle` so the connection workers
+//! can poll the shutdown flag), keep-alive with pipelining, fixed
+//! `Content-Length` bodies (no chunked transfer), a response writer,
+//! and the client-side request writer / response reader the loadgen
+//! client and the integration tests share.
+//!
+//! Errors carry the HTTP status they map to, so the connection worker
+//! can answer a malformed request (bad method, oversized body, garbage
+//! content-length) with the right code instead of dropping the socket.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{self, ErrorKind, Read, Write};
+
+/// Cap on the request line + headers (431 beyond this).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on the header count (431 beyond this).
+const MAX_HEADERS: usize = 100;
+
+/// A protocol-level error with the status code it maps to.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}", self.status, self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request.  Header names are lowercased; the query string is
+/// split off `path` and percent-decoded.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Whether the client expects the connection to stay open (HTTP/1.1
+    /// default, overridable via the `Connection` header).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// Body as UTF-8 text (400-mapped error otherwise).
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::new(400, "request body is not valid UTF-8"))
+    }
+}
+
+/// Outcome of one [`HttpConn::recv`] attempt.
+#[derive(Debug)]
+pub enum Recv {
+    /// A complete request was parsed.
+    Request(Request),
+    /// The read timed out with no complete request buffered — poll the
+    /// shutdown flag and call `recv` again.
+    Idle,
+    /// The peer closed the connection cleanly between requests.
+    Eof,
+}
+
+/// One server-side connection: a stream plus the carry-over buffer that
+/// makes split reads and pipelined keep-alive requests work.  Generic
+/// over the stream so the parser unit tests drive it with in-memory
+/// fakes; the server instantiates it with `TcpStream`.
+pub struct HttpConn<S: Read + Write> {
+    stream: S,
+    buf: Vec<u8>,
+    /// Head parsed while the body is still arriving — parsed exactly
+    /// once per request, surviving timeouts (`Idle`) in between.
+    pending: Option<Pending>,
+}
+
+struct Pending {
+    head: Head,
+    body_start: usize,
+    total: usize,
+}
+
+impl<S: Read + Write> HttpConn<S> {
+    pub fn new(stream: S) -> HttpConn<S> {
+        HttpConn { stream, buf: Vec::new(), pending: None }
+    }
+
+    /// Try to read one complete request.  Loops over reads internally;
+    /// returns `Idle` when the underlying stream times out (the server
+    /// sets a read timeout so shutdown stays responsive).
+    pub fn recv(&mut self, max_body: usize) -> Result<Recv, HttpError> {
+        loop {
+            if self.pending.is_none() {
+                if let Some(head_end) = find_head_end(&self.buf) {
+                    let head = parse_head(&self.buf[..head_end])?;
+                    let clen = content_length(&head.headers, max_body)?;
+                    self.pending =
+                        Some(Pending { head, body_start: head_end + 4, total: head_end + 4 + clen });
+                } else if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(HttpError::new(431, "request head too large"));
+                }
+            }
+            if let Some(p) = &self.pending {
+                if self.buf.len() >= p.total {
+                    let p = self.pending.take().unwrap();
+                    let body = self.buf[p.body_start..p.total].to_vec();
+                    self.buf.drain(..p.total);
+                    let h = p.head;
+                    return Ok(Recv::Request(Request {
+                        method: h.method,
+                        path: h.path,
+                        query: h.query,
+                        headers: h.headers,
+                        body,
+                        keep_alive: h.keep_alive,
+                    }));
+                }
+            }
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(Recv::Eof)
+                    } else {
+                        Err(HttpError::new(400, "connection closed mid-request"))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(Recv::Idle);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+            }
+        }
+    }
+
+    /// Write one response.
+    pub fn send(
+        &mut self,
+        status: u16,
+        content_type: &str,
+        body: &[u8],
+        keep_alive: bool,
+    ) -> io::Result<()> {
+        write_response(&mut self.stream, status, content_type, body, keep_alive)
+    }
+}
+
+/// Index of `\r\n\r\n` (start of the terminator) in `buf`, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+struct Head {
+    method: String,
+    path: String,
+    query: BTreeMap<String, String>,
+    headers: BTreeMap<String, String>,
+    keep_alive: bool,
+}
+
+fn parse_head(head: &[u8]) -> Result<Head, HttpError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let rline = lines.next().unwrap_or("");
+    let parts: Vec<&str> = rline.split(' ').collect();
+    if parts.len() != 3 {
+        return Err(HttpError::new(400, format!("malformed request line {rline:?}")));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if !matches!(version, "HTTP/1.1" | "HTTP/1.0") {
+        return Err(HttpError::new(400, format!("unsupported protocol {version:?}")));
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, format!("malformed method {method:?}")));
+    }
+    if !matches!(method, "GET" | "POST") {
+        return Err(HttpError::new(405, format!("method {method} not allowed")));
+    }
+
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header line {line:?}")))?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        if headers.len() > MAX_HEADERS {
+            return Err(HttpError::new(431, "too many headers"));
+        }
+    }
+    if headers.get("transfer-encoding").map(|v| v.to_ascii_lowercase()) == Some("chunked".into()) {
+        return Err(HttpError::new(501, "chunked transfer encoding not supported"));
+    }
+
+    let keep_alive = match headers.get("connection").map(|v| v.to_ascii_lowercase()) {
+        Some(v) if v.contains("close") => false,
+        Some(v) if v.contains("keep-alive") => true,
+        _ => version == "HTTP/1.1",
+    };
+
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let mut query = BTreeMap::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.insert(percent_decode(k), percent_decode(v));
+        }
+    }
+
+    Ok(Head {
+        method: method.to_string(),
+        path: percent_decode(raw_path),
+        query,
+        headers,
+        keep_alive,
+    })
+}
+
+fn content_length(headers: &BTreeMap<String, String>, max_body: usize) -> Result<usize, HttpError> {
+    let Some(v) = headers.get("content-length") else {
+        return Ok(0);
+    };
+    let n: usize = v
+        .trim()
+        .parse()
+        .map_err(|_| HttpError::new(400, format!("invalid content-length {v:?}")))?;
+    if n > max_body {
+        return Err(HttpError::new(413, format!("body of {n} bytes exceeds the {max_body}-byte cap")));
+    }
+    Ok(n)
+}
+
+/// Decode `%XX` escapes and `+`-as-space.  Invalid escapes pass through
+/// literally (query keys here are model names; strictness buys nothing).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => {
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).ok();
+                match hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    }
+}
+
+/// Write one HTTP/1.1 response with a fixed-length body.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        reason(status),
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one client request with a fixed-length body (the loadgen /
+/// integration-test side of the wire).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {target} HTTP/1.1\r\nHost: cast-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// One parsed client-side response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// Blocking read of exactly one response (status line, headers,
+/// `Content-Length` body).  The server never pipelines responses, so no
+/// carry-over buffer is needed on the client side.
+pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
+    let bad = |msg: &str| io::Error::new(ErrorKind::InvalidData, msg.to_string());
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(e) = find_head_end(&buf) {
+            break e;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(bad("response head too large"));
+        }
+        let mut tmp = [0u8; 4096];
+        match r.read(&mut tmp) {
+            Ok(0) => return Err(bad("connection closed before response head")),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    };
+    let text = std::str::from_utf8(&buf[..head_end]).map_err(|_| bad("non-UTF-8 head"))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let proto = parts.next().unwrap_or("");
+    if !proto.starts_with("HTTP/1.") {
+        return Err(bad("malformed status line"));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("malformed status code"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    let clen: usize = headers
+        .get("content-length")
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < clen {
+        let mut tmp = [0u8; 4096];
+        match r.read(&mut tmp) {
+            Ok(0) => return Err(bad("connection closed mid-body")),
+            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    body.truncate(clen);
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake stream that yields the scripted chunks one `read` at a
+    /// time, then `WouldBlock` forever (an idle keep-alive socket) —
+    /// or EOF when `eof_after` is set.  Writes are discarded.
+    struct ChunkStream {
+        chunks: std::collections::VecDeque<Vec<u8>>,
+        eof_after: bool,
+    }
+
+    impl ChunkStream {
+        fn new(chunks: &[&str], eof_after: bool) -> ChunkStream {
+            ChunkStream {
+                chunks: chunks.iter().map(|c| c.as_bytes().to_vec()).collect(),
+                eof_after,
+            }
+        }
+    }
+
+    impl Read for ChunkStream {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            match self.chunks.pop_front() {
+                Some(c) => {
+                    assert!(c.len() <= out.len(), "test chunk larger than read buffer");
+                    out[..c.len()].copy_from_slice(&c);
+                    Ok(c.len())
+                }
+                None if self.eof_after => Ok(0),
+                None => Err(io::Error::new(ErrorKind::WouldBlock, "idle")),
+            }
+        }
+    }
+
+    impl Write for ChunkStream {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn recv_one(chunks: &[&str]) -> Result<Recv, HttpError> {
+        HttpConn::new(ChunkStream::new(chunks, false)).recv(1024)
+    }
+
+    #[test]
+    fn parses_request_split_across_reads() {
+        let got = recv_one(&[
+            "POST /pre",
+            "dict?model=tiny HTTP/1.1\r\nContent-Le",
+            "ngth: 12\r\nX-Extra: 1\r\n\r\n{\"tok",
+            "ens\":1}",
+        ])
+        .unwrap();
+        let Recv::Request(req) = got else { panic!("expected a request, got {got:?}") };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.query.get("model").map(|s| s.as_str()), Some("tiny"));
+        assert_eq!(req.body, b"{\"tokens\":1}".to_vec());
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn idle_then_complete() {
+        // first attempt times out mid-head; the carry-over buffer makes
+        // the second attempt complete the same request
+        let mut conn = HttpConn::new(ChunkStream::new(&["GET /healthz HT"], false));
+        assert!(matches!(conn.recv(1024), Ok(Recv::Idle)));
+        conn.stream.chunks.push_back(b"TP/1.1\r\n\r\n".to_vec());
+        let Ok(Recv::Request(req)) = conn.recv(1024) else { panic!("second recv") };
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.body, Vec::<u8>::new());
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially() {
+        let two = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut conn = HttpConn::new(ChunkStream::new(&[two], false));
+        let Ok(Recv::Request(a)) = conn.recv(1024) else { panic!("first") };
+        let Ok(Recv::Request(b)) = conn.recv(1024) else { panic!("second") };
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/a", "/b"));
+        assert!(a.keep_alive && !b.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_between_requests() {
+        let mut conn = HttpConn::new(ChunkStream::new(&[], true));
+        assert!(matches!(conn.recv(1024), Ok(Recv::Eof)));
+        // EOF mid-request is a protocol error, not a clean close
+        let mut conn = HttpConn::new(ChunkStream::new(&["GET /x HT"], true));
+        let err = conn.recv(1024).unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn bad_method_maps_to_405_and_garbage_to_400() {
+        let err = recv_one(&["DELETE /x HTTP/1.1\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 405);
+        let err = recv_one(&["not a request\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 400);
+        let err = recv_one(&["GET /x SPDY/9\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn oversized_and_invalid_bodies_are_rejected() {
+        let err = recv_one(&["POST /p HTTP/1.1\r\nContent-Length: 9999\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 413, "body over max_body=1024");
+        let err = recv_one(&["POST /p HTTP/1.1\r\nContent-Length: nope\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 400);
+        let err =
+            recv_one(&["POST /p HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"]).unwrap_err();
+        assert_eq!(err.status, 501);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "application/json", b"{\"ok\":true}", true).unwrap();
+        let resp = read_response(&mut wire.as_slice()).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"ok\":true}");
+        assert_eq!(resp.headers.get("connection").map(|s| s.as_str()), Some("keep-alive"));
+    }
+
+    #[test]
+    fn request_writer_parses_back() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/predict", b"{}").unwrap();
+        let text = std::str::from_utf8(&wire).unwrap();
+        let mut conn = HttpConn::new(ChunkStream::new(&[text], false));
+        let Ok(Recv::Request(req)) = conn.recv(1024) else { panic!("parse") };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{}");
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("bad%zz"), "bad%zz");
+    }
+}

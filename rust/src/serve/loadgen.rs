@@ -1,0 +1,236 @@
+//! `cast loadgen`: a closed-loop load-generating client for a running
+//! `cast serve` instance.
+//!
+//! `--conns` workers each hold one keep-alive connection and issue
+//! `--requests` sequential `POST /predict` calls (closed loop: the next
+//! request leaves only after the previous response lands), so server-side
+//! batching opportunity comes purely from *concurrency across
+//! connections* — exactly the production shape the micro-batcher
+//! targets.  Token payloads are deterministic per (seed, conn, request),
+//! so two runs against the same checkpoint are comparable.
+//!
+//! The report carries client-side truth: exact p50/p99 over every
+//! request's wall time and aggregate requests/sec, which `cast loadgen
+//! --bench-json` appends to `BENCH_native.json` as a
+//! `serve_reqs_per_sec` row (the batched-vs-unbatched acceptance pair).
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+use super::http;
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    /// Concurrent connections (each a closed loop).
+    pub conns: usize,
+    /// Requests per connection.
+    pub requests: usize,
+    /// Model to drive (default: the server's first model).
+    pub model: Option<String>,
+    /// Tokens per request (default: the model's full sequence length;
+    /// shorter values exercise the padding path).
+    pub seq: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:8477".to_string(),
+            conns: 16,
+            requests: 25,
+            model: None,
+            seq: None,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub model: String,
+    /// Tokens per request actually sent.
+    pub seq_len: usize,
+    pub conns: usize,
+    /// Successful requests.
+    pub ok: usize,
+    /// Failed requests (non-200 or transport errors).
+    pub errors: usize,
+    pub elapsed_s: f64,
+    pub reqs_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// The server's `--max-batch` (from /healthz) — labels the bench
+    /// row so the batched/unbatched acceptance pair is attributable.
+    pub server_max_batch: usize,
+    /// Largest micro-batch any response reported riding in (observed
+    /// proof that coalescing actually happened).
+    pub batch_rows_max: usize,
+}
+
+/// Ask the server what it serves and pick the target model.
+/// Returns `(name, request_seq_len, vocab, server_max_batch)`.
+fn discover(cfg: &LoadgenConfig) -> Result<(String, usize, usize, usize)> {
+    let mut stream = TcpStream::connect(cfg.addr.as_str())
+        .with_context(|| format!("connecting to {} (is `cast serve` running?)", cfg.addr))?;
+    http::write_request(&mut stream, "GET", "/models", b"")?;
+    let resp = http::read_response(&mut stream)?;
+    anyhow::ensure!(resp.status == 200, "GET /models returned {}", resp.status);
+    let body = Json::parse(std::str::from_utf8(&resp.body)?)
+        .map_err(|e| anyhow::anyhow!("bad /models JSON: {e}"))?;
+    let models = body.get("models").and_then(Json::as_arr).context("/models payload")?;
+    let picked = match &cfg.model {
+        Some(name) => models
+            .iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some(name))
+            .with_context(|| format!("server has no model {name:?}"))?,
+        None => models.first().context("server has no models loaded")?,
+    };
+    let name = picked.get("name").and_then(Json::as_str).context("model name")?.to_string();
+    let model_seq = picked.get("seq_len").and_then(Json::as_usize).context("model seq_len")?;
+    let vocab = picked.get("vocab").and_then(Json::as_usize).unwrap_or(64).max(2);
+    let seq = cfg.seq.unwrap_or(model_seq).min(model_seq).max(1);
+    // same keep-alive connection: the server's batching config
+    http::write_request(&mut stream, "GET", "/healthz", b"")?;
+    let health = http::read_response(&mut stream)?;
+    let max_batch = Json::parse(std::str::from_utf8(&health.body).unwrap_or(""))
+        .ok()
+        .and_then(|h| h.get("max_batch").and_then(Json::as_usize))
+        .unwrap_or(0);
+    Ok((name, seq, vocab, max_batch))
+}
+
+/// Deterministic request body for (seed, conn, request index).
+fn request_body(model: &str, rng: &mut Rng, seq: usize, vocab: usize) -> String {
+    let tokens: Vec<usize> = (0..seq).map(|_| rng.below(vocab)).collect();
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("tokens", Json::Arr(vec![Json::arr_usize(&tokens)])),
+    ])
+    .to_string()
+}
+
+/// Run the closed loop and aggregate the report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let (model, seq, vocab, server_max_batch) = discover(cfg)?;
+    let conns = cfg.conns.max(1);
+    let per_conn = cfg.requests.max(1);
+    crate::info!(
+        "loadgen: {} conns x {} reqs -> {} (model {:?}, {} tokens/req)",
+        conns,
+        per_conn,
+        cfg.addr,
+        model,
+        seq
+    );
+
+    let latencies_ms: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(conns * per_conn));
+    let errors = AtomicUsize::new(0);
+    let batch_rows_max = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    parallel::scoped_workers(conns, |w| {
+        let connect = || {
+            TcpStream::connect(cfg.addr.as_str()).map(|s| {
+                let _ = s.set_nodelay(true);
+                s
+            })
+        };
+        let mut stream = connect().ok();
+        let mut rng = Rng::new(cfg.seed).split(w as u64);
+        let mut local = Vec::with_capacity(per_conn);
+        for _ in 0..per_conn {
+            let Some(s) = stream.as_mut() else {
+                // reconnect after a transport error so one dropped
+                // connection costs one request, not the whole tail
+                errors.fetch_add(1, Ordering::Relaxed);
+                stream = connect().ok();
+                continue;
+            };
+            let body = request_body(&model, &mut rng, seq, vocab);
+            let t = Instant::now();
+            match http::write_request(s, "POST", "/predict", body.as_bytes())
+                .and_then(|()| http::read_response(s))
+            {
+                Ok(r) if r.status == 200 => {
+                    local.push(t.elapsed().as_secs_f64() * 1e3);
+                    // observed coalescing: the batch this reply rode in
+                    if let Some(rows) = Json::parse(std::str::from_utf8(&r.body).unwrap_or(""))
+                        .ok()
+                        .and_then(|j| j.get("batch_rows").and_then(Json::as_usize))
+                    {
+                        batch_rows_max.fetch_max(rows, Ordering::Relaxed);
+                    }
+                }
+                Ok(_) => {
+                    // a served non-200 — the connection is still good
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    stream = connect().ok();
+                }
+            }
+        }
+        latencies_ms.lock().unwrap().extend(local);
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut lats = latencies_ms.into_inner().unwrap();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let ok = lats.len();
+    Ok(LoadReport {
+        model,
+        seq_len: seq,
+        conns,
+        ok,
+        errors: errors.load(Ordering::Relaxed),
+        elapsed_s: elapsed,
+        reqs_per_sec: ok as f64 / elapsed.max(1e-9),
+        p50_ms: percentile(&lats, 0.50),
+        p99_ms: percentile(&lats, 0.99),
+        server_max_batch,
+        batch_rows_max: batch_rows_max.load(Ordering::Relaxed),
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample (0 when empty).
+fn percentile(sorted_asc: &[f64], q: f64) -> f64 {
+    if sorted_asc.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted_asc.len() as f64).ceil() as usize;
+    sorted_asc[rank.clamp(1, sorted_asc.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_body_is_deterministic_per_stream() {
+        let mut a = Rng::new(1).split(0);
+        let mut b = Rng::new(1).split(0);
+        assert_eq!(request_body("m", &mut a, 8, 16), request_body("m", &mut b, 8, 16));
+        let mut c = Rng::new(1).split(1);
+        assert_ne!(request_body("m", &mut a, 8, 16), request_body("m", &mut c, 8, 16));
+    }
+}

@@ -1,0 +1,329 @@
+//! Serve observability: lock-free counters and histograms rendered as
+//! Prometheus-style text on `/metrics`.
+//!
+//! Everything is atomics — the hot path (connection workers timing
+//! requests, inference workers recording batch sizes) never takes a
+//! lock.  Quantiles (p50/p99) are interpolated from the latency
+//! histogram's cumulative counts, which is exactly how a Prometheus
+//! server would evaluate `histogram_quantile()` over these buckets; the
+//! loadgen client reports exact client-side percentiles alongside.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Latency buckets in seconds (log-ish spacing, +Inf implied).
+const LATENCY_BOUNDS: [f64; 14] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Micro-batch size buckets in rows (+Inf implied).
+const BATCH_BOUNDS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// One Prometheus histogram: `bounds.len() + 1` cumulative-on-render
+/// buckets, a sum, and a count.
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<AtomicU64>,
+    /// Sum in micro-units (µs for seconds-valued histograms, micro-rows
+    /// for the batch histogram) so it stays an integer atomic.
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micro.fetch_add((v.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Interpolated quantile (0 < q < 1) from the bucket counts, the
+    /// `histogram_quantile()` estimate.  0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q * total as f64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                cum += n;
+                continue;
+            }
+            if cum as f64 + n as f64 >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // +Inf bucket: report its lower bound
+                    return lo;
+                };
+                let into = (rank - cum as f64) / n as f64;
+                return lo + (hi - lo) * into.clamp(0.0, 1.0);
+            }
+            cum += n;
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+
+    fn render(&self, name: &str, help: &str, out: &mut String) {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            let le = if i < self.bounds.len() {
+                trim_float(self.bounds[i])
+            } else {
+                "+Inf".to_string()
+            };
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{name}_sum {}\n", trim_float(self.sum())));
+        out.push_str(&format!("{name}_count {cum}\n"));
+    }
+}
+
+/// Shortest plain rendering of a bucket bound ("0.005", "1", "2.5").
+fn trim_float(v: f64) -> String {
+    if v.fract() == 0.0 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The request-path endpoints we count separately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Predict,
+    Models,
+    Metrics,
+    Healthz,
+    Reload,
+    Shutdown,
+    Other,
+}
+
+const ENDPOINTS: [(Endpoint, &str); 7] = [
+    (Endpoint::Predict, "predict"),
+    (Endpoint::Models, "models"),
+    (Endpoint::Metrics, "metrics"),
+    (Endpoint::Healthz, "healthz"),
+    (Endpoint::Reload, "reload"),
+    (Endpoint::Shutdown, "shutdown"),
+    (Endpoint::Other, "other"),
+];
+
+fn endpoint_index(e: Endpoint) -> usize {
+    ENDPOINTS.iter().position(|(k, _)| *k == e).unwrap()
+}
+
+/// All serve metrics, shared across every worker via `Arc`.
+pub struct Metrics {
+    started: Instant,
+    requests: [AtomicU64; 7],
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    predict_rows: AtomicU64,
+    batches: AtomicU64,
+    pub batch_rows: Histogram,
+    pub latency: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            requests: std::array::from_fn(|_| AtomicU64::new(0)),
+            responses_2xx: AtomicU64::new(0),
+            responses_4xx: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
+            predict_rows: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_rows: Histogram::new(&BATCH_BOUNDS),
+            latency: Histogram::new(&LATENCY_BOUNDS),
+        }
+    }
+
+    /// Record one handled request: endpoint, response status, wall time.
+    pub fn observe_request(&self, endpoint: Endpoint, status: u16, seconds: f64) {
+        self.requests[endpoint_index(endpoint)].fetch_add(1, Ordering::Relaxed);
+        let class = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+        if endpoint == Endpoint::Predict {
+            self.latency.observe(seconds);
+        }
+    }
+
+    /// Record one executed micro-batch of `rows` sequences.
+    pub fn observe_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.predict_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batch_rows.observe(rows as f64);
+    }
+
+    pub fn predict_requests(&self) -> u64 {
+        self.requests[endpoint_index(Endpoint::Predict)].load(Ordering::Relaxed)
+    }
+
+    pub fn error_responses(&self) -> u64 {
+        self.responses_4xx.load(Ordering::Relaxed) + self.responses_5xx.load(Ordering::Relaxed)
+    }
+
+    /// Render the whole exposition-format page.  `queue_depth` and
+    /// `models` are point-in-time gauges supplied by the server.
+    pub fn render(&self, queue_depth: usize, models: usize) -> String {
+        let mut out = String::with_capacity(2048);
+        out.push_str("# HELP cast_serve_requests_total Requests handled, by endpoint.\n");
+        out.push_str("# TYPE cast_serve_requests_total counter\n");
+        for (e, name) in ENDPOINTS {
+            out.push_str(&format!(
+                "cast_serve_requests_total{{endpoint=\"{name}\"}} {}\n",
+                self.requests[endpoint_index(e)].load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# HELP cast_serve_responses_total Responses sent, by status class.\n");
+        out.push_str("# TYPE cast_serve_responses_total counter\n");
+        for (class, v) in [
+            ("2xx", &self.responses_2xx),
+            ("4xx", &self.responses_4xx),
+            ("5xx", &self.responses_5xx),
+        ] {
+            out.push_str(&format!(
+                "cast_serve_responses_total{{class=\"{class}\"}} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        }
+        for (name, help, v) in [
+            (
+                "cast_serve_predict_rows_total",
+                "Sequences predicted (batch rows).",
+                self.predict_rows.load(Ordering::Relaxed),
+            ),
+            (
+                "cast_serve_batches_total",
+                "Micro-batches executed.",
+                self.batches.load(Ordering::Relaxed),
+            ),
+        ] {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        }
+        self.batch_rows.render(
+            "cast_serve_batch_rows",
+            "Rows per executed micro-batch.",
+            &mut out,
+        );
+        self.latency.render(
+            "cast_serve_request_latency_seconds",
+            "Wall time of /predict requests (enqueue to reply).",
+            &mut out,
+        );
+        for (name, q) in [
+            ("cast_serve_request_latency_p50_seconds", 0.5),
+            ("cast_serve_request_latency_p99_seconds", 0.99),
+        ] {
+            out.push_str(&format!(
+                "# HELP {name} Interpolated latency quantile.\n# TYPE {name} gauge\n{name} {}\n",
+                self.latency.quantile(q)
+            ));
+        }
+        for (name, help, v) in [
+            ("cast_serve_queue_depth", "Jobs waiting in the batch queue.", queue_depth as f64),
+            ("cast_serve_models", "Models loaded in the registry.", models as f64),
+            (
+                "cast_serve_uptime_seconds",
+                "Seconds since the server started.",
+                self.started.elapsed().as_secs_f64(),
+            ),
+        ] {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = Histogram::new(&LATENCY_BOUNDS);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        for _ in 0..100 {
+            h.observe(0.002); // (0.001, 0.0025] bucket
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.001 && p50 <= 0.0025, "p50 {p50} inside the hot bucket");
+        // one straggler in a much slower bucket moves p99, not p50
+        for _ in 0..5 {
+            h.observe(4.9);
+        }
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 2.5, "p99 {p99} pulled up by stragglers");
+        assert!(h.quantile(0.5) <= 0.0025);
+        assert!((h.sum() - (100.0 * 0.002 + 5.0 * 4.9)).abs() < 0.01);
+    }
+
+    #[test]
+    fn overflow_bucket_reports_lower_bound() {
+        let h = Histogram::new(&BATCH_BOUNDS);
+        h.observe(1e6);
+        assert_eq!(h.quantile(0.5), 128.0);
+    }
+
+    #[test]
+    fn render_contains_required_families() {
+        let m = Metrics::new();
+        m.observe_request(Endpoint::Predict, 200, 0.004);
+        m.observe_request(Endpoint::Healthz, 200, 0.0);
+        m.observe_request(Endpoint::Predict, 500, 0.1);
+        m.observe_batch(4);
+        let page = m.render(3, 2);
+        for needle in [
+            "cast_serve_requests_total{endpoint=\"predict\"} 2",
+            "cast_serve_responses_total{class=\"2xx\"} 2",
+            "cast_serve_responses_total{class=\"5xx\"} 1",
+            "cast_serve_batch_rows_bucket{le=\"4\"} 1",
+            "cast_serve_batch_rows_count 1",
+            "cast_serve_predict_rows_total 4",
+            "cast_serve_request_latency_seconds_count 2",
+            "cast_serve_request_latency_p99_seconds",
+            "cast_serve_queue_depth 3",
+            "cast_serve_models 2",
+        ] {
+            assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+        }
+        assert_eq!(m.predict_requests(), 2);
+        assert_eq!(m.error_responses(), 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! The serving subsystem: `cast serve` — a dependency-free HTTP/1.1
+//! inference server with dynamic micro-batching — and `cast loadgen`,
+//! its closed-loop measurement client.
+//!
+//! Layers (each its own module, DESIGN.md §Serving):
+//!
+//! * [`http`] — minimal HTTP/1.1 parser/writer (split-read safe,
+//!   keep-alive, fixed-length bodies) over `std::net`.
+//! * [`registry`] — named model snapshots loaded through the shared
+//!   [`Engine`](crate::runtime::Engine) cache; `/models`, hot reload.
+//! * [`batcher`] — the dynamic micro-batcher: a bounded job queue
+//!   coalesces concurrent `/predict` requests into padded single-model
+//!   batches (≤ `max_batch` rows, ≤ `max_wait`), runs them through one
+//!   engine forward with per-worker reusable scratch, and demultiplexes
+//!   the logits back to each connection.
+//! * [`metrics`] — atomic counters/histograms rendered on `/metrics`.
+//! * [`server`] — acceptor + connection worker pool, routing, graceful
+//!   drain on SIGTERM/SIGINT or `/admin/shutdown`.
+//! * [`loadgen`] — the `--conns`/`--requests` closed-loop client that
+//!   appends `serve_reqs_per_sec` rows to `BENCH_native.json`.
+//!
+//! Determinism contract: batching never changes results.  The native
+//! forward treats batch rows independently and is bit-identical across
+//! thread counts, so the logits for a sequence are the same whether it
+//! rode in a batch of 1 or 8 — `tests/integration_serve.rs` asserts
+//! byte-equal JSON against sequential single-row predicts.
+
+pub mod batcher;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use metrics::Metrics;
+pub use registry::{ModelEntry, ModelSource, Registry};
+pub use server::{install_signal_handlers, ServeConfig, Server};

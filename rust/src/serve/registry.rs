@@ -1,0 +1,277 @@
+//! The model registry: named checkpoints/manifests loaded through the
+//! shared [`Engine`] cache, looked up per request and hot-reloadable
+//! while the server runs.
+//!
+//! Each entry is an immutable snapshot (`Arc<ModelEntry>`): manifest,
+//! the loaded `predict` executable, and the parameter tensors.  In-flight
+//! micro-batches hold the `Arc` they were formed with, so a concurrent
+//! reload (`POST /models/reload`) never swaps weights under a running
+//! forward — requests simply start seeing the new snapshot once it
+//! lands.  A reload that fails (corrupt checkpoint, missing manifest)
+//! leaves the old snapshot serving and surfaces the error to the caller.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{checkpoint, ModelState};
+use crate::runtime::{Engine, Executable, HostTensor, Manifest, ModelMeta};
+use crate::util::json::Json;
+
+/// Where a model's manifest + weights come from (kept for hot reload).
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// Synthetic zero-artifact config: params from the `init` program.
+    Synthetic { meta: ModelMeta, seed: u32 },
+    /// An artifact directory (`manifest.json`), optionally with a
+    /// trained checkpoint for the weights (else `init` from `seed`).
+    Dir { dir: PathBuf, ckpt: Option<PathBuf>, seed: u32 },
+}
+
+/// One immutable loaded-model snapshot.
+pub struct ModelEntry {
+    pub name: String,
+    pub manifest: Manifest,
+    pub exe: Arc<dyn Executable>,
+    pub params: Vec<HostTensor>,
+    pub source: ModelSource,
+    /// Bumped on every (re)load, so clients can observe a reload.
+    pub version: u64,
+}
+
+impl ModelEntry {
+    /// The `(params…, tokens)` input list for one predict call.
+    pub fn predict_inputs<'a>(&'a self, tokens: &'a HostTensor) -> Vec<&'a HostTensor> {
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(tokens);
+        inputs
+    }
+
+    /// One row of the `/models` listing.
+    pub fn describe(&self) -> Json {
+        let m = &self.manifest.meta;
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("task", Json::str(&m.task)),
+            ("variant", Json::str(&m.variant)),
+            ("seq_len", Json::num(m.seq_len as f64)),
+            ("n_classes", Json::num(m.n_classes as f64)),
+            ("vocab", Json::num(m.vocab as f64)),
+            ("dual", Json::Bool(m.dual)),
+            ("version", Json::num(self.version as f64)),
+            ("params", Json::num(self.manifest.total_param_elems() as f64)),
+        ])
+    }
+}
+
+/// Named-model table behind the serve endpoints.
+pub struct Registry {
+    engine: Arc<Engine>,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl Registry {
+    pub fn new(engine: Arc<Engine>) -> Registry {
+        Registry { engine, models: RwLock::new(BTreeMap::new()) }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Load `source` and register it under the manifest key (or the
+    /// explicit `name` override).  Returns the entry.
+    pub fn load(&self, name: Option<String>, source: ModelSource) -> Result<Arc<ModelEntry>> {
+        let prior_version = |n: &str| {
+            self.models.read().unwrap().get(n).map(|e| e.version).unwrap_or(0)
+        };
+        let entry = self.build(name, source, &prior_version)?;
+        self.models.write().unwrap().insert(entry.name.clone(), entry.clone());
+        crate::info!(
+            "registry: loaded {:?} v{} ({} params, seq {})",
+            entry.name,
+            entry.version,
+            entry.manifest.total_param_elems(),
+            entry.manifest.meta.seq_len
+        );
+        Ok(entry)
+    }
+
+    /// Re-read an already-registered model from its recorded source.
+    /// The old snapshot keeps serving until the new one is ready.
+    pub fn reload(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let source = self
+            .get(name)
+            .with_context(|| format!("no model {name:?} to reload"))?
+            .source
+            .clone();
+        self.load(Some(name.to_string()), source)
+    }
+
+    fn build(
+        &self,
+        name: Option<String>,
+        source: ModelSource,
+        prior_version: &dyn Fn(&str) -> u64,
+    ) -> Result<Arc<ModelEntry>> {
+        let (manifest, ckpt, seed) = match &source {
+            ModelSource::Synthetic { meta, seed } => {
+                (Manifest::synthetic(meta.clone()), None, *seed)
+            }
+            ModelSource::Dir { dir, ckpt, seed } => {
+                (Manifest::load(dir)?, ckpt.clone(), *seed)
+            }
+        };
+        let name = name.unwrap_or_else(|| manifest.key.clone());
+        let exe = self.engine.load(&manifest, "predict")?;
+        let params = match ckpt {
+            Some(path) => {
+                let (state, names) = checkpoint::load(&path)
+                    .with_context(|| format!("loading checkpoint for model {name:?}"))?;
+                // the same name-by-name contract the trainer enforces
+                if names.len() != manifest.params.len() {
+                    bail!(
+                        "checkpoint has {} params, manifest {} — wrong model?",
+                        names.len(),
+                        manifest.params.len()
+                    );
+                }
+                for (got, spec) in names.iter().zip(&manifest.params) {
+                    if got != &spec.name {
+                        bail!("checkpoint parameter {got:?} does not match manifest {:?}", spec.name);
+                    }
+                }
+                // shapes too: a same-architecture checkpoint of different
+                // geometry must fail the load (and leave the old snapshot
+                // serving on reload), not 500 every subsequent request
+                for (tensor, spec) in state.params.iter().zip(&manifest.params) {
+                    if tensor.shape != spec.shape {
+                        bail!(
+                            "checkpoint parameter {:?} has shape {:?}, manifest expects {:?} — wrong geometry?",
+                            spec.name,
+                            tensor.shape,
+                            spec.shape
+                        );
+                    }
+                }
+                state.params
+            }
+            None => ModelState::init(&self.engine, &manifest, seed)?.params,
+        };
+        Ok(Arc::new(ModelEntry {
+            version: prior_version(&name) + 1,
+            name,
+            manifest,
+            exe,
+            params,
+            source,
+        }))
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Resolve a request's model: an explicit name, or the single loaded
+    /// model when only one is registered (the common smoke-test shape).
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
+        let models = self.models.read().unwrap();
+        match name {
+            Some(n) => models
+                .get(n)
+                .cloned()
+                .with_context(|| format!("unknown model {n:?} (see /models)")),
+            None if models.len() == 1 => Ok(models.values().next().unwrap().clone()),
+            None => bail!(
+                "{} models loaded — pick one with ?model= or a \"model\" body field (see /models)",
+                models.len()
+            ),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `/models` payload.
+    pub fn describe(&self) -> Json {
+        let models = self.models.read().unwrap();
+        Json::obj(vec![(
+            "models",
+            Json::Arr(models.values().map(|e| e.describe()).collect()),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spec::tiny_meta;
+
+    fn registry_with_tiny() -> Registry {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        reg.load(None, ModelSource::Synthetic { meta: tiny_meta("cast_topk"), seed: 0 })
+            .unwrap();
+        reg
+    }
+
+    #[test]
+    fn load_resolve_and_describe() {
+        let reg = registry_with_tiny();
+        assert_eq!(reg.len(), 1);
+        let e = reg.resolve(None).unwrap();
+        assert_eq!(e.name, "text_cast_topk_n64_b2_c4_k16");
+        assert_eq!(e.version, 1);
+        assert!(reg.resolve(Some("nope")).is_err());
+        let desc = reg.describe();
+        let arr = desc.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("seq_len").and_then(Json::as_usize), Some(64));
+    }
+
+    #[test]
+    fn reload_bumps_version_and_keeps_serving() {
+        let reg = registry_with_tiny();
+        let name = reg.resolve(None).unwrap().name.clone();
+        let old = reg.get(&name).unwrap();
+        let new = reg.reload(&name).unwrap();
+        assert_eq!(new.version, 2);
+        assert_eq!(old.version, 1, "old snapshot is untouched");
+        assert_eq!(reg.get(&name).unwrap().version, 2);
+        assert!(reg.reload("missing").is_err());
+    }
+
+    #[test]
+    fn multi_model_resolution_requires_a_name() {
+        let reg = registry_with_tiny();
+        reg.load(None, ModelSource::Synthetic { meta: tiny_meta("vanilla"), seed: 0 }).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.resolve(None).is_err(), "ambiguous without a name");
+        assert!(reg.resolve(Some("text_vanilla_n64_b2")).is_ok());
+    }
+
+    #[test]
+    fn checkpoint_load_failures_surface_as_errors() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let dir = std::env::temp_dir().join("cast_serve_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let saved = Manifest::synthetic(tiny_meta("cast_topk")).save(&dir).unwrap();
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"NOTACKPT").unwrap();
+        let err = reg
+            .load(None, ModelSource::Dir { dir: saved.clone(), ckpt: Some(bad), seed: 0 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
+        assert!(reg.is_empty(), "failed load must not register");
+        // and the no-checkpoint path works from the same dir
+        reg.load(None, ModelSource::Dir { dir: saved, ckpt: None, seed: 0 }).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -1,0 +1,481 @@
+//! The `cast serve` HTTP server: a dependency-free `std::net` acceptor
+//! + connection worker pool in front of the dynamic micro-batcher.
+//!
+//! Data path (DESIGN.md §Serving):
+//!
+//! ```text
+//! accept loop ─→ conn queue ─→ conn workers ─→ job queue ─→ batch former
+//!  (nonblock)    (bounded)     (HTTP parse,    (bounded,     (coalesce ≤ max_batch
+//!                               route, wait     backpress)    rows, ≤ max_wait)
+//!                               for reply)            │
+//!                                                     ▼
+//!                                    engine predict (per-worker Workspace)
+//!                                                     │
+//!                                    demux logits ─→ reply channels
+//! ```
+//!
+//! Endpoints: `POST /predict` (JSON tokens → logits), `GET /models`,
+//! `POST /models/reload?model=`, `GET /healthz`, `GET /metrics`
+//! (Prometheus text), `POST /admin/shutdown`.
+//!
+//! Graceful shutdown: SIGINT/SIGTERM (via [`install_signal_handlers`])
+//! or `/admin/shutdown` flips a flag; the acceptor stops, connection
+//! workers finish their current request with `Connection: close`, the
+//! job queue closes once every connection worker has exited, and the
+//! inference workers drain what remains — every request that was read
+//! off a socket gets its response before `run` returns.
+
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::pad_rows;
+use crate::runtime::Scratch;
+use crate::util::json::Json;
+use crate::util::parallel::Queue;
+
+use super::batcher::{run_batch, BatchFormer, PredictJob};
+use super::http::{HttpConn, Recv, Request};
+use super::metrics::{Endpoint, Metrics};
+use super::registry::Registry;
+
+/// How long a connection worker waits for its batch's reply before
+/// answering 504 (covers a deep queue on a slow box, not a hang).
+const PREDICT_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Micro-batch row cap (1 = no batching, the baseline).
+    pub max_batch: usize,
+    /// How long the batch former waits for a batch to fill.
+    pub max_wait: Duration,
+    /// Bound on queued predict jobs (backpressure beyond it).
+    pub queue_cap: usize,
+    /// Connection workers = max concurrent in-flight requests.
+    pub conn_workers: usize,
+    /// Inference workers pulling batches (1 keeps arrival order).
+    pub infer_workers: usize,
+    /// Request body cap in bytes.
+    pub max_body: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8477".to_string(),
+            max_batch: 8,
+            max_wait: Duration::from_micros(2000),
+            queue_cap: 256,
+            conn_workers: 32,
+            infer_workers: 1,
+            max_body: 8 << 20,
+        }
+    }
+}
+
+/// Process-global flag flipped by SIGINT/SIGTERM.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGINT/SIGTERM handlers that request a graceful drain.  The
+/// handler only stores to an atomic (async-signal-safe); the accept
+/// loop polls the flag.  Dependency-free: `signal(2)` is declared
+/// directly against libc, which every Rust binary already links.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    cfg: ServeConfig,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    jobs: Arc<Queue<PredictJob>>,
+}
+
+impl Server {
+    /// Bind the listen socket (use port 0 for an ephemeral test port).
+    pub fn bind(cfg: ServeConfig, registry: Arc<Registry>) -> Result<Server> {
+        anyhow::ensure!(!registry.is_empty(), "no models loaded — nothing to serve");
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            local_addr,
+            jobs: Arc::new(Queue::bounded(cfg.queue_cap)),
+            cfg,
+            registry,
+            metrics: Arc::new(Metrics::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Flag that triggers a graceful drain when set (tests use this in
+    /// place of a signal).
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || SIGNALLED.load(Ordering::SeqCst)
+    }
+
+    /// Serve until shutdown, then drain and return.
+    pub fn run(&self) -> Result<()> {
+        crate::info!(
+            "serve: listening on {} — {} model(s), max_batch {}, max_wait {:?}, {} conn / {} infer workers",
+            self.local_addr,
+            self.registry.len(),
+            self.cfg.max_batch,
+            self.cfg.max_wait,
+            self.cfg.conn_workers,
+            self.cfg.infer_workers
+        );
+        let conns: Queue<TcpStream> = Queue::bounded(self.cfg.conn_workers.max(1) * 4);
+        std::thread::scope(|s| {
+            let (max_batch, max_wait) = (self.cfg.max_batch, self.cfg.max_wait);
+            let infer_handles: Vec<_> = (0..self.cfg.infer_workers.max(1))
+                .map(|_| {
+                    let jobs = self.jobs.clone();
+                    let metrics = self.metrics.clone();
+                    s.spawn(move || infer_loop(jobs, max_batch, max_wait, metrics))
+                })
+                .collect();
+            let conn_handles: Vec<_> = (0..self.cfg.conn_workers.max(1))
+                .map(|_| {
+                    let conns = &conns;
+                    s.spawn(move || {
+                        while let Some(stream) = conns.pop() {
+                            self.handle_connection(stream);
+                        }
+                    })
+                })
+                .collect();
+
+            self.accept_loop(&conns);
+            // drain order matters: connections first (they may still
+            // push jobs), then the job queue, then inference
+            conns.close();
+            for h in conn_handles {
+                let _ = h.join();
+            }
+            self.jobs.close();
+            for h in infer_handles {
+                let _ = h.join();
+            }
+        });
+        crate::info!("serve: drained and stopped");
+        Ok(())
+    }
+
+    fn accept_loop(&self, conns: &Queue<TcpStream>) {
+        loop {
+            if self.shutting_down() {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // connection sockets are blocking with a short read
+                    // timeout so idle keep-alive workers can poll the
+                    // shutdown flag
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                    if conns.push(stream).is_err() {
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    crate::info!("serve: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// Keep-alive request loop for one connection.
+    fn handle_connection(&self, stream: TcpStream) {
+        let mut conn = HttpConn::new(stream);
+        loop {
+            match conn.recv(self.cfg.max_body) {
+                Ok(Recv::Request(req)) => {
+                    let t = Instant::now();
+                    let endpoint = endpoint_of(&req);
+                    // during a drain, answer and close
+                    let keep = req.keep_alive && !self.shutting_down();
+                    let (status, ctype, body) = self.route(&req);
+                    self.metrics.observe_request(endpoint, status, t.elapsed().as_secs_f64());
+                    if conn.send(status, ctype, &body, keep).is_err() || !keep {
+                        return;
+                    }
+                }
+                Ok(Recv::Idle) => {
+                    if self.shutting_down() {
+                        return;
+                    }
+                }
+                Ok(Recv::Eof) => return,
+                Err(e) => {
+                    // protocol error: answer with its status and close
+                    self.metrics.observe_request(Endpoint::Other, e.status, 0.0);
+                    let _ =
+                        conn.send(e.status, "application/json", error_json(&e.msg).as_bytes(), false);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn route(&self, req: &Request) -> (u16, &'static str, Vec<u8>) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => json_ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("models", Json::num(self.registry.len() as f64)),
+                ("queue_depth", Json::num(self.jobs.len() as f64)),
+                ("max_batch", Json::num(self.cfg.max_batch as f64)),
+                ("draining", Json::Bool(self.shutting_down())),
+            ])),
+            ("GET", "/metrics") => (
+                200,
+                "text/plain; version=0.0.4",
+                self.metrics.render(self.jobs.len(), self.registry.len()).into_bytes(),
+            ),
+            ("GET", "/models") => json_ok(self.registry.describe()),
+            ("POST", "/predict") => match self.predict(req) {
+                Ok(body) => (200, "application/json", body),
+                Err((status, msg)) => (status, "application/json", error_json(&msg).into_bytes()),
+            },
+            ("POST", "/models/reload") => match self.reload(req) {
+                Ok(body) => (200, "application/json", body),
+                Err((status, msg)) => (status, "application/json", error_json(&msg).into_bytes()),
+            },
+            ("POST", "/admin/shutdown") => {
+                crate::info!("serve: shutdown requested via /admin/shutdown");
+                self.shutdown.store(true, Ordering::SeqCst);
+                json_ok(Json::obj(vec![("ok", Json::Bool(true)), ("draining", Json::Bool(true))]))
+            }
+            _ => (
+                404,
+                "application/json",
+                error_json(&format!("no endpoint {} {}", req.method, req.path)).into_bytes(),
+            ),
+        }
+    }
+
+    /// `/predict`: parse → resolve model → enqueue → wait for the demuxed
+    /// logits.  Error statuses: 400 malformed, 404 unknown model, 503
+    /// draining/closed, 504 timeout, 500 engine failure.
+    fn predict(&self, req: &Request) -> Result<Vec<u8>, (u16, String)> {
+        let text = req.body_str().map_err(|e| (e.status, e.msg))?;
+        let body = Json::parse(text).map_err(|e| (400, format!("invalid JSON body: {e}")))?;
+        let model_name = req
+            .query
+            .get("model")
+            .map(|s| s.as_str())
+            .or_else(|| body.get("model").and_then(Json::as_str));
+        let entry =
+            self.registry.resolve(model_name).map_err(|e| (404, format!("{e:#}")))?;
+        let meta = &entry.manifest.meta;
+        if meta.dual {
+            return Err((
+                400,
+                format!("model {:?} is a dual-encoder config; /predict serves single-sequence models", entry.name),
+            ));
+        }
+        // cap rows per request at one micro-batch: keeps a single small
+        // body from amplifying into an unbounded padded allocation and
+        // preserves the batcher's "batch ≤ max_batch rows" invariant
+        let row_cap = self.cfg.max_batch.max(1);
+        let rows = parse_token_rows(&body, row_cap)?;
+        let n_rows = rows.len();
+        let tokens = pad_rows(&rows, meta.seq_len, 0).map_err(|e| (400, format!("{e:#}")))?;
+
+        if self.shutting_down() {
+            return Err((503, "server is draining".to_string()));
+        }
+        let (tx, rx) = sync_channel(1);
+        let job = PredictJob { entry, tokens, rows: n_rows, reply: tx };
+        self.jobs.push(job).map_err(|_| (503, "server is draining".to_string()))?;
+        let reply = rx
+            .recv_timeout(PREDICT_TIMEOUT)
+            .map_err(|_| (504, "inference timed out".to_string()))?;
+        let ok = reply.map_err(|msg| (500, msg))?;
+
+        let nc = ok.n_classes;
+        let mut logit_rows = Vec::with_capacity(n_rows);
+        let mut argmax = Vec::with_capacity(n_rows);
+        for r in 0..n_rows {
+            let row = &ok.logits[r * nc..(r + 1) * nc];
+            let mut arg = 0;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[arg] {
+                    arg = j;
+                }
+            }
+            argmax.push(arg);
+            logit_rows.push(Json::Arr(row.iter().map(|&x| Json::num(x as f64)).collect()));
+        }
+        let out = Json::obj(vec![
+            ("model", Json::str(&ok.model)),
+            ("version", Json::num(ok.version as f64)),
+            ("rows", Json::num(n_rows as f64)),
+            ("logits", Json::Arr(logit_rows)),
+            ("argmax", Json::arr_usize(&argmax)),
+            ("batch_rows", Json::num(ok.batch_rows as f64)),
+        ]);
+        Ok(out.to_string().into_bytes())
+    }
+
+    /// `/models/reload?model=NAME`: rebuild the named entry from its
+    /// recorded source.  The old snapshot serves until the new one lands.
+    fn reload(&self, req: &Request) -> Result<Vec<u8>, (u16, String)> {
+        let name = match req.query.get("model") {
+            Some(n) => n.clone(),
+            None if self.registry.len() == 1 => {
+                self.registry.resolve(None).map_err(|e| (500, format!("{e:#}")))?.name.clone()
+            }
+            None => return Err((400, "reload needs ?model=<name>".to_string())),
+        };
+        if self.registry.get(&name).is_none() {
+            return Err((404, format!("unknown model {name:?} (see /models)")));
+        }
+        let entry = self.registry.reload(&name).map_err(|e| (500, format!("{e:#}")))?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("model", Json::str(&entry.name)),
+            ("version", Json::num(entry.version as f64)),
+        ])
+        .to_string()
+        .into_bytes())
+    }
+}
+
+fn endpoint_of(req: &Request) -> Endpoint {
+    match req.path.as_str() {
+        "/predict" => Endpoint::Predict,
+        "/models" => Endpoint::Models,
+        "/models/reload" => Endpoint::Reload,
+        "/metrics" => Endpoint::Metrics,
+        "/healthz" => Endpoint::Healthz,
+        "/admin/shutdown" => Endpoint::Shutdown,
+        _ => Endpoint::Other,
+    }
+}
+
+fn json_ok(j: Json) -> (u16, &'static str, Vec<u8>) {
+    (200, "application/json", j.to_string().into_bytes())
+}
+
+fn error_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// `"tokens"`: one flat row (`[1,2,3]`) or a list of rows
+/// (`[[1,2],[3,4]]`), every element an integer in i32 range, at most
+/// `row_cap` rows (one micro-batch) per request.
+fn parse_token_rows(body: &Json, row_cap: usize) -> Result<Vec<Vec<i32>>, (u16, String)> {
+    let toks = body
+        .get("tokens")
+        .ok_or((400, "body needs a \"tokens\" field".to_string()))?;
+    let arr = toks
+        .as_arr()
+        .ok_or((400, "\"tokens\" must be an array".to_string()))?;
+    if arr.is_empty() {
+        return Err((400, "\"tokens\" is empty".to_string()));
+    }
+    let nested = arr[0].as_arr().is_some();
+    let mut rows = Vec::new();
+    if nested {
+        if arr.len() > row_cap {
+            return Err((
+                400,
+                format!("{} token rows exceed the {row_cap}-row per-request cap (--max-batch)", arr.len()),
+            ));
+        }
+        for (i, row) in arr.iter().enumerate() {
+            let row = row
+                .as_arr()
+                .ok_or((400, format!("tokens row {i} is not an array")))?;
+            rows.push(parse_row(row)?);
+        }
+    } else {
+        rows.push(parse_row(arr)?);
+    }
+    Ok(rows)
+}
+
+fn parse_row(row: &[Json]) -> Result<Vec<i32>, (u16, String)> {
+    let mut out = Vec::with_capacity(row.len());
+    for v in row {
+        let n = v.as_f64().ok_or((400, "tokens must be integers".to_string()))?;
+        if !n.is_finite() || n.fract() != 0.0 || !(-2147483648.0..=2147483647.0).contains(&n) {
+            return Err((400, format!("token {n} is not an i32")));
+        }
+        out.push(n as i32);
+    }
+    Ok(out)
+}
+
+/// One inference worker: form batches, run them, demux.  Scratch is
+/// keyed by model snapshot so a reload gets fresh working memory; the
+/// map is cleared if it ever grows past a handful of snapshots.
+fn infer_loop(
+    jobs: Arc<Queue<PredictJob>>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut former = BatchFormer::new(jobs, max_batch, max_wait);
+    let mut scratches: HashMap<(String, u64), Box<dyn Scratch>> = HashMap::new();
+    while let Some(batch) = former.next_batch() {
+        let key = (batch[0].entry.name.clone(), batch[0].entry.version);
+        if !scratches.contains_key(&key) {
+            // a new snapshot of this model (first sight or hot reload):
+            // drop only the model's stale versions, keeping every other
+            // model's workspace warm — the map stays bounded by the
+            // registry's model count
+            scratches.retain(|(name, _), _| name != &key.0);
+        }
+        let scratch = scratches
+            .entry(key)
+            .or_insert_with(|| batch[0].entry.exe.make_scratch());
+        run_batch(batch, scratch.as_mut(), &metrics);
+    }
+}

@@ -21,8 +21,10 @@
 //! process-global programmatic override used by the parity tests — safe
 //! to race precisely because results never depend on the worker count.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Programmatic override; 0 = unset (fall through to env / hardware).
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
@@ -59,6 +61,14 @@ pub fn row_block(rows: usize) -> usize {
 /// never dominates trivially cheap bodies).
 pub fn elem_block(len: usize) -> usize {
     len.div_ceil(max_threads() * 4).max(4096)
+}
+
+/// Fork `threads` workers (worker 0 runs on the calling thread), join
+/// all — the public fork/join shape behind every parallel region, also
+/// used directly by long-lived pools (the serve subsystem's connection
+/// and inference workers).
+pub fn scoped_workers<F: Fn(usize) + Sync>(threads: usize, worker: F) {
+    run_workers(threads, worker)
 }
 
 /// Fork `threads` workers (worker 0 runs on the calling thread), join all.
@@ -199,6 +209,137 @@ pub fn par_zip2_mut_with<A, B, S, M, F>(
     });
 }
 
+// ---------------------------------------------------------------------------
+// bounded closable MPMC queue
+// ---------------------------------------------------------------------------
+
+/// Result of a timed [`Queue::pop_timeout`].
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The wait elapsed with the queue still open but empty.
+    Empty,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded, closable multi-producer multi-consumer queue
+/// (`Mutex`+`Condvar`; channels stay out of this subsystem, see the
+/// module doc).  `push` blocks when full — the backpressure the serve
+/// micro-batcher relies on — and fails once the queue is closed; `pop`
+/// blocks when empty and returns `None` once the queue is closed *and*
+/// drained, so consumers naturally finish in-flight work on shutdown.
+pub struct Queue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> Queue<T> {
+    pub fn bounded(cap: usize) -> Queue<T> {
+        Queue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is at capacity.  Returns the
+    /// item back as `Err` when the queue has been closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while the queue is open and empty.  `None`
+    /// means closed-and-drained — the consumer's exit signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// [`Queue::pop`] with a wait bound, distinguishing "nothing arrived
+    /// in time" from "closed" (the micro-batcher's max-wait timer).
+    pub fn pop_timeout(&self, dur: Duration) -> Pop<T> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Pop::Item(x);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Empty;
+            }
+            let (ng, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                // one final check: an item may have landed exactly at
+                // the deadline
+                if let Some(x) = g.items.pop_front() {
+                    drop(g);
+                    self.not_full.notify_one();
+                    return Pop::Item(x);
+                }
+                return Pop::Empty;
+            }
+        }
+    }
+
+    /// Close the queue: further pushes fail, poppers drain what remains
+    /// and then observe `None`/`Closed`.  Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Current depth (a metrics gauge; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +430,81 @@ mod tests {
         assert!(row_block(100) >= 1 && elem_block(10) >= 1);
         set_threads(0);
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn queue_fifo_and_close_semantics() {
+        let q: Queue<u32> = Queue::bounded(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::Empty));
+        q.push(3).unwrap();
+        q.close();
+        // closed: pushes fail and hand the item back, drain continues
+        assert_eq!(q.push(9), Err(9));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+        assert!(q.is_closed() && q.is_empty());
+    }
+
+    #[test]
+    fn queue_bounds_producers() {
+        let q: Queue<usize> = Queue::bounded(2);
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.push(2)); // must block until a pop frees a slot
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(q.len(), 2, "bounded queue exceeded its capacity");
+            assert_eq!(q.pop(), Some(0));
+            h.join().unwrap().unwrap();
+        });
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn queue_close_unblocks_waiting_poppers() {
+        let q: Queue<()> = Queue::bounded(1);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.pop());
+            std::thread::sleep(Duration::from_millis(10));
+            q.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn queue_mpmc_delivers_every_item_once() {
+        let q: Queue<usize> = Queue::bounded(4);
+        let seen = Mutex::new(vec![0u8; 200]);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while let Some(i) = q.pop() {
+                        seen.lock().unwrap()[i] += 1;
+                    }
+                });
+            }
+            for i in 0..200 {
+                q.push(i).unwrap();
+            }
+            q.close();
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn scoped_workers_runs_every_index() {
+        let hits = Mutex::new(vec![false; 4]);
+        scoped_workers(4, |w| {
+            hits.lock().unwrap()[w] = true;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h));
     }
 
     #[test]

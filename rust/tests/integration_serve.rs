@@ -1,0 +1,426 @@
+//! Serve-stack integration suite: wire-level HTTP against a real
+//! `TcpListener`-backed server, the batching-preserves-results
+//! determinism contract, and the graceful-shutdown drain.
+//!
+//! (Pure parser unit cases live next to the code in `serve/http.rs`;
+//! here every request crosses a real socket.)
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::{Engine, HostTensor};
+use cast::serve::http;
+use cast::serve::{ModelSource, Registry, ServeConfig, Server};
+use cast::util::json::Json;
+use cast::util::rng::Rng;
+
+const SEED: u32 = 5;
+
+struct Harness {
+    server: Arc<Server>,
+    registry: Arc<Registry>,
+    addr: SocketAddr,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl Harness {
+    fn start(cfg: ServeConfig, variants: &[&str]) -> Harness {
+        let registry = Arc::new(Registry::new(Engine::cpu().unwrap()));
+        for v in variants {
+            registry
+                .load(None, ModelSource::Synthetic { meta: tiny_meta(v), seed: SEED })
+                .unwrap();
+        }
+        let server = Arc::new(Server::bind(cfg, registry.clone()).unwrap());
+        let addr = server.local_addr();
+        let runner = server.clone();
+        let join = std::thread::spawn(move || runner.run());
+        Harness { server, registry, addr, join: Some(join) }
+    }
+
+    fn tiny(max_batch: usize, max_wait: Duration) -> Harness {
+        Harness::start(
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                max_batch,
+                max_wait,
+                conn_workers: 16,
+                ..ServeConfig::default()
+            },
+            &["cast_topk"],
+        )
+    }
+
+    fn stop(&mut self) {
+        self.server.shutdown_flag().store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            join.join().expect("server thread panicked").expect("server run failed");
+        }
+    }
+}
+
+impl Drop for Harness {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            self.stop();
+        }
+    }
+}
+
+/// One-shot request over a fresh connection.
+fn request(addr: SocketAddr, method: &str, target: &str, body: &[u8]) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    http::write_request(&mut s, method, target, body).unwrap();
+    let resp = http::read_response(&mut s).unwrap();
+    (resp.status, resp.body)
+}
+
+fn json_of(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).unwrap()).unwrap()
+}
+
+/// Deterministic token row for one logical client request.
+fn tokens_for(stream_id: u64, n: usize) -> Vec<i32> {
+    let mut rng = Rng::new(0xC11E47).split(stream_id);
+    (0..n).map(|_| rng.below(50) as i32).collect()
+}
+
+fn predict_body(tokens: &[i32]) -> String {
+    let vals: Vec<usize> = tokens.iter().map(|&t| t as usize).collect();
+    Json::obj(vec![("tokens", Json::Arr(vec![Json::arr_usize(&vals)]))]).to_string()
+}
+
+/// Reference logits: the same tokens through the engine directly, B=1.
+fn reference_logits(harness: &Harness, tokens: &[i32]) -> Vec<f32> {
+    let entry = harness.registry.resolve(None).unwrap();
+    let n = entry.manifest.meta.seq_len;
+    let tensor = HostTensor::s32(vec![1, n], tokens.to_vec());
+    let inputs = entry.predict_inputs(&tensor);
+    let out = entry.exe.run_refs(&inputs).unwrap();
+    out[0].as_f32().unwrap().to_vec()
+}
+
+/// Parse the `logits` rows out of a /predict response body.
+fn response_logits(body: &[u8]) -> Vec<Vec<f64>> {
+    json_of(body)
+        .get("logits")
+        .and_then(Json::as_arr)
+        .expect("logits array")
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+        .collect()
+}
+
+fn assert_exact(got: &[f64], want: &[f32]) {
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want) {
+        // f32 -> JSON -> f64 is exact both ways, so equality is exact
+        assert_eq!(*g, *w as f64, "serve logits must be bit-identical to direct predict");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire-level protocol behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_roundtrip_health_models_metrics_and_predict() {
+    let mut h = Harness::tiny(4, Duration::from_millis(2));
+
+    let (status, body) = request(h.addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    assert_eq!(json_of(&body).get("ok"), Some(&Json::Bool(true)));
+
+    let (status, body) = request(h.addr, "GET", "/models", b"");
+    assert_eq!(status, 200);
+    let models = json_of(&body);
+    let arr = models.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("name").and_then(Json::as_str), Some("text_cast_topk_n64_b2_c4_k16"));
+    assert_eq!(arr[0].get("seq_len").and_then(Json::as_usize), Some(64));
+
+    // a padded (short) request and a full-length one, same connection
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    for tokens in [tokens_for(1, 17), tokens_for(2, 64)] {
+        http::write_request(&mut s, "POST", "/predict", predict_body(&tokens).as_bytes()).unwrap();
+        let resp = http::read_response(&mut s).unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let parsed = json_of(&resp.body);
+        assert_eq!(parsed.get("rows").and_then(Json::as_usize), Some(1));
+        let rows = response_logits(&resp.body);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), 2, "tiny text config has 2 classes");
+        // padding contract: short requests behave as zero-padded rows
+        let mut padded = tokens.clone();
+        padded.resize(64, 0);
+        assert_exact(&rows[0], &reference_logits(&h, &padded));
+    }
+    drop(s);
+
+    let (status, body) = request(h.addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let page = String::from_utf8(body).unwrap();
+    for needle in [
+        "cast_serve_requests_total{endpoint=\"predict\"} 2",
+        "cast_serve_predict_rows_total 2",
+        "cast_serve_request_latency_seconds_count 2",
+        "cast_serve_models 1",
+    ] {
+        assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+    }
+
+    h.stop();
+}
+
+#[test]
+fn malformed_requests_get_mapped_statuses() {
+    let mut h = Harness::start(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_body: 1024,
+            ..ServeConfig::default()
+        },
+        &["cast_topk"],
+    );
+
+    // bad JSON, missing tokens, bad token values, unknown model, 404 path
+    for (body, want, hint) in [
+        ("{not json", 400, "invalid JSON"),
+        ("{}", 400, "tokens"),
+        (r#"{"tokens":[[1.5]]}"#, 400, "not an i32"),
+        (r#"{"tokens":[1,2],"model":"nope"}"#, 404, "unknown model"),
+    ] {
+        let (status, resp) = request(h.addr, "POST", "/predict", body.as_bytes());
+        assert_eq!(status, want, "{hint}: {}", String::from_utf8_lossy(&resp));
+        assert!(json_of(&resp).get("error").is_some());
+    }
+    let (status, _) = request(h.addr, "GET", "/nowhere", b"");
+    assert_eq!(status, 404);
+
+    // overlong row for the model's 64-token geometry
+    let long = predict_body(&[1; 65]);
+    let (status, resp) = request(h.addr, "POST", "/predict", long.as_bytes());
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&resp));
+
+    // oversized declared body -> 413 before the server waits for it
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    use std::io::Write;
+    write!(s, "POST /predict HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let resp = http::read_response(&mut s).unwrap();
+    assert_eq!(resp.status, 413);
+
+    // bad method over the raw socket -> 405
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    write!(s, "DELETE /predict HTTP/1.1\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let resp = http::read_response(&mut s).unwrap();
+    assert_eq!(resp.status, 405);
+
+    h.stop();
+}
+
+#[test]
+fn multi_model_routing_and_hot_reload() {
+    let mut h = Harness::start(
+        ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        &["cast_topk", "vanilla"],
+    );
+
+    // ambiguous without a name
+    let body = predict_body(&tokens_for(9, 64));
+    let (status, _) = request(h.addr, "POST", "/predict", body.as_bytes());
+    assert_eq!(status, 404, "two models need an explicit name");
+    let (status, resp) =
+        request(h.addr, "POST", "/predict?model=text_vanilla_n64_b2", body.as_bytes());
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert_eq!(
+        json_of(&resp).get("model").and_then(Json::as_str),
+        Some("text_vanilla_n64_b2")
+    );
+
+    // hot reload bumps the served version; old in-flight snapshot is safe
+    let (status, resp) =
+        request(h.addr, "POST", "/models/reload?model=text_vanilla_n64_b2", b"");
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert_eq!(json_of(&resp).get("version").and_then(Json::as_usize), Some(2));
+    let (status, resp) =
+        request(h.addr, "POST", "/predict?model=text_vanilla_n64_b2", body.as_bytes());
+    assert_eq!(status, 200);
+    assert_eq!(json_of(&resp).get("version").and_then(Json::as_usize), Some(2));
+    let (status, _) = request(h.addr, "POST", "/models/reload?model=ghost", b"");
+    assert_eq!(status, 404);
+
+    h.stop();
+}
+
+// ---------------------------------------------------------------------------
+// determinism: batching must not change results
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_clients_match_sequential_predicts_exactly() {
+    // small max_batch + a generous fill window to force real coalescing
+    let mut h = Harness::tiny(4, Duration::from_millis(30));
+    let n_clients = 8usize;
+    let reqs_per_client = 4usize;
+
+    // reference logits for every (client, request), computed sequentially
+    let mut want = Vec::new();
+    for c in 0..n_clients {
+        for r in 0..reqs_per_client {
+            let tokens = tokens_for((c * 100 + r) as u64, 64);
+            want.push(reference_logits(&h, &tokens));
+        }
+    }
+
+    let addr = h.addr;
+    let results: Vec<(usize, Vec<Vec<f64>>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let mut got = Vec::new();
+                    let mut max_batch_rows = 0usize;
+                    for r in 0..reqs_per_client {
+                        let tokens = tokens_for((c * 100 + r) as u64, 64);
+                        http::write_request(
+                            &mut stream,
+                            "POST",
+                            "/predict",
+                            predict_body(&tokens).as_bytes(),
+                        )
+                        .unwrap();
+                        let resp = http::read_response(&mut stream).unwrap();
+                        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+                        let parsed = json_of(&resp.body);
+                        max_batch_rows = max_batch_rows
+                            .max(parsed.get("batch_rows").and_then(Json::as_usize).unwrap_or(0));
+                        got.push(response_logits(&resp.body).remove(0));
+                    }
+                    (c, got, max_batch_rows)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut coalesced = 0usize;
+    for (c, got, max_rows) in &results {
+        for (r, row) in got.iter().enumerate() {
+            assert_exact(row, &want[c * reqs_per_client + r]);
+        }
+        coalesced = coalesced.max(*max_rows);
+    }
+    assert!(
+        coalesced >= 2,
+        "8 concurrent closed-loop clients with a 30ms window should have formed \
+         at least one multi-row batch (max observed {coalesced})"
+    );
+    h.stop();
+}
+
+#[test]
+fn multi_row_request_matches_row_by_row_predicts() {
+    let mut h = Harness::tiny(8, Duration::from_millis(2));
+    let rows: Vec<Vec<i32>> = (0..3).map(|i| tokens_for(7000 + i, 64)).collect();
+    let vals: Vec<Json> = rows
+        .iter()
+        .map(|r| Json::arr_usize(&r.iter().map(|&t| t as usize).collect::<Vec<_>>()))
+        .collect();
+    let body = Json::obj(vec![("tokens", Json::Arr(vals))]).to_string();
+    let (status, resp) = request(h.addr, "POST", "/predict", body.as_bytes());
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    let got = response_logits(&resp);
+    assert_eq!(got.len(), 3);
+    for (row, tokens) in got.iter().zip(&rows) {
+        assert_exact(row, &reference_logits(&h, tokens));
+    }
+    h.stop();
+}
+
+// ---------------------------------------------------------------------------
+// graceful shutdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    // a wide fill window keeps jobs sitting in the batch former when
+    // shutdown lands — exactly the in-flight work a drain must finish
+    let mut h = Harness::tiny(8, Duration::from_millis(150));
+    let addr = h.addr;
+    let flag = h.server.shutdown_flag();
+
+    let outcomes: Vec<(u16, Vec<u8>, Vec<i32>)> = std::thread::scope(|s| {
+        let clients: Vec<_> = (0..6)
+            .map(|c| {
+                s.spawn(move || {
+                    let tokens = tokens_for(9000 + c as u64, 64);
+                    let (status, body) =
+                        request(addr, "POST", "/predict", predict_body(&tokens).as_bytes());
+                    (status, body, tokens)
+                })
+            })
+            .collect();
+        // let the requests reach the queue, then pull the plug mid-window
+        std::thread::sleep(Duration::from_millis(60));
+        flag.store(true, Ordering::SeqCst);
+        clients.into_iter().map(|c| c.join().unwrap()).collect()
+    });
+
+    let mut served = 0;
+    for (status, body, tokens) in &outcomes {
+        match status {
+            200 => {
+                // drained requests return *correct* results, not stubs
+                assert_exact(&response_logits(body)[0], &reference_logits(&h, tokens));
+                served += 1;
+            }
+            // a request that arrived after the flag flipped is refused
+            // cleanly, never dropped
+            503 => assert!(json_of(body).get("error").is_some()),
+            other => panic!("unexpected status {other}"),
+        }
+    }
+    assert!(served >= 1, "at least the in-flight requests must be served");
+
+    // run() must return: drained and joined
+    h.stop();
+    // the drained server answered everything it accepted; new connects
+    // may still enter the OS backlog but are never served — no assertion
+    // on them (timing-dependent).
+}
+
+// ---------------------------------------------------------------------------
+// wire-level parser behaviour (split reads over a real socket)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_writes_over_tcp_still_parse() {
+    let mut h = Harness::tiny(2, Duration::from_millis(2));
+    let tokens = tokens_for(31, 64);
+    let body = predict_body(&tokens);
+    let head = format!(
+        "POST /predict HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    use std::io::Write;
+    // dribble the request out in 4 chunks, with the first pause spanning
+    // the server's 100ms read timeout — recv must resume (Idle), not
+    // reset the partial parse
+    let wire = format!("{head}{body}");
+    let bytes = wire.as_bytes();
+    for (i, chunk) in bytes.chunks(bytes.len() / 4 + 1).enumerate() {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(if i == 0 { 130 } else { 15 }));
+    }
+    let resp = http::read_response(&mut s).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_exact(&response_logits(&resp.body)[0], &reference_logits(&h, &tokens));
+    h.stop();
+}
