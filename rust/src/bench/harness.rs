@@ -97,7 +97,8 @@ pub fn efficiency_table(
     title: &str,
 ) -> Result<RelativeTable> {
     let rows = efficiency_rows(artifacts_root, task, seq_lens, kind, isolate)?;
-    Ok(table_from_rows(title, "vanilla", seq_lens, &rows))
+    let baseline = crate::runtime::native::variants::AttnVariant::Vanilla.name();
+    Ok(table_from_rows(title, baseline, seq_lens, &rows))
 }
 
 /// One row of the `BENCH_native.json` schema.  `simd` records whether

@@ -212,6 +212,74 @@ pub fn kind_name(kind: &JobKind) -> &'static str {
     }
 }
 
+/// One point on the variant bake-off's accuracy-vs-throughput frontier:
+/// a (variant, task) pair trained from scratch on a synthetic config.
+pub struct FrontierPoint {
+    pub task: String,
+    pub variant: String,
+    pub key: String,
+    pub seq_len: usize,
+    pub steps_per_sec: f64,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub final_acc: f32,
+    pub eval_acc: f32,
+}
+
+/// The variant bake-off behind `cast sweep`: for every task × variant,
+/// synthesize a tiny config, train it for `steps` steps, and measure
+/// throughput plus train/eval accuracy — the repo's Table-2 frontier.
+/// All configs share the geometry of `tiny_meta_for_task`, so
+/// steps-per-sec is comparable across variants.
+pub fn run_frontier(
+    engine: &Arc<Engine>,
+    tasks: &[String],
+    variants: &[&str],
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<FrontierPoint>> {
+    use crate::runtime::native::spec;
+    use crate::train::{Schedule, TrainConfig};
+    let mut points = Vec::with_capacity(tasks.len() * variants.len());
+    for task in tasks {
+        for &variant in variants {
+            let meta = spec::tiny_meta_for_task(task, variant)?;
+            let manifest = Manifest::synthetic(meta);
+            let key = manifest.key.clone();
+            let seq_len = manifest.meta.seq_len;
+            let cfg = TrainConfig {
+                steps,
+                schedule: Schedule::Warmup { lr: 1e-3, warmup: (steps / 10).max(1) },
+                seed,
+                eval_every: 0,
+                eval_batches: 8,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(engine.clone(), manifest, cfg, seed as u32)?;
+            let report = trainer.run()?;
+            let first_loss = report
+                .history
+                .steps
+                .first()
+                .map(|r| r.loss)
+                .context("frontier run recorded no training steps")?;
+            let eval_acc = report.best_eval_acc.unwrap_or(f32::NAN);
+            points.push(FrontierPoint {
+                task: task.clone(),
+                variant: variant.to_string(),
+                key,
+                seq_len,
+                steps_per_sec: report.steps_per_sec,
+                first_loss,
+                final_loss: report.final_train_loss,
+                final_acc: report.final_train_acc,
+                eval_acc,
+            });
+        }
+    }
+    Ok(points)
+}
+
 /// Discover jobs for every artifact directory matching a key predicate.
 pub fn jobs_matching(
     artifacts_root: &Path,

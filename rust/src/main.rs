@@ -18,7 +18,14 @@
 //!           (--json overwrites; --append-json appends measured rows to
 //!            the cross-PR trajectory file — run once normally and once
 //!            under CAST_NO_SIMD=1 for the SIMD speedup pair)
-//!   sweep   --task <task> [--steps N --isolate]      (Figure-3 ablation)
+//!   sweep   [--tasks text,listops --variants all --steps N --seed S
+//!           --bench-json PATH]
+//!           (variant bake-off: trains every variant × task combination
+//!            on synthetic configs and prints the accuracy-vs-throughput
+//!            frontier as a markdown table; --bench-json appends one
+//!            train_steps_per_sec row per point.  `--ablation` switches
+//!            to the Figure-3 kappa ablation: --task <task>
+//!            [--steps N --isolate])
 //!   viz     --dir <artifact-dir> --out <dir> [--seed S]   (Figure 4)
 //!   data    --task <task> [--n N --seq L]            (inspect generators)
 //!   inspect --dir <artifact-dir>                      (manifest summary)
@@ -97,9 +104,11 @@ const HELP: &str = "cast — CAST reproduction coordinator
   gen | train | eval | bench | sweep | viz | data | inspect | memmodel | serve | loadgen
 Quickstart (no artifacts needed — native backend):
   cast gen --out artifacts && cast train --dir artifacts/text_cast_topk_n64_b2_c4_k16
+Variant bake-off (Table-2 story; all variants come from the registry):
+  cast sweep --tasks text,listops --variants all --steps 200
 Serving (zero-artifact smoke):
   cast serve --seq 128 --max-batch 8 &   then   cast loadgen --conns 16 --requests 25
-See rust/src/main.rs header or DESIGN.md §Serving for flags.";
+See rust/src/main.rs header or DESIGN.md §Serving / §Attention variants for flags.";
 
 /// Write native-runnable artifact directories (manifest.json only) for
 /// the tiny smoke configs — the zero-Python path into train/eval/viz.
@@ -107,13 +116,11 @@ See rust/src/main.rs header or DESIGN.md §Serving for flags.";
 /// geometry so perf benches get e.g. N=2048 configs without the AOT
 /// pipeline.
 fn cmd_gen(args: &Args) -> Result<()> {
-    use cast::runtime::native::{spec::tiny_meta, VARIANTS};
+    use cast::runtime::native::{spec::tiny_meta, variants, VARIANTS};
     let out = PathBuf::from(args.str("out", "artifacts"));
     let wanted: Vec<String> = match args.opt_str("variant") {
         Some(v) => {
-            if !VARIANTS.contains(&v.as_str()) {
-                bail!("unknown variant {v:?}; know {VARIANTS:?}");
-            }
+            variants::AttnVariant::parse(&v)?;
             vec![v]
         }
         None => VARIANTS.iter().map(|s| s.to_string()).collect(),
@@ -124,7 +131,8 @@ fn cmd_gen(args: &Args) -> Result<()> {
     }
     if args.opt_str("variant").is_none() {
         // the decoder extension (paper §5.5) rides along in the full set
-        let mut meta = apply_size_flags(tiny_meta("cast_sa"), args);
+        let mut meta =
+            apply_size_flags(tiny_meta(variants::AttnVariant::CastSa.name()), args);
         meta.causal = true;
         dirs.push(Manifest::synthetic(meta).save(&out)?);
     }
@@ -163,11 +171,9 @@ fn apply_size_flags(mut meta: ModelMeta, args: &Args) -> ModelMeta {
 /// Synthesize a native-runnable manifest from CLI size flags (the
 /// zero-artifact `cast train` path; same scaling rules as `cast gen`).
 fn synthetic_manifest(args: &Args) -> Result<Manifest> {
-    use cast::runtime::native::{spec, VARIANTS};
-    let variant = args.str("variant", "cast_topk");
-    if !VARIANTS.contains(&variant.as_str()) {
-        bail!("unknown variant {variant:?}; know {VARIANTS:?}");
-    }
+    use cast::runtime::native::{spec, variants};
+    let variant = args.str("variant", variants::DEFAULT.name());
+    variants::AttnVariant::parse(&variant)?;
     let meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
     Ok(Manifest::synthetic(apply_size_flags(meta, args)))
 }
@@ -281,7 +287,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         other => bail!("unknown table {other}; know 1 and 5"),
     };
     let rows = bench::efficiency_rows(&root, &task, &seq_lens, kind, isolate)?;
-    let t = bench::table_from_rows(title, "vanilla", &seq_lens, &rows);
+    let baseline = cast::runtime::native::variants::AttnVariant::Vanilla.name();
+    let t = bench::table_from_rows(title, baseline, &seq_lens, &rows);
     println!("{}", t.render());
     if let Some(path) = args.opt_str("json") {
         bench::write_bench_json(&PathBuf::from(&path), &rows)?;
@@ -303,23 +310,74 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cast sweep`: the variant bake-off.  Trains every requested variant ×
+/// task combination on synthetic tiny configs and prints the
+/// accuracy-vs-throughput frontier (the repo's Table-2 story).
+/// `--ablation` keeps the original Figure-3 kappa sweep.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let root = PathBuf::from(args.str("artifacts", "artifacts"));
-    let task = args.str("task", "text");
-    let steps = args.usize("steps", 5);
-    let points = bench::ablation_points(&root, &task, steps, args.has("isolate"))?;
-    println!("# Figure 3 ablation ({task}): kappa vs loss / memory / steps-per-sec");
-    println!("variant,kappa,n_c,steps_per_sec,peak_rss_mb,final_loss");
+    if args.has("ablation") {
+        let root = PathBuf::from(args.str("artifacts", "artifacts"));
+        let task = args.str("task", "text");
+        let steps = args.usize("steps", 5);
+        let points = bench::ablation_points(&root, &task, steps, args.has("isolate"))?;
+        println!("# Figure 3 ablation ({task}): kappa vs loss / memory / steps-per-sec");
+        println!("variant,kappa,n_c,steps_per_sec,peak_rss_mb,final_loss");
+        for p in &points {
+            println!(
+                "{},{},{},{:.4},{:.1},{:.4}",
+                p.variant,
+                p.kappa,
+                p.n_c,
+                p.result.steps_per_sec,
+                p.result.peak_rss_bytes as f64 / 1e6,
+                p.result.final_loss
+            );
+        }
+        return Ok(());
+    }
+
+    use cast::coordinator::sweep::run_frontier;
+    use cast::runtime::native::{variants, VARIANTS};
+    let tasks: Vec<String> = args
+        .str("tasks", "text,listops")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!tasks.is_empty(), "--tasks got no task names");
+    let wanted = args.str("variants", "all");
+    let variant_names: Vec<String> = if wanted == "all" {
+        VARIANTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        wanted.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+    };
+    for v in &variant_names {
+        variants::AttnVariant::parse(v)?;
+    }
+    let steps = args.usize("steps", 200);
+    let seed = args.u64("seed", 0);
+    let engine = Engine::auto()?;
+    let refs: Vec<&str> = variant_names.iter().map(|s| s.as_str()).collect();
+    let points = run_frontier(&engine, &tasks, &refs, steps, seed)?;
+
+    println!("# variant bake-off: accuracy vs throughput ({steps} steps per config)");
+    println!("| variant | task | steps/s | first loss | final loss | train acc | eval acc |");
+    println!("|---|---|---|---|---|---|---|");
     for p in &points {
         println!(
-            "{},{},{},{:.4},{:.1},{:.4}",
-            p.variant,
-            p.kappa,
-            p.n_c,
-            p.result.steps_per_sec,
-            p.result.peak_rss_bytes as f64 / 1e6,
-            p.result.final_loss
+            "| {} | {} | {:.2} | {:.4} | {:.4} | {:.3} | {:.3} |",
+            p.variant, p.task, p.steps_per_sec, p.first_loss, p.final_loss, p.final_acc, p.eval_acc
         );
+    }
+    if let Some(path) = args.opt_str("bench-json") {
+        let pb = PathBuf::from(&path);
+        for p in &points {
+            bench::append_bench_row(
+                &pb,
+                bench::train_row_json(&p.key, &p.variant, p.seq_len, p.steps_per_sec),
+            )?;
+        }
+        println!("appended {} bench row(s) -> {path}", points.len());
     }
     Ok(())
 }

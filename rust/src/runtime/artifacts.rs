@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+use super::native::variants::AttnVariant;
 use super::tensor::DType;
 
 #[derive(Clone, Debug)]
@@ -53,25 +54,28 @@ impl ModelMeta {
         self.d / self.heads
     }
 
+    /// Registry entry for this config's variant, when the name is known.
+    /// The predicates below fall back to conservative defaults for
+    /// unknown names so metadata parsing stays infallible — the engine's
+    /// `load` is where unknown variants are rejected with a full list.
+    fn attn_variant(&self) -> Option<AttnVariant> {
+        AttnVariant::parse(&self.variant).ok()
+    }
+
     pub fn is_cast(&self) -> bool {
-        self.variant.starts_with("cast")
+        self.attn_variant().is_some_and(|v| v.is_cast())
     }
 
     /// The clustering mechanism G (paper §3.2 / §5.5).
     pub fn clustering(&self) -> &'static str {
-        if self.causal {
-            "causal"
-        } else if self.variant == "cast_sa" {
-            "sa"
-        } else {
-            "topk"
-        }
+        self.attn_variant().map_or("topk", |v| v.clustering(self.causal))
     }
 
     /// Whether the `predict_ag` entry point exists for this config
-    /// (cluster affinities are only defined for non-dual CAST variants).
+    /// (cluster affinities need a `supports_ag` variant and a non-dual
+    /// model).
     pub fn has_ag(&self) -> bool {
-        self.is_cast() && !self.dual
+        self.attn_variant().is_some_and(|v| v.supports_ag(self.dual))
     }
 
     /// Token batch shape: `(B, N)`, or `(B, 2, N)` for dual-encoder tasks.
@@ -91,11 +95,12 @@ impl ModelMeta {
             format!("n{}", self.seq_len),
             format!("b{}", self.batch),
         ];
-        if self.is_cast() || self.variant == "lsh" {
+        let v = self.attn_variant();
+        if v.is_some_and(|v| v.key_has_clusters()) {
             parts.push(format!("c{}", self.n_c));
             parts.push(format!("k{}", self.kappa));
         }
-        if self.variant == "local" {
+        if v.is_some_and(|v| v.key_has_window()) {
             parts.push(format!("w{}", self.window));
         }
         if self.causal {

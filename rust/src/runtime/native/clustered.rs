@@ -1,0 +1,842 @@
+//! `clustered` — k-means centroid attention with exact top-k correction
+//! (Vyas et al., arXiv 2007.04825): the recipe CAST explicitly improves
+//! on, implemented here as its strongest in-repo rival.
+//!
+//! Per (batch, head), queries are grouped by a short k-means (Lloyd)
+//! run; each cluster attends once through its centroid μ_c over all N
+//! keys, and every member token refines the κ keys the centroid rated
+//! highest with its *own* exact attention:
+//!
+//!     p_c  = attn(μ_c · Kᵀ / τ)                    (centroid row, N wide)
+//!     T_c  = top-κ indices of p_c                  (exact-correction set)
+//!     o_i  = m_c · attn(q_i · K[T_c]ᵀ / τ) V[T_c]  (member's exact part)
+//!            + p_c V − Σ_{t∈T_c} p_c[t] v_t        (centroid tail)
+//!
+//! with m_c = Σ_{t∈T_c} p_c[t], so the exact part replaces precisely
+//! the probability mass the centroid assigned to T_c.  With κ ≥ N the
+//! tail cancels and the layer degrades to vanilla attention.
+//!
+//! The discrete choices (cluster assignment, top-k sets) are captured
+//! in a fused u32 *plan* and treated straight-through by the backward —
+//! everything differentiable (centroid means, both attention rows, the
+//! value mixes) gets an exact gradient.  Empty clusters have no member
+//! tokens, contribute nothing to the output, and therefore need no
+//! centroid gradient.
+//!
+//! Determinism: k-means ties break to the lowest cluster index, top-k
+//! uses [`ops::top_k_desc`]'s (score desc, index asc) order, all member
+//! and key reductions run in ascending index order, and the parallel
+//! grain is one batch element — results are bit-identical across
+//! thread counts.  The cluster affinity matrix `A_g` (softmax over
+//! −‖q_i − μ_c‖²/τ, head-averaged) is exposed for `predict_ag`, the
+//! clusters analysis, and the fig4 viz.
+
+use anyhow::{ensure, Result};
+
+use super::grad::layer::{fnv_fold, BaselineGradRefs};
+use super::grad::ops as gops;
+use super::layer::{BaselineParams, Dims};
+use super::ops::{self, AttnFn};
+use crate::util::{parallel, simd};
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Effective correction width: κ clamped to the sequence length.
+fn top_width(dims: &Dims) -> usize {
+    dims.kappa.min(dims.n).max(1)
+}
+
+/// Plan u32s per batch element: per head, one assignment per token plus
+/// one top-k set per cluster.
+fn plan_stride(dims: &Dims, kp: usize) -> usize {
+    dims.heads * (dims.n + dims.n_c * kp)
+}
+
+/// Offset of head `hh`'s cluster-`c` top-k set inside a batch element's
+/// plan chunk (assignments for all heads come first).
+fn topk_off(dims: &Dims, kp: usize, hh: usize, c: usize) -> usize {
+    dims.heads * dims.n + (hh * dims.n_c + c) * kp
+}
+
+/// Mean of each cluster's member q-rows, accumulated in ascending token
+/// order.  Clusters with no members are left untouched (k-means "keep
+/// previous centroid" semantics); callers must not read their μ unless
+/// they own a previous value.  Shared by the Lloyd update and the
+/// attend/backward recomputation so the two are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn means_from_assign(
+    q: &[f32],
+    bb: usize,
+    hh: usize,
+    dims: &Dims,
+    assign: &[u32],
+    sum: &mut [f32],
+    cnt: &mut [usize],
+    mu: &mut [f32],
+) {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    let d = dims.d();
+    sum.iter_mut().for_each(|x| *x = 0.0);
+    cnt.iter_mut().for_each(|x| *x = 0);
+    for (i, &a) in assign.iter().enumerate() {
+        let c = a as usize;
+        let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+        simd::add8(&mut sum[c * d_h..][..d_h], qrow);
+        cnt[c] += 1;
+    }
+    for c in 0..cc {
+        if cnt[c] > 0 {
+            let inv = 1.0 / cnt[c] as f32;
+            let dst = &mut mu[c * d_h..][..d_h];
+            dst.copy_from_slice(&sum[c * d_h..][..d_h]);
+            simd::scale8(dst, inv);
+        }
+    }
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let diff = x - y;
+        acc += diff * diff;
+    }
+    acc
+}
+
+/// Two Lloyd iterations over one (batch, head)'s query rows.  Centroids
+/// start on evenly spaced tokens; assignment ties break to the lowest
+/// cluster index.  Writes the final assignment and leaves `mu` holding
+/// the matching final centroids (kept-previous for empty clusters).
+#[allow(clippy::too_many_arguments)]
+fn kmeans(
+    q: &[f32],
+    bb: usize,
+    hh: usize,
+    dims: &Dims,
+    assign: &mut [u32],
+    sum: &mut [f32],
+    cnt: &mut [usize],
+    mu: &mut [f32],
+) {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    let d = dims.d();
+    for c in 0..cc {
+        let i = c * n / cc;
+        let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+        mu[c * d_h..][..d_h].copy_from_slice(qrow);
+    }
+    for _ in 0..2 {
+        for (i, a) in assign.iter_mut().enumerate() {
+            let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..cc {
+                let dd = dist2(qrow, &mu[c * d_h..][..d_h]);
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            *a = best as u32;
+        }
+        means_from_assign(q, bb, hh, dims, assign, sum, cnt, mu);
+    }
+}
+
+struct PlanScratch {
+    mu: Vec<f32>,
+    sum: Vec<f32>,
+    cnt: Vec<usize>,
+    pre: Vec<f32>,
+    post: Vec<f32>,
+    idx: Vec<usize>,
+    arow: Vec<f32>,
+}
+
+fn plan_scratch(dims: &Dims) -> PlanScratch {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    PlanScratch {
+        mu: vec![0.0; cc * d_h],
+        sum: vec![0.0; cc * d_h],
+        cnt: vec![0; cc],
+        pre: vec![0.0; n],
+        post: vec![0.0; n],
+        idx: Vec::with_capacity(n),
+        arow: vec![0.0; cc],
+    }
+}
+
+/// Pass 1: per batch element, run k-means per head, record the plan
+/// (assignments + per-cluster top-k sets) and accumulate the
+/// head-averaged cluster affinity matrix `A_g`.
+fn compute_plan_and_ag(
+    q: &[f32],
+    k: &[f32],
+    dims: &Dims,
+    kp: usize,
+    plan: &mut [u32],
+    ag: &mut [f32],
+) {
+    let (n, h, d_h, cc) = (dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let tau = (d_h as f32).sqrt();
+    let inv_h = 1.0 / h as f32;
+    let attn = dims.attn;
+    parallel::par_zip2_mut_with(
+        plan,
+        plan_stride(dims, kp),
+        ag,
+        n * cc,
+        || plan_scratch(dims),
+        |scr, bb, pchunk, agchunk| {
+            for hh in 0..h {
+                {
+                    let head_assign = &mut pchunk[hh * n..][..n];
+                    kmeans(q, bb, hh, dims, head_assign, &mut scr.sum, &mut scr.cnt, &mut scr.mu);
+                }
+                // affinity rows: softmax over −‖q_i − μ_c‖²/τ, averaged
+                // over heads (empty clusters use their kept-previous μ)
+                for i in 0..n {
+                    let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+                    for c in 0..cc {
+                        scr.arow[c] = -dist2(qrow, &scr.mu[c * d_h..][..d_h]) / tau;
+                    }
+                    ops::attn_rows(&mut scr.arow, cc, AttnFn::Softmax);
+                    for (dst, &a) in agchunk[i * cc..][..cc].iter_mut().zip(&scr.arow) {
+                        *dst += a * inv_h;
+                    }
+                }
+                // per-cluster top-k sets from the centroid's attention row
+                for c in 0..cc {
+                    let murow = &scr.mu[c * d_h..][..d_h];
+                    for j in 0..n {
+                        let krow = &k[(bb * n + j) * d + hh * d_h..][..d_h];
+                        scr.pre[j] = ops::dot(murow, krow) / tau;
+                    }
+                    scr.post.copy_from_slice(&scr.pre);
+                    ops::attn_rows(&mut scr.post, n, attn);
+                    ops::top_k_desc(&scr.post, kp, &mut scr.idx);
+                    let dst = &mut pchunk[topk_off(dims, kp, hh, c)..][..kp];
+                    for (slot, &t) in dst.iter_mut().zip(&scr.idx) {
+                        *slot = t as u32;
+                    }
+                }
+            }
+        },
+    );
+}
+
+struct AttendScratch {
+    mu: Vec<f32>,
+    sum: Vec<f32>,
+    cnt: Vec<usize>,
+    pre: Vec<f32>,
+    p: Vec<f32>,
+    m: Vec<f32>,
+    cent: Vec<f32>,
+    tops: Vec<f32>,
+    e_pre: Vec<f32>,
+    e: Vec<f32>,
+    w: Vec<f32>,
+}
+
+fn attend_scratch(dims: &Dims, kp: usize) -> AttendScratch {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    AttendScratch {
+        mu: vec![0.0; cc * d_h],
+        sum: vec![0.0; cc * d_h],
+        cnt: vec![0; cc],
+        pre: vec![0.0; cc * n],
+        p: vec![0.0; cc * n],
+        m: vec![0.0; cc],
+        cent: vec![0.0; cc * d_h],
+        tops: vec![0.0; cc * d_h],
+        e_pre: vec![0.0; kp],
+        e: vec![0.0; kp],
+        w: vec![0.0; d_h],
+    }
+}
+
+/// Recompute the per-cluster statistics of one (batch, head) from the
+/// plan: centroids (means of final members), the centroid attention
+/// rows `p_c`, and the corrected mass `m_c`.  Only non-empty clusters
+/// are filled — empty ones own no tokens and are never read.
+#[allow(clippy::too_many_arguments)]
+fn cluster_stats(
+    q: &[f32],
+    k: &[f32],
+    bb: usize,
+    hh: usize,
+    dims: &Dims,
+    kp: usize,
+    assign: &[u32],
+    pchunk: &[u32],
+    scr: &mut AttendScratch,
+) {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let tau = (d_h as f32).sqrt();
+    means_from_assign(q, bb, hh, dims, assign, &mut scr.sum, &mut scr.cnt, &mut scr.mu);
+    for c in 0..cc {
+        if scr.cnt[c] == 0 {
+            continue;
+        }
+        let murow = &scr.mu[c * d_h..][..d_h];
+        let pre = &mut scr.pre[c * n..][..n];
+        for (j, dst) in pre.iter_mut().enumerate() {
+            let krow = &k[(bb * n + j) * d + hh * d_h..][..d_h];
+            *dst = ops::dot(murow, krow) / tau;
+        }
+        let prow = &mut scr.p[c * n..][..n];
+        prow.copy_from_slice(&scr.pre[c * n..][..n]);
+        ops::attn_rows(prow, n, dims.attn);
+        let mut mass = 0.0f32;
+        for &t in &pchunk[topk_off(dims, kp, hh, c)..][..kp] {
+            mass += scr.p[c * n + t as usize];
+        }
+        scr.m[c] = mass;
+    }
+}
+
+/// Pass 2: the attention itself.  `r` gets the pre-output-projection
+/// mix; parallel over batch elements, everything inside sequential.
+fn attend_clustered(
+    r: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    plan: &[u32],
+    dims: &Dims,
+    kp: usize,
+) {
+    let (n, h, d_h, cc) = (dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let tau = (d_h as f32).sqrt();
+    let stride = plan_stride(dims, kp);
+    parallel::par_chunks_mut_with(
+        r,
+        n * d,
+        || attend_scratch(dims, kp),
+        |scr, bb, chunk| {
+            let pchunk = &plan[bb * stride..][..stride];
+            for hh in 0..h {
+                let assign = &pchunk[hh * n..][..n];
+                cluster_stats(q, k, bb, hh, dims, kp, assign, pchunk, scr);
+                for c in 0..cc {
+                    if scr.cnt[c] == 0 {
+                        continue;
+                    }
+                    let cent = &mut scr.cent[c * d_h..][..d_h];
+                    cent.iter_mut().for_each(|x| *x = 0.0);
+                    for j in 0..n {
+                        let vrow = &v[(bb * n + j) * d + hh * d_h..][..d_h];
+                        simd::axpy8(cent, scr.p[c * n + j], vrow);
+                    }
+                    let tops = &mut scr.tops[c * d_h..][..d_h];
+                    tops.iter_mut().for_each(|x| *x = 0.0);
+                    for &t in &pchunk[topk_off(dims, kp, hh, c)..][..kp] {
+                        let vrow = &v[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        simd::axpy8(tops, scr.p[c * n + t as usize], vrow);
+                    }
+                }
+                for (i, &a) in assign.iter().enumerate() {
+                    let c = a as usize;
+                    let qrow = &q[(bb * n + i) * d + hh * d_h..][..d_h];
+                    let tset = &pchunk[topk_off(dims, kp, hh, c)..][..kp];
+                    for (dst, &t) in scr.e_pre.iter_mut().zip(tset) {
+                        let krow = &k[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        *dst = ops::dot(qrow, krow) / tau;
+                    }
+                    scr.e.copy_from_slice(&scr.e_pre);
+                    ops::attn_rows(&mut scr.e, kp, dims.attn);
+                    scr.w.iter_mut().for_each(|x| *x = 0.0);
+                    for (jj, &t) in tset.iter().enumerate() {
+                        let vrow = &v[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        simd::axpy8(&mut scr.w, scr.e[jj], vrow);
+                    }
+                    let out = &mut chunk[i * d + hh * d_h..][..d_h];
+                    let cent = &scr.cent[c * d_h..][..d_h];
+                    let tops = &scr.tops[c * d_h..][..d_h];
+                    let m = scr.m[c];
+                    for (l, dst) in out.iter_mut().enumerate() {
+                        *dst = m * scr.w[l] + cent[l] - tops[l];
+                    }
+                }
+            }
+        },
+    );
+}
+
+type ForwardCore = (Vec<f32>, Vec<f32>, Vec<u32>, usize);
+
+fn forward_core(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<ForwardCore> {
+    let rows = dims.b * dims.n;
+    let d = dims.d();
+    ensure!(x.len() == rows * d, "clustered layer input shape");
+    ensure!(dims.n_c >= 1 && dims.kappa >= 1, "clustered layer needs n_c >= 1 and kappa >= 1");
+    let kp = top_width(dims);
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut plan = vec![0u32; dims.b * plan_stride(dims, kp)];
+    let mut ag = vec![0.0f32; dims.b * dims.n * dims.n_c];
+    compute_plan_and_ag(&q, &k, dims, kp, &mut plan, &mut ag);
+    let mut r = vec![0.0f32; rows * d];
+    attend_clustered(&mut r, &q, &k, &v, &plan, dims, kp);
+    let out = ops::dense(&r, p.wo_w, p.wo_b, rows, d, d);
+    Ok((out, ag, plan, kp))
+}
+
+/// Forward of the `clustered` layer: returns the output and the
+/// head-averaged cluster affinity matrix `A_g` (B·N × n_c, rows sum
+/// to 1).
+pub fn clustered_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (out, ag, _, _) = forward_core(p, x, dims)?;
+    Ok((out, ag))
+}
+
+/// Forward intermediates of one clustered layer: the input plus the
+/// fused discrete plan (assignments and top-k sets, straight-through in
+/// the backward).  Everything smooth is recomputed.
+pub struct ClusteredTape {
+    pub x: Vec<f32>,
+    plan: Vec<u32>,
+    kp: usize,
+}
+
+impl ClusteredTape {
+    /// Folds the discrete plan so gradient checks can skip perturbations
+    /// that flip an assignment or a top-k set.
+    pub fn fingerprint(&self) -> u64 {
+        let mut hsh = fnv_fold(FNV_SEED, self.kp as u64);
+        for &u in &self.plan {
+            hsh = fnv_fold(hsh, u as u64);
+        }
+        hsh
+    }
+}
+
+/// Forward pass that also captures the tape for [`clustered_backward`].
+pub fn clustered_forward_tape(
+    p: &BaselineParams,
+    x: &[f32],
+    dims: &Dims,
+) -> Result<(Vec<f32>, ClusteredTape)> {
+    let (out, _, plan, kp) = forward_core(p, x, dims)?;
+    Ok((out, ClusteredTape { x: x.to_vec(), plan, kp }))
+}
+
+struct BwdScratch {
+    att: AttendScratch,
+    gclu: Vec<f32>,
+    dm: Vec<f32>,
+    de: Vec<f32>,
+    du: Vec<f32>,
+    dp: Vec<f32>,
+    ds: Vec<f32>,
+    dmu: Vec<f32>,
+}
+
+fn bwd_scratch(dims: &Dims, kp: usize) -> BwdScratch {
+    let (n, d_h, cc) = (dims.n, dims.d_h, dims.n_c);
+    BwdScratch {
+        att: attend_scratch(dims, kp),
+        gclu: vec![0.0; cc * d_h],
+        dm: vec![0.0; cc],
+        de: vec![0.0; kp],
+        du: vec![0.0; kp],
+        dp: vec![0.0; n],
+        ds: vec![0.0; n],
+        dmu: vec![0.0; d_h],
+    }
+}
+
+/// Exact reverse pass with the discrete plan held fixed
+/// (straight-through).  The parallel grain is one batch element's fused
+/// `dq|dk|dv` row slab, same idiom as `window_backward`.
+pub fn clustered_backward(
+    p: &BaselineParams,
+    tape: &ClusteredTape,
+    dims: &Dims,
+    d_out: &[f32],
+    dx: &mut [f32],
+    g: &mut BaselineGradRefs,
+) -> Result<()> {
+    let (b, n, h, d_h, cc) = (dims.b, dims.n, dims.heads, dims.d_h, dims.n_c);
+    let d = dims.d();
+    let rows = b * n;
+    let kp = tape.kp;
+    let x: &[f32] = &tape.x;
+    ensure!(kp == top_width(dims), "clustered tape does not match dims");
+    ensure!(d_out.len() == rows * d && dx.len() == rows * d, "clustered backward shape");
+    let tau = (d_h as f32).sqrt();
+    let attn = dims.attn;
+    let stride = plan_stride(dims, kp);
+
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut r = vec![0.0f32; rows * d];
+    attend_clustered(&mut r, &q, &k, &v, &tape.plan, dims, kp);
+
+    let mut dr = vec![0.0f32; rows * d];
+    gops::dense_grad_input_acc(d_out, p.wo_w, rows, d, d, &mut dr);
+    gops::dense_grad_params(&r, d_out, rows, d, d, g.wo_w, g.wo_b);
+    let dr_s: &[f32] = &dr;
+    let (q_s, k_s, v_s): (&[f32], &[f32], &[f32]) = (&q, &k, &v);
+    let plan: &[u32] = &tape.plan;
+
+    let mut dqkv = vec![0.0f32; rows * 3 * d];
+    parallel::par_chunks_mut_with(
+        dqkv.as_mut_slice(),
+        n * 3 * d,
+        || bwd_scratch(dims, kp),
+        |scr, bb, slab| {
+            let pchunk = &plan[bb * stride..][..stride];
+            for hh in 0..h {
+                let assign = &pchunk[hh * n..][..n];
+                cluster_stats(q_s, k_s, bb, hh, dims, kp, assign, pchunk, &mut scr.att);
+                scr.gclu.iter_mut().for_each(|x| *x = 0.0);
+                scr.dm.iter_mut().for_each(|x| *x = 0.0);
+                // token loop: the exact-correction part, plus the
+                // accumulators the cluster loop below consumes
+                for (i, &a) in assign.iter().enumerate() {
+                    let c = a as usize;
+                    let m = scr.att.m[c];
+                    let qrow = &q_s[(bb * n + i) * d + hh * d_h..][..d_h];
+                    let tset = &pchunk[topk_off(dims, kp, hh, c)..][..kp];
+                    for (dst, &t) in scr.att.e_pre.iter_mut().zip(tset) {
+                        let krow = &k_s[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        *dst = ops::dot(qrow, krow) / tau;
+                    }
+                    scr.att.e.copy_from_slice(&scr.att.e_pre);
+                    ops::attn_rows(&mut scr.att.e, kp, attn);
+                    scr.att.w.iter_mut().for_each(|x| *x = 0.0);
+                    for (jj, &t) in tset.iter().enumerate() {
+                        let vrow = &v_s[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        simd::axpy8(&mut scr.att.w, scr.att.e[jj], vrow);
+                    }
+                    let dro = &dr_s[(bb * n + i) * d + hh * d_h..][..d_h];
+                    simd::add8(&mut scr.gclu[c * d_h..][..d_h], dro);
+                    scr.dm[c] += ops::dot(dro, &scr.att.w);
+                    for (jj, &t) in tset.iter().enumerate() {
+                        let vrow = &v_s[(bb * n + t as usize) * d + hh * d_h..][..d_h];
+                        scr.de[jj] = m * ops::dot(dro, vrow);
+                    }
+                    scr.du.iter_mut().for_each(|x| *x = 0.0);
+                    gops::attn_rows_backward(
+                        &scr.att.e_pre,
+                        &scr.att.e,
+                        &scr.de,
+                        kp,
+                        attn,
+                        &mut scr.du,
+                    );
+                    for (jj, &t) in tset.iter().enumerate() {
+                        let t = t as usize;
+                        let coef = scr.du[jj] / tau;
+                        let krow = &k_s[(bb * n + t) * d + hh * d_h..][..d_h];
+                        simd::axpy8(&mut slab[i * 3 * d + hh * d_h..][..d_h], coef, krow);
+                        simd::axpy8(&mut slab[t * 3 * d + d + hh * d_h..][..d_h], coef, qrow);
+                        let dv_row = &mut slab[t * 3 * d + 2 * d + hh * d_h..][..d_h];
+                        simd::axpy8(dv_row, m * scr.att.e[jj], dro);
+                    }
+                }
+                // cluster loop: centroid tail, corrected mass, and the
+                // straight-through mean gradient back to member queries
+                for c in 0..cc {
+                    if scr.att.cnt[c] == 0 {
+                        continue;
+                    }
+                    let gc = &scr.gclu[c * d_h..][..d_h];
+                    let prow = &scr.att.p[c * n..][..n];
+                    for (j, dst) in scr.dp.iter_mut().enumerate() {
+                        let vrow = &v_s[(bb * n + j) * d + hh * d_h..][..d_h];
+                        *dst = ops::dot(gc, vrow);
+                        simd::axpy8(&mut slab[j * 3 * d + 2 * d + hh * d_h..][..d_h], prow[j], gc);
+                    }
+                    for &t in &pchunk[topk_off(dims, kp, hh, c)..][..kp] {
+                        let t = t as usize;
+                        let vrow = &v_s[(bb * n + t) * d + hh * d_h..][..d_h];
+                        scr.dp[t] -= ops::dot(gc, vrow);
+                        simd::axpy8(&mut slab[t * 3 * d + 2 * d + hh * d_h..][..d_h], -prow[t], gc);
+                        scr.dp[t] += scr.dm[c];
+                    }
+                    scr.ds.iter_mut().for_each(|x| *x = 0.0);
+                    gops::attn_rows_backward(
+                        &scr.att.pre[c * n..][..n],
+                        prow,
+                        &scr.dp,
+                        n,
+                        attn,
+                        &mut scr.ds,
+                    );
+                    let murow = &scr.att.mu[c * d_h..][..d_h];
+                    scr.dmu.iter_mut().for_each(|x| *x = 0.0);
+                    for (j, &dsv) in scr.ds.iter().enumerate() {
+                        if dsv == 0.0 {
+                            continue;
+                        }
+                        let coef = dsv / tau;
+                        let krow = &k_s[(bb * n + j) * d + hh * d_h..][..d_h];
+                        simd::axpy8(&mut scr.dmu, coef, krow);
+                        simd::axpy8(&mut slab[j * 3 * d + d + hh * d_h..][..d_h], coef, murow);
+                    }
+                    let inv_cnt = 1.0 / scr.att.cnt[c] as f32;
+                    for (i, &a) in assign.iter().enumerate() {
+                        if a as usize == c {
+                            let dq_row = &mut slab[i * 3 * d + hh * d_h..][..d_h];
+                            simd::axpy8(dq_row, inv_cnt, &scr.dmu);
+                        }
+                    }
+                }
+            }
+        },
+    );
+
+    qkv_slab_project_backward(p, x, &dqkv, rows, d, g, dx);
+    Ok(())
+}
+
+/// Unpack a fused `dq|dk|dv` row slab and run the three projection
+/// backwards.  Shared by the clustered and tost backward passes (same
+/// idiom as `window_backward`'s tail).
+pub(crate) fn qkv_slab_project_backward(
+    p: &BaselineParams,
+    x: &[f32],
+    dqkv: &[f32],
+    rows: usize,
+    d: usize,
+    g: &mut BaselineGradRefs,
+    dx: &mut [f32],
+) {
+    let blk = parallel::row_block(rows);
+    let mut dq = vec![0.0f32; rows * d];
+    let mut dk = vec![0.0f32; rows * d];
+    let mut dv = vec![0.0f32; rows * d];
+    for (off, buf) in [(0usize, &mut dq), (d, &mut dk), (2 * d, &mut dv)] {
+        parallel::par_chunks_mut(buf.as_mut_slice(), blk * d, |ci, chunk| {
+            let r0 = ci * blk;
+            for (rr, dst) in chunk.chunks_mut(d).enumerate() {
+                dst.copy_from_slice(&dqkv[(r0 + rr) * 3 * d + off..][..d]);
+            }
+        });
+    }
+    gops::dense_grad_params(x, &dq, rows, d, d, g.wq_w, g.wq_b);
+    gops::dense_grad_input_acc(&dq, p.wq_w, rows, d, d, dx);
+    gops::dense_grad_params(x, &dk, rows, d, d, g.wk_w, g.wk_b);
+    gops::dense_grad_input_acc(&dk, p.wk_w, rows, d, d, dx);
+    gops::dense_grad_params(x, &dv, rows, d, d, g.wv_w, g.wv_b);
+    gops::dense_grad_input_acc(&dv, p.wv_w, rows, d, d, dx);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::layer::vanilla_layer;
+    use crate::util::prop::{assert_grads_close, GradCheckCfg};
+    use crate::util::rng::Rng;
+
+    fn dims(attn: AttnFn, kappa: usize) -> Dims {
+        Dims {
+            b: 2,
+            n: 8,
+            heads: 2,
+            d_h: 4,
+            n_c: 2,
+            kappa,
+            attn,
+            clustering: "topk".to_string(),
+            causal: false,
+            window: 4,
+        }
+    }
+
+    fn layer_cfg() -> GradCheckCfg {
+        GradCheckCfg { eps: 1e-2, rel_tol: 1e-2, abs_tol: 1e-3, max_per_block: 8 }
+    }
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    fn lens(d: usize) -> Vec<(String, usize)> {
+        vec![
+            ("wq.w".into(), d * d),
+            ("wq.b".into(), d),
+            ("wk.w".into(), d * d),
+            ("wk.b".into(), d),
+            ("wv.w".into(), d * d),
+            ("wv.b".into(), d),
+            ("wo.w".into(), d * d),
+            ("wo.b".into(), d),
+        ]
+    }
+
+    fn random_theta(rng: &mut Rng, lens: &[(String, usize)], d: usize) -> Vec<f32> {
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut theta = Vec::new();
+        for (name, len) in lens {
+            let s = if name.ends_with(".b") { 0.1 } else { scale };
+            theta.extend(randn(rng, *len, s));
+        }
+        theta
+    }
+
+    fn split<'a>(t: &'a [f32], lens: &[usize]) -> Vec<&'a [f32]> {
+        let mut out = Vec::with_capacity(lens.len());
+        let mut off = 0usize;
+        for &l in lens {
+            out.push(&t[off..off + l]);
+            off += l;
+        }
+        out
+    }
+
+    fn params_of<'a>(parts: &[&'a [f32]]) -> BaselineParams<'a> {
+        BaselineParams {
+            wq_w: parts[0],
+            wq_b: parts[1],
+            wk_w: parts[2],
+            wk_b: parts[3],
+            wv_w: parts[4],
+            wv_b: parts[5],
+            wo_w: parts[6],
+            wo_b: parts[7],
+        }
+    }
+
+    fn analytic_grads(
+        theta: &[f32],
+        lens_only: &[usize],
+        x: &[f32],
+        c: &[f32],
+        dm: &Dims,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let parts = split(theta, lens_only);
+        let p = params_of(&parts);
+        let mut gbufs: Vec<Vec<f32>> = lens_only.iter().map(|&l| vec![0.0; l]).collect();
+        let mut dx = vec![0.0f32; x.len()];
+        let [wq_w, wq_b, wk_w, wk_b, wv_w, wv_b, wo_w, wo_b] = &mut gbufs[..] else {
+            unreachable!()
+        };
+        let mut g = BaselineGradRefs {
+            wq_w: wq_w.as_mut_slice(),
+            wq_b: wq_b.as_mut_slice(),
+            wk_w: wk_w.as_mut_slice(),
+            wk_b: wk_b.as_mut_slice(),
+            wv_w: wv_w.as_mut_slice(),
+            wv_b: wv_b.as_mut_slice(),
+            wo_w: wo_w.as_mut_slice(),
+            wo_b: wo_b.as_mut_slice(),
+        };
+        let (_, tape) = clustered_forward_tape(&p, x, dm).unwrap();
+        clustered_backward(&p, &tape, dm, c, &mut dx, &mut g).unwrap();
+        (gbufs.concat(), dx)
+    }
+
+    #[test]
+    fn kappa_at_least_n_matches_vanilla_attention() {
+        // with κ ≥ N every cluster's correction set covers all keys:
+        // the centroid tail cancels and each token attends exactly —
+        // the layer must reproduce vanilla attention (up to fp
+        // summation order, the top-k set is a permutation of 0..N)
+        for attn in [AttnFn::Softmax, AttnFn::Laplace] {
+            let dm = dims(attn, 8);
+            let d = dm.d();
+            let mut rng = Rng::new(71);
+            let ls = lens(d);
+            let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+            let theta = random_theta(&mut rng, &ls, d);
+            let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+            let parts = split(&theta, &lens_only);
+            let p = params_of(&parts);
+            let (got, _) = clustered_layer(&p, &x, &dm).unwrap();
+            let want = vanilla_layer(&p, &x, &dm).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "clustered(κ=N) {a} vs vanilla {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_rows_sum_to_one() {
+        let dm = dims(AttnFn::Softmax, 4);
+        let d = dm.d();
+        let mut rng = Rng::new(73);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+        let parts = split(&theta, &lens_only);
+        let (out, ag) = clustered_layer(&params_of(&parts), &x, &dm).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(ag.len(), dm.b * dm.n * dm.n_c);
+        for row in ag.chunks(dm.n_c) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "affinity row sums to {s}");
+        }
+    }
+
+    #[test]
+    fn plan_fingerprint_is_stable_and_input_sensitive() {
+        let dm = dims(AttnFn::Softmax, 4);
+        let d = dm.d();
+        let mut rng = Rng::new(79);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+        let parts = split(&theta, &lens_only);
+        let p = params_of(&parts);
+        let (_, t1) = clustered_forward_tape(&p, &x, &dm).unwrap();
+        let (_, t2) = clustered_forward_tape(&p, &x, &dm).unwrap();
+        assert_eq!(t1.fingerprint(), t2.fingerprint());
+        let y = randn(&mut rng, x.len(), 1.0);
+        let (_, t3) = clustered_forward_tape(&p, &y, &dm).unwrap();
+        assert_ne!(t1.fingerprint(), t3.fingerprint());
+    }
+
+    #[test]
+    fn parameter_gradients_match_central_difference() {
+        for attn in [AttnFn::Softmax, AttnFn::Laplace] {
+            let dm = dims(attn, 4);
+            let d = dm.d();
+            let rows = dm.b * dm.n;
+            let mut rng = Rng::new(331);
+            let ls = lens(d);
+            let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+            let theta = random_theta(&mut rng, &ls, d);
+            let x = randn(&mut rng, rows * d, 1.0);
+            let c = randn(&mut rng, rows * d, 0.5);
+            let (analytic, _) = analytic_grads(&theta, &lens_only, &x, &c, &dm);
+            assert_grads_close(&layer_cfg(), &theta, &ls, &analytic, |t| {
+                let parts = split(t, &lens_only);
+                let p = params_of(&parts);
+                let (out, tape) = clustered_forward_tape(&p, &x, &dm).unwrap();
+                (ops::dot(&c, &out), tape.fingerprint())
+            });
+        }
+    }
+
+    #[test]
+    fn input_gradient_matches_central_difference() {
+        let dm = dims(AttnFn::Softmax, 4);
+        let d = dm.d();
+        let rows = dm.b * dm.n;
+        let mut rng = Rng::new(337);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 0.5);
+        let (_, dx) = analytic_grads(&theta, &lens_only, &x, &c, &dm);
+        let blocks = vec![("x".to_string(), rows * d)];
+        assert_grads_close(&layer_cfg(), &x, &blocks, &dx, |xt| {
+            let parts = split(&theta, &lens_only);
+            let p = params_of(&parts);
+            let (out, tape) = clustered_forward_tape(&p, xt, &dm).unwrap();
+            (ops::dot(&c, &out), tape.fingerprint())
+        });
+    }
+}

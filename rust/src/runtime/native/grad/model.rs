@@ -12,17 +12,17 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::runtime::artifacts::{Manifest, ModelMeta};
 use crate::runtime::tensor::HostTensor;
 use crate::util::parallel;
 use crate::util::simd;
 
-use super::super::layer as flayer;
 use super::super::layer::{CastScratch, Dims};
 use super::super::model::{apply_norm, dims_for, head_forward, softmax_xent, Params, NORM_EPS};
 use super::super::ops;
+use super::super::variants::{self, AttnTape, AttnVariant};
 use super::layer as glayer;
 use super::layer::fnv_fold;
 use super::ops as gops;
@@ -131,14 +131,6 @@ impl GradStore {
 // taped forward
 // ---------------------------------------------------------------------------
 
-enum AttnTape {
-    Cast(glayer::CastTape),
-    /// Vanilla/local: only the layer input is stored (projections and
-    /// probabilities are recomputed).
-    Window(Vec<f32>),
-    Lsh(glayer::LshTape),
-}
-
 struct BlockTape {
     attn: AttnTape,
     /// Input of norm1 (postnorm: x + a; prenorm: the block input).
@@ -194,43 +186,8 @@ fn attn_forward_tape(
     dims: &Dims,
     cast_fwd: &mut CastScratch,
 ) -> Result<(Vec<f32>, AttnTape)> {
-    if meta.is_cast() {
-        let cp = flayer::CastParams {
-            wq_w: p.f(&format!("{prefix}.wq.w"))?,
-            wq_b: p.f(&format!("{prefix}.wq.b"))?,
-            wk_w: p.f(&format!("{prefix}.wk.w"))?,
-            wk_b: p.f(&format!("{prefix}.wk.b"))?,
-            wv_w: p.f(&format!("{prefix}.wv.w"))?,
-            wv_b: p.f(&format!("{prefix}.wv.b"))?,
-            wo_w: p.f(&format!("{prefix}.wo.w"))?,
-            wo_b: p.f(&format!("{prefix}.wo.b"))?,
-            s: p.f(&format!("{prefix}.s"))?,
-            phi_w: p.f(&format!("{prefix}.phi.w"))?,
-            phi_b: p.f(&format!("{prefix}.phi.b"))?,
-        };
-        let (out, _ag) = flayer::cast_layer(&cp, x, dims, cast_fwd)?;
-        let tape = glayer::CastTape::capture(x, cast_fwd);
-        return Ok((out, AttnTape::Cast(tape)));
-    }
-    let bp = flayer::BaselineParams {
-        wq_w: p.f(&format!("{prefix}.wq.w"))?,
-        wq_b: p.f(&format!("{prefix}.wq.b"))?,
-        wk_w: p.f(&format!("{prefix}.wk.w"))?,
-        wk_b: p.f(&format!("{prefix}.wk.b"))?,
-        wv_w: p.f(&format!("{prefix}.wv.w"))?,
-        wv_b: p.f(&format!("{prefix}.wv.b"))?,
-        wo_w: p.f(&format!("{prefix}.wo.w"))?,
-        wo_b: p.f(&format!("{prefix}.wo.b"))?,
-    };
-    match meta.variant.as_str() {
-        "vanilla" => Ok((flayer::vanilla_layer(&bp, x, dims)?, AttnTape::Window(x.to_vec()))),
-        "local" => Ok((flayer::local_layer(&bp, x, dims)?, AttnTape::Window(x.to_vec()))),
-        "lsh" => {
-            let (out, tape) = glayer::lsh_forward_tape(&bp, x, dims)?;
-            Ok((out, AttnTape::Lsh(tape)))
-        }
-        other => bail!("unknown model variant {other:?}"),
-    }
+    let v = AttnVariant::parse(&meta.variant)?;
+    variants::attn_forward_tape(v, p, prefix, x, dims, cast_fwd)
 }
 
 /// FFN with pre-activation capture: identical arithmetic to the forward
@@ -270,14 +227,6 @@ fn ffn_forward_tape(
         &mut out,
     );
     Ok((out, hid_pre))
-}
-
-fn attn_fingerprint(tape: &AttnTape) -> u64 {
-    match tape {
-        AttnTape::Cast(t) => t.fingerprint(),
-        AttnTape::Window(_) => 0,
-        AttnTape::Lsh(t) => t.fingerprint(),
-    }
 }
 
 /// Taped encoder forward: tokens (b·N) → pooled features (b, d).
@@ -325,7 +274,7 @@ fn encode_tape(
             apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
             BlockTape { attn, norm1_in, ffn_in, hid_pre, norm2_in }
         };
-        fingerprint = fnv_fold(fingerprint, attn_fingerprint(&tape.attn));
+        fingerprint = fnv_fold(fingerprint, variants::attn_fingerprint(&tape.attn));
         blocks.push(tape);
     }
     let out_norm_in = if meta.prenorm {
@@ -452,6 +401,7 @@ fn ffn_backward(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn attn_backward(
     p: &Params,
     meta: &ModelMeta,
@@ -464,99 +414,10 @@ fn attn_backward(
     cast_bwd: &mut glayer::CastBwdScratch,
     base_bwd: &mut glayer::BaselineBwdScratch,
 ) -> Result<()> {
-    match tape {
-        AttnTape::Cast(t) => {
-            let cp = flayer::CastParams {
-                wq_w: p.f(&format!("{prefix}.wq.w"))?,
-                wq_b: p.f(&format!("{prefix}.wq.b"))?,
-                wk_w: p.f(&format!("{prefix}.wk.w"))?,
-                wk_b: p.f(&format!("{prefix}.wk.b"))?,
-                wv_w: p.f(&format!("{prefix}.wv.w"))?,
-                wv_b: p.f(&format!("{prefix}.wv.b"))?,
-                wo_w: p.f(&format!("{prefix}.wo.w"))?,
-                wo_b: p.f(&format!("{prefix}.wo.b"))?,
-                s: p.f(&format!("{prefix}.s"))?,
-                phi_w: p.f(&format!("{prefix}.phi.w"))?,
-                phi_b: p.f(&format!("{prefix}.phi.b"))?,
-            };
-            let run = store.consecutive(&[
-                format!("{prefix}.phi.b"),
-                format!("{prefix}.phi.w"),
-                format!("{prefix}.s"),
-                format!("{prefix}.wk.b"),
-                format!("{prefix}.wk.w"),
-                format!("{prefix}.wo.b"),
-                format!("{prefix}.wo.w"),
-                format!("{prefix}.wq.b"),
-                format!("{prefix}.wq.w"),
-                format!("{prefix}.wv.b"),
-                format!("{prefix}.wv.w"),
-            ])?;
-            let [phi_b, phi_w, s, wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = run else {
-                unreachable!()
-            };
-            let mut g = glayer::CastGradRefs {
-                wq_w: wq_w.as_mut_slice(),
-                wq_b: wq_b.as_mut_slice(),
-                wk_w: wk_w.as_mut_slice(),
-                wk_b: wk_b.as_mut_slice(),
-                wv_w: wv_w.as_mut_slice(),
-                wv_b: wv_b.as_mut_slice(),
-                wo_w: wo_w.as_mut_slice(),
-                wo_b: wo_b.as_mut_slice(),
-                s: s.as_mut_slice(),
-                phi_w: phi_w.as_mut_slice(),
-                phi_b: phi_b.as_mut_slice(),
-            };
-            glayer::cast_layer_backward(&cp, t, dims, d_out, dx_acc, &mut g, cast_bwd)
-        }
-        AttnTape::Window(x) | AttnTape::Lsh(glayer::LshTape { x, .. }) => {
-            let bp = flayer::BaselineParams {
-                wq_w: p.f(&format!("{prefix}.wq.w"))?,
-                wq_b: p.f(&format!("{prefix}.wq.b"))?,
-                wk_w: p.f(&format!("{prefix}.wk.w"))?,
-                wk_b: p.f(&format!("{prefix}.wk.b"))?,
-                wv_w: p.f(&format!("{prefix}.wv.w"))?,
-                wv_b: p.f(&format!("{prefix}.wv.b"))?,
-                wo_w: p.f(&format!("{prefix}.wo.w"))?,
-                wo_b: p.f(&format!("{prefix}.wo.b"))?,
-            };
-            let run = store.consecutive(&[
-                format!("{prefix}.wk.b"),
-                format!("{prefix}.wk.w"),
-                format!("{prefix}.wo.b"),
-                format!("{prefix}.wo.w"),
-                format!("{prefix}.wq.b"),
-                format!("{prefix}.wq.w"),
-                format!("{prefix}.wv.b"),
-                format!("{prefix}.wv.w"),
-            ])?;
-            let [wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = run else { unreachable!() };
-            let mut g = glayer::BaselineGradRefs {
-                wq_w: wq_w.as_mut_slice(),
-                wq_b: wq_b.as_mut_slice(),
-                wk_w: wk_w.as_mut_slice(),
-                wk_b: wk_b.as_mut_slice(),
-                wv_w: wv_w.as_mut_slice(),
-                wv_b: wv_b.as_mut_slice(),
-                wo_w: wo_w.as_mut_slice(),
-                wo_b: wo_b.as_mut_slice(),
-            };
-            match (meta.variant.as_str(), tape) {
-                ("vanilla", _) => {
-                    glayer::window_backward(&bp, x, dims, None, d_out, dx_acc, &mut g, base_bwd)
-                }
-                ("local", _) => {
-                    let w = dims.window.min(dims.n).max(1);
-                    glayer::window_backward(&bp, x, dims, Some(w), d_out, dx_acc, &mut g, base_bwd)
-                }
-                ("lsh", AttnTape::Lsh(t)) => {
-                    glayer::lsh_backward(&bp, t, dims, d_out, dx_acc, &mut g, base_bwd)
-                }
-                (other, _) => bail!("unknown model variant {other:?}"),
-            }
-        }
-    }
+    let v = AttnVariant::parse(&meta.variant)?;
+    let names = variants::grad_param_names(v, prefix);
+    let run = store.consecutive(&names)?;
+    variants::attn_backward(v, p, prefix, tape, dims, d_out, dx_acc, run, cast_bwd, base_bwd)
 }
 
 /// Backward through one taped encoder: `d_pooled` (b, d) → parameter
@@ -998,18 +859,26 @@ mod tests {
     }
 
     #[test]
+    fn full_model_gradients_clustered() {
+        let mut meta = small_meta("clustered");
+        meta.depth = 1;
+        check_model(meta, 16);
+    }
+
+    #[test]
+    fn full_model_gradients_tost() {
+        let mut meta = small_meta("tost");
+        meta.depth = 1;
+        check_model(meta, 17);
+    }
+
+    #[test]
     fn taped_forward_is_bit_identical_to_predict_forward() {
         // the taped forward must never drift from the forward that
         // `predict`/eval run: same loss (and accuracy) bit-for-bit,
         // for every variant, prenorm/scale, and the dual head
         use super::super::super::model::run_predict;
-        let mut metas = vec![
-            small_meta("cast_topk"),
-            small_meta("cast_sa"),
-            small_meta("vanilla"),
-            small_meta("local"),
-            small_meta("lsh"),
-        ];
+        let mut metas: Vec<ModelMeta> = variants::NAMES.iter().map(|v| small_meta(v)).collect();
         let mut prenorm = small_meta("cast_topk");
         prenorm.prenorm = true;
         prenorm.norm = "scale".to_string();
@@ -1072,7 +941,7 @@ mod tests {
 
     #[test]
     fn grads_align_with_manifest_and_are_finite_for_every_variant() {
-        for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        for variant in variants::NAMES {
             let man = Manifest::synthetic(small_meta(variant));
             let params = run_init(&man, &[&HostTensor::u32(vec![], vec![3])]).unwrap();
             let refs: Vec<&HostTensor> = params.iter().collect();

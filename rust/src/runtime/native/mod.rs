@@ -18,11 +18,14 @@
 //! DESIGN.md §Autograd); `CAST_TRAIN_SCOPE=head` selects the PR-1
 //! head-only regression path.
 
+pub mod clustered;
 pub mod grad;
 pub mod layer;
 pub mod model;
 pub mod ops;
 pub mod spec;
+pub mod tost;
+pub mod variants;
 
 use std::sync::Arc;
 
@@ -32,8 +35,9 @@ use super::artifacts::Manifest;
 use super::backend::{Backend, Executable, Scratch};
 use super::tensor::HostTensor;
 
-/// The model variants the engine implements (mirrors configs.VARIANTS).
-pub const VARIANTS: [&str; 5] = ["cast_topk", "cast_sa", "vanilla", "local", "lsh"];
+/// The model variants the engine implements — re-exported from the
+/// [`variants`] registry, the single source of truth for variant names.
+pub use variants::NAMES as VARIANTS;
 const ENTRIES: [&str; 4] = ["init", "predict", "predict_ag", "train_step"];
 
 /// The pure-Rust CPU engine.
@@ -64,9 +68,7 @@ impl Backend for NativeBackend {
             manifest.meta.variant
         );
         let meta = &manifest.meta;
-        if !VARIANTS.contains(&meta.variant.as_str()) {
-            bail!("unknown model variant {:?} (know {VARIANTS:?})", meta.variant);
-        }
+        variants::AttnVariant::parse(&meta.variant)?;
         ensure!(
             meta.heads > 0 && meta.d % meta.heads == 0,
             "d={} not divisible by h={}",

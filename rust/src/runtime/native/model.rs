@@ -32,8 +32,9 @@ use crate::util::rng::Rng;
 use crate::util::simd;
 
 use super::grad;
-use super::layer::{self, BaselineParams, CastParams, CastScratch, Dims};
+use super::layer::{CastScratch, Dims};
 use super::ops::{self, AttnFn};
+use super::variants;
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -186,41 +187,8 @@ fn attn_apply(
     dims: &Dims,
     ws: &mut CastScratch,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    if meta.is_cast() {
-        let cp = CastParams {
-            wq_w: p.f(&format!("{prefix}.wq.w"))?,
-            wq_b: p.f(&format!("{prefix}.wq.b"))?,
-            wk_w: p.f(&format!("{prefix}.wk.w"))?,
-            wk_b: p.f(&format!("{prefix}.wk.b"))?,
-            wv_w: p.f(&format!("{prefix}.wv.w"))?,
-            wv_b: p.f(&format!("{prefix}.wv.b"))?,
-            wo_w: p.f(&format!("{prefix}.wo.w"))?,
-            wo_b: p.f(&format!("{prefix}.wo.b"))?,
-            s: p.f(&format!("{prefix}.s"))?,
-            phi_w: p.f(&format!("{prefix}.phi.w"))?,
-            phi_b: p.f(&format!("{prefix}.phi.b"))?,
-        };
-        return layer::cast_layer(&cp, x, dims, ws);
-    }
-    let bp = BaselineParams {
-        wq_w: p.f(&format!("{prefix}.wq.w"))?,
-        wq_b: p.f(&format!("{prefix}.wq.b"))?,
-        wk_w: p.f(&format!("{prefix}.wk.w"))?,
-        wk_b: p.f(&format!("{prefix}.wk.b"))?,
-        wv_w: p.f(&format!("{prefix}.wv.w"))?,
-        wv_b: p.f(&format!("{prefix}.wv.b"))?,
-        wo_w: p.f(&format!("{prefix}.wo.w"))?,
-        wo_b: p.f(&format!("{prefix}.wo.b"))?,
-    };
-    let out = match meta.variant.as_str() {
-        "vanilla" => layer::vanilla_layer(&bp, x, dims)?,
-        "local" => layer::local_layer(&bp, x, dims)?,
-        "lsh" => layer::lsh_layer(&bp, x, dims)?,
-        other => bail!("unknown model variant {other:?}"),
-    };
-    // baselines have no cluster affinities (model.py returns zeros)
-    let ag = vec![0.0f32; dims.b * dims.n * dims.n_c];
-    Ok((out, ag))
+    let v = variants::AttnVariant::parse(&meta.variant)?;
+    variants::attn_forward(v, p, prefix, x, dims, ws)
 }
 
 /// tokens (b·N,) int32 → pooled features (b, d) [+ per-layer A_g].
@@ -455,7 +423,10 @@ pub fn run_predict_ag(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
         inputs.len()
     );
     let meta = &manifest.meta;
-    ensure!(meta.has_ag(), "predict_ag only exists for non-dual CAST variants");
+    ensure!(
+        meta.has_ag(),
+        "predict_ag requires a variant with cluster affinities (supports_ag) and a non-dual model"
+    );
     let p = Params::bind(&manifest.params, &inputs[..p_count])?;
     let tokens = inputs[p_count];
     let toks = tokens.as_s32().context("tokens tensor")?;
@@ -720,7 +691,7 @@ mod tests {
 
     #[test]
     fn predict_emits_finite_logits_for_every_variant() {
-        for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+        for variant in variants::NAMES {
             let man = tiny_manifest(variant);
             let params = init_params(&man, 1);
             let tokens = tokens_for(&man, |i| (i % 30) as i32);
@@ -750,16 +721,20 @@ mod tests {
 
     #[test]
     fn predict_ag_shape_and_row_sums() {
-        let man = tiny_manifest("cast_topk");
-        let params = init_params(&man, 0);
-        let tokens = tokens_for(&man, |_| 2);
-        let mut inputs: Vec<&HostTensor> = params.iter().collect();
-        inputs.push(&tokens);
-        let out = run_predict_ag(&man, &inputs).unwrap();
-        assert_eq!(out[0].shape, vec![2, 2, 64, 4]);
-        for row in out[0].as_f32().unwrap().chunks(4) {
-            let s: f32 = row.iter().sum();
-            assert!((s - 1.0).abs() < 1e-3, "A_g row sums to {s}");
+        // every supports_ag variant — CAST's surrogate affinities and
+        // clustered's k-means affinities — emits normalized A_g rows
+        for variant in ["cast_topk", "clustered"] {
+            let man = tiny_manifest(variant);
+            let params = init_params(&man, 0);
+            let tokens = tokens_for(&man, |_| 2);
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.push(&tokens);
+            let out = run_predict_ag(&man, &inputs).unwrap();
+            assert_eq!(out[0].shape, vec![2, 2, 64, 4], "{variant}");
+            for row in out[0].as_f32().unwrap().chunks(4) {
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "{variant} A_g row sums to {s}");
+            }
         }
     }
 

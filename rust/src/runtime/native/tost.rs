@@ -1,0 +1,441 @@
+//! `tost` — Token-Statistics-style linear attention (arXiv 2412.17810).
+//!
+//! Instead of the N×N score matrix, each (batch, head) folds its keys
+//! and values into second-moment statistics once:
+//!
+//!     S = Σ_j k'_j v_jᵀ   (d_h × d_h)      z = Σ_j k'_j   (d_h)
+//!     o_i = Sᵀ q'_i / (q'_i · z + ε)
+//!
+//! with the positive feature map `q' = softplus(q) + 1` (and likewise
+//! `k'`), so every denominator is ≥ N·d_h and the whole layer is smooth
+//! — no discrete choices, hence an [`super::variants::AttnTape::Input`]
+//! tape (fingerprint 0) and recompute-everything backward.  Cost is
+//! O(N·d_h²) per head: the linear-attention end of the bake-off frontier.
+//!
+//! Determinism: the parallel grain is one batch element (disjoint output
+//! rows); heads, tokens and statistics accumulate sequentially in
+//! ascending index order, so results are bit-identical across thread
+//! counts.
+
+use anyhow::{ensure, Result};
+
+use super::grad::layer::BaselineGradRefs;
+use super::grad::ops as gops;
+use super::layer::{BaselineParams, Dims};
+use super::ops;
+use crate::util::{parallel, simd};
+
+/// Denominator guard; dominated by the ≥ N·d_h mass of the positive
+/// feature map, it only matters for degenerate zero-length inputs.
+const EPS: f32 = 1e-6;
+
+/// Per-worker buffers for one (batch, head) pass.
+struct FwdScratch {
+    qp: Vec<f32>,
+    kp: Vec<f32>,
+    s: Vec<f32>,
+    z: Vec<f32>,
+    num: Vec<f32>,
+}
+
+fn fwd_scratch(d_h: usize) -> FwdScratch {
+    FwdScratch {
+        qp: vec![0.0; d_h],
+        kp: vec![0.0; d_h],
+        s: vec![0.0; d_h * d_h],
+        z: vec![0.0; d_h],
+        num: vec![0.0; d_h],
+    }
+}
+
+fn softplus1_into(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = ops::softplus1(s);
+    }
+}
+
+/// The attention core: projected `q`/`k`/`v` (rows, d) → `r` (rows, d).
+/// Shared by the forward layer and the backward's recomputation so the
+/// two are bit-identical.
+fn attend_tost(r: &mut [f32], q: &[f32], k: &[f32], v: &[f32], dims: &Dims) {
+    let (n, h, d_h) = (dims.n, dims.heads, dims.d_h);
+    let d = dims.d();
+    parallel::par_chunks_mut_with(
+        r,
+        n * d,
+        || fwd_scratch(d_h),
+        |scr, bb, chunk| {
+            for hh in 0..h {
+                // key/value statistics, ascending j
+                scr.s.iter_mut().for_each(|x| *x = 0.0);
+                scr.z.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..n {
+                    let row = (bb * n + j) * d + hh * d_h;
+                    softplus1_into(&mut scr.kp, &k[row..row + d_h]);
+                    let vrow = &v[row..row + d_h];
+                    simd::add8(&mut scr.z, &scr.kp);
+                    for (l, srow) in scr.s.chunks_mut(d_h).enumerate() {
+                        simd::axpy8(srow, scr.kp[l], vrow);
+                    }
+                }
+                for i in 0..n {
+                    let row = (bb * n + i) * d + hh * d_h;
+                    softplus1_into(&mut scr.qp, &q[row..row + d_h]);
+                    scr.num.iter_mut().for_each(|x| *x = 0.0);
+                    for (l, srow) in scr.s.chunks(d_h).enumerate() {
+                        simd::axpy8(&mut scr.num, scr.qp[l], srow);
+                    }
+                    let den = ops::dot(&scr.qp, &scr.z) + EPS;
+                    let out = &mut chunk[i * d + hh * d_h..][..d_h];
+                    out.copy_from_slice(&scr.num);
+                    simd::scale8(out, 1.0 / den);
+                }
+            }
+        },
+    );
+}
+
+/// Forward of the `tost` layer: project, fold token statistics, attend,
+/// output-project.
+pub fn tost_layer(p: &BaselineParams, x: &[f32], dims: &Dims) -> Result<Vec<f32>> {
+    let rows = dims.b * dims.n;
+    let d = dims.d();
+    ensure!(x.len() == rows * d, "tost layer input shape");
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut r = vec![0.0f32; rows * d];
+    attend_tost(&mut r, &q, &k, &v, dims);
+    Ok(ops::dense(&r, p.wo_w, p.wo_b, rows, d, d))
+}
+
+/// Per-worker buffers for one (batch, head) backward pass.
+struct BwdScratch {
+    fwd: FwdScratch,
+    dnum: Vec<f32>,
+    dqp: Vec<f32>,
+    dkp: Vec<f32>,
+    ds: Vec<f32>,
+    dz: Vec<f32>,
+}
+
+fn bwd_scratch(d_h: usize) -> BwdScratch {
+    BwdScratch {
+        fwd: fwd_scratch(d_h),
+        dnum: vec![0.0; d_h],
+        dqp: vec![0.0; d_h],
+        dkp: vec![0.0; d_h],
+        ds: vec![0.0; d_h * d_h],
+        dz: vec![0.0; d_h],
+    }
+}
+
+/// Exact reverse pass; the layer is smooth, so everything is recomputed
+/// from the stored input `x`.  The parallel grain is one batch element's
+/// fused `dq|dk|dv` row slab — all of a batch element's token indices
+/// stay inside it, so chunks are disjoint and the accumulation order is
+/// fixed regardless of thread count.
+pub fn tost_backward(
+    p: &BaselineParams,
+    x: &[f32],
+    dims: &Dims,
+    d_out: &[f32],
+    dx: &mut [f32],
+    g: &mut BaselineGradRefs,
+) -> Result<()> {
+    let (b, n, h, d_h) = (dims.b, dims.n, dims.heads, dims.d_h);
+    let d = dims.d();
+    let rows = b * n;
+    ensure!(d_out.len() == rows * d && dx.len() == rows * d, "tost backward shape");
+
+    let q = ops::dense(x, p.wq_w, p.wq_b, rows, d, d);
+    let k = ops::dense(x, p.wk_w, p.wk_b, rows, d, d);
+    let v = ops::dense(x, p.wv_w, p.wv_b, rows, d, d);
+    let mut r = vec![0.0f32; rows * d];
+    attend_tost(&mut r, &q, &k, &v, dims);
+
+    let mut dr = vec![0.0f32; rows * d];
+    gops::dense_grad_input_acc(d_out, p.wo_w, rows, d, d, &mut dr);
+    gops::dense_grad_params(&r, d_out, rows, d, d, g.wo_w, g.wo_b);
+    let dr_s: &[f32] = &dr;
+    let (q_s, k_s, v_s): (&[f32], &[f32], &[f32]) = (&q, &k, &v);
+
+    let mut dqkv = vec![0.0f32; rows * 3 * d];
+    parallel::par_chunks_mut_with(
+        dqkv.as_mut_slice(),
+        n * 3 * d,
+        || bwd_scratch(d_h),
+        |scr, bb, slab| {
+            for hh in 0..h {
+                // recompute the statistics of this (batch, head)
+                scr.fwd.s.iter_mut().for_each(|x| *x = 0.0);
+                scr.fwd.z.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..n {
+                    let row = (bb * n + j) * d + hh * d_h;
+                    softplus1_into(&mut scr.fwd.kp, &k_s[row..row + d_h]);
+                    let vrow = &v_s[row..row + d_h];
+                    simd::add8(&mut scr.fwd.z, &scr.fwd.kp);
+                    for (l, srow) in scr.fwd.s.chunks_mut(d_h).enumerate() {
+                        simd::axpy8(srow, scr.fwd.kp[l], vrow);
+                    }
+                }
+                scr.ds.iter_mut().for_each(|x| *x = 0.0);
+                scr.dz.iter_mut().for_each(|x| *x = 0.0);
+                // token loop: o_i = Sᵀq'_i / (q'_i·z + ε)
+                for i in 0..n {
+                    let row = (bb * n + i) * d + hh * d_h;
+                    let qrow = &q_s[row..row + d_h];
+                    softplus1_into(&mut scr.fwd.qp, qrow);
+                    scr.fwd.num.iter_mut().for_each(|x| *x = 0.0);
+                    for (l, srow) in scr.fwd.s.chunks(d_h).enumerate() {
+                        simd::axpy8(&mut scr.fwd.num, scr.fwd.qp[l], srow);
+                    }
+                    let den = ops::dot(&scr.fwd.qp, &scr.fwd.z) + EPS;
+                    let dro = &dr_s[row..row + d_h];
+                    for (dn, &go) in scr.dnum.iter_mut().zip(dro) {
+                        *dn = go / den;
+                    }
+                    let dden = -ops::dot(dro, &scr.fwd.num) / (den * den);
+                    for (l, srow) in scr.fwd.s.chunks(d_h).enumerate() {
+                        scr.dqp[l] = ops::dot(srow, &scr.dnum) + dden * scr.fwd.z[l];
+                    }
+                    for (l, dsrow) in scr.ds.chunks_mut(d_h).enumerate() {
+                        simd::axpy8(dsrow, scr.fwd.qp[l], &scr.dnum);
+                    }
+                    simd::axpy8(&mut scr.dz, dden, &scr.fwd.qp);
+                    // chain through q' = softplus1(q): dq = dq' ⊙ σ(q)
+                    let dq_row = &mut slab[i * 3 * d + hh * d_h..][..d_h];
+                    for ((dst, &dqp), &qv) in dq_row.iter_mut().zip(&scr.dqp).zip(qrow) {
+                        *dst += dqp * ops::sigmoid(qv);
+                    }
+                }
+                // key/value loop: scatter dS and dz back
+                for j in 0..n {
+                    let row = (bb * n + j) * d + hh * d_h;
+                    let krow = &k_s[row..row + d_h];
+                    softplus1_into(&mut scr.fwd.kp, krow);
+                    let vrow = &v_s[row..row + d_h];
+                    for (l, dsrow) in scr.ds.chunks(d_h).enumerate() {
+                        scr.dkp[l] = ops::dot(dsrow, vrow) + scr.dz[l];
+                    }
+                    let dv_row = &mut slab[j * 3 * d + 2 * d + hh * d_h..][..d_h];
+                    for (l, dsrow) in scr.ds.chunks(d_h).enumerate() {
+                        simd::axpy8(dv_row, scr.fwd.kp[l], dsrow);
+                    }
+                    let dk_row = &mut slab[j * 3 * d + d + hh * d_h..][..d_h];
+                    for ((dst, &dkp), &kv) in dk_row.iter_mut().zip(&scr.dkp).zip(krow) {
+                        *dst += dkp * ops::sigmoid(kv);
+                    }
+                }
+            }
+        },
+    );
+
+    super::clustered::qkv_slab_project_backward(p, x, &dqkv, rows, d, g, dx);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::ops::AttnFn;
+    use crate::util::prop::{assert_grads_close, GradCheckCfg};
+    use crate::util::rng::Rng;
+
+    fn dims(attn: AttnFn) -> Dims {
+        Dims {
+            b: 2,
+            n: 8,
+            heads: 2,
+            d_h: 4,
+            n_c: 2,
+            kappa: 4,
+            attn,
+            clustering: "topk".to_string(),
+            causal: false,
+            window: 4,
+        }
+    }
+
+    fn layer_cfg() -> GradCheckCfg {
+        GradCheckCfg { eps: 1e-2, rel_tol: 1e-2, abs_tol: 1e-3, max_per_block: 8 }
+    }
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    fn lens(d: usize) -> Vec<(String, usize)> {
+        vec![
+            ("wq.w".into(), d * d),
+            ("wq.b".into(), d),
+            ("wk.w".into(), d * d),
+            ("wk.b".into(), d),
+            ("wv.w".into(), d * d),
+            ("wv.b".into(), d),
+            ("wo.w".into(), d * d),
+            ("wo.b".into(), d),
+        ]
+    }
+
+    fn random_theta(rng: &mut Rng, lens: &[(String, usize)], d: usize) -> Vec<f32> {
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut theta = Vec::new();
+        for (name, len) in lens {
+            let s = if name.ends_with(".b") { 0.1 } else { scale };
+            theta.extend(randn(rng, *len, s));
+        }
+        theta
+    }
+
+    fn split<'a>(t: &'a [f32], lens: &[usize]) -> Vec<&'a [f32]> {
+        let mut out = Vec::with_capacity(lens.len());
+        let mut off = 0usize;
+        for &l in lens {
+            out.push(&t[off..off + l]);
+            off += l;
+        }
+        out
+    }
+
+    fn params_of<'a>(parts: &[&'a [f32]]) -> BaselineParams<'a> {
+        BaselineParams {
+            wq_w: parts[0],
+            wq_b: parts[1],
+            wk_w: parts[2],
+            wk_b: parts[3],
+            wv_w: parts[4],
+            wv_b: parts[5],
+            wo_w: parts[6],
+            wo_b: parts[7],
+        }
+    }
+
+    #[test]
+    fn forward_is_finite_and_shaped() {
+        let dm = dims(AttnFn::Softmax);
+        let d = dm.d();
+        let mut rng = Rng::new(41);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+        let parts = split(&theta, &lens_only);
+        let out = tost_layer(&params_of(&parts), &x, &dm).unwrap();
+        assert_eq!(out.len(), dm.b * dm.n * d);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn constant_values_pass_through() {
+        // with every v_j equal to a constant row c, the statistics
+        // collapse: Sᵀq' = (q'·z)·c, so o_i ≈ c for every token — the
+        // linear-attention identity that pins the normalization.
+        let dm = dims(AttnFn::Softmax);
+        let d = dm.d();
+        let mut rng = Rng::new(43);
+        let zeros = vec![0.0f32; d * d];
+        let mut eye = vec![0.0f32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1.0;
+        }
+        let zb = vec![0.0f32; d];
+        let cbias = randn(&mut rng, d, 1.0);
+        let wq = randn(&mut rng, d * d, 0.5);
+        let wk = randn(&mut rng, d * d, 0.5);
+        let p = BaselineParams {
+            wq_w: &wq,
+            wq_b: &zb,
+            wk_w: &wk,
+            wk_b: &zb,
+            wv_w: &zeros,
+            wv_b: &cbias, // every value row is exactly `cbias`
+            wo_w: &eye,
+            wo_b: &zb,
+        };
+        let x = randn(&mut rng, dm.b * dm.n * d, 1.0);
+        let out = tost_layer(&p, &x, &dm).unwrap();
+        for row in out.chunks(d) {
+            for (o, c) in row.iter().zip(&cbias) {
+                assert!((o - c).abs() < 1e-4, "expected {c}, got {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn parameter_gradients_match_central_difference() {
+        let dm = dims(AttnFn::Softmax);
+        let d = dm.d();
+        let rows = dm.b * dm.n;
+        let mut rng = Rng::new(311);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 0.5);
+        let analytic = {
+            let parts = split(&theta, &lens_only);
+            let p = params_of(&parts);
+            let mut gbufs: Vec<Vec<f32>> = lens_only.iter().map(|&l| vec![0.0; l]).collect();
+            let mut dx = vec![0.0f32; x.len()];
+            let [wq_w, wq_b, wk_w, wk_b, wv_w, wv_b, wo_w, wo_b] = &mut gbufs[..] else {
+                unreachable!()
+            };
+            let mut g = BaselineGradRefs {
+                wq_w: wq_w.as_mut_slice(),
+                wq_b: wq_b.as_mut_slice(),
+                wk_w: wk_w.as_mut_slice(),
+                wk_b: wk_b.as_mut_slice(),
+                wv_w: wv_w.as_mut_slice(),
+                wv_b: wv_b.as_mut_slice(),
+                wo_w: wo_w.as_mut_slice(),
+                wo_b: wo_b.as_mut_slice(),
+            };
+            tost_backward(&p, &x, &dm, &c, &mut dx, &mut g).unwrap();
+            gbufs.concat()
+        };
+        assert_grads_close(&layer_cfg(), &theta, &ls, &analytic, |t| {
+            let parts = split(t, &lens_only);
+            (ops::dot(&c, &tost_layer(&params_of(&parts), &x, &dm).unwrap()), 0)
+        });
+    }
+
+    #[test]
+    fn input_gradient_matches_central_difference() {
+        let dm = dims(AttnFn::Softmax);
+        let d = dm.d();
+        let rows = dm.b * dm.n;
+        let mut rng = Rng::new(313);
+        let ls = lens(d);
+        let lens_only: Vec<usize> = ls.iter().map(|(_, l)| *l).collect();
+        let theta = random_theta(&mut rng, &ls, d);
+        let x = randn(&mut rng, rows * d, 1.0);
+        let c = randn(&mut rng, rows * d, 0.5);
+        let dx = {
+            let parts = split(&theta, &lens_only);
+            let p = params_of(&parts);
+            let mut gbufs: Vec<Vec<f32>> = lens_only.iter().map(|&l| vec![0.0; l]).collect();
+            let mut dx = vec![0.0f32; x.len()];
+            let [wq_w, wq_b, wk_w, wk_b, wv_w, wv_b, wo_w, wo_b] = &mut gbufs[..] else {
+                unreachable!()
+            };
+            let mut g = BaselineGradRefs {
+                wq_w: wq_w.as_mut_slice(),
+                wq_b: wq_b.as_mut_slice(),
+                wk_w: wk_w.as_mut_slice(),
+                wk_b: wk_b.as_mut_slice(),
+                wv_w: wv_w.as_mut_slice(),
+                wv_b: wv_b.as_mut_slice(),
+                wo_w: wo_w.as_mut_slice(),
+                wo_b: wo_b.as_mut_slice(),
+            };
+            tost_backward(&p, &x, &dm, &c, &mut dx, &mut g).unwrap();
+            dx
+        };
+        let blocks = vec![("x".to_string(), rows * d)];
+        assert_grads_close(&layer_cfg(), &x, &blocks, &dx, |xt| {
+            let parts = split(&theta, &lens_only);
+            (ops::dot(&c, &tost_layer(&params_of(&parts), xt, &dm).unwrap()), 0)
+        });
+    }
+}

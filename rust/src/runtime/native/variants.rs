@@ -1,0 +1,456 @@
+//! The attention-variant registry: the ONE place that maps a variant
+//! name to its behavior.
+//!
+//! Every other layer resolves variants through this table — `model.rs`
+//! (forward), `grad/model.rs` (taped forward + backward), `spec.rs`
+//! (parameter schema), `artifacts.rs` (`ModelMeta` capability queries +
+//! artifact keys), the serve registry and the CLI (name validation, HELP
+//! text).  Adding a variant means writing its module (forward + tape +
+//! backward) and extending the `AttnVariant` enum + the `match` arms in
+//! this file; nothing else in the codebase enumerates variants by hand
+//! (tests iterate [`ALL`]).
+//!
+//! The seam's contract, per variant:
+//! * **params** — either the CAST schema (baseline 8 + `phi` + `s`) or
+//!   the baseline 8-tensor schema (`wq/wk/wv/wo` × `w/b`), selected by
+//!   [`AttnVariant::is_cast`]; `spec.rs` lays tensors out from it.
+//! * **forward** — `(out, a_g)` where `a_g` is the (B·N, Nc) cluster
+//!   affinity block (zeros unless [`AttnVariant::supports_ag`]).
+//! * **tape** — an [`AttnTape`] arm: whatever the backward needs beyond
+//!   recomputation, plus a fingerprint of every *discrete* choice
+//!   (cluster assignments, top-k selections, bucket orders) so gradient
+//!   checks can skip perturbations that cross a decision boundary.
+//! * **backward** — exact reverse-mode gradients with the discrete
+//!   choices held fixed (straight-through), accumulating into the
+//!   manifest-ordered gradient run returned by [`grad_param_names`].
+//! * **determinism** — results must be bit-identical across
+//!   `CAST_NUM_THREADS`: parallel tasks own disjoint output chunks and
+//!   every reduction runs in a fixed (ascending-index) order.
+
+use anyhow::{bail, Result};
+
+use super::clustered::{self, ClusteredTape};
+use super::grad::layer as glayer;
+use super::layer::{self as flayer, BaselineParams, CastParams, CastScratch, Dims};
+use super::model::Params;
+use super::tost;
+
+/// One attention mechanism behind the layer seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnVariant {
+    /// CAST with Top-K clustering (paper Algorithm 1).
+    CastTopk,
+    /// CAST with single-assignment clustering (paper §3.2; the causal
+    /// decoder extension rides on this mechanism).
+    CastSa,
+    /// Full softmax attention (the Transformer baseline).
+    Vanilla,
+    /// Non-overlapping local window attention.
+    Local,
+    /// LSH-bucketed chunked attention (Reformer-style baseline).
+    Lsh,
+    /// K-means clustered attention with exact top-κ correction
+    /// (Vyas et al., arXiv 2007.04825).
+    Clustered,
+    /// Token-Statistics-style linear attention (arXiv 2412.17810).
+    Tost,
+}
+
+/// Every registered variant, in canonical order (tests and `cast gen`
+/// enumerate this instead of hand-written lists).
+pub const ALL: [AttnVariant; 7] = [
+    AttnVariant::CastTopk,
+    AttnVariant::CastSa,
+    AttnVariant::Vanilla,
+    AttnVariant::Local,
+    AttnVariant::Lsh,
+    AttnVariant::Clustered,
+    AttnVariant::Tost,
+];
+
+/// The registered variant names, aligned with [`ALL`].
+pub const NAMES: [&str; 7] =
+    ["cast_topk", "cast_sa", "vanilla", "local", "lsh", "clustered", "tost"];
+
+/// The default variant for synthesized configs.
+pub const DEFAULT: AttnVariant = AttnVariant::CastTopk;
+
+impl AttnVariant {
+    pub const fn name(self) -> &'static str {
+        match self {
+            AttnVariant::CastTopk => "cast_topk",
+            AttnVariant::CastSa => "cast_sa",
+            AttnVariant::Vanilla => "vanilla",
+            AttnVariant::Local => "local",
+            AttnVariant::Lsh => "lsh",
+            AttnVariant::Clustered => "clustered",
+            AttnVariant::Tost => "tost",
+        }
+    }
+
+    /// Resolve a variant name; the error lists every registered name.
+    pub fn parse(name: &str) -> Result<AttnVariant> {
+        for v in ALL {
+            if v.name() == name {
+                return Ok(v);
+            }
+        }
+        bail!("unknown attention variant {name:?} (know {NAMES:?})")
+    }
+
+    /// Uses the CAST parameter schema (surrogate tokens `s` + the φ
+    /// scorer) instead of the baseline 8-tensor schema.
+    pub const fn is_cast(self) -> bool {
+        matches!(self, AttnVariant::CastTopk | AttnVariant::CastSa)
+    }
+
+    /// Emits real cluster-affinity matrices A_g, so `predict_ag` (and
+    /// the fig-4 cluster viz in `analysis/clusters.rs`) works.  Dual
+    /// (two-tower) models pool per tower and expose no single A_g.
+    pub const fn supports_ag(self, dual: bool) -> bool {
+        matches!(self, AttnVariant::CastTopk | AttnVariant::CastSa | AttnVariant::Clustered)
+            && !dual
+    }
+
+    /// The CAST clustering mechanism G this variant runs ("topk" | "sa"
+    /// | "causal"); non-CAST variants keep the "topk" default (unused).
+    pub const fn clustering(self, causal: bool) -> &'static str {
+        if causal {
+            "causal"
+        } else if matches!(self, AttnVariant::CastSa) {
+            "sa"
+        } else {
+            "topk"
+        }
+    }
+
+    /// Artifact keys carry the `c{n_c}_k{kappa}` suffix (cluster-shaped
+    /// geometry matters to this variant).
+    pub const fn key_has_clusters(self) -> bool {
+        matches!(
+            self,
+            AttnVariant::CastTopk
+                | AttnVariant::CastSa
+                | AttnVariant::Lsh
+                | AttnVariant::Clustered
+        )
+    }
+
+    /// Artifact keys carry the `w{window}` suffix.
+    pub const fn key_has_window(self) -> bool {
+        matches!(self, AttnVariant::Local)
+    }
+}
+
+/// True when `name` resolves in the registry.
+pub fn is_valid(name: &str) -> bool {
+    AttnVariant::parse(name).is_ok()
+}
+
+// ---------------------------------------------------------------------------
+// parameter binding
+// ---------------------------------------------------------------------------
+
+fn cast_params<'a>(p: &Params<'a>, prefix: &str) -> Result<CastParams<'a>> {
+    Ok(CastParams {
+        wq_w: p.f(&format!("{prefix}.wq.w"))?,
+        wq_b: p.f(&format!("{prefix}.wq.b"))?,
+        wk_w: p.f(&format!("{prefix}.wk.w"))?,
+        wk_b: p.f(&format!("{prefix}.wk.b"))?,
+        wv_w: p.f(&format!("{prefix}.wv.w"))?,
+        wv_b: p.f(&format!("{prefix}.wv.b"))?,
+        wo_w: p.f(&format!("{prefix}.wo.w"))?,
+        wo_b: p.f(&format!("{prefix}.wo.b"))?,
+        s: p.f(&format!("{prefix}.s"))?,
+        phi_w: p.f(&format!("{prefix}.phi.w"))?,
+        phi_b: p.f(&format!("{prefix}.phi.b"))?,
+    })
+}
+
+fn baseline_params<'a>(p: &Params<'a>, prefix: &str) -> Result<BaselineParams<'a>> {
+    Ok(BaselineParams {
+        wq_w: p.f(&format!("{prefix}.wq.w"))?,
+        wq_b: p.f(&format!("{prefix}.wq.b"))?,
+        wk_w: p.f(&format!("{prefix}.wk.w"))?,
+        wk_b: p.f(&format!("{prefix}.wk.b"))?,
+        wv_w: p.f(&format!("{prefix}.wv.w"))?,
+        wv_b: p.f(&format!("{prefix}.wv.b"))?,
+        wo_w: p.f(&format!("{prefix}.wo.w"))?,
+        wo_b: p.f(&format!("{prefix}.wo.b"))?,
+    })
+}
+
+fn zero_ag(dims: &Dims) -> Vec<f32> {
+    vec![0.0f32; dims.b * dims.n * dims.n_c]
+}
+
+// ---------------------------------------------------------------------------
+// forward dispatch
+// ---------------------------------------------------------------------------
+
+/// One attention layer forward: `(out, a_g)`.  `a_g` is all-zero for
+/// variants without [`AttnVariant::supports_ag`] (model.py returns zeros
+/// for baselines too).
+pub fn attn_forward(
+    v: AttnVariant,
+    p: &Params,
+    prefix: &str,
+    x: &[f32],
+    dims: &Dims,
+    ws: &mut CastScratch,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    match v {
+        AttnVariant::CastTopk | AttnVariant::CastSa => {
+            flayer::cast_layer(&cast_params(p, prefix)?, x, dims, ws)
+        }
+        AttnVariant::Vanilla => {
+            Ok((flayer::vanilla_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+        }
+        AttnVariant::Local => {
+            Ok((flayer::local_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+        }
+        AttnVariant::Lsh => {
+            Ok((flayer::lsh_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+        }
+        AttnVariant::Clustered => {
+            clustered::clustered_layer(&baseline_params(p, prefix)?, x, dims)
+        }
+        AttnVariant::Tost => {
+            Ok((tost::tost_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// taped forward + backward dispatch
+// ---------------------------------------------------------------------------
+
+/// Forward intermediates of one attention layer, for the reverse pass.
+pub enum AttnTape {
+    Cast(glayer::CastTape),
+    /// Only the layer input is stored; everything is recomputed
+    /// (vanilla / local / tost — fully smooth layers).
+    Input(Vec<f32>),
+    Lsh(glayer::LshTape),
+    Clustered(ClusteredTape),
+}
+
+/// Fingerprint of every discrete (non-differentiable) choice the layer
+/// made; gradient checks skip perturbations that change it.
+pub fn attn_fingerprint(tape: &AttnTape) -> u64 {
+    match tape {
+        AttnTape::Cast(t) => t.fingerprint(),
+        AttnTape::Input(_) => 0,
+        AttnTape::Lsh(t) => t.fingerprint(),
+        AttnTape::Clustered(t) => t.fingerprint(),
+    }
+}
+
+/// One attention layer forward with tape capture.  Arithmetic matches
+/// [`attn_forward`] bit-for-bit (the parity test in `grad/model.rs`
+/// enumerates the registry).
+pub fn attn_forward_tape(
+    v: AttnVariant,
+    p: &Params,
+    prefix: &str,
+    x: &[f32],
+    dims: &Dims,
+    cast_fwd: &mut CastScratch,
+) -> Result<(Vec<f32>, AttnTape)> {
+    match v {
+        AttnVariant::CastTopk | AttnVariant::CastSa => {
+            let cp = cast_params(p, prefix)?;
+            let (out, _ag) = flayer::cast_layer(&cp, x, dims, cast_fwd)?;
+            Ok((out, AttnTape::Cast(glayer::CastTape::capture(x, cast_fwd))))
+        }
+        AttnVariant::Vanilla => {
+            let bp = baseline_params(p, prefix)?;
+            Ok((flayer::vanilla_layer(&bp, x, dims)?, AttnTape::Input(x.to_vec())))
+        }
+        AttnVariant::Local => {
+            let bp = baseline_params(p, prefix)?;
+            Ok((flayer::local_layer(&bp, x, dims)?, AttnTape::Input(x.to_vec())))
+        }
+        AttnVariant::Lsh => {
+            let bp = baseline_params(p, prefix)?;
+            let (out, tape) = glayer::lsh_forward_tape(&bp, x, dims)?;
+            Ok((out, AttnTape::Lsh(tape)))
+        }
+        AttnVariant::Clustered => {
+            let bp = baseline_params(p, prefix)?;
+            let (out, tape) = clustered::clustered_forward_tape(&bp, x, dims)?;
+            Ok((out, AttnTape::Clustered(tape)))
+        }
+        AttnVariant::Tost => {
+            let bp = baseline_params(p, prefix)?;
+            Ok((tost::tost_layer(&bp, x, dims)?, AttnTape::Input(x.to_vec())))
+        }
+    }
+}
+
+/// The variant's gradient-buffer run: its attention parameter names in
+/// manifest (lexicographic) order, as consumed by `GradStore::consecutive`
+/// and destructured by [`attn_backward`].
+pub fn grad_param_names(v: AttnVariant, prefix: &str) -> Vec<String> {
+    if v.is_cast() {
+        vec![
+            format!("{prefix}.phi.b"),
+            format!("{prefix}.phi.w"),
+            format!("{prefix}.s"),
+            format!("{prefix}.wk.b"),
+            format!("{prefix}.wk.w"),
+            format!("{prefix}.wo.b"),
+            format!("{prefix}.wo.w"),
+            format!("{prefix}.wq.b"),
+            format!("{prefix}.wq.w"),
+            format!("{prefix}.wv.b"),
+            format!("{prefix}.wv.w"),
+        ]
+    } else {
+        vec![
+            format!("{prefix}.wk.b"),
+            format!("{prefix}.wk.w"),
+            format!("{prefix}.wo.b"),
+            format!("{prefix}.wo.w"),
+            format!("{prefix}.wq.b"),
+            format!("{prefix}.wq.w"),
+            format!("{prefix}.wv.b"),
+            format!("{prefix}.wv.w"),
+        ]
+    }
+}
+
+/// One attention layer backward.  `grad_bufs` is the consecutive
+/// gradient run for [`grad_param_names`]`(v, prefix)`, in that order;
+/// `dx_acc` accumulates the input gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_backward(
+    v: AttnVariant,
+    p: &Params,
+    prefix: &str,
+    tape: &AttnTape,
+    dims: &Dims,
+    d_out: &[f32],
+    dx_acc: &mut [f32],
+    grad_bufs: &mut [Vec<f32>],
+    cast_bwd: &mut glayer::CastBwdScratch,
+    base_bwd: &mut glayer::BaselineBwdScratch,
+) -> Result<()> {
+    if v.is_cast() {
+        let AttnTape::Cast(t) = tape else {
+            bail!("attention tape does not match variant {:?}", v.name())
+        };
+        let cp = cast_params(p, prefix)?;
+        let [phi_b, phi_w, s, wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = grad_bufs
+        else {
+            bail!("gradient run for {:?} must have 11 buffers", v.name())
+        };
+        let mut g = glayer::CastGradRefs {
+            wq_w: wq_w.as_mut_slice(),
+            wq_b: wq_b.as_mut_slice(),
+            wk_w: wk_w.as_mut_slice(),
+            wk_b: wk_b.as_mut_slice(),
+            wv_w: wv_w.as_mut_slice(),
+            wv_b: wv_b.as_mut_slice(),
+            wo_w: wo_w.as_mut_slice(),
+            wo_b: wo_b.as_mut_slice(),
+            s: s.as_mut_slice(),
+            phi_w: phi_w.as_mut_slice(),
+            phi_b: phi_b.as_mut_slice(),
+        };
+        return glayer::cast_layer_backward(&cp, t, dims, d_out, dx_acc, &mut g, cast_bwd);
+    }
+    let bp = baseline_params(p, prefix)?;
+    let [wk_b, wk_w, wo_b, wo_w, wq_b, wq_w, wv_b, wv_w] = grad_bufs else {
+        bail!("gradient run for {:?} must have 8 buffers", v.name())
+    };
+    let mut g = glayer::BaselineGradRefs {
+        wq_w: wq_w.as_mut_slice(),
+        wq_b: wq_b.as_mut_slice(),
+        wk_w: wk_w.as_mut_slice(),
+        wk_b: wk_b.as_mut_slice(),
+        wv_w: wv_w.as_mut_slice(),
+        wv_b: wv_b.as_mut_slice(),
+        wo_w: wo_w.as_mut_slice(),
+        wo_b: wo_b.as_mut_slice(),
+    };
+    match (v, tape) {
+        (AttnVariant::Vanilla, AttnTape::Input(x)) => {
+            glayer::window_backward(&bp, x, dims, None, d_out, dx_acc, &mut g, base_bwd)
+        }
+        (AttnVariant::Local, AttnTape::Input(x)) => {
+            let w = dims.window.min(dims.n).max(1);
+            glayer::window_backward(&bp, x, dims, Some(w), d_out, dx_acc, &mut g, base_bwd)
+        }
+        (AttnVariant::Lsh, AttnTape::Lsh(t)) => {
+            glayer::lsh_backward(&bp, t, dims, d_out, dx_acc, &mut g, base_bwd)
+        }
+        (AttnVariant::Clustered, AttnTape::Clustered(t)) => {
+            clustered::clustered_backward(&bp, t, dims, d_out, dx_acc, &mut g)
+        }
+        (AttnVariant::Tost, AttnTape::Input(x)) => {
+            tost::tost_backward(&bp, x, dims, d_out, dx_acc, &mut g)
+        }
+        _ => bail!("attention tape does not match variant {:?}", v.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_align_with_all_and_roundtrip() {
+        assert_eq!(ALL.len(), NAMES.len());
+        for (v, name) in ALL.iter().zip(NAMES.iter()) {
+            assert_eq!(v.name(), *name);
+            assert_eq!(AttnVariant::parse(name).unwrap(), *v);
+            assert!(is_valid(name));
+        }
+        // names are unique
+        let mut sorted: Vec<&str> = NAMES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), NAMES.len());
+        assert!(ALL.contains(&DEFAULT));
+    }
+
+    #[test]
+    fn unknown_variant_error_lists_registry() {
+        let err = AttnVariant::parse("performer").unwrap_err().to_string();
+        for name in NAMES {
+            assert!(err.contains(name), "{err:?} missing {name}");
+        }
+        assert!(!is_valid("performer"));
+    }
+
+    #[test]
+    fn capability_table() {
+        use AttnVariant::*;
+        for v in ALL {
+            assert_eq!(v.is_cast(), matches!(v, CastTopk | CastSa));
+            // ag needs a non-dual model and a clustering mechanism
+            assert_eq!(v.supports_ag(false), matches!(v, CastTopk | CastSa | Clustered));
+            assert!(!v.supports_ag(true));
+        }
+        assert_eq!(CastSa.clustering(false), "sa");
+        assert_eq!(CastSa.clustering(true), "causal");
+        assert_eq!(CastTopk.clustering(false), "topk");
+        assert_eq!(Clustered.clustering(false), "topk");
+        assert!(Clustered.key_has_clusters() && !Clustered.key_has_window());
+        assert!(Local.key_has_window() && !Local.key_has_clusters());
+        assert!(!Tost.key_has_clusters() && !Tost.key_has_window());
+    }
+
+    #[test]
+    fn grad_param_name_counts_match_schema() {
+        for v in ALL {
+            let names = grad_param_names(v, "blocks.0.attn");
+            assert_eq!(names.len(), if v.is_cast() { 11 } else { 8 });
+            // manifest order is lexicographic within the run
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted);
+        }
+    }
+}

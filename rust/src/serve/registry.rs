@@ -249,6 +249,20 @@ mod tests {
     }
 
     #[test]
+    fn every_registry_variant_loads_and_serves() {
+        // the serve path resolves variants through the same registry as
+        // train/predict — any variant the registry knows must load here
+        let reg = Registry::new(Engine::cpu().unwrap());
+        for variant in crate::runtime::native::VARIANTS {
+            let e = reg
+                .load(None, ModelSource::Synthetic { meta: tiny_meta(variant), seed: 0 })
+                .unwrap_or_else(|e| panic!("{variant}: {e:#}"));
+            assert_eq!(e.manifest.meta.variant, variant);
+        }
+        assert_eq!(reg.len(), crate::runtime::native::VARIANTS.len());
+    }
+
+    #[test]
     fn multi_model_resolution_requires_a_name() {
         let reg = registry_with_tiny();
         reg.load(None, ModelSource::Synthetic { meta: tiny_meta("vanilla"), seed: 0 }).unwrap();

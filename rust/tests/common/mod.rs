@@ -33,6 +33,8 @@ pub fn tiny_dir(variant: &str) -> Option<PathBuf> {
         "vanilla" => "text_vanilla_n64_b2",
         "local" => "text_local_n64_b2_w64",
         "lsh" => "text_lsh_n64_b2_c4_k16",
+        "clustered" => "text_clustered_n64_b2_c4_k16",
+        "tost" => "text_tost_n64_b2",
         "causal" => "text_cast_sa_n64_b2_c4_k16_causal",
         _ => return None,
     };
@@ -49,8 +51,10 @@ pub fn tiny_dir(variant: &str) -> Option<PathBuf> {
 // ---------------------------------------------------------------------------
 
 /// The attention variants the golden suite pins, in fingerprint order
-/// ("causal" is the `cast_sa` mechanism with the causal flag).
-pub const GOLDEN_VARIANTS: [&str; 6] = ["topk", "sa", "causal", "vanilla", "local", "lsh"];
+/// ("causal" is the `cast_sa` mechanism with the causal flag; the rest
+/// are registry variant names passed through by [`golden_meta`]).
+pub const GOLDEN_VARIANTS: [&str; 8] =
+    ["topk", "sa", "causal", "vanilla", "local", "lsh", "clustered", "tost"];
 
 /// Fixed-seed forward + backward fingerprint of one tiny config.
 pub struct Fingerprint {
@@ -62,7 +66,7 @@ pub struct Fingerprint {
 }
 
 /// One tiny config per variant × attention fn: seq 16, batch 2, depth 1,
-/// h 2, d 8, Nc 2, κ 4 — small enough that the whole 12-entry suite runs
+/// h 2, d 8, Nc 2, κ 4 — small enough that the whole 16-entry suite runs
 /// in well under a second, big enough that every kernel participates.
 pub fn golden_meta(variant: &str, attn_fn: &str) -> cast::runtime::ModelMeta {
     let (var, causal) = match variant {

@@ -209,7 +209,7 @@ fn predict_logits(variant: &str, threads: usize) -> Vec<f32> {
 
 #[test]
 fn predict_parity_serial_vs_threaded() {
-    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+    for variant in cast::runtime::native::VARIANTS {
         let serial = predict_logits(variant, 1);
         let threaded = predict_logits(variant, THREADED);
         assert!(
@@ -246,7 +246,7 @@ fn full_grads(variant: &str, threads: usize) -> (f32, Vec<Vec<f32>>) {
 /// tolerance is headroom, not an excuse (see DESIGN.md §Autograd).
 #[test]
 fn backward_parity_across_thread_counts() {
-    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+    for variant in cast::runtime::native::VARIANTS {
         let (loss1, g1) = full_grads(variant, 1);
         for threads in [2usize, 8] {
             let (loss_t, g_t) = full_grads(variant, threads);

@@ -204,7 +204,7 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn model_determinism_cross_matrix_simd_by_threads() {
-    for variant in ["cast_topk", "cast_sa", "vanilla", "local", "lsh"] {
+    for variant in cast::runtime::native::VARIANTS {
         let mut per_mode = Vec::new();
         for lanes in [true, false] {
             // within one SIMD mode, the thread count must not move a bit
