@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test test-simd test-serve gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve
+.PHONY: build test test-simd test-serve test-chaos gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve
 
 build:
 	cargo build --release
@@ -43,6 +43,12 @@ bench-simd: build
 # determinism, graceful drain).
 test-serve:
 	cargo test -q --test integration_serve
+
+# Chaos suite: server + trainer under seeded CAST_FAULTS plans (worker
+# panics, deadline shedding, breaker trips, NaN steps, torn checkpoint
+# writes; see DESIGN.md §Robustness).
+test-chaos:
+	cargo test -q --test integration_chaos
 
 # Run the inference server on a zero-artifact seq-1024 CAST config
 # (ctrl-c drains gracefully; see DESIGN.md §Serving for the endpoints).

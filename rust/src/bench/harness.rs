@@ -195,6 +195,11 @@ pub fn serve_row_json(report: &crate::serve::LoadReport) -> Json {
         ("conns", Json::num(report.conns as f64)),
         ("requests", Json::num((report.ok + report.errors) as f64)),
         ("errors", Json::num(report.errors as f64)),
+        ("retried", Json::num(report.retried as f64)),
+        ("err_connect", Json::num(report.err_connect as f64)),
+        ("err_stale", Json::num(report.err_stale as f64)),
+        ("err_status", Json::num(report.err_status as f64)),
+        ("err_transport", Json::num(report.err_transport as f64)),
         ("peak_rss_mb", Json::num(0.0)),
         ("threads", Json::num(Engine::threads() as f64)),
         ("simd", Json::Bool(crate::util::simd::enabled())),

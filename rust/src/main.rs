@@ -5,13 +5,14 @@
 //!           (write native-runnable manifests; size flags scale the tiny
 //!            config, e.g. --seq 2048 --nc 16 --kappa 128 for perf runs)
 //!   train   [--dir <artifact-dir>] [--steps N --lr X --warmup N --seed S
-//!           --eval-every N --ckpt PATH --history PATH --bench-json PATH
-//!           --assert-improves]
+//!           --eval-every N --ckpt PATH --ckpt-every N --history PATH
+//!           --bench-json PATH --assert-improves]
 //!           (without --dir: synthesize a native config from
 //!            --task/--variant/--seq/--nc/--kappa/--depth/--batch and
 //!            train end-to-end with zero artifacts; --ckpt resumes from
-//!            the checkpoint when the file exists; --bench-json appends
-//!            a train_steps_per_sec row, e.g. to BENCH_native.json)
+//!            the checkpoint — or its digest-valid .prev rotation — when
+//!            one exists, --ckpt-every saves mid-run every N steps;
+//!            --bench-json appends a train_steps_per_sec row)
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
 //!   bench   --table {1,5} [--task text --steps N --isolate
 //!           --seq 1024,2048 --json out.json --append-json BENCH_native.json]
@@ -32,13 +33,15 @@
 //!   memmodel [--seq N --kappa K]                      (§3.4 predictions)
 //!   serve   [--addr H:P --dir <d1,d2,..> --ckpt PATH --max-batch N
 //!           --max-wait-us U --queue N --conn-workers N --infer-workers N
-//!           --seed S | size flags as in train]
+//!           --deadline-ms MS --seed S | size flags as in train]
 //!           (HTTP inference server with dynamic micro-batching; without
 //!            --dir it serves a synthetic config built from
 //!            --task/--variant/--seq/--nc/--kappa/--depth — zero
 //!            artifacts.  Endpoints: POST /predict, GET /models,
-//!            POST /models/reload, GET /healthz, GET /metrics,
-//!            POST /admin/shutdown.  SIGINT/SIGTERM drain gracefully.)
+//!            POST /models/reload, GET /healthz, GET /readyz,
+//!            GET /metrics, POST /admin/shutdown.  SIGINT/SIGTERM drain
+//!            gracefully; clients may bound queue time with an
+//!            X-Deadline-Ms header, capped by --deadline-ms.)
 //!   loadgen [--addr H:P --conns N --requests N --model KEY --seq N
 //!           --seed S --bench-json PATH --allow-errors]
 //!           (closed-loop client driving a running server; --bench-json
@@ -196,12 +199,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         queue_depth: args.usize("queue", 4),
         log_every: args.usize("log-every", 10),
         checkpoint: args.opt_str("ckpt").map(PathBuf::from),
+        ckpt_every: args.usize("ckpt-every", 0),
     };
     let engine = Engine::auto()?;
     let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
     if let Some(ckpt) = args.opt_str("ckpt") {
         let path = PathBuf::from(&ckpt);
-        if path.exists() {
+        if path.exists() || checkpoint::prev_path(&path).exists() {
             trainer.load_checkpoint(&path)?;
             println!("resumed from {ckpt} at step {}", trainer.state.step);
         }
@@ -519,12 +523,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         conn_workers: args.usize("conn-workers", 32),
         infer_workers: args.usize("infer-workers", 1),
         max_body: args.usize("max-body", 8 << 20),
+        deadline_ms: args.u64("deadline-ms", 60_000),
     };
     install_signal_handlers();
     let server = Server::bind(cfg, registry)?;
     println!(
         "serving on http://{} — endpoints: POST /predict, GET /models, POST /models/reload, \
-         GET /healthz, GET /metrics, POST /admin/shutdown (ctrl-c drains gracefully)",
+         GET /healthz, GET /readyz, GET /metrics, POST /admin/shutdown (ctrl-c drains gracefully)",
         server.local_addr()
     );
     server.run()
@@ -557,6 +562,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.server_max_batch,
         report.batch_rows_max
     );
+    if report.errors > 0 || report.retried > 0 {
+        println!(
+            "loadgen errors: {} connect, {} stale-conn, {} non-200, {} transport \
+             ({} stale retries succeeded transparently)",
+            report.err_connect,
+            report.err_stale,
+            report.err_status,
+            report.err_transport,
+            report.retried
+        );
+    }
     if let Some(path) = args.opt_str("bench-json") {
         cast::bench::append_bench_row(&PathBuf::from(&path), cast::bench::serve_row_json(&report))?;
         println!("serve bench row -> {path}");

@@ -1,30 +1,98 @@
-//! Checkpoint format: `CAST0001` magic, a JSON header (param specs + step),
-//! then raw little-endian f32/s32 tensor payloads in manifest order.
+//! Checkpoint format: `CAST0002` magic, a JSON header (param specs + step),
+//! raw little-endian f32/s32 tensor payloads in manifest order, and an
+//! FNV-1a-64 digest trailer over everything before it.
 //!
 //! Layout:
-//!   [8]  magic  b"CAST0001"
+//!   [8]  magic  b"CAST0002"
 //!   [8]  header length (LE u64)
 //!   [..] header JSON
 //!   [..] payloads, each tensor's bytes back-to-back (sizes from header)
+//!   [8]  FNV-1a-64 digest of all preceding bytes (LE u64)
+//!
+//! Writes are atomic (DESIGN.md §Robustness): the full image is
+//! serialized in memory, written to `<path>.tmp`, fsynced, the previous
+//! good checkpoint is rotated to `<path>.prev`, and the tmp file is
+//! renamed into place — a crash at any point leaves at least one
+//! digest-valid file for `load_auto` to find.  Transient IO goes
+//! through `util::retry` deterministic exponential backoff, and the
+//! `ckpt.*` fault points (`util::fault`) make every failure path
+//! testable.  Legacy `CAST0001` files (no trailer) still load.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{DType, HostTensor};
 use crate::util::json::Json;
+use crate::util::{fault, retry};
 
 use super::params::ModelState;
 
-const MAGIC: &[u8; 8] = b"CAST0001";
+const MAGIC: &[u8; 8] = b"CAST0002";
+const LEGACY_MAGIC: &[u8; 8] = b"CAST0001";
 /// Sanity caps applied while loading: a corrupt or truncated file must
 /// surface as a proper error (the serve registry rejects the upload),
 /// never as a panic or an absurd allocation.
 const MAX_HEADER_BYTES: usize = 64 << 20;
 const MAX_TENSOR_ELEMS: usize = 1 << 31;
 
+/// The rotation slot a successful `save` moves the previous good
+/// checkpoint into, and the fallback `load_auto` scans.
+pub fn prev_path(path: &Path) -> PathBuf {
+    sibling(path, ".prev")
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    sibling(path, ".tmp")
+}
+
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(suffix);
+    path.with_file_name(name)
+}
+
 pub fn save(state: &ModelState, names: &[String], path: &Path) -> Result<()> {
+    let bytes = encode(state, names)?;
+    let tmp = tmp_path(path);
+    retry::with_backoff("checkpoint write", retry::Backoff::io(), || {
+        fault::check("ckpt.save.io")?;
+        write_durable(&tmp, &bytes)
+    })
+    .with_context(|| format!("writing {tmp:?}"))?;
+    // rotate the previous good checkpoint to <path>.prev *before* the
+    // final rename: a crash between the two renames leaves no <path>,
+    // but .prev is still digest-valid and load_auto falls back to it
+    if path.exists() {
+        let _ = std::fs::rename(path, prev_path(path));
+    }
+    retry::with_backoff("checkpoint rename", retry::Backoff::io(), || {
+        fault::check("ckpt.save.rename")?;
+        std::fs::rename(&tmp, path)
+    })
+    .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Write the full byte image to `path` and fsync it, honoring the
+/// `ckpt.save.torn` fault point (a torn write persists a prefix of the
+/// bytes, then fails the way a crashed writer would).
+fn write_durable(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    if let Some(n) = fault::torn_len("ckpt.save.torn", bytes.len()) {
+        f.write_all(&bytes[..n])?;
+        f.sync_all()?;
+        return Err(io::Error::other(format!("injected torn write ({n}/{} bytes)", bytes.len())));
+    }
+    f.write_all(bytes)?;
+    // fsync before rename: rename-atomicity only helps if the bytes
+    // behind the new name are already durable
+    f.sync_all()?;
+    Ok(())
+}
+
+fn encode(state: &ModelState, names: &[String]) -> Result<Vec<u8>> {
     if names.len() != state.params.len() {
         bail!("names/params length mismatch");
     }
@@ -42,33 +110,85 @@ pub fn save(state: &ModelState, names: &[String], path: &Path) -> Result<()> {
     ])
     .to_string();
 
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
+    let mut bytes = Vec::with_capacity(24 + header.len());
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
     // params, then adam moments (so training can resume exactly)
     for group in [&state.params, &state.m, &state.v] {
         for t in group.iter() {
-            f.write_all(tensor_bytes(t))?;
+            bytes.extend_from_slice(tensor_bytes(t));
         }
     }
-    Ok(())
+    let digest = fnv1a64(&bytes);
+    bytes.extend_from_slice(&digest.to_le_bytes());
+    Ok(bytes)
 }
 
 pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let bytes = retry::with_backoff("checkpoint read", retry::Backoff::io(), || {
+        fault::check("ckpt.load.io")?;
+        std::fs::read(path)
+    })
+    .with_context(|| format!("opening {path:?}"))?;
+    decode(&bytes, path)
+}
+
+/// Scan backward through the checkpoint rotation (`path`, then
+/// `<path>.prev`) and load the first digest-valid file.  Returns the
+/// path actually loaded so callers can log which generation resumed.
+pub fn load_auto(path: &Path) -> Result<(ModelState, Vec<String>, PathBuf)> {
+    let candidates = [path.to_path_buf(), prev_path(path)];
+    let mut last_err = None;
+    for cand in &candidates {
+        if !cand.exists() {
+            continue;
+        }
+        match load(cand) {
+            Ok((state, names)) => {
+                if cand != path {
+                    crate::info!("checkpoint: {path:?} invalid, falling back to {cand:?}");
+                }
+                return Ok((state, names, cand.clone()));
+            }
+            Err(e) => {
+                crate::info!("checkpoint: skipping {cand:?}: {e:#}");
+                last_err = Some(e);
+            }
+        }
+    }
+    match last_err {
+        Some(e) => Err(e.context(format!("no digest-valid checkpoint at {path:?}"))),
+        None => bail!("no checkpoint found at {path:?}"),
+    }
+}
+
+fn decode(bytes: &[u8], path: &Path) -> Result<(ModelState, Vec<String>)> {
+    if bytes.len() < 16 {
+        bail!("{path:?} is not a CAST checkpoint (too short)");
+    }
+    let legacy = &bytes[..8] == LEGACY_MAGIC.as_slice();
+    if !legacy && &bytes[..8] != MAGIC.as_slice() {
         bail!("{path:?} is not a CAST checkpoint (bad magic)");
     }
-    let mut len_bytes = [0u8; 8];
-    f.read_exact(&mut len_bytes)?;
-    let header_len = u64::from_le_bytes(len_bytes) as usize;
+    let body = if legacy {
+        bytes
+    } else {
+        if bytes.len() < 24 {
+            bail!("{path:?} is corrupt or truncated: no room for the digest trailer");
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            bail!(
+                "{path:?} is corrupt: digest mismatch (stored {stored:016x}, computed {computed:016x})"
+            );
+        }
+        body
+    };
+
+    let header_len = u64::from_le_bytes(body[8..16].try_into().unwrap()) as usize;
     // cap before allocating: a corrupt length field must not trigger a
     // multi-GB allocation
     if header_len > MAX_HEADER_BYTES {
@@ -76,9 +196,10 @@ pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
             "{path:?} is corrupt: header length {header_len} exceeds the {MAX_HEADER_BYTES}-byte cap"
         );
     }
-    let mut header = vec![0u8; header_len];
-    f.read_exact(&mut header)?;
-    let header = Json::parse(std::str::from_utf8(&header)?)?;
+    if body.len() < 16 + header_len {
+        bail!("{path:?} is corrupt or truncated: header overruns the file");
+    }
+    let header = Json::parse(std::str::from_utf8(&body[16..16 + header_len])?)?;
 
     let step = header.get("step").and_then(Json::as_f64).context("header step")? as f32;
     let specs = header.get("params").and_then(Json::as_arr).context("header params")?;
@@ -103,50 +224,52 @@ pub fn load(path: &Path) -> Result<(ModelState, Vec<String>)> {
         shapes.push((shape, dtype));
     }
 
-    // before allocating any payload buffer, check the header's declared
-    // sizes against the actual file length — a corrupt header must not
-    // trigger a multi-GB zero-fill, and truncation surfaces up front
+    // before touching any payload, check the header's declared sizes
+    // against the actual byte count — a corrupt header must not trigger
+    // a multi-GB zero-fill, and truncation surfaces up front
+    let payload = &body[16 + header_len..];
     let declared: u64 = shapes
         .iter()
         .map(|(shape, _)| 4 * shape.iter().map(|&d| d as u64).product::<u64>())
         .sum::<u64>()
         * 3; // params + m + v
-    let expected = 8 + 8 + header_len as u64 + declared;
-    let file_len = std::fs::metadata(path)?.len();
-    if file_len < expected {
+    if (payload.len() as u64) < declared {
         bail!(
-            "{path:?} is corrupt or truncated: {file_len} bytes on disk, header declares {expected}"
+            "{path:?} is corrupt or truncated: {} payload bytes on disk, header declares {declared}",
+            payload.len()
         );
     }
 
-    let mut read_group = |f: &mut dyn Read| -> Result<Vec<HostTensor>> {
-        shapes
-            .iter()
-            .map(|(shape, dtype)| {
-                let n: usize = shape.iter().product();
-                let mut buf = vec![0u8; n * 4];
-                f.read_exact(&mut buf)?;
-                Ok(match dtype {
-                    DType::F32 => HostTensor::f32(shape.clone(), le_f32(&buf)),
-                    DType::S32 => HostTensor::s32(shape.clone(), le_s32(&buf)),
-                    DType::U32 => {
-                        let v = le_s32(&buf).into_iter().map(|x| x as u32).collect();
-                        HostTensor::u32(shape.clone(), v)
-                    }
-                })
-            })
-            .collect()
-    };
+    let mut off = 0usize;
+    let params = read_group(payload, &mut off, &shapes)?;
+    let m = read_group(payload, &mut off, &shapes)?;
+    let v = read_group(payload, &mut off, &shapes)?;
+    Ok((ModelState { params, m, v, step }, names))
+}
 
-    let params = read_group(&mut f)?;
-    let m = read_group(&mut f)?;
-    let v = read_group(&mut f)?;
-    let mut state = ModelState { params, m, v, step };
-    // tolerate truncated moments (older checkpoints): re-zero
-    if state.m.len() != state.params.len() {
-        state = ModelState::from_params(state.params);
-    }
-    Ok((state, names))
+fn read_group(
+    payload: &[u8],
+    off: &mut usize,
+    shapes: &[(Vec<usize>, DType)],
+) -> Result<Vec<HostTensor>> {
+    shapes
+        .iter()
+        .map(|(shape, dtype)| {
+            let n: usize = shape.iter().product();
+            let end = *off + n * 4;
+            anyhow::ensure!(end <= payload.len(), "payload overruns the file");
+            let buf = &payload[*off..end];
+            *off = end;
+            Ok(match dtype {
+                DType::F32 => HostTensor::f32(shape.clone(), le_f32(buf)),
+                DType::S32 => HostTensor::s32(shape.clone(), le_s32(buf)),
+                DType::U32 => {
+                    let v = le_s32(buf).into_iter().map(|x| x as u32).collect();
+                    HostTensor::u32(shape.clone(), v)
+                }
+            })
+        })
+        .collect()
 }
 
 /// Parse one shape dimension from the checkpoint header, rejecting the
@@ -158,6 +281,19 @@ fn parse_dim(d: &Json) -> Result<usize> {
         bail!("shape dim {n} is not a valid tensor dimension");
     }
     Ok(n as usize)
+}
+
+/// FNV-1a 64 over the byte image — a dependency-free digest for the
+/// trailer.  Not cryptographic: it guards against truncation, bit rot,
+/// and torn writes, not adversaries (content-addressed manifests with a
+/// real hash are a ROADMAP item).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 fn tensor_bytes(t: &HostTensor) -> &[u8] {
@@ -187,19 +323,28 @@ fn le_s32(bytes: &[u8]) -> Vec<i32> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn test_state(step: f32, seed: f32) -> (ModelState, Vec<String>) {
         let params = vec![
-            HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
-            HostTensor::f32(vec![3], vec![9.0, 8.0, 7.0]),
+            HostTensor::f32(vec![2, 2], vec![seed, -2.0 * seed, 3.5, 0.0]),
+            HostTensor::f32(vec![3], vec![9.0 + seed, 8.0, 7.0]),
         ];
         let mut state = ModelState::from_params(params);
-        state.step = 42.0;
-        state.m[0] = HostTensor::f32(vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]);
-        let names = vec!["w".to_string(), "b".to_string()];
+        state.step = step;
+        state.m[0] = HostTensor::f32(vec![2, 2], vec![0.1 * seed, 0.2, 0.3, 0.4]);
+        (state, vec!["w".to_string(), "b".to_string()])
+    }
 
-        let dir = std::env::temp_dir().join("cast_ckpt_test");
+    fn fresh_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (state, names) = test_state(42.0, 1.0);
+        let dir = fresh_dir("cast_ckpt_test");
         let path = dir.join("model.ckpt");
         save(&state, &names, &path).unwrap();
 
@@ -211,20 +356,129 @@ mod tests {
         assert_eq!(loaded.v[1].as_f32().unwrap(), &[0.0, 0.0, 0.0]);
     }
 
-    /// Assemble a file with valid magic + the given header JSON text.
+    #[test]
+    fn save_leaves_no_tmp_file_behind() {
+        let (state, names) = test_state(1.0, 1.0);
+        let dir = fresh_dir("cast_ckpt_atomic_test");
+        let path = dir.join("model.ckpt");
+        save(&state, &names, &path).unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path(&path).exists(), "tmp file must be renamed away");
+    }
+
+    #[test]
+    fn digest_rejects_bit_flip() {
+        let (state, names) = test_state(7.0, 2.0);
+        let dir = fresh_dir("cast_ckpt_bitflip_test");
+        let path = dir.join("model.ckpt");
+        save(&state, &names, &path).unwrap();
+
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("digest"), "{err:#}");
+    }
+
+    #[test]
+    fn digest_rejects_truncation() {
+        let (state, names) = test_state(7.0, 3.0);
+        let dir = fresh_dir("cast_ckpt_digtrunc_test");
+        let path = dir.join("model.ckpt");
+        save(&state, &names, &path).unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load(&path).is_err(), "truncated file must be rejected");
+    }
+
+    #[test]
+    fn rotation_keeps_prev_and_load_auto_falls_back_bit_identically() {
+        let (state1, names) = test_state(1.0, 1.0);
+        let (state2, _) = test_state(2.0, 5.0);
+        let dir = fresh_dir("cast_ckpt_auto_test");
+        let path = dir.join("model.ckpt");
+
+        save(&state1, &names, &path).unwrap();
+        save(&state2, &names, &path).unwrap();
+        assert!(prev_path(&path).exists(), "second save must rotate the first to .prev");
+
+        // intact primary wins
+        let (got, _, from) = load_auto(&path).unwrap();
+        assert_eq!(from, path);
+        assert_eq!(got.step, 2.0);
+
+        // corrupt the primary: load_auto must fall back to .prev and
+        // restore state1 bit-identically, moments included
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (got, gnames, from) = load_auto(&path).unwrap();
+        assert_eq!(from, prev_path(&path));
+        assert_eq!(gnames, names);
+        assert_eq!(got.step, 1.0);
+        for (a, b) in got.params.iter().zip(&state1.params) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        for (a, b) in got.m.iter().zip(&state1.m) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        for (a, b) in got.v.iter().zip(&state1.v) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn load_auto_errors_when_everything_is_corrupt() {
+        let (state, names) = test_state(1.0, 1.0);
+        let dir = fresh_dir("cast_ckpt_allbad_test");
+        let path = dir.join("model.ckpt");
+        save(&state, &names, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..20]).unwrap();
+        let err = load_auto(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("no digest-valid checkpoint"), "{err:#}");
+    }
+
+    #[test]
+    fn legacy_cast0001_still_loads() {
+        // one [2] f32 param: header + 3 groups of 8 payload bytes, no trailer
+        let header = r#"{"step":3,"params":[{"name":"w","shape":[2],"dtype":"f32"}]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(LEGACY_MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for x in [1.5f32, -2.5, 0.0, 0.0, 0.0, 0.0] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let dir = fresh_dir("cast_ckpt_legacy_test");
+        let path = dir.join("legacy.ckpt");
+        std::fs::write(&path, bytes).unwrap();
+        let (state, names) = load(&path).unwrap();
+        assert_eq!(names, vec!["w".to_string()]);
+        assert_eq!(state.step, 3.0);
+        assert_eq!(state.params[0].as_f32().unwrap(), &[1.5, -2.5]);
+    }
+
+    /// Assemble a file with valid magic + digest around the given header
+    /// JSON text, so the inner header validations are what's exercised.
     fn write_with_header(path: &std::path::Path, header: &str, payload: &[u8]) {
         let mut bytes = Vec::new();
         bytes.extend_from_slice(MAGIC);
         bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
         bytes.extend_from_slice(header.as_bytes());
         bytes.extend_from_slice(payload);
+        let digest = fnv1a64(&bytes);
+        bytes.extend_from_slice(&digest.to_le_bytes());
         std::fs::write(path, bytes).unwrap();
     }
 
     #[test]
     fn corrupt_shapes_error_instead_of_panicking() {
-        let dir = std::env::temp_dir().join("cast_ckpt_corrupt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("cast_ckpt_corrupt_test");
         let path = dir.join("bad_shape.ckpt");
         for bad in [
             r#"{"step":0,"params":[{"name":"w","shape":["x",2],"dtype":"f32"}]}"#,
@@ -240,11 +494,10 @@ mod tests {
 
     #[test]
     fn huge_declared_shape_errors_before_allocating() {
-        let dir = std::env::temp_dir().join("cast_ckpt_huge_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("cast_ckpt_huge_test");
         let path = dir.join("huge.ckpt");
         // a ~4 GiB declared tensor in a tiny file must fail the
-        // file-length check up front, not zero-fill gigabytes first
+        // length check up front, not zero-fill gigabytes first
         write_with_header(
             &path,
             r#"{"step":0,"params":[{"name":"w","shape":[1073741824],"dtype":"f32"}]}"#,
@@ -256,8 +509,7 @@ mod tests {
 
     #[test]
     fn truncated_payload_is_an_error() {
-        let dir = std::env::temp_dir().join("cast_ckpt_trunc_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("cast_ckpt_trunc_test");
         let path = dir.join("trunc.ckpt");
         // header declares 3 f32s; payload carries only one
         write_with_header(
@@ -270,12 +522,13 @@ mod tests {
 
     #[test]
     fn absurd_header_length_is_an_error() {
-        let dir = std::env::temp_dir().join("cast_ckpt_hdrlen_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("cast_ckpt_hdrlen_test");
         let path = dir.join("hdrlen.ckpt");
         let mut bytes = Vec::new();
         bytes.extend_from_slice(MAGIC);
         bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let digest = fnv1a64(&bytes);
+        bytes.extend_from_slice(&digest.to_le_bytes());
         std::fs::write(&path, bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("header length"), "{err:#}");
@@ -283,8 +536,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("cast_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("cast_ckpt_test2");
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
         assert!(load(&path).is_err());

@@ -39,11 +39,35 @@ pub struct PredictJob {
     pub rows: usize,
     /// Where the connection worker is blocked waiting.
     pub reply: SyncSender<Reply>,
+    /// The request's deadline budget (`X-Deadline-Ms` capped by
+    /// `--deadline-ms`); a job still queued past this is shed with 503
+    /// instead of computed.
+    pub deadline: Option<Instant>,
 }
 
 /// What each job gets back.
-pub type Reply = Result<ReplyOk, String>;
+pub type Reply = Result<ReplyOk, ReplyErr>;
 
+/// Why a job failed — the variant carries the HTTP class the server
+/// maps it to.
+#[derive(Clone, Debug)]
+pub enum ReplyErr {
+    /// The engine failed (or panicked) executing the batch — 500.
+    Engine(String),
+    /// Refused before compute (deadline exhausted while queued) — 503
+    /// with `Retry-After`.
+    Shed(String),
+}
+
+impl ReplyErr {
+    pub fn message(&self) -> &str {
+        match self {
+            ReplyErr::Engine(m) | ReplyErr::Shed(m) => m,
+        }
+    }
+}
+
+#[derive(Debug)]
 pub struct ReplyOk {
     /// This job's logits, row-major `(rows, n_classes)`.
     pub logits: Vec<f32>,
@@ -90,9 +114,10 @@ impl BatchFormer {
         let mut i = 0;
         while i < self.held.len() && rows < self.max_batch {
             if same_bucket(&self.held[i], &entry) && rows + self.held[i].rows <= self.max_batch {
-                let j = self.held.remove(i).unwrap();
-                rows += j.rows;
-                batch.push(j);
+                if let Some(j) = self.held.remove(i) {
+                    rows += j.rows;
+                    batch.push(j);
+                }
             } else {
                 i += 1;
             }
@@ -119,33 +144,78 @@ impl BatchFormer {
     }
 }
 
-/// Execute one formed batch and demultiplex the logits.  Never panics:
-/// engine errors are fanned out to every waiting job as `Err`.
-pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Metrics) {
-    let entry = batch[0].entry.clone();
+/// Execute one formed batch and demultiplex the logits.  Engine errors
+/// fan out to every waiting job as `Err`, a panicking forward is caught
+/// here (every job gets an `Engine` error, the worker thread survives),
+/// and jobs whose deadline expired while queued are shed with 503
+/// before any compute.  Returns `false` iff the batch panicked — the
+/// caller must then discard this model's scratch, which may be torn.
+pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Metrics) -> bool {
+    // deadline shedding: a budget exhausted in the queue means the
+    // client has given up (or is about to) — answer 503 now rather
+    // than spend a forward on it
+    let now = Instant::now();
+    let (batch, expired): (Vec<_>, Vec<_>) =
+        batch.into_iter().partition(|j| j.deadline.map_or(true, |d| now < d));
+    for job in &expired {
+        metrics.inc_shed();
+        metrics.inc_deadline_exceeded();
+        let _ = job
+            .reply
+            .try_send(Err(ReplyErr::Shed("deadline exceeded while queued".to_string())));
+    }
+    let Some(entry) = batch.first().map(|j| j.entry.clone()) else {
+        return true;
+    };
+    metrics.observe_batch(batch.iter().map(|j| j.rows).sum());
+
+    // panic isolation: AssertUnwindSafe is sound here because on unwind
+    // we answer every job from the still-owned `batch` and the caller
+    // discards the (possibly torn) scratch
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        crate::util::fault::check("serve.infer.batch").map_err(|e| e.to_string())?;
+        exec_batch(&entry, &batch, scratch)
+    }));
+    match outcome {
+        Ok(Ok(())) => {
+            entry.breaker.record_success();
+            true
+        }
+        Ok(Err(msg)) => {
+            entry.breaker.record_failure();
+            fail_all(&batch, msg);
+            true
+        }
+        Err(_) => {
+            metrics.inc_worker_panic();
+            entry.breaker.record_failure();
+            crate::info!(
+                "serve: inference worker panicked mid-batch ({} jobs get 500); worker continues",
+                batch.len()
+            );
+            fail_all(&batch, "inference worker panicked while executing the batch".to_string());
+            false
+        }
+    }
+}
+
+/// The fallible compute-and-demux section of [`run_batch`].  On success
+/// every job has received its reply; on `Err` nothing was sent and the
+/// caller fans the message out.
+fn exec_batch(entry: &Arc<ModelEntry>, batch: &[PredictJob], scratch: &mut dyn Scratch) -> Result<(), String> {
     let meta = &entry.manifest.meta;
     let n = meta.seq_len;
     let total: usize = batch.iter().map(|j| j.rows).sum();
-    metrics.observe_batch(total);
 
     // single-job batches (the --max-batch 1 baseline) reuse the job's
     // own tensor; multi-job batches concatenate the padded rows
     let merged: Option<HostTensor> = if batch.len() > 1 {
         let mut data = vec![0i32; total * n];
         let mut off = 0;
-        let mut ok = true;
-        for job in &batch {
-            match job.tokens.as_s32() {
-                Ok(src) => {
-                    data[off..off + src.len()].copy_from_slice(src);
-                    off += src.len();
-                }
-                Err(_) => ok = false,
-            }
-        }
-        if !ok {
-            fail_all(&batch, "internal: job tokens were not s32".to_string());
-            return;
+        for job in batch {
+            let src = job.tokens.as_s32().map_err(|_| "internal: job tokens were not s32")?;
+            data[off..off + src.len()].copy_from_slice(src);
+            off += src.len();
         }
         Some(HostTensor::s32(vec![total, n], data))
     } else {
@@ -156,22 +226,24 @@ pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Me
     let inputs = entry.predict_inputs(tokens);
     let logits = match entry.exe.run_refs_scratch(&inputs, scratch) {
         Ok(mut out) if !out.is_empty() => out.swap_remove(0),
-        Ok(_) => return fail_all(&batch, "predict returned no outputs".to_string()),
-        Err(e) => return fail_all(&batch, format!("predict failed: {e:#}")),
+        Ok(_) => return Err("predict returned no outputs".to_string()),
+        Err(e) => return Err(format!("predict failed: {e:#}")),
     };
     let nc = meta.n_classes;
     let values = match logits.as_f32() {
         Ok(v) if v.len() == total * nc => v,
         Ok(v) => {
-            return fail_all(
-                &batch,
-                format!("predict returned {} logits for {} rows x {} classes", v.len(), total, nc),
-            )
+            return Err(format!(
+                "predict returned {} logits for {} rows x {} classes",
+                v.len(),
+                total,
+                nc
+            ))
         }
-        Err(e) => return fail_all(&batch, format!("predict output: {e:#}")),
+        Err(e) => return Err(format!("predict output: {e:#}")),
     };
     let mut off = 0;
-    for job in &batch {
+    for job in batch {
         let span = job.rows * nc;
         let reply = ReplyOk {
             logits: values[off..off + span].to_vec(),
@@ -181,14 +253,18 @@ pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Me
             version: entry.version,
         };
         off += span;
-        // a vanished client (dropped receiver) is not an error
-        let _ = job.reply.send(Ok(reply));
+        // a vanished client (dropped receiver) is not an error, and
+        // try_send never blocks on the 1-slot reply channel
+        let _ = job.reply.try_send(Ok(reply));
     }
+    Ok(())
 }
 
 fn fail_all(batch: &[PredictJob], msg: String) {
     for job in batch {
-        let _ = job.reply.send(Err(msg.clone()));
+        // try_send: never block on a reply slot that may already hold a
+        // response (possible only after a mid-demux panic)
+        let _ = job.reply.try_send(Err(ReplyErr::Engine(msg.clone())));
     }
 }
 
@@ -212,7 +288,7 @@ mod tests {
         let row: Vec<i32> = (0..n).map(|_| rng.below(50) as i32).collect();
         let tokens = pad_rows(&[row], n, 0).unwrap();
         let (tx, rx) = sync_channel(1);
-        (PredictJob { entry: entry.clone(), tokens, rows: 1, reply: tx }, rx)
+        (PredictJob { entry: entry.clone(), tokens, rows: 1, reply: tx, deadline: None }, rx)
     }
 
     #[test]
@@ -281,7 +357,7 @@ mod tests {
             want.push(out[0].as_f32().unwrap().to_vec());
         }
         let (batch, rxs): (Vec<_>, Vec<_>) = jobs.into_iter().unzip();
-        run_batch(batch, scratch.as_mut(), &metrics);
+        assert!(run_batch(batch, scratch.as_mut(), &metrics));
         for (rx, want) in rxs.iter().zip(&want) {
             let got = rx.recv().unwrap().unwrap();
             assert_eq!(got.batch_rows, 3);
@@ -301,11 +377,63 @@ mod tests {
         let badtok = pad_rows(&[vec![1, 2, 3]], 3, 0).unwrap();
         let (tx1, rx1) = sync_channel(1);
         let (tx2, rx2) = sync_channel(1);
-        let mk = |tx| PredictJob { entry: entry.clone(), tokens: badtok.clone(), rows: 1, reply: tx };
-        run_batch(vec![mk(tx1), mk(tx2)], scratch.as_mut(), &metrics);
+        let mk = |tx| PredictJob {
+            entry: entry.clone(),
+            tokens: badtok.clone(),
+            rows: 1,
+            reply: tx,
+            deadline: None,
+        };
+        assert!(run_batch(vec![mk(tx1), mk(tx2)], scratch.as_mut(), &metrics));
         for rx in [rx1, rx2] {
             let err = rx.recv().unwrap().unwrap_err();
-            assert!(err.contains("predict failed"), "{err}");
+            assert!(matches!(err, ReplyErr::Engine(_)), "{err:?}");
+            assert!(err.message().contains("predict failed"), "{err:?}");
         }
+        assert_eq!(entry.breaker.state_code(), crate::serve::registry::BREAKER_CLOSED);
+    }
+
+    #[test]
+    fn expired_deadlines_are_shed_not_computed() {
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let entry = tiny_entry(&reg, "cast_topk");
+        let metrics = Metrics::new();
+        let mut scratch = entry.exe.make_scratch();
+        let (mut expired, rx1) = job(&entry, 1);
+        expired.deadline = Some(Instant::now() - Duration::from_millis(5));
+        let (live, rx2) = job(&entry, 2);
+        assert!(run_batch(vec![expired, live], scratch.as_mut(), &metrics));
+        let err = rx1.recv().unwrap().unwrap_err();
+        assert!(matches!(err, ReplyErr::Shed(_)), "{err:?}");
+        let ok = rx2.recv().unwrap().unwrap();
+        assert_eq!(ok.batch_rows, 1, "only the live job was computed");
+        assert_eq!(metrics.shed_total(), 1);
+        assert_eq!(metrics.deadline_exceeded_total(), 1);
+        assert_eq!(metrics.batch_rows.count(), 1, "the shed job never reached a batch");
+    }
+
+    #[test]
+    fn panicking_batch_answers_every_job_and_worker_survives() {
+        let _g = crate::util::fault::test_guard();
+        crate::util::fault::set_plan("serve.infer.batch=panic:x1@7");
+        let reg = Registry::new(Engine::cpu().unwrap());
+        let entry = tiny_entry(&reg, "cast_topk");
+        let metrics = Metrics::new();
+        let mut scratch = entry.exe.make_scratch();
+        let (j1, rx1) = job(&entry, 1);
+        let (j2, rx2) = job(&entry, 2);
+        let ok = run_batch(vec![j1, j2], scratch.as_mut(), &metrics);
+        assert!(!ok, "a panicked batch reports so the caller can drop the scratch");
+        assert_eq!(metrics.worker_panics_total(), 1);
+        for rx in [rx1, rx2] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(matches!(err, ReplyErr::Engine(_)), "{err:?}");
+            assert!(err.message().contains("panicked"), "{err:?}");
+        }
+        // the x1 plan is exhausted: the same worker computes fine again
+        let (j3, rx3) = job(&entry, 3);
+        assert!(run_batch(vec![j3], scratch.as_mut(), &metrics));
+        assert!(rx3.recv().unwrap().is_ok());
+        crate::util::fault::clear();
     }
 }

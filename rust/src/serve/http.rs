@@ -159,6 +159,18 @@ impl<S: Read + Write> HttpConn<S> {
     ) -> io::Result<()> {
         write_response(&mut self.stream, status, content_type, body, keep_alive)
     }
+
+    /// Write one response with extra headers (e.g. `Retry-After` on 503).
+    pub fn send_ext(
+        &mut self,
+        status: u16,
+        content_type: &str,
+        extra: &[(&str, String)],
+        body: &[u8],
+        keep_alive: bool,
+    ) -> io::Result<()> {
+        write_response_ext(&mut self.stream, status, content_type, extra, body, keep_alive)
+    }
 }
 
 /// Index of `\r\n\r\n` (start of the terminator) in `buf`, if present.
@@ -311,13 +323,29 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> io::Result<()> {
+    write_response_ext(w, status, content_type, &[], body, keep_alive)
+}
+
+/// [`write_response`] plus arbitrary extra headers (name, value).
+pub fn write_response_ext(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         w,
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
         reason(status),
         body.len()
     )?;
+    for (name, value) in extra {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -362,7 +390,16 @@ pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
         }
         let mut tmp = [0u8; 4096];
         match r.read(&mut tmp) {
-            Ok(0) => return Err(bad("connection closed before response head")),
+            // EOF before any byte arrives is the stale keep-alive race
+            // (server closed an idle connection under us) — surface it
+            // with a kind clients can classify for a safe retry
+            Ok(0) if buf.is_empty() => {
+                return Err(io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed before response head",
+                ))
+            }
+            Ok(0) => return Err(bad("connection closed mid-head")),
             Ok(n) => buf.extend_from_slice(&tmp[..n]),
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) => return Err(e),

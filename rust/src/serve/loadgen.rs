@@ -14,6 +14,7 @@
 //! --bench-json` appends to `BENCH_native.json` as a
 //! `serve_reqs_per_sec` row (the batched-vs-unbatched acceptance pair).
 
+use std::io::{self, ErrorKind};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -63,8 +64,21 @@ pub struct LoadReport {
     pub conns: usize,
     /// Successful requests.
     pub ok: usize,
-    /// Failed requests (non-200 or transport errors).
+    /// Failed requests (non-200 or transport errors) — the sum of the
+    /// `err_*` classes below.
     pub errors: usize,
+    /// Stale keep-alive connections retried exactly once (a retry that
+    /// then succeeds counts in `ok`, not `errors`).
+    pub retried: usize,
+    /// Connect failures (server unreachable when a worker reconnects).
+    pub err_connect: usize,
+    /// Reset/EOF of a reused connection that failed even after the retry.
+    pub err_stale: usize,
+    /// Served non-200 responses.
+    pub err_status: usize,
+    /// Other transport errors (reset mid-exchange on a fresh connection,
+    /// malformed response, ...).
+    pub err_transport: usize,
     pub elapsed_s: f64,
     pub reqs_per_sec: f64,
     pub p50_ms: f64,
@@ -134,7 +148,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     );
 
     let latencies_ms: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(conns * per_conn));
-    let errors = AtomicUsize::new(0);
+    let retried = AtomicUsize::new(0);
+    let err_connect = AtomicUsize::new(0);
+    let err_stale = AtomicUsize::new(0);
+    let err_status = AtomicUsize::new(0);
+    let err_transport = AtomicUsize::new(0);
     let batch_rows_max = AtomicUsize::new(0);
     let t0 = Instant::now();
     parallel::scoped_workers(conns, |w| {
@@ -145,22 +163,48 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             })
         };
         let mut stream = connect().ok();
+        // whether the current connection has served no request yet — a
+        // failure on a *reused* connection may be the stale keep-alive
+        // race; a failure on a fresh one is a real error
+        let mut fresh = true;
         let mut rng = Rng::new(cfg.seed).split(w as u64);
         let mut local = Vec::with_capacity(per_conn);
         for _ in 0..per_conn {
             let Some(s) = stream.as_mut() else {
                 // reconnect after a transport error so one dropped
                 // connection costs one request, not the whole tail
-                errors.fetch_add(1, Ordering::Relaxed);
+                err_connect.fetch_add(1, Ordering::Relaxed);
                 stream = connect().ok();
+                fresh = true;
                 continue;
             };
             let body = request_body(&model, &mut rng, seq, vocab);
             let t = Instant::now();
-            match http::write_request(s, "POST", "/predict", body.as_bytes())
-                .and_then(|()| http::read_response(s))
-            {
+            let mut result = http::write_request(s, "POST", "/predict", body.as_bytes())
+                .and_then(|()| http::read_response(s));
+            // a reused keep-alive connection can lose the race with a
+            // server-side idle close: the request lands on a dead socket
+            // and surfaces as ECONNRESET/EPIPE or an immediate EOF.
+            // That exact failure is retried once on a fresh connection;
+            // a genuinely failing server still errors out.
+            if !fresh && result.as_ref().err().is_some_and(is_stale_conn) {
+                retried.fetch_add(1, Ordering::Relaxed);
+                stream = connect().ok();
+                fresh = true;
+                match stream.as_mut() {
+                    Some(s2) => {
+                        result = http::write_request(s2, "POST", "/predict", body.as_bytes())
+                            .and_then(|()| http::read_response(s2));
+                    }
+                    None => {
+                        err_connect.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+            }
+            match result {
                 Ok(r) if r.status == 200 => {
+                    fresh = false;
                     local.push(t.elapsed().as_secs_f64() * 1e3);
                     // observed coalescing: the batch this reply rode in
                     if let Some(rows) = Json::parse(std::str::from_utf8(&r.body).unwrap_or(""))
@@ -172,27 +216,42 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 }
                 Ok(_) => {
                     // a served non-200 — the connection is still good
-                    errors.fetch_add(1, Ordering::Relaxed);
+                    fresh = false;
+                    err_status.fetch_add(1, Ordering::Relaxed);
                 }
-                Err(_) => {
-                    errors.fetch_add(1, Ordering::Relaxed);
+                Err(e) => {
+                    let class =
+                        if is_stale_conn(&e) { &err_stale } else { &err_transport };
+                    class.fetch_add(1, Ordering::Relaxed);
                     stream = connect().ok();
+                    fresh = true;
                 }
             }
         }
-        latencies_ms.lock().unwrap().extend(local);
+        latencies_ms.lock().unwrap_or_else(|p| p.into_inner()).extend(local);
     });
     let elapsed = t0.elapsed().as_secs_f64();
 
-    let mut lats = latencies_ms.into_inner().unwrap();
+    let mut lats = latencies_ms.into_inner().unwrap_or_else(|p| p.into_inner());
     lats.sort_by(|a, b| a.total_cmp(b));
     let ok = lats.len();
+    let (err_connect, err_stale, err_status, err_transport) = (
+        err_connect.load(Ordering::Relaxed),
+        err_stale.load(Ordering::Relaxed),
+        err_status.load(Ordering::Relaxed),
+        err_transport.load(Ordering::Relaxed),
+    );
     Ok(LoadReport {
         model,
         seq_len: seq,
         conns,
         ok,
-        errors: errors.load(Ordering::Relaxed),
+        errors: err_connect + err_stale + err_status + err_transport,
+        retried: retried.load(Ordering::Relaxed),
+        err_connect,
+        err_stale,
+        err_status,
+        err_transport,
         elapsed_s: elapsed,
         reqs_per_sec: ok as f64 / elapsed.max(1e-9),
         p50_ms: percentile(&lats, 0.50),
@@ -200,6 +259,19 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         server_max_batch,
         batch_rows_max: batch_rows_max.load(Ordering::Relaxed),
     })
+}
+
+/// The stale keep-alive signature: the connection died without a
+/// response byte.  Safe to retry (`/predict` is deterministic and
+/// side-effect free); anything else is surfaced as-is.
+fn is_stale_conn(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::UnexpectedEof
+    )
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample (0 when empty).
@@ -223,6 +295,21 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), 100.0);
         assert_eq!(percentile(&[7.0], 0.5), 7.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn stale_classification_matches_the_dead_socket_kinds() {
+        for kind in [
+            ErrorKind::ConnectionReset,
+            ErrorKind::ConnectionAborted,
+            ErrorKind::BrokenPipe,
+            ErrorKind::UnexpectedEof,
+        ] {
+            assert!(is_stale_conn(&io::Error::new(kind, "x")), "{kind:?}");
+        }
+        for kind in [ErrorKind::InvalidData, ErrorKind::TimedOut, ErrorKind::ConnectionRefused] {
+            assert!(!is_stale_conn(&io::Error::new(kind, "x")), "{kind:?}");
+        }
     }
 
     #[test]

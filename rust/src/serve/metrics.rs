@@ -144,6 +144,13 @@ pub struct Metrics {
     responses_5xx: AtomicU64,
     predict_rows: AtomicU64,
     batches: AtomicU64,
+    /// Requests refused before compute (breaker open, queue full, or
+    /// deadline exhausted while queued) — every shed is a 503.
+    shed: AtomicU64,
+    /// Jobs whose `X-Deadline-Ms` budget ran out waiting in the queue.
+    deadline_exceeded: AtomicU64,
+    /// Panics caught and contained in serve workers (infer or conn).
+    worker_panics: AtomicU64,
     pub batch_rows: Histogram,
     pub latency: Histogram,
 }
@@ -164,9 +171,36 @@ impl Metrics {
             responses_5xx: AtomicU64::new(0),
             predict_rows: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
             batch_rows: Histogram::new(&BATCH_BOUNDS),
             latency: Histogram::new(&LATENCY_BOUNDS),
         }
+    }
+
+    pub fn inc_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_exceeded_total(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_panics_total(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
     }
 
     /// Record one handled request: endpoint, response status, wall time.
@@ -199,8 +233,10 @@ impl Metrics {
     }
 
     /// Render the whole exposition-format page.  `queue_depth` and
-    /// `models` are point-in-time gauges supplied by the server.
-    pub fn render(&self, queue_depth: usize, models: usize) -> String {
+    /// `models` are point-in-time gauges supplied by the server;
+    /// `breakers` is each model's circuit-breaker state
+    /// (0 = closed, 1 = half-open, 2 = open).
+    pub fn render(&self, queue_depth: usize, models: usize, breakers: &[(String, u8)]) -> String {
         let mut out = String::with_capacity(2048);
         out.push_str("# HELP cast_serve_requests_total Requests handled, by endpoint.\n");
         out.push_str("# TYPE cast_serve_requests_total counter\n");
@@ -233,8 +269,30 @@ impl Metrics {
                 "Micro-batches executed.",
                 self.batches.load(Ordering::Relaxed),
             ),
+            (
+                "cast_serve_shed_total",
+                "Requests refused before compute (breaker open or deadline shed).",
+                self.shed.load(Ordering::Relaxed),
+            ),
+            (
+                "cast_serve_deadline_exceeded_total",
+                "Jobs whose deadline budget expired while queued.",
+                self.deadline_exceeded.load(Ordering::Relaxed),
+            ),
+            (
+                "cast_serve_worker_panics_total",
+                "Panics caught and contained in serve workers.",
+                self.worker_panics.load(Ordering::Relaxed),
+            ),
         ] {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        }
+        out.push_str(
+            "# HELP cast_serve_breaker_state Circuit breaker per model \
+             (0=closed, 1=half-open, 2=open).\n# TYPE cast_serve_breaker_state gauge\n",
+        );
+        for (model, state) in breakers {
+            out.push_str(&format!("cast_serve_breaker_state{{model=\"{model}\"}} {state}\n"));
         }
         self.batch_rows.render(
             "cast_serve_batch_rows",
@@ -308,7 +366,7 @@ mod tests {
         m.observe_request(Endpoint::Healthz, 200, 0.0);
         m.observe_request(Endpoint::Predict, 500, 0.1);
         m.observe_batch(4);
-        let page = m.render(3, 2);
+        let page = m.render(3, 2, &[]);
         for needle in [
             "cast_serve_requests_total{endpoint=\"predict\"} 2",
             "cast_serve_responses_total{class=\"2xx\"} 2",
@@ -325,5 +383,35 @@ mod tests {
         }
         assert_eq!(m.predict_requests(), 2);
         assert_eq!(m.error_responses(), 1);
+    }
+
+    #[test]
+    fn resilience_counters_export_and_increment() {
+        let m = Metrics::new();
+        let page = m.render(0, 1, &[("tiny".to_string(), 0)]);
+        for needle in [
+            "cast_serve_shed_total 0",
+            "cast_serve_deadline_exceeded_total 0",
+            "cast_serve_worker_panics_total 0",
+            "cast_serve_breaker_state{model=\"tiny\"} 0",
+        ] {
+            assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+        }
+        m.inc_shed();
+        m.inc_shed();
+        m.inc_deadline_exceeded();
+        m.inc_worker_panic();
+        assert_eq!(m.shed_total(), 2);
+        assert_eq!(m.deadline_exceeded_total(), 1);
+        assert_eq!(m.worker_panics_total(), 1);
+        let page = m.render(0, 1, &[("tiny".to_string(), 2)]);
+        for needle in [
+            "cast_serve_shed_total 2",
+            "cast_serve_deadline_exceeded_total 1",
+            "cast_serve_worker_panics_total 1",
+            "cast_serve_breaker_state{model=\"tiny\"} 2",
+        ] {
+            assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+        }
     }
 }

@@ -15,7 +15,9 @@
 //!   the logits back to each connection.
 //! * [`metrics`] — atomic counters/histograms rendered on `/metrics`.
 //! * [`server`] — acceptor + connection worker pool, routing, graceful
-//!   drain on SIGTERM/SIGINT or `/admin/shutdown`.
+//!   drain on SIGTERM/SIGINT or `/admin/shutdown`; worker panics are
+//!   caught and contained, deadline-expired jobs are shed with 503, and
+//!   a per-model circuit breaker fails fast (DESIGN.md §Robustness).
 //! * [`loadgen`] — the `--conns`/`--requests` closed-loop client that
 //!   appends `serve_reqs_per_sec` rows to `BENCH_native.json`.
 //!
@@ -34,5 +36,5 @@ pub mod server;
 
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use metrics::Metrics;
-pub use registry::{ModelEntry, ModelSource, Registry};
+pub use registry::{Breaker, ModelEntry, ModelSource, Registry};
 pub use server::{install_signal_handlers, ServeConfig, Server};

@@ -12,7 +12,9 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +32,88 @@ pub enum ModelSource {
     Dir { dir: PathBuf, ckpt: Option<PathBuf>, seed: u32 },
 }
 
+pub const BREAKER_CLOSED: u8 = 0;
+pub const BREAKER_HALF_OPEN: u8 = 1;
+pub const BREAKER_OPEN: u8 = 2;
+
+/// Per-model circuit breaker.  Consecutive engine failures open it;
+/// while open, `/predict` sheds fast with 503 instead of queueing more
+/// work onto a failing model.  After `cooldown` one probe request is
+/// admitted (half-open): success closes the breaker, failure re-opens
+/// it.  The breaker survives hot reloads — it guards the *model name*,
+/// not one snapshot — so a reload doesn't reset failure history.
+pub struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: AtomicU32,
+    /// [`BREAKER_CLOSED`] / [`BREAKER_HALF_OPEN`] / [`BREAKER_OPEN`].
+    state: AtomicU8,
+    opened_at: Mutex<Option<Instant>>,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown,
+            consecutive: AtomicU32::new(0),
+            state: AtomicU8::new(BREAKER_CLOSED),
+            opened_at: Mutex::new(None),
+        }
+    }
+
+    /// Serving defaults: 5 consecutive batch failures, 5 s cooldown.
+    pub fn serve_default() -> Breaker {
+        Breaker::new(5, Duration::from_secs(5))
+    }
+
+    /// May a request for this model proceed?  In the open state, flips
+    /// to half-open once the cooldown has elapsed and admits exactly
+    /// that one probe.
+    pub fn allow(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_OPEN => {
+                let cooled = self
+                    .opened_at
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .map(|t| t.elapsed() >= self.cooldown)
+                    .unwrap_or(true);
+                cooled
+                    && self
+                        .state
+                        .compare_exchange(
+                            BREAKER_OPEN,
+                            BREAKER_HALF_OPEN,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+            }
+            BREAKER_HALF_OPEN => false, // one probe at a time
+            _ => true,
+        }
+    }
+
+    pub fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.state.store(BREAKER_CLOSED, Ordering::Release);
+    }
+
+    pub fn record_failure(&self) {
+        let n = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        let state = self.state.load(Ordering::Acquire);
+        if state == BREAKER_HALF_OPEN || (state == BREAKER_CLOSED && n >= self.threshold) {
+            *self.opened_at.lock().unwrap_or_else(|p| p.into_inner()) = Some(Instant::now());
+            self.state.store(BREAKER_OPEN, Ordering::Release);
+        }
+    }
+
+    pub fn state_code(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+}
+
 /// One immutable loaded-model snapshot.
 pub struct ModelEntry {
     pub name: String,
@@ -39,6 +123,8 @@ pub struct ModelEntry {
     pub source: ModelSource,
     /// Bumped on every (re)load, so clients can observe a reload.
     pub version: u64,
+    /// Shared across reloads of the same name (see [`Breaker`]).
+    pub breaker: Arc<Breaker>,
 }
 
 impl ModelEntry {
@@ -82,14 +168,23 @@ impl Registry {
         &self.engine
     }
 
+    /// Read the model table, recovering from a poisoned lock (a reader
+    /// or writer that panicked mid-access left the map itself intact —
+    /// entries are immutable `Arc`s and inserts are single operations).
+    fn read_models(&self) -> RwLockReadGuard<'_, BTreeMap<String, Arc<ModelEntry>>> {
+        self.models.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_models(&self) -> RwLockWriteGuard<'_, BTreeMap<String, Arc<ModelEntry>>> {
+        self.models.write().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Load `source` and register it under the manifest key (or the
     /// explicit `name` override).  Returns the entry.
     pub fn load(&self, name: Option<String>, source: ModelSource) -> Result<Arc<ModelEntry>> {
-        let prior_version = |n: &str| {
-            self.models.read().unwrap().get(n).map(|e| e.version).unwrap_or(0)
-        };
-        let entry = self.build(name, source, &prior_version)?;
-        self.models.write().unwrap().insert(entry.name.clone(), entry.clone());
+        let prior = |n: &str| self.read_models().get(n).cloned();
+        let entry = self.build(name, source, &prior)?;
+        self.write_models().insert(entry.name.clone(), entry.clone());
         crate::info!(
             "registry: loaded {:?} v{} ({} params, seq {})",
             entry.name,
@@ -115,7 +210,7 @@ impl Registry {
         &self,
         name: Option<String>,
         source: ModelSource,
-        prior_version: &dyn Fn(&str) -> u64,
+        prior: &dyn Fn(&str) -> Option<Arc<ModelEntry>>,
     ) -> Result<Arc<ModelEntry>> {
         let (manifest, ckpt, seed) = match &source {
             ModelSource::Synthetic { meta, seed } => {
@@ -161,8 +256,12 @@ impl Registry {
             }
             None => ModelState::init(&self.engine, &manifest, seed)?.params,
         };
+        let prior = prior(&name);
         Ok(Arc::new(ModelEntry {
-            version: prior_version(&name) + 1,
+            version: prior.as_ref().map(|e| e.version).unwrap_or(0) + 1,
+            breaker: prior
+                .map(|e| e.breaker.clone())
+                .unwrap_or_else(|| Arc::new(Breaker::serve_default())),
             name,
             manifest,
             exe,
@@ -172,13 +271,13 @@ impl Registry {
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.models.read().unwrap().get(name).cloned()
+        self.read_models().get(name).cloned()
     }
 
     /// Resolve a request's model: an explicit name, or the single loaded
     /// model when only one is registered (the common smoke-test shape).
     pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
-        let models = self.models.read().unwrap();
+        let models = self.read_models();
         match name {
             Some(n) => models
                 .get(n)
@@ -193,16 +292,21 @@ impl Registry {
     }
 
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        self.read_models().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Each model's circuit-breaker state, for `/metrics` and `/readyz`.
+    pub fn breaker_states(&self) -> Vec<(String, u8)> {
+        self.read_models().iter().map(|(n, e)| (n.clone(), e.breaker.state_code())).collect()
+    }
+
     /// The `/models` payload.
     pub fn describe(&self) -> Json {
-        let models = self.models.read().unwrap();
+        let models = self.read_models();
         Json::obj(vec![(
             "models",
             Json::Arr(models.values().map(|e| e.describe()).collect()),
@@ -246,6 +350,55 @@ mod tests {
         assert_eq!(old.version, 1, "old snapshot is untouched");
         assert_eq!(reg.get(&name).unwrap().version, 2);
         assert!(reg.reload("missing").is_err());
+        // the breaker guards the name, not one snapshot: failure history
+        // (and an open breaker) must survive a hot reload
+        assert!(
+            Arc::ptr_eq(&old.breaker, &new.breaker),
+            "reload must carry the breaker over"
+        );
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_recovers_via_half_open() {
+        let b = Breaker::new(3, Duration::from_millis(30));
+        assert!(b.allow());
+        b.record_failure();
+        b.record_failure();
+        assert!(b.allow(), "below threshold stays closed");
+        b.record_failure();
+        assert_eq!(b.state_code(), BREAKER_OPEN);
+        assert!(!b.allow(), "open before cooldown sheds");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.allow(), "cooldown elapsed: one probe admitted");
+        assert_eq!(b.state_code(), BREAKER_HALF_OPEN);
+        assert!(!b.allow(), "only one probe at a time");
+        b.record_success();
+        assert_eq!(b.state_code(), BREAKER_CLOSED);
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens_immediately() {
+        let b = Breaker::new(1, Duration::from_millis(20));
+        b.record_failure();
+        assert_eq!(b.state_code(), BREAKER_OPEN);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.allow(), "probe admitted");
+        b.record_failure();
+        assert_eq!(b.state_code(), BREAKER_OPEN, "failed probe re-opens");
+        assert!(!b.allow(), "cooldown restarts after a failed probe");
+    }
+
+    #[test]
+    fn breaker_success_resets_the_consecutive_count() {
+        let b = Breaker::new(3, Duration::from_secs(60));
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state_code(), BREAKER_CLOSED, "non-consecutive failures never open");
+        assert!(b.allow());
     }
 
     #[test]

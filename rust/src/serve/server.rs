@@ -15,8 +15,16 @@
 //! ```
 //!
 //! Endpoints: `POST /predict` (JSON tokens → logits), `GET /models`,
-//! `POST /models/reload?model=`, `GET /healthz`, `GET /metrics`
-//! (Prometheus text), `POST /admin/shutdown`.
+//! `POST /models/reload?model=`, `GET /healthz` (liveness), `GET
+//! /readyz` (readiness: `ok`/`degraded`, 503 while draining), `GET
+//! /metrics` (Prometheus text), `POST /admin/shutdown`.
+//!
+//! Resilience (DESIGN.md §Robustness): worker panics are caught and
+//! contained (a panicking batch answers its jobs with 500 and the
+//! worker restarts), per-request deadline budgets (`X-Deadline-Ms`
+//! capped by `--deadline-ms`) shed queue-expired jobs with 503 +
+//! `Retry-After`, and a per-model circuit breaker sheds fast while a
+//! model's engine is failing consecutively.
 //!
 //! Graceful shutdown: SIGINT/SIGTERM (via [`install_signal_handlers`])
 //! or `/admin/shutdown` flips a flag; the acceptor stops, connection
@@ -40,10 +48,10 @@ use crate::runtime::Scratch;
 use crate::util::json::Json;
 use crate::util::parallel::Queue;
 
-use super::batcher::{run_batch, BatchFormer, PredictJob};
+use super::batcher::{run_batch, BatchFormer, PredictJob, ReplyErr};
 use super::http::{HttpConn, Recv, Request};
 use super::metrics::{Endpoint, Metrics};
-use super::registry::Registry;
+use super::registry::{Registry, BREAKER_OPEN};
 
 /// How long a connection worker waits for its batch's reply before
 /// answering 504 (covers a deep queue on a slow box, not a hang).
@@ -64,6 +72,10 @@ pub struct ServeConfig {
     pub infer_workers: usize,
     /// Request body cap in bytes.
     pub max_body: usize,
+    /// Cap in milliseconds on a client's `X-Deadline-Ms` budget; a job
+    /// still queued past its budget is shed with 503 + `Retry-After`
+    /// instead of computed.  0 disables client deadlines entirely.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +88,7 @@ impl Default for ServeConfig {
             conn_workers: 32,
             infer_workers: 1,
             max_body: 8 << 20,
+            deadline_ms: 60_000,
         }
     }
 }
@@ -171,7 +184,26 @@ impl Server {
                 .map(|_| {
                     let jobs = self.jobs.clone();
                     let metrics = self.metrics.clone();
-                    s.spawn(move || infer_loop(jobs, max_batch, max_wait, metrics))
+                    s.spawn(move || {
+                        // restart the loop on an escaped panic
+                        // (run_batch already contains per-batch panics;
+                        // this guards the former itself).  Jobs held by
+                        // the dead former drop their reply channels, so
+                        // their conn workers answer 500 — nothing hangs.
+                        loop {
+                            let (jobs, metrics) = (jobs.clone(), metrics.clone());
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || infer_loop(jobs, max_batch, max_wait, metrics),
+                            ));
+                            match r {
+                                Ok(()) => break,
+                                Err(_) => {
+                                    self.metrics.inc_worker_panic();
+                                    crate::info!("serve: inference worker panicked; restarting");
+                                }
+                            }
+                        }
+                    })
                 })
                 .collect();
             let conn_handles: Vec<_> = (0..self.cfg.conn_workers.max(1))
@@ -179,7 +211,17 @@ impl Server {
                     let conns = &conns;
                     s.spawn(move || {
                         while let Some(stream) = conns.pop() {
-                            self.handle_connection(stream);
+                            // one panicking connection must not take the
+                            // worker (and its share of the pool) with it
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || self.handle_connection(stream),
+                            ));
+                            if r.is_err() {
+                                self.metrics.inc_worker_panic();
+                                crate::info!(
+                                    "serve: connection worker panicked; connection dropped, worker continues"
+                                );
+                            }
                         }
                     })
                 })
@@ -232,6 +274,13 @@ impl Server {
 
     /// Keep-alive request loop for one connection.
     fn handle_connection(&self, stream: TcpStream) {
+        // fault point: `panic` rules unwind into the conn worker's
+        // catch_unwind; `err` rules just drop the connection (the client
+        // sees a reset — exactly the stale-keep-alive race loadgen's
+        // single retry covers)
+        if crate::util::fault::check("serve.conn.handle").is_err() {
+            return;
+        }
         let mut conn = HttpConn::new(stream);
         loop {
             match conn.recv(self.cfg.max_body) {
@@ -242,7 +291,19 @@ impl Server {
                     let keep = req.keep_alive && !self.shutting_down();
                     let (status, ctype, body) = self.route(&req);
                     self.metrics.observe_request(endpoint, status, t.elapsed().as_secs_f64());
-                    if conn.send(status, ctype, &body, keep).is_err() || !keep {
+                    // every 503 (shed, breaker, draining) is retryable
+                    let sent = if status == 503 {
+                        conn.send_ext(
+                            status,
+                            ctype,
+                            &[("Retry-After", "1".to_string())],
+                            &body,
+                            keep,
+                        )
+                    } else {
+                        conn.send(status, ctype, &body, keep)
+                    };
+                    if sent.is_err() || !keep {
                         return;
                     }
                 }
@@ -265,6 +326,7 @@ impl Server {
 
     fn route(&self, req: &Request) -> (u16, &'static str, Vec<u8>) {
         match (req.method.as_str(), req.path.as_str()) {
+            // liveness: answers 200 whenever the process can serve HTTP
             ("GET", "/healthz") => json_ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("models", Json::num(self.registry.len() as f64)),
@@ -272,10 +334,42 @@ impl Server {
                 ("max_batch", Json::num(self.cfg.max_batch as f64)),
                 ("draining", Json::Bool(self.shutting_down())),
             ])),
+            // readiness: 503 while draining; "degraded" (still 200, so
+            // in-flight traffic isn't cut) while any breaker is open
+            ("GET", "/readyz") => {
+                let draining = self.shutting_down();
+                let breakers = self.registry.breaker_states();
+                let open = breakers.iter().filter(|(_, s)| *s == BREAKER_OPEN).count();
+                let state = if draining {
+                    "draining"
+                } else if open > 0 {
+                    "degraded"
+                } else {
+                    "ok"
+                };
+                let body = Json::obj(vec![
+                    ("status", Json::str(state)),
+                    ("ready", Json::Bool(!draining)),
+                    ("models", Json::num(self.registry.len() as f64)),
+                    ("breakers_open", Json::num(open as f64)),
+                    ("queue_depth", Json::num(self.jobs.len() as f64)),
+                ]);
+                (
+                    if draining { 503 } else { 200 },
+                    "application/json",
+                    body.to_string().into_bytes(),
+                )
+            }
             ("GET", "/metrics") => (
                 200,
                 "text/plain; version=0.0.4",
-                self.metrics.render(self.jobs.len(), self.registry.len()).into_bytes(),
+                self.metrics
+                    .render(
+                        self.jobs.len(),
+                        self.registry.len(),
+                        &self.registry.breaker_states(),
+                    )
+                    .into_bytes(),
             ),
             ("GET", "/models") => json_ok(self.registry.describe()),
             ("POST", "/predict") => match self.predict(req) {
@@ -301,7 +395,8 @@ impl Server {
 
     /// `/predict`: parse → resolve model → enqueue → wait for the demuxed
     /// logits.  Error statuses: 400 malformed, 404 unknown model, 503
-    /// draining/closed, 504 timeout, 500 engine failure.
+    /// draining/breaker-open/deadline-shed, 504 timeout, 500 engine
+    /// failure or worker loss.
     fn predict(&self, req: &Request) -> Result<Vec<u8>, (u16, String)> {
         let text = req.body_str().map_err(|e| (e.status, e.msg))?;
         let body = Json::parse(text).map_err(|e| (400, format!("invalid JSON body: {e}")))?;
@@ -312,6 +407,30 @@ impl Server {
             .or_else(|| body.get("model").and_then(Json::as_str));
         let entry =
             self.registry.resolve(model_name).map_err(|e| (404, format!("{e:#}")))?;
+        // circuit breaker: a model failing consecutively sheds fast
+        // instead of queueing more work onto a broken engine
+        if !entry.breaker.allow() {
+            self.metrics.inc_shed();
+            return Err((
+                503,
+                format!("model {:?} is failing; circuit breaker is open", entry.name),
+            ));
+        }
+        // per-request deadline budget, measured from arrival so queue
+        // wait counts against it
+        let deadline = match req.headers.get("x-deadline-ms") {
+            Some(v) if self.cfg.deadline_ms > 0 => {
+                let ms: u64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| (400, format!("invalid X-Deadline-Ms {v:?}")))?;
+                if ms == 0 {
+                    return Err((400, "X-Deadline-Ms must be at least 1".to_string()));
+                }
+                Some(Instant::now() + Duration::from_millis(ms.min(self.cfg.deadline_ms)))
+            }
+            _ => None,
+        };
         let meta = &entry.manifest.meta;
         if meta.dual {
             return Err((
@@ -331,12 +450,21 @@ impl Server {
             return Err((503, "server is draining".to_string()));
         }
         let (tx, rx) = sync_channel(1);
-        let job = PredictJob { entry, tokens, rows: n_rows, reply: tx };
+        let job = PredictJob { entry, tokens, rows: n_rows, reply: tx, deadline };
         self.jobs.push(job).map_err(|_| (503, "server is draining".to_string()))?;
-        let reply = rx
-            .recv_timeout(PREDICT_TIMEOUT)
-            .map_err(|_| (504, "inference timed out".to_string()))?;
-        let ok = reply.map_err(|msg| (500, msg))?;
+        let reply = rx.recv_timeout(PREDICT_TIMEOUT).map_err(|e| match e {
+            std::sync::mpsc::RecvTimeoutError::Timeout => {
+                (504, "inference timed out".to_string())
+            }
+            // the job died with a restarted worker before any reply
+            std::sync::mpsc::RecvTimeoutError::Disconnected => {
+                (500, "inference worker restarted; request was not processed".to_string())
+            }
+        })?;
+        let ok = reply.map_err(|err| match err {
+            ReplyErr::Shed(msg) => (503, msg),
+            ReplyErr::Engine(msg) => (500, msg),
+        })?;
 
         let nc = ok.n_classes;
         let mut logit_rows = Vec::with_capacity(n_rows);
@@ -393,7 +521,7 @@ fn endpoint_of(req: &Request) -> Endpoint {
         "/models" => Endpoint::Models,
         "/models/reload" => Endpoint::Reload,
         "/metrics" => Endpoint::Metrics,
-        "/healthz" => Endpoint::Healthz,
+        "/healthz" | "/readyz" => Endpoint::Healthz,
         "/admin/shutdown" => Endpoint::Shutdown,
         _ => Endpoint::Other,
     }
@@ -474,8 +602,12 @@ fn infer_loop(
             scratches.retain(|(name, _), _| name != &key.0);
         }
         let scratch = scratches
-            .entry(key)
+            .entry(key.clone())
             .or_insert_with(|| batch[0].entry.exe.make_scratch());
-        run_batch(batch, scratch.as_mut(), &metrics);
+        if !run_batch(batch, scratch.as_mut(), &metrics) {
+            // the panic may have torn the workspace mid-write; rebuild
+            // it fresh before the next batch of this model
+            scratches.remove(&key);
+        }
     }
 }

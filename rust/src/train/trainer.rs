@@ -27,6 +27,10 @@ pub struct TrainConfig {
     pub queue_depth: usize,
     pub log_every: usize,
     pub checkpoint: Option<PathBuf>,
+    /// Save a rotating checkpoint every N steps (0 = final save only).
+    /// Each save is atomic and keeps the previous generation as
+    /// `<ckpt>.prev`, so a crash mid-write never loses resumability.
+    pub ckpt_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -41,6 +45,7 @@ impl Default for TrainConfig {
             queue_depth: 4,
             log_every: 10,
             checkpoint: None,
+            ckpt_every: 0,
         }
     }
 }
@@ -53,6 +58,13 @@ pub struct TrainReport {
     pub steps_per_sec: f64,
 }
 
+/// Floor for the automatic LR backoff: even a long streak of
+/// non-finite steps can't drive the effective LR below lr/1024.
+const MIN_LR_SCALE: f32 = 1.0 / 1024.0;
+/// Per-good-step recovery factor (2^(1/8)): eight clean steps undo one
+/// halving, so a transient spike doesn't permanently slow training.
+const LR_SCALE_GROWTH: f32 = 1.090_507_7;
+
 pub struct Trainer {
     engine: Arc<Engine>,
     pub manifest: Manifest,
@@ -61,6 +73,13 @@ pub struct Trainer {
     pub state: ModelState,
     gen: Arc<dyn TaskGen>,
     cfg: TrainConfig,
+    /// Loss-scale-style LR backoff: halves on a non-finite step, creeps
+    /// back toward 1.0 on good steps.  Stays at 1.0 on healthy runs, so
+    /// the bit-identical determinism contract is unaffected.
+    lr_scale: f32,
+    /// Steps skipped because their loss was non-finite (injected or
+    /// organic) — the update was dropped before touching params/moments.
+    pub nan_skips: usize,
 }
 
 impl Trainer {
@@ -93,7 +112,17 @@ impl Trainer {
             manifest.meta.seq_len,
             manifest.meta.batch
         );
-        Ok(Trainer { engine, manifest, train_exe, predict_exe, state, gen, cfg })
+        Ok(Trainer {
+            engine,
+            manifest,
+            train_exe,
+            predict_exe,
+            state,
+            gen,
+            cfg,
+            lr_scale: 1.0,
+            nan_skips: 0,
+        })
     }
 
     /// Load a checkpoint into the trainer: parameters, AdamW moment
@@ -105,7 +134,9 @@ impl Trainer {
     /// continuing a schedule mid-flight is the caller's choice of
     /// `--steps`/`--warmup`/`--seed`.
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
-        let (state, names) = checkpoint::load(path)?;
+        // scan backward through the rotation: a torn or corrupt primary
+        // (rejected by its digest trailer) falls back to <path>.prev
+        let (state, names, from) = checkpoint::load_auto(path)?;
         anyhow::ensure!(
             names.len() == self.manifest.params.len(),
             "checkpoint has {} params, manifest {} — wrong model?",
@@ -119,25 +150,62 @@ impl Trainer {
                 spec.name
             );
         }
-        crate::info!("resume: {} params from {:?} at step {}", names.len(), path, state.step);
+        crate::info!("resume: {} params from {from:?} at step {}", names.len(), state.step);
         self.state = state;
         Ok(())
     }
 
     /// One optimization step on the given batch. Returns (loss, acc).
+    /// A non-finite loss (organic overflow or the `train.step.nan`
+    /// fault point) skips the update entirely — params and AdamW
+    /// moments stay untouched, the effective LR backs off, and the
+    /// returned loss is NaN so callers can drop the step from history.
     pub fn step(&mut self, batch: Batch, lr: f32) -> Result<(f32, f32)> {
+        let lr = lr * self.lr_scale;
         // CAST_CLONE_INPUTS=1 selects the pre-optimization path (clones the
         // full 3P-tensor state per step) — kept so the borrowed-assembly
         // speedup stays A/B-measurable (DESIGN.md §Performance).
-        if std::env::var_os("CAST_CLONE_INPUTS").is_some() {
+        let outputs = if std::env::var_os("CAST_CLONE_INPUTS").is_some() {
             let inputs = self.state.train_inputs(lr, batch.tokens, batch.labels);
-            let outputs = self.train_exe.run(&inputs).context("train_step execution")?;
-            return self.state.absorb(outputs);
+            self.train_exe.run(&inputs).context("train_step execution")?
+        } else {
+            // borrowed assembly: no clone of the 3P-tensor state per step
+            let scalars = (HostTensor::scalar_f32(self.state.step), HostTensor::scalar_f32(lr));
+            let inputs = self.state.train_inputs_refs(&scalars, &batch.tokens, &batch.labels);
+            self.train_exe.run_refs(&inputs).context("train_step execution")?
+        };
+        self.finish_step(outputs)
+    }
+
+    /// Inspect the step's loss *before* absorbing the outputs:
+    /// `ModelState::absorb` replaces params and both moment buffers
+    /// wholesale, so skipping the absorb is exactly "never write NaN
+    /// into the optimizer state".
+    fn finish_step(&mut self, outputs: Vec<HostTensor>) -> Result<(f32, f32)> {
+        let injected = crate::util::fault::flag("train.step.nan");
+        // outputs layout: params' ++ m' ++ v' ++ [step', loss, acc]
+        let loss = outputs
+            .len()
+            .checked_sub(2)
+            .and_then(|i| outputs[i].as_f32().ok())
+            .and_then(|v| v.first().copied())
+            .unwrap_or(f32::NAN);
+        if injected || !loss.is_finite() {
+            self.nan_skips += 1;
+            self.lr_scale = (self.lr_scale * 0.5).max(MIN_LR_SCALE);
+            crate::info!(
+                "train: non-finite loss{} at optimizer step {} — skipping update \
+                 ({} skips so far, lr scale {:.4})",
+                if injected { " (injected)" } else { "" },
+                self.state.step,
+                self.nan_skips,
+                self.lr_scale
+            );
+            return Ok((f32::NAN, 0.0));
         }
-        // borrowed assembly: no clone of the 3P-tensor state per step
-        let scalars = (HostTensor::scalar_f32(self.state.step), HostTensor::scalar_f32(lr));
-        let inputs = self.state.train_inputs_refs(&scalars, &batch.tokens, &batch.labels);
-        let outputs = self.train_exe.run_refs(&inputs).context("train_step execution")?;
+        if self.lr_scale < 1.0 {
+            self.lr_scale = (self.lr_scale * LR_SCALE_GROWTH).min(1.0);
+        }
         self.state.absorb(outputs)
     }
 
@@ -190,7 +258,14 @@ impl Trainer {
             let t = Timer::start();
             let (loss, acc) = self.step(batch, lr)?;
             let seconds = t.seconds();
-            history.push_step(StepRecord { step, loss, acc, lr, seconds });
+            // skipped (non-finite) steps stay out of the history so loss
+            // curves and --assert-improves see only applied updates
+            if loss.is_finite() {
+                history.push_step(StepRecord { step, loss, acc, lr, seconds });
+            }
+            if self.cfg.ckpt_every > 0 && (step + 1) % self.cfg.ckpt_every == 0 {
+                self.save_checkpoint_logged();
+            }
             if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
                 crate::info!(
                     "step {step:5}  loss {loss:.4}  acc {acc:.3}  lr {lr:.2e}  {:.2} steps/s",
@@ -212,12 +287,7 @@ impl Trainer {
             history.push_eval(EvalRecord { step: self.cfg.steps, acc: eacc, loss: eloss });
             crate::info!("final eval: acc {eacc:.3} loss {eloss:.4}");
         }
-        if let Some(path) = &self.cfg.checkpoint {
-            let names: Vec<String> =
-                self.manifest.params.iter().map(|p| p.name.clone()).collect();
-            checkpoint::save(&self.state, &names, path)?;
-            crate::info!("checkpoint -> {path:?}");
-        }
+        self.save_checkpoint_logged();
         Ok(TrainReport {
             final_train_loss: history.recent_loss(20),
             final_train_acc: history.recent_acc(20),
@@ -225,6 +295,26 @@ impl Trainer {
             steps_per_sec: history.steps_per_sec(),
             history,
         })
+    }
+
+    /// Save the configured checkpoint (if any), returning whether it
+    /// succeeded.  Failures are logged, not fatal: losing one periodic
+    /// snapshot must not kill a long training run — the atomic write
+    /// protocol guarantees the previous good generation survives as
+    /// `<ckpt>.prev` (or untouched at `<ckpt>` if the tmp write failed).
+    pub fn save_checkpoint_logged(&self) -> bool {
+        let Some(path) = &self.cfg.checkpoint else { return false };
+        let names: Vec<String> = self.manifest.params.iter().map(|p| p.name.clone()).collect();
+        match checkpoint::save(&self.state, &names, path) {
+            Ok(()) => {
+                crate::info!("checkpoint -> {path:?} (optimizer step {})", self.state.step);
+                true
+            }
+            Err(e) => {
+                crate::info!("checkpoint save failed (training continues): {e:#}");
+                false
+            }
+        }
     }
 
     pub fn engine(&self) -> &Arc<Engine> {

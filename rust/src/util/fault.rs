@@ -1,0 +1,450 @@
+//! Deterministic, seeded fault injection.
+//!
+//! Named fault points are compiled into IO/queue/worker hot spots across
+//! the serve and train stacks (see DESIGN.md §Robustness for the
+//! catalog).  A plan comes from the `CAST_FAULTS` environment variable
+//! (or `set_plan` in tests):
+//!
+//! ```text
+//! CAST_FAULTS="<point>=<kind>[:<prob>][:x<count>][;<rule>...][@<seed>]"
+//! ```
+//!
+//! Kinds: `err` (injected IO error), `panic`, `delay(<ms>)` (sleep),
+//! `torn(<pct>)` (truncate a write to pct% of its bytes), `flag`
+//! (generic boolean, e.g. forcing a non-finite loss).  `prob` is a float
+//! in [0,1] (default 1.0 — every hit fires); `x<count>` caps the total
+//! number of fires (default unlimited).  Example:
+//!
+//! ```text
+//! CAST_FAULTS="serve.infer.batch=panic:0.05:x3;ckpt.save.torn=torn(50):x1@42"
+//! ```
+//!
+//! Firing is deterministic: each rule keeps an atomic hit counter, and
+//! hit `k` fires iff `hash(seed, point, k)` falls under `prob` — so the
+//! *set of firing hit indices* depends only on the plan string, never on
+//! thread interleaving (when a fire-count cap binds, the total stays
+//! exact but which passing hits claim the cap can vary).
+//!
+//! When no plan is installed every fault point is a single relaxed
+//! atomic load — strictly a no-op on production hot paths.
+
+use std::io;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::RwLock;
+
+const UNINIT: u8 = 0;
+const INACTIVE: u8 = 1;
+const ENABLED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+static PLAN: RwLock<Option<Plan>> = RwLock::new(None);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    Err,
+    Panic,
+    Delay(u64),
+    Torn(u32),
+    Flag,
+}
+
+#[derive(Debug)]
+struct Rule {
+    point: String,
+    kind: Kind,
+    /// firing probability in basis points of 10_000
+    prob_bp: u32,
+    /// cap on total fires (u64::MAX = unlimited)
+    max: u64,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+#[derive(Debug)]
+struct Plan {
+    seed: u64,
+    rules: Vec<Rule>,
+}
+
+/// True when a fault plan is installed.  One relaxed load when not.
+#[inline]
+pub fn active() -> bool {
+    state() == ENABLED
+}
+
+/// IO-style fault point: an `err` rule returns an injected
+/// `io::Error`, a `panic` rule panics, a `delay(ms)` rule sleeps.
+/// Strictly a no-op without a plan.
+#[inline]
+pub fn check(point: &str) -> io::Result<()> {
+    if state() != ENABLED {
+        return Ok(());
+    }
+    check_slow(point)
+}
+
+/// Boolean fault point for non-IO injection (e.g. forcing the trainer
+/// to treat a step's loss as non-finite).  Fires on `flag` rules.
+#[inline]
+pub fn flag(point: &str) -> bool {
+    if state() != ENABLED {
+        return false;
+    }
+    flag_slow(point)
+}
+
+/// Torn-write fault point: when a `torn(pct)` rule fires, returns the
+/// truncated byte count a crashed writer would have persisted out of
+/// `full`.
+#[inline]
+pub fn torn_len(point: &str, full: usize) -> Option<usize> {
+    if state() != ENABLED {
+        return None;
+    }
+    torn_slow(point, full)
+}
+
+/// Total fires recorded for `point` across all rule kinds (0 without a
+/// plan).  Used by chaos tests to assert a plan actually exercised a
+/// recovery path instead of passing vacuously.
+pub fn fired(point: &str) -> u64 {
+    if state() != ENABLED {
+        return 0;
+    }
+    let plan = PLAN.read().unwrap_or_else(|p| p.into_inner());
+    plan.as_ref().map_or(0, |p| {
+        p.rules
+            .iter()
+            .filter(|r| r.point == point)
+            .map(|r| r.fired.load(Ordering::Relaxed).min(r.max))
+            .sum()
+    })
+}
+
+/// Install a plan programmatically (tests).  Overrides `CAST_FAULTS`.
+/// Panics on a malformed spec.
+pub fn set_plan(spec: &str) {
+    match parse_plan(spec) {
+        Ok(p) => install(Some(p)),
+        Err(e) => panic!("set_plan: {e}"),
+    }
+}
+
+/// Remove any installed plan; every fault point returns to no-op.
+pub fn clear() {
+    install(None);
+}
+
+/// Serialize in-process tests that install plans: the plan store is
+/// process-global, so any two tests calling [`set_plan`] race unless
+/// they hold this lock.  Not part of the public API.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[inline]
+fn state() -> u8 {
+    let s = STATE.load(Ordering::Relaxed);
+    if s == UNINIT {
+        init_from_env()
+    } else {
+        s
+    }
+}
+
+#[cold]
+fn init_from_env() -> u8 {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let plan = match std::env::var("CAST_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => match parse_plan(&spec) {
+                Ok(p) => {
+                    crate::info!("fault: plan installed from CAST_FAULTS ({} rules)", p.rules.len());
+                    Some(p)
+                }
+                // a typo'd plan silently never firing would let a chaos
+                // CI run pass vacuously — fail fast and loudly instead
+                Err(e) => panic!("CAST_FAULTS parse error: {e}"),
+            },
+            _ => None,
+        };
+        install(plan);
+    });
+    STATE.load(Ordering::Relaxed)
+}
+
+fn install(plan: Option<Plan>) {
+    let enabled = plan.is_some();
+    *PLAN.write().unwrap_or_else(|p| p.into_inner()) = plan;
+    STATE.store(if enabled { ENABLED } else { INACTIVE }, Ordering::SeqCst);
+}
+
+#[cold]
+fn check_slow(point: &str) -> io::Result<()> {
+    let plan = PLAN.read().unwrap_or_else(|p| p.into_inner());
+    let Some(plan) = plan.as_ref() else { return Ok(()) };
+    for rule in plan.rules.iter().filter(|r| r.point == point) {
+        match rule.kind {
+            Kind::Err | Kind::Panic | Kind::Delay(_) => {
+                if !fires(rule, plan.seed) {
+                    continue;
+                }
+            }
+            Kind::Torn(_) | Kind::Flag => continue,
+        }
+        match rule.kind {
+            Kind::Err => {
+                crate::debug!("fault: injected io error at {point}");
+                return Err(io::Error::other(format!("injected fault at {point}")));
+            }
+            Kind::Panic => {
+                crate::info!("fault: injected panic at {point}");
+                panic!("injected panic at fault point {point}");
+            }
+            Kind::Delay(ms) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+            Kind::Torn(_) | Kind::Flag => unreachable!(),
+        }
+    }
+    Ok(())
+}
+
+#[cold]
+fn flag_slow(point: &str) -> bool {
+    let plan = PLAN.read().unwrap_or_else(|p| p.into_inner());
+    let Some(plan) = plan.as_ref() else { return false };
+    plan.rules
+        .iter()
+        .filter(|r| r.point == point && r.kind == Kind::Flag)
+        .any(|r| fires(r, plan.seed))
+}
+
+#[cold]
+fn torn_slow(point: &str, full: usize) -> Option<usize> {
+    let plan = PLAN.read().unwrap_or_else(|p| p.into_inner());
+    let plan = plan.as_ref()?;
+    for rule in plan.rules.iter().filter(|r| r.point == point) {
+        if let Kind::Torn(pct) = rule.kind {
+            if fires(rule, plan.seed) {
+                return Some(full * pct as usize / 100);
+            }
+        }
+    }
+    None
+}
+
+fn fires(rule: &Rule, seed: u64) -> bool {
+    let k = rule.hits.fetch_add(1, Ordering::Relaxed);
+    if rule.prob_bp < 10_000 {
+        let h = mix(seed, &rule.point, k);
+        if (h % 10_000) as u32 >= rule.prob_bp {
+            return false;
+        }
+    }
+    // claim one of the `max` fire slots; passes beyond the cap stay quiet
+    rule.fired.fetch_add(1, Ordering::Relaxed) < rule.max
+}
+
+/// FNV-1a over (seed, point, hit index): cheap, dependency-free, and
+/// stable across platforms, so a plan string pins the set of firing
+/// hit indices exactly.
+fn mix(seed: u64, point: &str, k: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in seed.to_le_bytes().iter().chain(point.as_bytes()).chain(&k.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn parse_plan(spec: &str) -> Result<Plan, String> {
+    let (body, seed) = match spec.rsplit_once('@') {
+        Some((body, s)) => {
+            (body, s.trim().parse::<u64>().map_err(|_| format!("bad plan seed {s:?}"))?)
+        }
+        None => (spec, 0),
+    };
+    let mut rules = Vec::new();
+    for part in body.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (point, rest) =
+            part.split_once('=').ok_or_else(|| format!("rule {part:?} is missing '='"))?;
+        let mut toks = rest.split(':');
+        let kind = parse_kind(toks.next().unwrap_or_default())?;
+        let mut prob_bp = 10_000u32;
+        let mut max = u64::MAX;
+        for t in toks {
+            if let Some(n) = t.strip_prefix('x') {
+                max = n.parse().map_err(|_| format!("bad fire count {t:?} in {part:?}"))?;
+            } else {
+                let p: f64 =
+                    t.parse().map_err(|_| format!("bad probability {t:?} in {part:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability {p} out of [0,1] in {part:?}"));
+                }
+                prob_bp = (p * 10_000.0).round() as u32;
+            }
+        }
+        rules.push(Rule {
+            point: point.trim().to_string(),
+            kind,
+            prob_bp,
+            max,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        });
+    }
+    if rules.is_empty() {
+        return Err(format!("fault plan {spec:?} has no rules"));
+    }
+    Ok(Plan { seed, rules })
+}
+
+fn parse_kind(tok: &str) -> Result<Kind, String> {
+    let (name, arg) = match tok.split_once('(') {
+        Some((n, rest)) => {
+            let arg = rest.strip_suffix(')').ok_or_else(|| format!("kind {tok:?} missing ')'"))?;
+            (n, Some(arg))
+        }
+        None => (tok, None),
+    };
+    match (name, arg) {
+        ("err", None) => Ok(Kind::Err),
+        ("panic", None) => Ok(Kind::Panic),
+        ("flag", None) => Ok(Kind::Flag),
+        ("delay", Some(ms)) => {
+            Ok(Kind::Delay(ms.parse().map_err(|_| format!("bad delay ms {ms:?}"))?))
+        }
+        ("torn", arg) => {
+            let pct: u32 = match arg {
+                Some(a) => a.parse().map_err(|_| format!("bad torn pct {a:?}"))?,
+                None => 50,
+            };
+            if pct > 100 {
+                return Err(format!("torn pct {pct} > 100"));
+            }
+            Ok(Kind::Torn(pct))
+        }
+        _ => Err(format!("unknown fault kind {tok:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every test that installs a plan holds the process-global
+    /// [`test_guard`] lock (shared with the serve-side unit tests that
+    /// inject faults; tests/integration_chaos.rs runs in its own binary).
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn inactive_points_are_noops() {
+        let _g = guard();
+        clear();
+        assert!(!active());
+        assert!(check("anything").is_ok());
+        assert!(!flag("anything"));
+        assert_eq!(torn_len("anything", 100), None);
+        assert_eq!(fired("anything"), 0);
+    }
+
+    #[test]
+    fn err_rule_fires_up_to_count() {
+        let _g = guard();
+        set_plan("io.test=err:x2@7");
+        assert!(check("other.point").is_ok());
+        assert!(check("io.test").is_err());
+        assert!(check("io.test").is_err());
+        assert!(check("io.test").is_ok(), "x2 cap must exhaust");
+        assert_eq!(fired("io.test"), 2);
+        clear();
+    }
+
+    #[test]
+    fn probability_selects_a_deterministic_hit_set() {
+        let _g = guard();
+        let run = || {
+            set_plan("q.test=flag:0.3@42");
+            let fired: Vec<usize> = (0..64).filter(|_| flag("q.test")).collect();
+            clear();
+            fired
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same plan string must fire the same hit indices");
+        assert!(!a.is_empty() && a.len() < 64, "p=0.3 over 64 hits: got {a:?}");
+    }
+
+    #[test]
+    fn seed_changes_the_hit_set() {
+        let _g = guard();
+        let run = |seed: u64| {
+            set_plan(&format!("q.seed=flag:0.5@{seed}"));
+            let fired: Vec<usize> = (0..64).filter(|_| flag("q.seed")).collect();
+            clear();
+            fired
+        };
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn torn_len_truncates_once() {
+        let _g = guard();
+        set_plan("w.test=torn(25):x1");
+        assert_eq!(torn_len("w.test", 400), Some(100));
+        assert_eq!(torn_len("w.test", 400), None, "x1 cap must exhaust");
+        clear();
+    }
+
+    #[test]
+    fn delay_rule_sleeps() {
+        let _g = guard();
+        set_plan("d.test=delay(20):x1");
+        let t = std::time::Instant::now();
+        assert!(check("d.test").is_ok());
+        assert!(t.elapsed().as_millis() >= 15, "delay(20) must actually sleep");
+        assert!(check("d.test").is_ok());
+        clear();
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic at fault point")]
+    fn panic_rule_panics() {
+        // intentionally takes the lock without releasing cleanly: the
+        // guard unwinds with the panic, and lock() recovers from poison
+        let _g = guard();
+        set_plan("p.test=panic:x1");
+        let _ = check("p.test");
+    }
+
+    #[test]
+    fn multi_rule_plans_parse() {
+        let _g = guard();
+        set_plan("a.x=err:0.5:x3; b.y=delay(5); c.z=torn(80):x1 @ 99");
+        assert!(active());
+        clear();
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "",
+            "noequals",
+            "p=unknownkind",
+            "p=err:1.5",
+            "p=err:xq",
+            "p=delay(abc)",
+            "p=torn(200)",
+            "p=err@notanumber",
+        ] {
+            assert!(parse_plan(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

@@ -3,11 +3,13 @@
 //! §Substitutions — no network in the build environment).
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod parallel;
 pub mod pgm;
 pub mod prop;
 pub mod rng;
+pub mod retry;
 pub mod simd;
 
 use std::time::Instant;

@@ -235,6 +235,11 @@ struct QueueInner<T> {
 /// micro-batcher relies on — and fails once the queue is closed; `pop`
 /// blocks when empty and returns `None` once the queue is closed *and*
 /// drained, so consumers naturally finish in-flight work on shutdown.
+///
+/// Poison-tolerant: the serve subsystem isolates worker panics with
+/// `catch_unwind`, so a queue shared with a panicked worker must keep
+/// serving the survivors — the state here (a deque + a flag) is valid
+/// at every await point, making poison recovery sound.
 pub struct Queue<T> {
     inner: Mutex<QueueInner<T>>,
     not_empty: Condvar,
@@ -252,12 +257,16 @@ impl<T> Queue<T> {
         }
     }
 
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Enqueue, blocking while the queue is at capacity.  Returns the
     /// item back as `Err` when the queue has been closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         while g.items.len() >= self.cap && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(|p| p.into_inner());
         }
         if g.closed {
             return Err(item);
@@ -271,7 +280,7 @@ impl<T> Queue<T> {
     /// Dequeue, blocking while the queue is open and empty.  `None`
     /// means closed-and-drained — the consumer's exit signal.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         loop {
             if let Some(x) = g.items.pop_front() {
                 drop(g);
@@ -281,7 +290,7 @@ impl<T> Queue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -289,7 +298,7 @@ impl<T> Queue<T> {
     /// in time" from "closed" (the micro-batcher's max-wait timer).
     pub fn pop_timeout(&self, dur: Duration) -> Pop<T> {
         let deadline = Instant::now() + dur;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         loop {
             if let Some(x) = g.items.pop_front() {
                 drop(g);
@@ -303,7 +312,10 @@ impl<T> Queue<T> {
             if now >= deadline {
                 return Pop::Empty;
             }
-            let (ng, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            let (ng, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             g = ng;
             if timeout.timed_out() {
                 // one final check: an item may have landed exactly at
@@ -321,18 +333,18 @@ impl<T> Queue<T> {
     /// Close the queue: further pushes fail, poppers drain what remains
     /// and then observe `None`/`Closed`.  Idempotent.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.lock().closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.lock().closed
     }
 
     /// Current depth (a metrics gauge; racy by nature).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {

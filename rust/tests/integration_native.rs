@@ -29,6 +29,7 @@ fn quick_cfg(steps: usize) -> TrainConfig {
         queue_depth: 2,
         log_every: 0,
         checkpoint: None,
+        ckpt_every: 0,
     }
 }
 
@@ -307,6 +308,7 @@ fn full_backprop_beats_frozen_backbone_on_equal_budget() {
             queue_depth: 2,
             log_every: 0,
             checkpoint: None,
+            ckpt_every: 0,
         };
         let mut t = Trainer::new(engine, man, cfg, 5).unwrap();
         let report = t.run().unwrap();

@@ -19,6 +19,7 @@ fn quick_cfg(steps: usize) -> TrainConfig {
         queue_depth: 2,
         log_every: 0,
         checkpoint: None,
+        ckpt_every: 0,
     }
 }
 
