@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test test-simd test-serve test-chaos gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve
+.PHONY: build test test-simd test-serve test-chaos test-trace gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve bench-profile
 
 build:
 	cargo build --release
@@ -49,6 +49,17 @@ test-serve:
 # writes; see DESIGN.md §Robustness).
 test-chaos:
 	cargo test -q --test integration_chaos
+
+# Tracing suite: disabled-path zero-cost + bit-identical outputs, span
+# trees, serve stage histograms, Chrome export (DESIGN.md §Observability).
+test-trace:
+	cargo test -q --test integration_trace
+
+# Per-op time-share profile of the seq-1024 CAST config, plus a Chrome
+# trace for Perfetto (see DESIGN.md §Observability for reading it).
+bench-profile: build
+	./target/release/cast gen --out bench_profile_artifacts --variant cast_topk --seq 1024 --nc 8 --kappa 128
+	./target/release/cast bench --table 5 --artifacts bench_profile_artifacts --seq 1024 --steps 5 --profile --trace-out trace.json
 
 # Run the inference server on a zero-artifact seq-1024 CAST config
 # (ctrl-c drains gracefully; see DESIGN.md §Serving for the endpoints).

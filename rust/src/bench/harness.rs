@@ -200,6 +200,11 @@ pub fn serve_row_json(report: &crate::serve::LoadReport) -> Json {
         ("err_stale", Json::num(report.err_stale as f64)),
         ("err_status", Json::num(report.err_status as f64)),
         ("err_transport", Json::num(report.err_transport as f64)),
+        // queue-vs-compute split from the server's X-Stage-Timings
+        // header (zeros unless the server ran with CAST_TRACE on)
+        ("staged", Json::num(report.staged as f64)),
+        ("stage_queue_ms", Json::num(report.stage_queue_ms)),
+        ("stage_compute_ms", Json::num(report.stage_compute_ms)),
         ("peak_rss_mb", Json::num(0.0)),
         ("threads", Json::num(Engine::threads() as f64)),
         ("simd", Json::Bool(crate::util::simd::enabled())),

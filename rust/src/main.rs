@@ -6,19 +6,27 @@
 //!            config, e.g. --seq 2048 --nc 16 --kappa 128 for perf runs)
 //!   train   [--dir <artifact-dir>] [--steps N --lr X --warmup N --seed S
 //!           --eval-every N --ckpt PATH --ckpt-every N --history PATH
+//!           --metrics-out PATH --metrics-every N
 //!           --bench-json PATH --assert-improves]
 //!           (without --dir: synthesize a native config from
 //!            --task/--variant/--seq/--nc/--kappa/--depth/--batch and
 //!            train end-to-end with zero artifacts; --ckpt resumes from
 //!            the checkpoint — or its digest-valid .prev rotation — when
 //!            one exists, --ckpt-every saves mid-run every N steps;
+//!            --metrics-out streams one JSON line per step — loss, lr,
+//!            grad_norm, nan_skips, steps/s, plus per-op time shares
+//!            every --metrics-every steps under CAST_TRACE=1;
 //!            --bench-json appends a train_steps_per_sec row)
 //!   eval    --dir <artifact-dir> [--ckpt PATH --batches N]
 //!   bench   --table {1,5} [--task text --steps N --isolate
-//!           --seq 1024,2048 --json out.json --append-json BENCH_native.json]
+//!           --seq 1024,2048 --json out.json --append-json BENCH_native.json
+//!           --profile --trace-out trace.json]
 //!           (--json overwrites; --append-json appends measured rows to
 //!            the cross-PR trajectory file — run once normally and once
-//!            under CAST_NO_SIMD=1 for the SIMD speedup pair)
+//!            under CAST_NO_SIMD=1 for the SIMD speedup pair.
+//!            --profile turns on the in-process tracer and prints the
+//!            per-op self-time share table after the bench; --trace-out
+//!            additionally writes Chrome trace-event JSON for Perfetto)
 //!   sweep   [--tasks text,listops --variants all --steps N --seed S
 //!           --bench-json PATH]
 //!           (variant bake-off: trains every variant × task combination
@@ -33,15 +41,19 @@
 //!   memmodel [--seq N --kappa K]                      (§3.4 predictions)
 //!   serve   [--addr H:P --dir <d1,d2,..> --ckpt PATH --max-batch N
 //!           --max-wait-us U --queue N --conn-workers N --infer-workers N
-//!           --deadline-ms MS --seed S | size flags as in train]
+//!           --deadline-ms MS --breaker-failures N --breaker-cooldown-ms MS
+//!           --seed S | size flags as in train]
 //!           (HTTP inference server with dynamic micro-batching; without
 //!            --dir it serves a synthetic config built from
 //!            --task/--variant/--seq/--nc/--kappa/--depth — zero
 //!            artifacts.  Endpoints: POST /predict, GET /models,
 //!            POST /models/reload, GET /healthz, GET /readyz,
-//!            GET /metrics, POST /admin/shutdown.  SIGINT/SIGTERM drain
-//!            gracefully; clients may bound queue time with an
-//!            X-Deadline-Ms header, capped by --deadline-ms.)
+//!            GET /metrics, GET /debug/trace?n=K, POST /admin/shutdown.
+//!            SIGINT/SIGTERM drain gracefully; clients may bound queue
+//!            time with an X-Deadline-Ms header, capped by
+//!            --deadline-ms.  /metrics exposes parse/queue/batch/
+//!            compute/reply stage histograms; under CAST_TRACE=1
+//!            responses also carry an X-Stage-Timings header.)
 //!   loadgen [--addr H:P --conns N --requests N --model KEY --seq N
 //!           --seed S --bench-json PATH --allow-errors]
 //!           (closed-loop client driving a running server; --bench-json
@@ -111,7 +123,9 @@ Variant bake-off (Table-2 story; all variants come from the registry):
   cast sweep --tasks text,listops --variants all --steps 200
 Serving (zero-artifact smoke):
   cast serve --seq 128 --max-batch 8 &   then   cast loadgen --conns 16 --requests 25
-See rust/src/main.rs header or DESIGN.md §Serving / §Attention variants for flags.";
+Profiling (per-op time shares + Chrome trace):
+  cast bench --table 1 --seq 256 --steps 2 --profile --trace-out trace.json
+See rust/src/main.rs header or DESIGN.md §Serving / §Observability for flags.";
 
 /// Write native-runnable artifact directories (manifest.json only) for
 /// the tiny smoke configs — the zero-Python path into train/eval/viz.
@@ -200,6 +214,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize("log-every", 10),
         checkpoint: args.opt_str("ckpt").map(PathBuf::from),
         ckpt_every: args.usize("ckpt-every", 0),
+        metrics_out: args.opt_str("metrics-out").map(PathBuf::from),
+        metrics_every: args.usize("metrics-every", 50),
     };
     let engine = Engine::auto()?;
     let mut trainer = Trainer::new(engine, manifest, cfg, args.u64("seed", 0) as u32)?;
@@ -273,11 +289,20 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    use cast::util::trace;
     let root = PathBuf::from(args.str("artifacts", "artifacts"));
     let table = args.usize("table", 1);
     let task = args.str("task", "text");
     let steps = args.usize("steps", 5);
-    let isolate = args.has("isolate");
+    let profile = args.has("profile");
+    let isolate = args.has("isolate") && !profile;
+    if args.has("isolate") && profile {
+        println!("note: --profile needs in-process spans; ignoring --isolate");
+    }
+    if profile {
+        trace::set_enabled(true);
+        trace::clear();
+    }
     let seq_lens: Vec<usize> = match args.opt_str("seq") {
         Some(s) => s
             .split(',')
@@ -294,6 +319,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let baseline = cast::runtime::native::variants::AttnVariant::Vanilla.name();
     let t = bench::table_from_rows(title, baseline, &seq_lens, &rows);
     println!("{}", t.render());
+    if profile {
+        let tr = trace::drain();
+        let stats = trace::summarize(&tr.spans);
+        println!("# per-op time share ({} spans)", tr.spans.len());
+        print!("{}", trace::render_table(&stats));
+        if let Some(path) = args.opt_str("trace-out") {
+            std::fs::write(&path, trace::chrome_json(&tr))
+                .with_context(|| format!("writing {path}"))?;
+            println!("chrome trace -> {path} (load in Perfetto or chrome://tracing)");
+        }
+        trace::set_enabled(false);
+    }
     if let Some(path) = args.opt_str("json") {
         bench::write_bench_json(&PathBuf::from(&path), &rows)?;
         println!("bench json -> {path} ({} rows, {} threads)", rows.len(), Engine::threads());
@@ -488,7 +525,11 @@ fn cmd_memmodel(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use cast::serve::{install_signal_handlers, ModelSource, Registry, ServeConfig, Server};
     let engine = Engine::auto()?;
-    let registry = std::sync::Arc::new(Registry::new(engine));
+    let breaker_failures = args.u64("breaker-failures", 5) as u32;
+    let breaker_cooldown = std::time::Duration::from_millis(args.u64("breaker-cooldown-ms", 5000));
+    anyhow::ensure!(breaker_failures > 0, "--breaker-failures must be at least 1");
+    let registry =
+        std::sync::Arc::new(Registry::with_breaker(engine, breaker_failures, breaker_cooldown));
     let seed = args.u64("seed", 0) as u32;
     match args.opt_str("dir") {
         Some(dirs) => {
@@ -524,12 +565,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         infer_workers: args.usize("infer-workers", 1),
         max_body: args.usize("max-body", 8 << 20),
         deadline_ms: args.u64("deadline-ms", 60_000),
+        breaker_failures,
+        breaker_cooldown,
     };
     install_signal_handlers();
     let server = Server::bind(cfg, registry)?;
     println!(
         "serving on http://{} — endpoints: POST /predict, GET /models, POST /models/reload, \
-         GET /healthz, GET /readyz, GET /metrics, POST /admin/shutdown (ctrl-c drains gracefully)",
+         GET /healthz, GET /readyz, GET /metrics, GET /debug/trace, POST /admin/shutdown \
+         (ctrl-c drains gracefully)",
         server.local_addr()
     );
     server.run()
@@ -562,6 +606,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.server_max_batch,
         report.batch_rows_max
     );
+    if report.staged > 0 {
+        // server-side split from X-Stage-Timings (emitted when the
+        // server runs with CAST_TRACE=1)
+        println!(
+            "stage split ({} traced responses): queue {:.2} ms  compute {:.2} ms mean",
+            report.staged, report.stage_queue_ms, report.stage_compute_ms
+        );
+    }
     if report.errors > 0 || report.retried > 0 {
         println!(
             "loadgen errors: {} connect, {} stale-conn, {} non-200, {} transport \

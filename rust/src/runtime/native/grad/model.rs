@@ -18,6 +18,7 @@ use crate::runtime::artifacts::{Manifest, ModelMeta};
 use crate::runtime::tensor::HostTensor;
 use crate::util::parallel;
 use crate::util::simd;
+use crate::util::trace;
 
 use super::super::layer::{CastScratch, Dims};
 use super::super::model::{apply_norm, dims_for, head_forward, softmax_xent, Params, NORM_EPS};
@@ -441,6 +442,7 @@ fn encode_backward(
     let GradScratch { cast_bwd, base_bwd, dx, dnorm, dbranch, dffn_in, dhid, act, dx0, .. } = ws;
 
     // mean-pool backward: every token row gets its batch row / n
+    let t = trace::span("bwd.pool");
     zeroed(dx, rows * d);
     let inv = 1.0 / n as f32;
     let blk = parallel::row_block(rows);
@@ -452,17 +454,22 @@ fn encode_backward(
             simd::scale8(dst, inv);
         }
     });
+    drop(t);
 
     if let Some(x_in) = &tape.out_norm_in {
+        let t = trace::span("bwd.norm");
         zeroed(dnorm, rows * d);
         norm_backward(p, meta, store, "out_norm", x_in, dx, dnorm)?;
         std::mem::swap(dx, dnorm);
+        drop(t);
     }
 
     for (i, block) in tape.blocks.iter().enumerate().rev() {
         let blk_name = format!("blocks.{i}");
+        let li = i as i32;
         if meta.prenorm {
             // out = x_mid + ffn(norm2(x_mid)); x_mid = x_in + attn(norm1(x_in))
+            let t = trace::span_layer("bwd.ffn", li);
             ffn_backward(
                 p,
                 store,
@@ -476,6 +483,8 @@ fn encode_backward(
                 act,
                 dffn_in,
             )?;
+            drop(t);
+            let t = trace::span_layer("bwd.norm", li);
             norm_backward(
                 p,
                 meta,
@@ -485,9 +494,11 @@ fn encode_backward(
                 dffn_in,
                 dx,
             )?;
+            drop(t);
             dbranch.clear();
             dbranch.extend_from_slice(dx);
             zeroed(dnorm, rows * d);
+            let t = trace::span_layer("bwd.attn", li);
             attn_backward(
                 p,
                 meta,
@@ -500,6 +511,8 @@ fn encode_backward(
                 cast_bwd,
                 base_bwd,
             )?;
+            drop(t);
+            let t = trace::span_layer("bwd.norm", li);
             norm_backward(
                 p,
                 meta,
@@ -509,9 +522,11 @@ fn encode_backward(
                 dnorm,
                 dx,
             )?;
+            drop(t);
         } else {
             // out = norm2(y1 + ffn(y1)); y1 = norm1(x + attn(x))
             zeroed(dnorm, rows * d);
+            let t = trace::span_layer("bwd.norm", li);
             norm_backward(
                 p,
                 meta,
@@ -521,7 +536,9 @@ fn encode_backward(
                 dx,
                 dnorm,
             )?;
+            drop(t);
             std::mem::swap(dx, dnorm);
+            let t = trace::span_layer("bwd.ffn", li);
             ffn_backward(
                 p,
                 store,
@@ -535,8 +552,10 @@ fn encode_backward(
                 act,
                 dffn_in,
             )?;
+            drop(t);
             ops::add_assign(dx, dffn_in);
             zeroed(dnorm, rows * d);
+            let t = trace::span_layer("bwd.norm", li);
             norm_backward(
                 p,
                 meta,
@@ -546,9 +565,11 @@ fn encode_backward(
                 dx,
                 dnorm,
             )?;
+            drop(t);
             std::mem::swap(dx, dnorm);
             dbranch.clear();
             dbranch.extend_from_slice(dx);
+            let t = trace::span_layer("bwd.attn", li);
             attn_backward(
                 p,
                 meta,
@@ -561,10 +582,12 @@ fn encode_backward(
                 cast_bwd,
                 base_bwd,
             )?;
+            drop(t);
         }
     }
 
     // input projection backward
+    let t = trace::span("bwd.embed");
     {
         let pair = store.consecutive(&["proj.b".to_string(), "proj.w".to_string()])?;
         let [proj_b, proj_w] = pair else { unreachable!() };
@@ -590,6 +613,7 @@ fn encode_backward(
         let dst = &mut g_emb[tok * d_emb..(tok + 1) * d_emb];
         simd::add8(dst, &dx0[r * d_emb..(r + 1) * d_emb]);
     }
+    drop(t);
     Ok(())
 }
 
@@ -659,6 +683,7 @@ pub fn loss_and_grads(
     let (loss, acc, dlogits) = softmax_xent(&head.logits, labels, nc)?;
 
     // head backward
+    let th = trace::span("bwd.head");
     let mut dh = vec![0.0f32; b * d];
     {
         let pair = store.consecutive(&["head.out.b".to_string(), "head.out.w".to_string()])?;
@@ -684,6 +709,7 @@ pub fn loss_and_grads(
         gops::dense_grad_params(&feats, &dh, b, d_in, d, fc_w.as_mut_slice(), fc_b.as_mut_slice());
     }
     gops::dense_grad_input_acc(&dh, p.f("head.fc.w")?, b, d_in, d, &mut dfeats);
+    drop(th);
 
     let mut fingerprint = 0xcbf2_9ce4_8422_2325u64;
     for t in &tapes {

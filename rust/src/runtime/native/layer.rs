@@ -19,6 +19,7 @@ use anyhow::{ensure, Result};
 use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::simd;
+use crate::util::trace;
 
 use super::ops::{self, AttnFn, NEG_INF};
 
@@ -308,10 +309,12 @@ pub fn cast_layer(
     let blk = parallel::row_block(rows);
 
     // step 1: projections (eq. 1) — row-parallel blocked matmuls
+    let t = trace::span("attn.qkv_proj");
     ops::dense_into(x, p.wq_w, p.wq_b, rows, d, d, &mut ws.q);
     ops::dense_into(x, p.wk_w, p.wk_b, rows, d, d, &mut ws.k);
     ops::dense_into(x, p.wv_w, p.wv_b, rows, d, d, &mut ws.v);
     ops::dense_into(x, p.phi_w, p.phi_b, rows, d, 1, &mut ws.phi); // (B·N,)
+    drop(t);
 
     let CastScratch {
         q,
@@ -336,6 +339,7 @@ pub fn cast_layer(
 
     // step 2: surrogate similarities A_q, A_k (eq. 6), per head, sharded
     // over row blocks
+    let t = trace::span("attn.surrogate");
     zeroed(a_q, rows * h * n_c);
     zeroed(a_k, rows * h * n_c);
     let s = p.s;
@@ -402,9 +406,11 @@ pub fn cast_layer(
         },
     );
     let a_q_raw_s: &[f32] = a_q_raw.as_slice();
+    drop(t);
 
     // step 4: clustering (indices are non-differentiable, paper §3.2);
     // the assignment stays in the scratch so the autograd tape sees it
+    let t = trace::span("attn.cluster");
     let (idx_new, valid_new) = cluster(&dims.clustering, &a_g, b, n, n_c, kappa)?;
     *idx = idx_new;
     *valid = valid_new;
@@ -423,8 +429,10 @@ pub fn cast_layer(
         }
     }
 
+    drop(t);
     // step 5: fused intra-cluster attention + cluster summaries (eq. 3/4),
     // one task per (batch, cluster) cell with per-worker κ×κ scratch
+    let t = trace::span("attn.av");
     zeroed(r_intra, b * n_c * kappa * d);
     zeroed(r_inter, b * n_c * d);
     let idx_s: &[usize] = idx.as_slice();
@@ -497,7 +505,9 @@ pub fn cast_layer(
         },
     );
 
+    drop(t);
     // step 6a: combination weights A_sum (eq. 5), row-parallel
+    let t = trace::span("attn.combine");
     zeroed(a_sum, rows * n_c);
     parallel::par_chunks_mut(a_sum.as_mut_slice(), blk * n_c, |ci, chunk| {
         let r0 = ci * blk;
@@ -549,7 +559,10 @@ pub fn cast_layer(
         }
     });
 
+    drop(t);
+    let t = trace::span("attn.out_proj");
     let out = ops::dense(r.as_slice(), p.wo_w, p.wo_b, rows, d, d);
+    drop(t);
     Ok((out, a_g))
 }
 

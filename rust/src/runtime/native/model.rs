@@ -30,6 +30,7 @@ use crate::util::json::Json;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::simd;
+use crate::util::trace;
 
 use super::grad;
 use super::layer::{CastScratch, Dims};
@@ -42,6 +43,19 @@ const ADAM_EPS: f32 = 1e-8;
 const WEIGHT_DECAY: f32 = 1e-2;
 const GRAD_CLIP: f32 = 1.0;
 pub(crate) const NORM_EPS: f32 = 1e-5;
+
+/// Pre-clip global gradient norm of the most recent `train_step` on any
+/// thread (f32 bits in an atomic).  The program contract fixes the
+/// output arity of `train_step`, so the trainer's metrics stream reads
+/// this side-channel instead of a new output tensor.  Purely
+/// observational: never read back into the math.
+static LAST_GRAD_NORM: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+
+/// The global gradient norm recorded by the last [`run_train_step`]
+/// (0.0 before any step has run).
+pub fn last_grad_norm() -> f32 {
+    f32::from_bits(LAST_GRAD_NORM.load(std::sync::atomic::Ordering::Relaxed))
+}
 
 /// Borrowed flat parameter list, addressable by manifest name.
 pub struct Params<'a> {
@@ -207,6 +221,7 @@ fn encode(
 
     // embedding + fixed sinusoidal positions + input projection, sharded
     // over row blocks (the batch×sequence grid)
+    let t = trace::span("embed");
     let emb = p.f("embed.emb")?;
     let pe = ops::sinusoidal_positions(n, d_emb);
     let mut x = vec![0.0f32; rows * d_emb];
@@ -225,36 +240,54 @@ fn encode(
         }
     });
     let mut x = ops::dense(&x, p.f("proj.w")?, p.f("proj.b")?, rows, d_emb, d);
+    drop(t);
 
     let dims = dims_for(meta, b)?;
     let mut ags = Vec::new();
     for i in 0..meta.depth {
+        let li = i as i32;
         let blk = format!("blocks.{i}");
         if meta.prenorm {
+            let t = trace::span_layer("norm", li);
             ws.xn.clear();
             ws.xn.extend_from_slice(&x);
             apply_norm(p, meta, &format!("{blk}.norm1"), &mut ws.xn)?;
+            drop(t);
+            let t = trace::span_layer("attn", li);
             let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &ws.xn, &dims, &mut ws.cast)?;
+            drop(t);
             if collect_ag {
                 ags.push(ag);
             }
             ops::add_assign(&mut x, &a);
+            let t = trace::span_layer("norm", li);
             ws.xn.clear();
             ws.xn.extend_from_slice(&x);
             apply_norm(p, meta, &format!("{blk}.norm2"), &mut ws.xn)?;
+            drop(t);
+            let t = trace::span_layer("ffn", li);
             let name = format!("{blk}.ffn");
             ffn(p, &name, &ws.xn, rows, d, meta.d_ff, &mut ws.hid, &mut ws.ffn_out)?;
             ops::add_assign(&mut x, &ws.ffn_out);
+            drop(t);
         } else {
+            let t = trace::span_layer("attn", li);
             let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &x, &dims, &mut ws.cast)?;
+            drop(t);
             if collect_ag {
                 ags.push(ag);
             }
             ops::add_assign(&mut x, &a);
+            let t = trace::span_layer("norm", li);
             apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
+            drop(t);
+            let t = trace::span_layer("ffn", li);
             ffn(p, &format!("{blk}.ffn"), &x, rows, d, meta.d_ff, &mut ws.hid, &mut ws.ffn_out)?;
             ops::add_assign(&mut x, &ws.ffn_out);
+            drop(t);
+            let t = trace::span_layer("norm", li);
             apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
+            drop(t);
         }
     }
     if meta.prenorm {
@@ -262,6 +295,7 @@ fn encode(
     }
 
     // mean-pool over the sequence, one task per batch element
+    let t = trace::span("pool");
     let mut pooled = vec![0.0f32; b * d];
     let inv = 1.0 / n as f32;
     let xs: &[f32] = &x;
@@ -271,6 +305,7 @@ fn encode(
             simd::axpy8(prow, inv, &xs[src..src + d]);
         }
     });
+    drop(t);
     Ok((pooled, ags))
 }
 
@@ -337,6 +372,7 @@ pub(crate) fn head_forward(
     b: usize,
     d_in: usize,
 ) -> Result<HeadForward> {
+    let _t = trace::span("head");
     let d = meta.d;
     let h_pre = ops::dense(feats, p.f("head.fc.w")?, p.f("head.fc.b")?, b, d_in, d);
     let mut h = h_pre.clone();
@@ -578,6 +614,7 @@ pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
     let tokens = inputs[3 * p_count + 2];
     let labels = inputs[3 * p_count + 3].as_s32().context("labels")?;
 
+    let tg = trace::span("train.backprop");
     let (loss, acc, grads) = match train_scope(manifest)? {
         TrainScope::Full => {
             let mut ws = grad::GradScratch::new();
@@ -589,15 +626,20 @@ pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
             head_only_grads(manifest, &p, tokens, labels)?
         }
     };
+    drop(tg);
 
     // global-norm clip over the trained subset (train.py: clip = 1.0)
+    let tc = trace::span("train.grad_clip");
     let mut sq = 0.0f64;
     for g in grads.iter().flatten() {
         sq += g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
     }
     let gnorm = sq.sqrt() as f32;
     let clip_scale = (GRAD_CLIP / gnorm.max(1e-6)).min(1.0);
+    LAST_GRAD_NORM.store(gnorm.to_bits(), std::sync::atomic::Ordering::Relaxed);
+    drop(tc);
 
+    let ta = trace::span("train.adamw");
     let t = step + 1.0;
     let bc1 = 1.0 - ADAM_B1.powf(t);
     let bc2 = 1.0 - ADAM_B2.powf(t);
@@ -641,6 +683,7 @@ pub fn run_train_step(manifest: &Manifest, inputs: &[&HostTensor]) -> Result<Vec
             }
         }
     }
+    drop(ta);
 
     let mut outputs = p_out;
     outputs.extend(m_out);

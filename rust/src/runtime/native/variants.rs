@@ -184,6 +184,19 @@ fn zero_ag(dims: &Dims) -> Vec<f32> {
     vec![0.0f32; dims.b * dims.n * dims.n_c]
 }
 
+/// Trace span name of one forward dispatch (static, per variant).
+const fn attn_span_name(v: AttnVariant) -> &'static str {
+    match v {
+        AttnVariant::CastTopk => "attn.cast_topk",
+        AttnVariant::CastSa => "attn.cast_sa",
+        AttnVariant::Vanilla => "attn.vanilla",
+        AttnVariant::Local => "attn.local",
+        AttnVariant::Lsh => "attn.lsh",
+        AttnVariant::Clustered => "attn.clustered",
+        AttnVariant::Tost => "attn.tost",
+    }
+}
+
 // ---------------------------------------------------------------------------
 // forward dispatch
 // ---------------------------------------------------------------------------
@@ -199,6 +212,14 @@ pub fn attn_forward(
     dims: &Dims,
     ws: &mut CastScratch,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
+    // per-layer compute fault point (chaos testing: `err` bubbles up as
+    // an engine failure, `panic` exercises the serve worker isolation,
+    // `delay` models a slow layer); `prefix` names the firing layer
+    if crate::util::fault::active() {
+        crate::util::fault::check("engine.layer")
+            .map_err(|e| anyhow::anyhow!("{e} (layer {prefix})"))?;
+    }
+    let _t = crate::util::trace::span(attn_span_name(v));
     match v {
         AttnVariant::CastTopk | AttnVariant::CastSa => {
             flayer::cast_layer(&cast_params(p, prefix)?, x, dims, ws)

@@ -43,6 +43,13 @@ pub struct PredictJob {
     /// `--deadline-ms`); a job still queued past this is shed with 503
     /// instead of computed.
     pub deadline: Option<Instant>,
+    /// When the connection worker pushed the job (stage timing: the
+    /// queue-wait stage runs from here to `popped`).
+    pub enqueued: Instant,
+    /// When a batch former first pulled the job off the queue (stage
+    /// timing: batch formation runs from here to batch execution).
+    /// `None` until then; timing fields degrade to zero if unset.
+    pub popped: Option<Instant>,
 }
 
 /// What each job gets back.
@@ -76,6 +83,12 @@ pub struct ReplyOk {
     pub batch_rows: usize,
     pub model: String,
     pub version: u64,
+    /// Stage split, µs: time waiting in the queue, …
+    pub queue_us: u64,
+    /// … time between the former pulling the job and the batch running, …
+    pub batch_us: u64,
+    /// … and the shared forward (merge + engine) for the whole batch.
+    pub compute_us: u64,
 }
 
 /// Same snapshot ⇒ same bucket (name + version via pointer identity).
@@ -105,7 +118,11 @@ impl BatchFormer {
     pub fn next_batch(&mut self) -> Option<Vec<PredictJob>> {
         let first = match self.held.pop_front() {
             Some(j) => j,
-            None => self.queue.pop()?,
+            None => {
+                let mut j = self.queue.pop()?;
+                j.popped = Some(Instant::now());
+                j
+            }
         };
         let entry = first.entry.clone();
         let mut rows = first.rows;
@@ -129,7 +146,8 @@ impl BatchFormer {
                 break;
             }
             match self.queue.pop_timeout(deadline - now) {
-                Pop::Item(j) => {
+                Pop::Item(mut j) => {
+                    j.popped = Some(Instant::now());
                     if same_bucket(&j, &entry) && rows + j.rows <= self.max_batch {
                         rows += j.rows;
                         batch.push(j);
@@ -168,13 +186,15 @@ pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Me
         return true;
     };
     metrics.observe_batch(batch.iter().map(|j| j.rows).sum());
+    // the batch-formation stage of every rider ends here
+    let formed = Instant::now();
 
     // panic isolation: AssertUnwindSafe is sound here because on unwind
     // we answer every job from the still-owned `batch` and the caller
     // discards the (possibly torn) scratch
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         crate::util::fault::check("serve.infer.batch").map_err(|e| e.to_string())?;
-        exec_batch(&entry, &batch, scratch)
+        exec_batch(&entry, &batch, scratch, formed)
     }));
     match outcome {
         Ok(Ok(())) => {
@@ -202,7 +222,12 @@ pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Me
 /// The fallible compute-and-demux section of [`run_batch`].  On success
 /// every job has received its reply; on `Err` nothing was sent and the
 /// caller fans the message out.
-fn exec_batch(entry: &Arc<ModelEntry>, batch: &[PredictJob], scratch: &mut dyn Scratch) -> Result<(), String> {
+fn exec_batch(
+    entry: &Arc<ModelEntry>,
+    batch: &[PredictJob],
+    scratch: &mut dyn Scratch,
+    formed: Instant,
+) -> Result<(), String> {
     let meta = &entry.manifest.meta;
     let n = meta.seq_len;
     let total: usize = batch.iter().map(|j| j.rows).sum();
@@ -229,6 +254,8 @@ fn exec_batch(entry: &Arc<ModelEntry>, batch: &[PredictJob], scratch: &mut dyn S
         Ok(_) => return Err("predict returned no outputs".to_string()),
         Err(e) => return Err(format!("predict failed: {e:#}")),
     };
+    // one shared forward ⇒ one compute figure for every rider
+    let compute_us = formed.elapsed().as_micros() as u64;
     let nc = meta.n_classes;
     let values = match logits.as_f32() {
         Ok(v) if v.len() == total * nc => v,
@@ -245,12 +272,20 @@ fn exec_batch(entry: &Arc<ModelEntry>, batch: &[PredictJob], scratch: &mut dyn S
     let mut off = 0;
     for job in batch {
         let span = job.rows * nc;
+        // Instant::duration_since saturates to zero, so clock-order
+        // surprises degrade to a 0µs stage, never a panic
+        let queue_us =
+            job.popped.map_or(0, |p| p.duration_since(job.enqueued).as_micros() as u64);
+        let batch_us = job.popped.map_or(0, |p| formed.duration_since(p).as_micros() as u64);
         let reply = ReplyOk {
             logits: values[off..off + span].to_vec(),
             n_classes: nc,
             batch_rows: total,
             model: entry.name.clone(),
             version: entry.version,
+            queue_us,
+            batch_us,
+            compute_us,
         };
         off += span;
         // a vanished client (dropped receiver) is not an error, and
@@ -288,7 +323,16 @@ mod tests {
         let row: Vec<i32> = (0..n).map(|_| rng.below(50) as i32).collect();
         let tokens = pad_rows(&[row], n, 0).unwrap();
         let (tx, rx) = sync_channel(1);
-        (PredictJob { entry: entry.clone(), tokens, rows: 1, reply: tx, deadline: None }, rx)
+        let j = PredictJob {
+            entry: entry.clone(),
+            tokens,
+            rows: 1,
+            reply: tx,
+            deadline: None,
+            enqueued: Instant::now(),
+            popped: None,
+        };
+        (j, rx)
     }
 
     #[test]
@@ -361,6 +405,8 @@ mod tests {
         for (rx, want) in rxs.iter().zip(&want) {
             let got = rx.recv().unwrap().unwrap();
             assert_eq!(got.batch_rows, 3);
+            assert_eq!(got.queue_us, 0, "jobs never sat in a queue here");
+            assert_eq!(got.batch_us, 0, "no former pulled these jobs");
             assert_eq!(&got.logits, want, "batched logits must equal solo logits exactly");
         }
         assert_eq!(metrics.predict_requests(), 0, "run_batch does not count requests");
@@ -383,6 +429,8 @@ mod tests {
             rows: 1,
             reply: tx,
             deadline: None,
+            enqueued: Instant::now(),
+            popped: None,
         };
         assert!(run_batch(vec![mk(tx1), mk(tx2)], scratch.as_mut(), &metrics));
         for rx in [rx1, rx2] {

@@ -16,7 +16,7 @@
 
 use std::io::{self, ErrorKind};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -89,6 +89,14 @@ pub struct LoadReport {
     /// Largest micro-batch any response reported riding in (observed
     /// proof that coalescing actually happened).
     pub batch_rows_max: usize,
+    /// Responses that carried an `X-Stage-Timings` header (the server
+    /// emits it only while tracing is enabled; 0 otherwise).
+    pub staged: usize,
+    /// Mean server-side queue wait over staged responses, ms — the
+    /// client-observed queue-vs-compute split.
+    pub stage_queue_ms: f64,
+    /// Mean server-side compute (shared forward) over staged responses, ms.
+    pub stage_compute_ms: f64,
 }
 
 /// Ask the server what it serves and pick the target model.
@@ -154,6 +162,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let err_status = AtomicUsize::new(0);
     let err_transport = AtomicUsize::new(0);
     let batch_rows_max = AtomicUsize::new(0);
+    let staged = AtomicUsize::new(0);
+    let queue_us_sum = AtomicU64::new(0);
+    let compute_us_sum = AtomicU64::new(0);
     let t0 = Instant::now();
     parallel::scoped_workers(conns, |w| {
         let connect = || {
@@ -213,6 +224,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                     {
                         batch_rows_max.fetch_max(rows, Ordering::Relaxed);
                     }
+                    // server-side stage split, present iff tracing is on
+                    if let Some((q_us, c_us)) =
+                        r.headers.get("x-stage-timings").and_then(|v| parse_stage_header(v))
+                    {
+                        staged.fetch_add(1, Ordering::Relaxed);
+                        queue_us_sum.fetch_add(q_us, Ordering::Relaxed);
+                        compute_us_sum.fetch_add(c_us, Ordering::Relaxed);
+                    }
                 }
                 Ok(_) => {
                     // a served non-200 — the connection is still good
@@ -258,7 +277,38 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         p99_ms: percentile(&lats, 0.99),
         server_max_batch,
         batch_rows_max: batch_rows_max.load(Ordering::Relaxed),
+        staged: staged.load(Ordering::Relaxed),
+        stage_queue_ms: stage_mean_ms(&queue_us_sum, &staged),
+        stage_compute_ms: stage_mean_ms(&compute_us_sum, &staged),
     })
+}
+
+/// Mean of a µs sum over `n` staged responses, in ms (0 when none).
+fn stage_mean_ms(sum_us: &AtomicU64, n: &AtomicUsize) -> f64 {
+    let n = n.load(Ordering::Relaxed);
+    if n == 0 {
+        return 0.0;
+    }
+    sum_us.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
+}
+
+/// Parse an `X-Stage-Timings` value
+/// (`parse=..;queue=..;batch=..;compute=..;reply=..`, all µs) into the
+/// `(queue, compute)` pair the report aggregates.  `None` on any
+/// malformed field — a wire-corrupted header must not skew means.
+fn parse_stage_header(v: &str) -> Option<(u64, u64)> {
+    let mut queue = None;
+    let mut compute = None;
+    for part in v.split(';') {
+        let (k, val) = part.split_once('=')?;
+        let n: u64 = val.trim().parse().ok()?;
+        match k.trim() {
+            "queue" => queue = Some(n),
+            "compute" => compute = Some(n),
+            _ => {}
+        }
+    }
+    Some((queue?, compute?))
 }
 
 /// The stale keep-alive signature: the connection died without a
@@ -310,6 +360,18 @@ mod tests {
         for kind in [ErrorKind::InvalidData, ErrorKind::TimedOut, ErrorKind::ConnectionRefused] {
             assert!(!is_stale_conn(&io::Error::new(kind, "x")), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn stage_header_parses_and_rejects_malformed() {
+        assert_eq!(
+            parse_stage_header("parse=12;queue=340;batch=90;compute=1800;reply=8"),
+            Some((340, 1800))
+        );
+        assert_eq!(parse_stage_header("queue=1;compute=2"), Some((1, 2)));
+        assert_eq!(parse_stage_header("queue=1"), None, "compute missing");
+        assert_eq!(parse_stage_header("queue=x;compute=2"), None, "non-numeric");
+        assert_eq!(parse_stage_header("garbage"), None);
     }
 
     #[test]

@@ -85,6 +85,14 @@ impl Histogram {
 
     fn render(&self, name: &str, help: &str, out: &mut String) {
         out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+        self.render_series(name, "", out);
+    }
+
+    /// Emit the `_bucket`/`_sum`/`_count` series.  `label` is an extra
+    /// label pair spliced before `le` (e.g. `stage="queue",`) so one
+    /// metric family can carry several labeled histograms; empty for
+    /// the unlabeled case.
+    fn render_series(&self, name: &str, label: &str, out: &mut String) {
         let mut cum = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
             cum += c.load(Ordering::Relaxed);
@@ -93,10 +101,14 @@ impl Histogram {
             } else {
                 "+Inf".to_string()
             };
-            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            out.push_str(&format!("{name}_bucket{{{label}le=\"{le}\"}} {cum}\n"));
         }
-        out.push_str(&format!("{name}_sum {}\n", trim_float(self.sum())));
-        out.push_str(&format!("{name}_count {cum}\n"));
+        let sfx = match label.strip_suffix(',') {
+            Some(l) => format!("{{{l}}}"),
+            None => String::new(),
+        };
+        out.push_str(&format!("{name}_sum{sfx} {}\n", trim_float(self.sum())));
+        out.push_str(&format!("{name}_count{sfx} {cum}\n"));
     }
 }
 
@@ -118,16 +130,18 @@ pub enum Endpoint {
     Healthz,
     Reload,
     Shutdown,
+    DebugTrace,
     Other,
 }
 
-const ENDPOINTS: [(Endpoint, &str); 7] = [
+const ENDPOINTS: [(Endpoint, &str); 8] = [
     (Endpoint::Predict, "predict"),
     (Endpoint::Models, "models"),
     (Endpoint::Metrics, "metrics"),
     (Endpoint::Healthz, "healthz"),
     (Endpoint::Reload, "reload"),
     (Endpoint::Shutdown, "shutdown"),
+    (Endpoint::DebugTrace, "debug_trace"),
     (Endpoint::Other, "other"),
 ];
 
@@ -135,10 +149,14 @@ fn endpoint_index(e: Endpoint) -> usize {
     ENDPOINTS.iter().position(|(k, _)| *k == e).unwrap()
 }
 
+/// Labels of the /predict pipeline stages, in pipeline order.  Indexes
+/// line up with [`Metrics::stages`] and [`Metrics::observe_stages`].
+pub const STAGES: [&str; 5] = ["parse", "queue", "batch", "compute", "reply"];
+
 /// All serve metrics, shared across every worker via `Arc`.
 pub struct Metrics {
     started: Instant,
-    requests: [AtomicU64; 7],
+    requests: [AtomicU64; 8],
     responses_2xx: AtomicU64,
     responses_4xx: AtomicU64,
     responses_5xx: AtomicU64,
@@ -153,6 +171,8 @@ pub struct Metrics {
     worker_panics: AtomicU64,
     pub batch_rows: Histogram,
     pub latency: Histogram,
+    /// Per-/predict pipeline stage wall time, indexed as [`STAGES`].
+    pub stages: [Histogram; 5],
 }
 
 impl Default for Metrics {
@@ -176,6 +196,16 @@ impl Metrics {
             worker_panics: AtomicU64::new(0),
             batch_rows: Histogram::new(&BATCH_BOUNDS),
             latency: Histogram::new(&LATENCY_BOUNDS),
+            stages: std::array::from_fn(|_| Histogram::new(&LATENCY_BOUNDS)),
+        }
+    }
+
+    /// Record one /predict request's pipeline split (seconds per stage,
+    /// in [`STAGES`] order: parse, queue wait, batch formation, compute,
+    /// reply serialization).
+    pub fn observe_stages(&self, seconds: [f64; 5]) {
+        for (h, v) in self.stages.iter().zip(seconds) {
+            h.observe(v);
         }
     }
 
@@ -304,6 +334,14 @@ impl Metrics {
             "Wall time of /predict requests (enqueue to reply).",
             &mut out,
         );
+        out.push_str(
+            "# HELP cast_serve_stage_seconds Per-request pipeline stage wall time \
+             (parse, queue wait, batch formation, compute, reply).\n\
+             # TYPE cast_serve_stage_seconds histogram\n",
+        );
+        for (h, stage) in self.stages.iter().zip(STAGES) {
+            h.render_series("cast_serve_stage_seconds", &format!("stage=\"{stage}\","), &mut out);
+        }
         for (name, q) in [
             ("cast_serve_request_latency_p50_seconds", 0.5),
             ("cast_serve_request_latency_p99_seconds", 0.99),
@@ -383,6 +421,24 @@ mod tests {
         }
         assert_eq!(m.predict_requests(), 2);
         assert_eq!(m.error_responses(), 1);
+    }
+
+    #[test]
+    fn stage_histograms_render_per_label_and_count_requests() {
+        let m = Metrics::new();
+        m.observe_stages([0.0001, 0.002, 0.0008, 0.02, 0.0001]);
+        m.observe_stages([0.0002, 0.004, 0.0010, 0.04, 0.0002]);
+        let page = m.render(0, 1, &[]);
+        for stage in STAGES {
+            let needle = format!("cast_serve_stage_seconds_count{{stage=\"{stage}\"}} 2");
+            assert!(page.contains(&needle), "missing {needle:?} in:\n{page}");
+        }
+        assert!(page.contains("cast_serve_stage_seconds_bucket{stage=\"queue\",le=\"0.0025\"}"));
+        // every stage histogram saw exactly one observation per request
+        for h in &m.stages {
+            assert_eq!(h.count(), 2);
+        }
+        assert!(m.stages[3].sum() > m.stages[0].sum(), "compute dominates parse");
     }
 
     #[test]

@@ -62,11 +62,6 @@ impl Breaker {
         }
     }
 
-    /// Serving defaults: 5 consecutive batch failures, 5 s cooldown.
-    pub fn serve_default() -> Breaker {
-        Breaker::new(5, Duration::from_secs(5))
-    }
-
     /// May a request for this model proceed?  In the open state, flips
     /// to half-open once the cooldown has elapsed and admits exactly
     /// that one probe.
@@ -157,11 +152,27 @@ impl ModelEntry {
 pub struct Registry {
     engine: Arc<Engine>,
     models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Breaker parameters applied to newly loaded model names
+    /// (`cast serve --breaker-failures` / `--breaker-cooldown-ms`).
+    breaker_threshold: u32,
+    breaker_cooldown: Duration,
 }
 
 impl Registry {
     pub fn new(engine: Arc<Engine>) -> Registry {
-        Registry { engine, models: RwLock::new(BTreeMap::new()) }
+        Registry::with_breaker(engine, 5, Duration::from_secs(5))
+    }
+
+    /// A registry whose models get circuit breakers with the given
+    /// consecutive-failure threshold and open-state cooldown.  Existing
+    /// entries keep their breakers (reloads carry them over).
+    pub fn with_breaker(engine: Arc<Engine>, threshold: u32, cooldown: Duration) -> Registry {
+        Registry {
+            engine,
+            models: RwLock::new(BTreeMap::new()),
+            breaker_threshold: threshold,
+            breaker_cooldown: cooldown,
+        }
     }
 
     pub fn engine(&self) -> &Arc<Engine> {
@@ -259,9 +270,9 @@ impl Registry {
         let prior = prior(&name);
         Ok(Arc::new(ModelEntry {
             version: prior.as_ref().map(|e| e.version).unwrap_or(0) + 1,
-            breaker: prior
-                .map(|e| e.breaker.clone())
-                .unwrap_or_else(|| Arc::new(Breaker::serve_default())),
+            breaker: prior.map(|e| e.breaker.clone()).unwrap_or_else(|| {
+                Arc::new(Breaker::new(self.breaker_threshold, self.breaker_cooldown))
+            }),
             name,
             manifest,
             exe,
@@ -399,6 +410,20 @@ mod tests {
         b.record_failure();
         assert_eq!(b.state_code(), BREAKER_CLOSED, "non-consecutive failures never open");
         assert!(b.allow());
+    }
+
+    #[test]
+    fn with_breaker_applies_cli_threshold_to_new_models() {
+        let reg =
+            Registry::with_breaker(Engine::cpu().unwrap(), 1, Duration::from_secs(60));
+        let e = reg
+            .load(None, ModelSource::Synthetic { meta: tiny_meta("cast_topk"), seed: 0 })
+            .unwrap();
+        e.breaker.record_failure();
+        assert_eq!(e.breaker.state_code(), BREAKER_OPEN, "threshold 1 opens on one failure");
+        // a reload keeps the (open) breaker rather than minting a new one
+        let again = reg.reload(&e.name).unwrap();
+        assert!(Arc::ptr_eq(&e.breaker, &again.breaker));
     }
 
     #[test]

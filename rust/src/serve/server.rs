@@ -33,12 +33,12 @@
 //! inference workers drain what remains — every request that was read
 //! off a socket gets its response before `run` returns.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -47,6 +47,7 @@ use crate::data::batcher::pad_rows;
 use crate::runtime::Scratch;
 use crate::util::json::Json;
 use crate::util::parallel::Queue;
+use crate::util::trace;
 
 use super::batcher::{run_batch, BatchFormer, PredictJob, ReplyErr};
 use super::http::{HttpConn, Recv, Request};
@@ -76,6 +77,12 @@ pub struct ServeConfig {
     /// still queued past its budget is shed with 503 + `Retry-After`
     /// instead of computed.  0 disables client deadlines entirely.
     pub deadline_ms: u64,
+    /// Consecutive engine failures that open a model's circuit breaker
+    /// (`--breaker-failures`; applied when the registry is built).
+    pub breaker_failures: u32,
+    /// Open-state cooldown before the breaker admits a probe
+    /// (`--breaker-cooldown-ms`).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServeConfig {
@@ -89,6 +96,8 @@ impl Default for ServeConfig {
             infer_workers: 1,
             max_body: 8 << 20,
             deadline_ms: 60_000,
+            breaker_failures: 5,
+            breaker_cooldown: Duration::from_secs(5),
         }
     }
 }
@@ -119,6 +128,36 @@ pub fn install_signal_handlers() {
 #[cfg(not(unix))]
 pub fn install_signal_handlers() {}
 
+/// How many completed /predict stage traces `/debug/trace` retains.
+const TRACE_RING: usize = 256;
+
+/// One completed /predict request's stage split, kept for `/debug/trace`.
+struct TraceRow {
+    seq: u64,
+    model: String,
+    rows: usize,
+    status: u16,
+    /// [parse, queue, batch, compute, reply] in µs, see `metrics::STAGES`.
+    stages_us: [u64; 5],
+}
+
+impl TraceRow {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("model", Json::str(&self.model)),
+            ("rows", Json::num(self.rows as f64)),
+            ("status", Json::num(self.status as f64)),
+        ];
+        let keys = ["parse_us", "queue_us", "batch_us", "compute_us", "reply_us"];
+        for (key, us) in keys.iter().zip(self.stages_us) {
+            fields.push((*key, Json::num(us as f64)));
+        }
+        fields.push(("total_us", Json::num(self.stages_us.iter().sum::<u64>() as f64)));
+        Json::obj(fields)
+    }
+}
+
 pub struct Server {
     listener: TcpListener,
     local_addr: SocketAddr,
@@ -127,6 +166,9 @@ pub struct Server {
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     jobs: Arc<Queue<PredictJob>>,
+    /// Ring of the last [`TRACE_RING`] completed /predict stage splits.
+    recent: Mutex<VecDeque<TraceRow>>,
+    trace_seq: AtomicU64,
 }
 
 impl Server {
@@ -145,6 +187,8 @@ impl Server {
             registry,
             metrics: Arc::new(Metrics::new()),
             shutdown: Arc::new(AtomicBool::new(false)),
+            recent: Mutex::new(VecDeque::with_capacity(TRACE_RING)),
+            trace_seq: AtomicU64::new(0),
         })
     }
 
@@ -289,19 +333,16 @@ impl Server {
                     let endpoint = endpoint_of(&req);
                     // during a drain, answer and close
                     let keep = req.keep_alive && !self.shutting_down();
-                    let (status, ctype, body) = self.route(&req);
+                    let (status, ctype, body, mut extra) = self.route(&req);
                     self.metrics.observe_request(endpoint, status, t.elapsed().as_secs_f64());
                     // every 503 (shed, breaker, draining) is retryable
-                    let sent = if status == 503 {
-                        conn.send_ext(
-                            status,
-                            ctype,
-                            &[("Retry-After", "1".to_string())],
-                            &body,
-                            keep,
-                        )
-                    } else {
+                    if status == 503 {
+                        extra.push(("Retry-After", "1".to_string()));
+                    }
+                    let sent = if extra.is_empty() {
                         conn.send(status, ctype, &body, keep)
+                    } else {
+                        conn.send_ext(status, ctype, &extra, &body, keep)
                     };
                     if sent.is_err() || !keep {
                         return;
@@ -324,8 +365,19 @@ impl Server {
         }
     }
 
-    fn route(&self, req: &Request) -> (u16, &'static str, Vec<u8>) {
-        match (req.method.as_str(), req.path.as_str()) {
+    /// Dispatch one request.  Returns status, content type, body, and
+    /// any extra response headers (`/predict` adds `X-Stage-Timings`
+    /// when tracing is on; 503s grow `Retry-After` in the caller).
+    fn route(&self, req: &Request) -> (u16, &'static str, Vec<u8>, Vec<(&'static str, String)>) {
+        if req.method == "POST" && req.path == "/predict" {
+            return match self.predict(req) {
+                Ok((body, extra)) => (200, "application/json", body, extra),
+                Err((status, msg)) => {
+                    (status, "application/json", error_json(&msg).into_bytes(), Vec::new())
+                }
+            };
+        }
+        let (status, ctype, body) = match (req.method.as_str(), req.path.as_str()) {
             // liveness: answers 200 whenever the process can serve HTTP
             ("GET", "/healthz") => json_ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -372,10 +424,16 @@ impl Server {
                     .into_bytes(),
             ),
             ("GET", "/models") => json_ok(self.registry.describe()),
-            ("POST", "/predict") => match self.predict(req) {
-                Ok(body) => (200, "application/json", body),
-                Err((status, msg)) => (status, "application/json", error_json(&msg).into_bytes()),
-            },
+            // last-N completed /predict stage splits (newest last)
+            ("GET", "/debug/trace") => {
+                let n = req
+                    .query
+                    .get("n")
+                    .and_then(|s| s.trim().parse::<usize>().ok())
+                    .unwrap_or(32)
+                    .min(TRACE_RING);
+                json_ok(self.debug_trace(n))
+            }
             ("POST", "/models/reload") => match self.reload(req) {
                 Ok(body) => (200, "application/json", body),
                 Err((status, msg)) => (status, "application/json", error_json(&msg).into_bytes()),
@@ -390,14 +448,41 @@ impl Server {
                 "application/json",
                 error_json(&format!("no endpoint {} {}", req.method, req.path)).into_bytes(),
             ),
+        };
+        (status, ctype, body, Vec::new())
+    }
+
+    /// The `/debug/trace?n=` payload: the newest `n` stage-split rows.
+    fn debug_trace(&self, n: usize) -> Json {
+        let ring = self.recent.lock().unwrap_or_else(|p| p.into_inner());
+        let skip = ring.len().saturating_sub(n);
+        Json::obj(vec![
+            ("count", Json::num(ring.len().min(n) as f64)),
+            ("requests", Json::Arr(ring.iter().skip(skip).map(TraceRow::to_json).collect())),
+        ])
+    }
+
+    /// Record one completed /predict into the `/debug/trace` ring.
+    fn push_trace(&self, model: String, rows: usize, status: u16, stages_us: [u64; 5]) {
+        let seq = self.trace_seq.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.recent.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() >= TRACE_RING {
+            ring.pop_front();
         }
+        ring.push_back(TraceRow { seq, model, rows, status, stages_us });
     }
 
     /// `/predict`: parse → resolve model → enqueue → wait for the demuxed
     /// logits.  Error statuses: 400 malformed, 404 unknown model, 503
     /// draining/breaker-open/deadline-shed, 504 timeout, 500 engine
-    /// failure or worker loss.
-    fn predict(&self, req: &Request) -> Result<Vec<u8>, (u16, String)> {
+    /// failure or worker loss.  On success, returns the body plus any
+    /// extra headers (`X-Stage-Timings` when tracing is on) and feeds
+    /// the stage histograms and the `/debug/trace` ring.
+    fn predict(
+        &self,
+        req: &Request,
+    ) -> Result<(Vec<u8>, Vec<(&'static str, String)>), (u16, String)> {
+        let t_parse = Instant::now();
         let text = req.body_str().map_err(|e| (e.status, e.msg))?;
         let body = Json::parse(text).map_err(|e| (400, format!("invalid JSON body: {e}")))?;
         let model_name = req
@@ -449,8 +534,17 @@ impl Server {
         if self.shutting_down() {
             return Err((503, "server is draining".to_string()));
         }
+        let parse_us = t_parse.elapsed().as_micros() as u64;
         let (tx, rx) = sync_channel(1);
-        let job = PredictJob { entry, tokens, rows: n_rows, reply: tx, deadline };
+        let job = PredictJob {
+            entry,
+            tokens,
+            rows: n_rows,
+            reply: tx,
+            deadline,
+            enqueued: Instant::now(),
+            popped: None,
+        };
         self.jobs.push(job).map_err(|_| (503, "server is draining".to_string()))?;
         let reply = rx.recv_timeout(PREDICT_TIMEOUT).map_err(|e| match e {
             std::sync::mpsc::RecvTimeoutError::Timeout => {
@@ -466,6 +560,7 @@ impl Server {
             ReplyErr::Engine(msg) => (500, msg),
         })?;
 
+        let t_reply = Instant::now();
         let nc = ok.n_classes;
         let mut logit_rows = Vec::with_capacity(n_rows);
         let mut argmax = Vec::with_capacity(n_rows);
@@ -488,7 +583,23 @@ impl Server {
             ("argmax", Json::arr_usize(&argmax)),
             ("batch_rows", Json::num(ok.batch_rows as f64)),
         ]);
-        Ok(out.to_string().into_bytes())
+        let body = out.to_string().into_bytes();
+
+        let reply_us = t_reply.elapsed().as_micros() as u64;
+        let stages_us = [parse_us, ok.queue_us, ok.batch_us, ok.compute_us, reply_us];
+        self.metrics.observe_stages(stages_us.map(|us| us as f64 / 1e6));
+        self.push_trace(ok.model, n_rows, 200, stages_us);
+        let mut extra = Vec::new();
+        if trace::active() {
+            extra.push((
+                "X-Stage-Timings",
+                format!(
+                    "parse={};queue={};batch={};compute={};reply={}",
+                    stages_us[0], stages_us[1], stages_us[2], stages_us[3], stages_us[4]
+                ),
+            ));
+        }
+        Ok((body, extra))
     }
 
     /// `/models/reload?model=NAME`: rebuild the named entry from its
@@ -523,6 +634,7 @@ fn endpoint_of(req: &Request) -> Endpoint {
         "/metrics" => Endpoint::Metrics,
         "/healthz" | "/readyz" => Endpoint::Healthz,
         "/admin/shutdown" => Endpoint::Shutdown,
+        "/debug/trace" => Endpoint::DebugTrace,
         _ => Endpoint::Other,
     }
 }

@@ -11,7 +11,8 @@ use crate::data::batcher::Batcher;
 use crate::data::{self, Batch, TaskGen};
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{Engine, Executable, HostTensor, Manifest};
-use crate::util::Timer;
+use crate::util::json::Json;
+use crate::util::{trace, Timer};
 
 use super::metrics::{EvalRecord, History, StepRecord};
 use super::schedule::Schedule;
@@ -31,6 +32,15 @@ pub struct TrainConfig {
     /// Each save is atomic and keeps the previous generation as
     /// `<ckpt>.prev`, so a crash mid-write never loses resumability.
     pub ckpt_every: usize,
+    /// Stream one JSON object per optimization step to this file
+    /// (JSONL): step, loss, acc, lr, grad_norm, nan_skips,
+    /// steps_per_sec.  Purely observational — the training computation
+    /// is untouched whether or not the stream is on.
+    pub metrics_out: Option<PathBuf>,
+    /// When tracing is on (`CAST_TRACE=1`), also emit a per-op
+    /// time-share record into the metrics stream every N steps
+    /// (0 disables the share records; the per-step lines still flow).
+    pub metrics_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -46,6 +56,8 @@ impl Default for TrainConfig {
             log_every: 10,
             checkpoint: None,
             ckpt_every: 0,
+            metrics_out: None,
+            metrics_every: 50,
         }
     }
 }
@@ -56,6 +68,98 @@ pub struct TrainReport {
     pub final_train_acc: f32,
     pub best_eval_acc: Option<f32>,
     pub steps_per_sec: f64,
+}
+
+/// JSONL metrics stream behind `--metrics-out`.  Write failures are
+/// logged once and the sink goes quiet — losing the stream must not
+/// kill a training run, same policy as checkpoint saves.
+struct MetricsSink {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl MetricsSink {
+    fn open(path: Option<&Path>) -> Result<MetricsSink> {
+        let out = match path {
+            Some(p) => {
+                let f = std::fs::File::create(p)
+                    .with_context(|| format!("creating metrics stream {p:?}"))?;
+                Some(std::io::BufWriter::new(f))
+            }
+            None => None,
+        };
+        Ok(MetricsSink { out })
+    }
+
+    fn write(&mut self, line: &Json) {
+        use std::io::Write;
+        let Some(w) = self.out.as_mut() else { return };
+        // one object per line, flushed so `tail -f` tracks live runs
+        let mut s = line.to_string();
+        s.push('\n');
+        let ok = w.write_all(s.as_bytes()).and_then(|()| w.flush());
+        if let Err(e) = ok {
+            crate::info!("metrics stream write failed (training continues): {e}");
+            self.out = None;
+        }
+    }
+
+    /// Per-step record.  A skipped (non-finite) step reports
+    /// `"loss": null` so downstream parsers see the gap explicitly.
+    #[allow(clippy::too_many_arguments)]
+    fn step_line(
+        &mut self,
+        step: usize,
+        loss: f32,
+        acc: f32,
+        lr: f32,
+        seconds: f64,
+        grad_norm: f32,
+        nan_skips: usize,
+    ) {
+        if self.out.is_none() {
+            return;
+        }
+        let loss_j = if loss.is_finite() { Json::num(loss as f64) } else { Json::Null };
+        self.write(&Json::obj(vec![
+            ("kind", Json::str("step")),
+            ("step", Json::num(step as f64)),
+            ("loss", loss_j),
+            ("acc", Json::num(acc as f64)),
+            ("lr", Json::num(lr as f64)),
+            ("grad_norm", Json::num(grad_norm as f64)),
+            ("nan_skips", Json::num(nan_skips as f64)),
+            ("steps_per_sec", Json::num(1.0 / seconds.max(1e-9))),
+        ]));
+    }
+
+    /// Per-op time-share record (tracing on): drains the spans
+    /// accumulated since the last record so each entry covers one
+    /// window of `metrics_every` steps.
+    fn shares_line(&mut self, step: usize) {
+        if self.out.is_none() {
+            return;
+        }
+        let stats = trace::summarize(&trace::drain().spans);
+        if stats.is_empty() {
+            return;
+        }
+        let ops: Vec<Json> = stats
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("op", Json::str(s.name)),
+                    ("calls", Json::num(s.calls as f64)),
+                    ("self_ms", Json::num(s.self_ms)),
+                    ("share_pct", Json::num(s.share_pct)),
+                ])
+            })
+            .collect();
+        self.write(&Json::obj(vec![
+            ("kind", Json::str("op_shares")),
+            ("step", Json::num(step as f64)),
+            ("ops", Json::Arr(ops)),
+        ]));
+    }
 }
 
 /// Floor for the automatic LR backoff: even a long streak of
@@ -252,6 +356,7 @@ impl Trainer {
             self.cfg.queue_depth,
         );
         let mut history = History::default();
+        let mut metrics = MetricsSink::open(self.cfg.metrics_out.as_deref())?;
         for step in 0..self.cfg.steps {
             let lr = self.cfg.schedule.at(step);
             let batch = batcher.next();
@@ -262,6 +367,14 @@ impl Trainer {
             // curves and --assert-improves see only applied updates
             if loss.is_finite() {
                 history.push_step(StepRecord { step, loss, acc, lr, seconds });
+            }
+            let gnorm = crate::runtime::native::model::last_grad_norm();
+            metrics.step_line(step, loss, acc, lr, seconds, gnorm, self.nan_skips);
+            if trace::active()
+                && self.cfg.metrics_every > 0
+                && (step + 1) % self.cfg.metrics_every == 0
+            {
+                metrics.shares_line(step);
             }
             if self.cfg.ckpt_every > 0 && (step + 1) % self.cfg.ckpt_every == 0 {
                 self.save_checkpoint_logged();

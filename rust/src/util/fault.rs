@@ -194,6 +194,9 @@ fn check_slow(point: &str) -> io::Result<()> {
             }
             Kind::Torn(_) | Kind::Flag => continue,
         }
+        // a firing leaves an instant event on the active trace (if any),
+        // so chaos traces are self-explanatory
+        crate::util::trace::event(&format!("fault:{point}"));
         match rule.kind {
             Kind::Err => {
                 crate::debug!("fault: injected io error at {point}");
@@ -214,10 +217,15 @@ fn check_slow(point: &str) -> io::Result<()> {
 fn flag_slow(point: &str) -> bool {
     let plan = PLAN.read().unwrap_or_else(|p| p.into_inner());
     let Some(plan) = plan.as_ref() else { return false };
-    plan.rules
+    let hit = plan
+        .rules
         .iter()
         .filter(|r| r.point == point && r.kind == Kind::Flag)
-        .any(|r| fires(r, plan.seed))
+        .any(|r| fires(r, plan.seed));
+    if hit {
+        crate::util::trace::event(&format!("fault:{point}"));
+    }
+    hit
 }
 
 #[cold]
@@ -227,6 +235,7 @@ fn torn_slow(point: &str, full: usize) -> Option<usize> {
     for rule in plan.rules.iter().filter(|r| r.point == point) {
         if let Kind::Torn(pct) = rule.kind {
             if fires(rule, plan.seed) {
+                crate::util::trace::event(&format!("fault:{point}"));
                 return Some(full * pct as usize / 100);
             }
         }

@@ -11,6 +11,7 @@ pub mod prop;
 pub mod rng;
 pub mod retry;
 pub mod simd;
+pub mod trace;
 
 use std::time::Instant;
 

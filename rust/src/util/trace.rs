@@ -1,0 +1,499 @@
+//! Zero-dependency tracing/profiling: per-op spans with per-layer
+//! attribution, aggregated into time-share tables and exportable as
+//! Chrome trace-event JSON (`chrome://tracing` / Perfetto).
+//!
+//! The design mirrors `util::fault`: tracing is env-gated via
+//! `CAST_TRACE` (any non-empty value other than `0`), and when disabled
+//! every instrumentation point is a single relaxed atomic load — no
+//! clock reads, no allocation, no locks.  `cast bench --profile` (and
+//! tests) flip it on programmatically via [`set_enabled`].
+//!
+//! Recording never perturbs the engine's bit-identical threading
+//! guarantees: spans only read the wall clock and push into a buffer
+//! owned by the recording thread (its mutex is uncontended except
+//! during [`drain`]), so float accumulation order is untouched and the
+//! SIMD×threads determinism matrices hold with tracing on or off.
+//!
+//! Span self-time is maintained with a per-thread stack at record time:
+//! a parent's self time excludes its children, so the per-op shares in
+//! [`summarize`] partition traced time exactly (they sum to 100%).
+//! Fault firings (`util::fault`) are recorded as instant events on the
+//! active trace, so chaos traces are self-explanatory.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::json::Json;
+
+const UNINIT: u8 = 0;
+const INACTIVE: u8 = 1;
+const ENABLED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// True when tracing is on.  One relaxed load when not.
+#[inline]
+pub fn active() -> bool {
+    state() == ENABLED
+}
+
+/// Programmatically enable/disable tracing (overrides `CAST_TRACE`).
+/// Used by `cast bench --profile` and the test suite.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ENABLED } else { INACTIVE }, Ordering::SeqCst);
+}
+
+#[inline]
+fn state() -> u8 {
+    let s = STATE.load(Ordering::Relaxed);
+    if s == UNINIT {
+        init_from_env()
+    } else {
+        s
+    }
+}
+
+#[cold]
+fn init_from_env() -> u8 {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let on = match std::env::var("CAST_TRACE") {
+            Ok(v) => !v.trim().is_empty() && v.trim() != "0",
+            Err(_) => false,
+        };
+        if on {
+            crate::info!("trace: enabled via CAST_TRACE");
+        }
+        // racing set_enabled wins: only claim the slot if still UNINIT
+        let _ = STATE.compare_exchange(
+            UNINIT,
+            if on { ENABLED } else { INACTIVE },
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    });
+    STATE.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// clock + per-thread recording state
+// ---------------------------------------------------------------------------
+
+/// Monotonic nanoseconds since the process-wide trace epoch (the first
+/// call wins; cached per thread so the hot path never locks for it).
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn epoch() -> Instant {
+    thread_local! {
+        static CACHED: Cell<Option<Instant>> = const { Cell::new(None) };
+    }
+    CACHED.with(|c| match c.get() {
+        Some(e) => e,
+        None => {
+            static GLOBAL: Mutex<Option<Instant>> = Mutex::new(None);
+            let mut g = GLOBAL.lock().unwrap_or_else(|p| p.into_inner());
+            let e = *g.get_or_insert_with(Instant::now);
+            drop(g);
+            c.set(Some(e));
+            e
+        }
+    })
+}
+
+/// Small dense thread ids for trace attribution (OS thread ids are
+/// neither stable nor compact).
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|t| {
+        let mut v = t.get();
+        if v == 0 {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+        }
+        v
+    })
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// Layer index attribution, or -1 when not layer-scoped.
+    pub layer: i32,
+    pub tid: u64,
+    /// Nesting depth on the recording thread at entry (0 = top level).
+    pub depth: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Duration minus enclosed child spans (what [`summarize`] shares).
+    pub self_ns: u64,
+}
+
+/// One instant event (fault firings and other point-in-time markers).
+#[derive(Clone, Debug)]
+pub struct EventRec {
+    pub name: String,
+    pub tid: u64,
+    pub ts_ns: u64,
+}
+
+#[derive(Default)]
+struct Sink {
+    spans: Vec<SpanRec>,
+    events: Vec<EventRec>,
+}
+
+/// Every thread's buffer, registered on first use.  The `Arc` keeps a
+/// buffer alive past its thread (the scoped pool spawns short-lived
+/// workers), so [`drain`] still sees late spans.
+static SINKS: Mutex<Vec<Arc<Mutex<Sink>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Sink>> = {
+        let sink = Arc::new(Mutex::new(Sink::default()));
+        SINKS.lock().unwrap_or_else(|p| p.into_inner()).push(sink.clone());
+        sink
+    };
+    /// Per-thread span stack: each frame accumulates child time so a
+    /// closing span can record its self time without a post-pass.
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn push_span(rec: SpanRec) {
+    LOCAL.with(|s| s.lock().unwrap_or_else(|p| p.into_inner()).spans.push(rec));
+}
+
+/// Record an instant event (no-op unless tracing is on).
+pub fn event(name: &str) {
+    if !active() {
+        return;
+    }
+    let rec = EventRec { name: name.to_string(), tid: tid(), ts_ns: now_ns() };
+    LOCAL.with(|s| s.lock().unwrap_or_else(|p| p.into_inner()).events.push(rec));
+}
+
+/// Open span nesting depth on this thread (0 when every span guard has
+/// dropped — the well-formedness invariant the tests pin down).
+pub fn current_depth() -> usize {
+    STACK.with(|s| s.borrow().len())
+}
+
+// ---------------------------------------------------------------------------
+// span guards
+// ---------------------------------------------------------------------------
+
+/// RAII span guard: records on drop.  Disabled tracing constructs an
+/// inert guard after one relaxed load.
+pub struct Span {
+    name: &'static str,
+    layer: i32,
+    start_ns: u64,
+    depth: u32,
+    live: bool,
+}
+
+/// Start a span (no layer attribution).
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_layer(name, -1)
+}
+
+/// Start a span attributed to `layer`.
+#[inline]
+pub fn span_layer(name: &'static str, layer: i32) -> Span {
+    if !active() {
+        return Span { name, layer, start_ns: 0, depth: 0, live: false };
+    }
+    let depth = STACK.with(|s| {
+        let mut st = s.borrow_mut();
+        st.push(0);
+        (st.len() - 1) as u32
+    });
+    Span { name, layer, start_ns: now_ns(), depth, live: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let dur_ns = now_ns().saturating_sub(self.start_ns);
+        let child_ns = STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            let child = st.pop().unwrap_or(0);
+            if let Some(parent) = st.last_mut() {
+                *parent += dur_ns;
+            }
+            child
+        });
+        push_span(SpanRec {
+            name: self.name,
+            layer: self.layer,
+            tid: tid(),
+            depth: self.depth,
+            start_ns: self.start_ns,
+            dur_ns,
+            self_ns: dur_ns.saturating_sub(child_ns),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drain + aggregation
+// ---------------------------------------------------------------------------
+
+/// Everything recorded since the last drain, merged across threads.
+#[derive(Default, Debug)]
+pub struct Trace {
+    pub spans: Vec<SpanRec>,
+    pub events: Vec<EventRec>,
+}
+
+/// Take all buffered spans/events (sorted by start time) and release
+/// buffers whose threads have exited.
+pub fn drain() -> Trace {
+    let mut out = Trace::default();
+    let mut sinks = SINKS.lock().unwrap_or_else(|p| p.into_inner());
+    for sink in sinks.iter() {
+        let mut g = sink.lock().unwrap_or_else(|p| p.into_inner());
+        out.spans.append(&mut g.spans);
+        out.events.append(&mut g.events);
+    }
+    sinks.retain(|s| Arc::strong_count(s) > 1);
+    drop(sinks);
+    out.spans.sort_by(|a, b| (a.start_ns, a.tid).cmp(&(b.start_ns, b.tid)));
+    out.events.sort_by(|a, b| (a.ts_ns, a.tid).cmp(&(b.ts_ns, b.tid)));
+    out
+}
+
+/// Drop everything buffered without returning it.
+pub fn clear() {
+    let _ = drain();
+}
+
+/// Per-op aggregate over a set of spans.
+#[derive(Clone, Debug)]
+pub struct OpStat {
+    pub name: &'static str,
+    pub calls: u64,
+    /// Inclusive time (children counted).
+    pub total_ms: f64,
+    /// Exclusive time — the basis of `share_pct`.
+    pub self_ms: f64,
+    /// Share of total traced self time, in percent.
+    pub share_pct: f64,
+}
+
+/// Aggregate spans into per-op self-time shares (descending).  Shares
+/// partition traced time: they sum to 100% (of a non-empty trace).
+pub fn summarize(spans: &[SpanRec]) -> Vec<OpStat> {
+    let mut by_name: Vec<(&'static str, u64, u64, u64)> = Vec::new();
+    for s in spans {
+        match by_name.iter_mut().find(|(n, ..)| *n == s.name) {
+            Some((_, calls, total, selfs)) => {
+                *calls += 1;
+                *total += s.dur_ns;
+                *selfs += s.self_ns;
+            }
+            None => by_name.push((s.name, 1, s.dur_ns, s.self_ns)),
+        }
+    }
+    let grand: u64 = by_name.iter().map(|(_, _, _, s)| *s).sum();
+    let mut stats: Vec<OpStat> = by_name
+        .into_iter()
+        .map(|(name, calls, total, selfs)| OpStat {
+            name,
+            calls,
+            total_ms: total as f64 / 1e6,
+            self_ms: selfs as f64 / 1e6,
+            share_pct: if grand == 0 { 0.0 } else { selfs as f64 * 100.0 / grand as f64 },
+        })
+        .collect();
+    stats.sort_by(|a, b| b.self_ms.total_cmp(&a.self_ms));
+    stats
+}
+
+/// Render the time-share table `cast bench --profile` prints.
+pub fn render_table(stats: &[OpStat]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<24} {:>8} {:>12} {:>12} {:>8}\n",
+        "op", "calls", "total_ms", "self_ms", "share"
+    ));
+    let mut total_self = 0.0;
+    for s in stats {
+        total_self += s.self_ms;
+        out.push_str(&format!(
+            "{:<24} {:>8} {:>12.3} {:>12.3} {:>7.2}%\n",
+            s.name, s.calls, s.total_ms, s.self_ms, s.share_pct
+        ));
+    }
+    out.push_str(&format!(
+        "{:<24} {:>8} {:>12} {:>12.3} {:>7.2}%\n",
+        "total", "", "", total_self, if stats.is_empty() { 0.0 } else { 100.0 }
+    ));
+    out
+}
+
+/// Export as Chrome trace-event JSON (the `{"traceEvents":[...]}`
+/// envelope; timestamps in microseconds), loadable in Perfetto.
+pub fn chrome_json(t: &Trace) -> String {
+    let mut evs = Vec::with_capacity(t.spans.len() + t.events.len());
+    for s in &t.spans {
+        let mut args = vec![("self_us", Json::num(s.self_ns as f64 / 1e3))];
+        if s.layer >= 0 {
+            args.push(("layer", Json::num(s.layer as f64)));
+        }
+        evs.push(Json::obj(vec![
+            ("name", Json::str(s.name)),
+            ("cat", Json::str("engine")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(s.start_ns as f64 / 1e3)),
+            ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(s.tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    for e in &t.events {
+        evs.push(Json::obj(vec![
+            ("name", Json::str(&e.name)),
+            ("cat", Json::str("fault")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(e.ts_ns as f64 / 1e3)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.tid as f64)),
+        ]));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(evs))]).to_string()
+}
+
+/// Serialize in-process tests that toggle tracing: the span store is
+/// process-global.  Shared by unit and integration tests; not API.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        clear();
+        {
+            let _a = span("noop.a");
+            let _b = span_layer("noop.b", 3);
+            event("noop.ev");
+        }
+        let t = drain();
+        assert!(t.spans.is_empty() && t.events.is_empty());
+        assert_eq!(current_depth(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_self_time_partitions() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        {
+            let _outer = span("t.outer");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span_layer("t.inner", 1);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        set_enabled(false);
+        let t = drain();
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(current_depth(), 0, "guards balanced");
+        let outer = t.spans.iter().find(|s| s.name == "t.outer").unwrap();
+        let inner = t.spans.iter().find(|s| s.name == "t.inner").unwrap();
+        assert_eq!((outer.depth, inner.depth), (0, 1));
+        assert_eq!(inner.layer, 1);
+        assert!(outer.dur_ns >= inner.dur_ns);
+        assert!(
+            outer.self_ns <= outer.dur_ns - inner.dur_ns,
+            "parent self time excludes the child"
+        );
+        assert!(inner.start_ns >= outer.start_ns, "monotonic timestamps");
+    }
+
+    #[test]
+    fn summarize_shares_sum_to_100() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        for _ in 0..3 {
+            let _a = span("s.a");
+            let _b = span("s.b");
+        }
+        set_enabled(false);
+        let t = drain();
+        let stats = summarize(&t.spans);
+        assert_eq!(stats.len(), 2);
+        let total: f64 = stats.iter().map(|s| s.share_pct).sum();
+        assert!((total - 100.0).abs() < 1e-6, "shares sum to {total}");
+        let table = render_table(&stats);
+        assert!(table.contains("s.a") && table.contains('%'), "{table}");
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_carries_events() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        {
+            let _a = span_layer("c.op", 0);
+            event("fault:test.point");
+        }
+        set_enabled(false);
+        let t = drain();
+        let json = Json::parse(&chrome_json(&t)).expect("valid JSON");
+        let evs = json.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")));
+        assert!(evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("i")
+            && e.get("name").and_then(Json::as_str) == Some("fault:test.point")));
+    }
+
+    #[test]
+    fn cross_thread_spans_merge_on_drain() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let _s = span_layer("x.thread", i);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        set_enabled(false);
+        let t = drain();
+        let mine: Vec<_> = t.spans.iter().filter(|s| s.name == "x.thread").collect();
+        assert_eq!(mine.len(), 3);
+        let tids: std::collections::BTreeSet<u64> = mine.iter().map(|s| s.tid).collect();
+        assert_eq!(tids.len(), 3, "distinct thread ids");
+    }
+}

@@ -1,0 +1,279 @@
+//! Tracing/profiling integration suite: the disabled path records
+//! nothing and tracing never perturbs results (the bit-identical
+//! determinism contract), drained span trees are well-formed, the serve
+//! stage histograms stay consistent with the request count, and the
+//! Chrome trace export is valid JSON.
+//!
+//! Every test that flips the global tracer holds `trace::test_guard()`
+//! so tests in this binary serialize around the shared state.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cast::model::ModelState;
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::{Engine, HostTensor, Manifest};
+use cast::serve::http;
+use cast::serve::{ModelSource, Registry, ServeConfig, Server};
+use cast::util::json::Json;
+use cast::util::trace;
+
+// ---------------------------------------------------------------------------
+// engine-side: zero-record disabled path, bit-identical traced outputs
+// ---------------------------------------------------------------------------
+
+/// One forward pass of the tiny cast_topk config, returning the logits.
+fn predict_logits(seed: u32) -> Vec<f32> {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::synthetic(tiny_meta("cast_topk"));
+    let exe = engine.load(&manifest, "predict").unwrap();
+    let state = ModelState::init(&engine, &manifest, seed).unwrap();
+    let meta = &manifest.meta;
+    let tokens: Vec<i32> =
+        (0..meta.batch * meta.seq_len).map(|i| (i * 7 % 50) as i32).collect();
+    let tensor = HostTensor::s32(vec![meta.batch, meta.seq_len], tokens);
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+    inputs.push(&tensor);
+    let out = exe.run_refs(&inputs).unwrap();
+    out[0].as_f32().unwrap().to_vec()
+}
+
+#[test]
+fn disabled_tracer_records_nothing_and_tracing_is_bit_identical() {
+    let _g = trace::test_guard();
+
+    trace::set_enabled(false);
+    trace::clear();
+    let baseline = predict_logits(3);
+    let t = trace::drain();
+    assert!(
+        t.spans.is_empty() && t.events.is_empty(),
+        "disabled tracer must record nothing ({} spans, {} events)",
+        t.spans.len(),
+        t.events.len()
+    );
+
+    trace::set_enabled(true);
+    trace::clear();
+    let traced = predict_logits(3);
+    let spans = trace::drain().spans;
+    trace::set_enabled(false);
+
+    // exact f32 equality: tracing only reads the clock and pushes to
+    // thread-local buffers, so every output bit must match
+    assert_eq!(baseline.len(), traced.len());
+    for (i, (b, t)) in baseline.iter().zip(&traced).enumerate() {
+        assert_eq!(b.to_bits(), t.to_bits(), "logit {i} differs under tracing");
+    }
+
+    assert!(!spans.is_empty(), "traced forward pass must record spans");
+    for want in ["embed", "attn", "attn.cast_topk", "attn.qkv_proj", "pool", "head"] {
+        assert!(
+            spans.iter().any(|s| s.name == want),
+            "expected a {want:?} span in {:?}",
+            spans.iter().map(|s| s.name).collect::<Vec<_>>()
+        );
+    }
+    // per-layer attribution: the tiny config has 2 layers
+    let layers: Vec<i32> =
+        spans.iter().filter(|s| s.name == "attn").map(|s| s.layer).collect();
+    assert!(layers.contains(&0) && layers.contains(&1), "attn layers seen: {layers:?}");
+}
+
+#[test]
+fn drained_span_trees_are_well_formed() {
+    let _g = trace::test_guard();
+    trace::set_enabled(true);
+    trace::clear();
+    let _ = predict_logits(5);
+    let spans = trace::drain().spans;
+    trace::set_enabled(false);
+    assert!(!spans.is_empty());
+
+    for s in &spans {
+        assert!(s.self_ns <= s.dur_ns, "{}: self {} > dur {}", s.name, s.self_ns, s.dur_ns);
+    }
+    // drain() sorts by (start_ns, tid)
+    for w in spans.windows(2) {
+        assert!((w[0].start_ns, w[0].tid) <= (w[1].start_ns, w[1].tid));
+    }
+    // depth consistency: every nested span lies inside an enclosing span
+    // one level up on the same thread
+    for s in spans.iter().filter(|s| s.depth > 0) {
+        let end = s.start_ns + s.dur_ns;
+        let parent = spans.iter().any(|p| {
+            p.tid == s.tid
+                && p.depth + 1 == s.depth
+                && p.start_ns <= s.start_ns
+                && p.start_ns + p.dur_ns >= end
+        });
+        assert!(parent, "span {:?} (depth {}) has no enclosing parent", s.name, s.depth);
+    }
+    // self-time partitions traced time: shares sum to 100%
+    let stats = trace::summarize(&spans);
+    let total: f64 = stats.iter().map(|s| s.share_pct).sum();
+    assert!((total - 100.0).abs() < 1e-6, "shares sum to {total}");
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_complete_events() {
+    let _g = trace::test_guard();
+    trace::set_enabled(true);
+    trace::clear();
+    {
+        let _outer = trace::span("outer_op");
+        let _inner = trace::span_layer("inner_op", 3);
+        trace::event("fault:engine.layer");
+    }
+    let t = trace::drain();
+    trace::set_enabled(false);
+
+    let parsed = Json::parse(&trace::chrome_json(&t)).expect("chrome export must parse");
+    let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert_eq!(evs.len(), 3, "2 spans + 1 instant event");
+    let complete: Vec<&Json> =
+        evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")).collect();
+    assert_eq!(complete.len(), 2);
+    for e in &complete {
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+    }
+    let instants: Vec<&Json> =
+        evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("i")).collect();
+    assert_eq!(instants.len(), 1);
+    assert_eq!(instants[0].get("name").and_then(Json::as_str), Some("fault:engine.layer"));
+}
+
+// ---------------------------------------------------------------------------
+// serve-side: stage histograms, /debug/trace, X-Stage-Timings
+// ---------------------------------------------------------------------------
+
+struct Harness {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl Harness {
+    fn start() -> Harness {
+        let registry = Arc::new(Registry::new(Engine::cpu().unwrap()));
+        registry
+            .load(None, ModelSource::Synthetic { meta: tiny_meta("cast_topk"), seed: 5 })
+            .unwrap();
+        let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() };
+        let server = Arc::new(Server::bind(cfg, registry).unwrap());
+        let addr = server.local_addr();
+        let runner = server.clone();
+        let join = std::thread::spawn(move || runner.run());
+        Harness { server, addr, join: Some(join) }
+    }
+
+    fn stop(&mut self) {
+        self.server.shutdown_flag().store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            join.join().expect("server thread panicked").expect("server run failed");
+        }
+    }
+}
+
+impl Drop for Harness {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            self.stop();
+        }
+    }
+}
+
+fn request(addr: SocketAddr, method: &str, target: &str, body: &[u8]) -> http::Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    http::write_request(&mut s, method, target, body).unwrap();
+    http::read_response(&mut s).unwrap()
+}
+
+fn predict_body(fill: i32) -> String {
+    let vals: Vec<usize> = (0..64).map(|i| ((fill + i) % 50) as usize).collect();
+    Json::obj(vec![("tokens", Json::Arr(vec![Json::arr_usize(&vals)]))]).to_string()
+}
+
+#[test]
+fn stage_histograms_count_every_request_and_debug_trace_replays_them() {
+    let _g = trace::test_guard();
+    trace::set_enabled(false);
+    let mut h = Harness::start();
+    let n_requests = 5usize;
+    for i in 0..n_requests {
+        let resp = request(h.addr, "POST", "/predict", predict_body(i as i32).as_bytes());
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        // stage timings flow to /metrics and /debug/trace even with the
+        // tracer off; only the response header is gated on CAST_TRACE
+        assert!(
+            !resp.headers.contains_key("x-stage-timings"),
+            "header must be absent with tracing disabled"
+        );
+    }
+
+    let resp = request(h.addr, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    let page = String::from_utf8(resp.body).unwrap();
+    for stage in cast::serve::metrics::STAGES {
+        let needle = format!(
+            "cast_serve_stage_seconds_count{{stage=\"{stage}\"}} {n_requests}"
+        );
+        assert!(page.contains(&needle), "missing {needle:?} in:\n{page}");
+        // bucket series carry the stage label too
+        let bucket = format!("cast_serve_stage_seconds_bucket{{stage=\"{stage}\",le=");
+        assert!(page.contains(&bucket), "missing bucket series for {stage}");
+    }
+
+    let resp = request(h.addr, "GET", "/debug/trace?n=3", b"");
+    assert_eq!(resp.status, 200);
+    let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let rows = parsed.get("requests").and_then(Json::as_arr).expect("requests array");
+    assert_eq!(rows.len(), 3, "?n=3 caps the replay");
+    for row in rows {
+        assert_eq!(row.get("status").and_then(Json::as_usize), Some(200));
+        assert_eq!(row.get("rows").and_then(Json::as_usize), Some(1));
+        let total = row.get("total_us").and_then(Json::as_f64).unwrap();
+        let parts: f64 = ["parse_us", "queue_us", "batch_us", "compute_us", "reply_us"]
+            .iter()
+            .map(|k| row.get(k).and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(total, parts, "total_us must equal the stage sum");
+    }
+    // ring is newest-last: the last row is the most recent request
+    let seqs: Vec<f64> =
+        rows.iter().map(|r| r.get("seq").and_then(Json::as_f64).unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seqs not ascending: {seqs:?}");
+
+    h.stop();
+}
+
+#[test]
+fn stage_timing_header_appears_when_tracing_is_on() {
+    let _g = trace::test_guard();
+    trace::set_enabled(true);
+    trace::clear();
+    let mut h = Harness::start();
+    let resp = request(h.addr, "POST", "/predict", predict_body(9).as_bytes());
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let header = resp
+        .headers
+        .get("x-stage-timings")
+        .expect("X-Stage-Timings must be present under tracing")
+        .clone();
+    h.stop();
+    trace::set_enabled(false);
+    trace::clear();
+
+    // parseable k=v;k=v with all five stages
+    let mut stages = Vec::new();
+    for field in header.split(';') {
+        let (k, v) = field.split_once('=').expect("k=v fields");
+        v.parse::<u64>().expect("integer microseconds");
+        stages.push(k.to_string());
+    }
+    assert_eq!(stages, ["parse", "queue", "batch", "compute", "reply"]);
+}
