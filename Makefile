@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test test-simd test-serve test-chaos test-trace gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve bench-profile
+.PHONY: build test test-simd test-serve test-chaos test-trace gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve bench-profile bench-decode
 
 build:
 	cargo build --release
@@ -79,6 +79,15 @@ bench-serve: build
 	    --bench-json BENCH_native.json || { kill $$pid 2>/dev/null; exit 1; }; \
 	  kill $$pid 2>/dev/null; wait $$pid 2>/dev/null || true; \
 	done
+
+# Incremental-decode throughput: greedy generation through the causal
+# cluster-state cache vs full-forward recompute at two sequence lengths,
+# parity-checked, appended as decode_tokens_per_sec rows to
+# BENCH_native.json (acceptance: late-third tok/s ~= early-third tok/s,
+# i.e. per-token cost does not grow with generated length).
+bench-decode: build
+	./target/release/cast bench --decode --seq 256,512 --kappa 32 --max-new 96 \
+	  --append-json BENCH_native.json
 
 artifacts:
 	cd python && python -m compile.aot --suite default --out-root ../artifacts

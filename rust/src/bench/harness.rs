@@ -211,6 +211,123 @@ pub fn serve_row_json(report: &crate::serve::LoadReport) -> Json {
     ])
 }
 
+/// One measured incremental-decode point: tokens/sec through the decode
+/// entry's cluster-state cache, against the full-forward recompute
+/// baseline over the same greedy history, plus early/late segment
+/// throughput (a flat early:late ratio is the evidence that per-token
+/// cost does not grow with generated length).
+#[derive(Clone, Debug)]
+pub struct DecodePoint {
+    pub config: String,
+    pub variant: String,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub decode_tokens_per_sec: f64,
+    /// Baseline: re-running the whole causal forward per token, sampled
+    /// at evenly spaced history lengths across the generation.
+    pub full_tokens_per_sec: f64,
+    /// Tokens/sec over the first third of the generation…
+    pub early_tokens_per_sec: f64,
+    /// …and over the last third (≈ equal ⇒ O(α) per token, not O(αN)).
+    pub late_tokens_per_sec: f64,
+}
+
+/// Measure one greedy generation through the decode seam.  Every sampled
+/// baseline step also asserts bit-parity with the incremental logits, so
+/// a bench run doubles as a correctness check.
+pub fn decode_bench(
+    engine: &std::sync::Arc<Engine>,
+    meta: crate::runtime::ModelMeta,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> Result<DecodePoint> {
+    use std::time::Instant;
+
+    use crate::model::ModelState;
+    use crate::runtime::native::decode;
+    use crate::runtime::{Executable as _, Manifest};
+
+    anyhow::ensure!(prompt_len >= 2, "decode bench needs a prompt of at least 2 tokens");
+    anyhow::ensure!(new_tokens >= 3, "decode bench needs at least 3 new tokens");
+    let manifest = Manifest::synthetic(meta);
+    let state = ModelState::init(engine, &manifest, 7)?;
+    let params: Vec<&crate::runtime::HostTensor> = state.params.iter().collect();
+    let exe = engine.load(&manifest, "decode")?;
+    let vocab = manifest.meta.vocab;
+    let mut rng = crate::util::rng::Rng::new(0xDEC0DE);
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
+
+    let mut session = exe.decode_begin()?;
+    exe.decode_prefill(&params, session.as_mut(), &prompt[..prompt.len() - 1])?;
+    let mut history = prompt.clone();
+    let mut next = *prompt.last().unwrap();
+    let mut step_s: Vec<f64> = Vec::with_capacity(new_tokens);
+    let stride = (new_tokens / 8).max(1);
+    let (mut full_s, mut full_n) = (0.0f64, 0usize);
+    for i in 0..new_tokens {
+        let t = Instant::now();
+        let logits = exe.decode_step(&params, session.as_mut(), next)?;
+        step_s.push(t.elapsed().as_secs_f64());
+        if i % stride == 0 {
+            // sampled full-forward baseline at this exact history
+            let t = Instant::now();
+            let full = decode::full_logits(&manifest, &params, &history)?;
+            full_s += t.elapsed().as_secs_f64();
+            full_n += 1;
+            anyhow::ensure!(
+                full == logits,
+                "decode bench parity failure at step {i} (history {})",
+                history.len()
+            );
+        }
+        let tok = decode::argmax(&logits) as i32;
+        history.push(tok);
+        next = tok;
+    }
+    let total: f64 = step_s.iter().sum();
+    let third = (new_tokens / 3).max(1);
+    let early: f64 = step_s[..third].iter().sum();
+    let late: f64 = step_s[step_s.len() - third..].iter().sum();
+    Ok(DecodePoint {
+        config: manifest.key.clone(),
+        variant: manifest.meta.variant.clone(),
+        seq_len: manifest.meta.seq_len,
+        prompt_len,
+        new_tokens,
+        decode_tokens_per_sec: new_tokens as f64 / total.max(1e-12),
+        full_tokens_per_sec: full_n as f64 / full_s.max(1e-12),
+        early_tokens_per_sec: third as f64 / early.max(1e-12),
+        late_tokens_per_sec: third as f64 / late.max(1e-12),
+    })
+}
+
+/// A `decode_tokens_per_sec` row in the `BENCH_native.json` schema —
+/// what `cast bench --decode --append-json` appends.  `steps_per_sec`
+/// carries incremental tokens/sec so cross-PR tooling reads one schema;
+/// the baseline and early/late split ride alongside.
+pub fn decode_row_json(p: &DecodePoint) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(&p.config)),
+        ("variant", Json::str(&p.variant)),
+        ("seq_len", Json::num(p.seq_len as f64)),
+        ("kind", Json::str("decode_tokens_per_sec")),
+        ("steps_per_sec", Json::num(p.decode_tokens_per_sec)),
+        ("full_tokens_per_sec", Json::num(p.full_tokens_per_sec)),
+        (
+            "speedup",
+            Json::num(p.decode_tokens_per_sec / p.full_tokens_per_sec.max(1e-12)),
+        ),
+        ("prompt_len", Json::num(p.prompt_len as f64)),
+        ("new_tokens", Json::num(p.new_tokens as f64)),
+        ("early_tokens_per_sec", Json::num(p.early_tokens_per_sec)),
+        ("late_tokens_per_sec", Json::num(p.late_tokens_per_sec)),
+        ("peak_rss_mb", Json::num(0.0)),
+        ("threads", Json::num(Engine::threads() as f64)),
+        ("simd", Json::Bool(crate::util::simd::enabled())),
+    ])
+}
+
 /// Append one row to a bench-json file — see [`append_bench_rows`].
 pub fn append_bench_row(path: &Path, row: Json) -> Result<()> {
     append_bench_rows(path, vec![row])

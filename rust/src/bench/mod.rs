@@ -8,8 +8,8 @@ pub mod tables;
 
 pub use harness::{
     ablation_points, append_bench_row, append_bench_rows, bench_json, bench_row_json,
-    efficiency_rows, efficiency_table, parse_key, serve_row_json, table_from_rows,
-    train_row_json, write_bench_json, BenchRow,
+    decode_bench, decode_row_json, efficiency_rows, efficiency_table, parse_key,
+    serve_row_json, table_from_rows, train_row_json, write_bench_json, BenchRow, DecodePoint,
 };
 pub use memmodel::{kernel_estimate, AttnShape};
 pub use tables::{AccuracyTable, RelativeTable};

@@ -26,7 +26,12 @@
 //!            under CAST_NO_SIMD=1 for the SIMD speedup pair.
 //!            --profile turns on the in-process tracer and prints the
 //!            per-op self-time share table after the bench; --trace-out
-//!            additionally writes Chrome trace-event JSON for Perfetto)
+//!            additionally writes Chrome trace-event JSON for Perfetto.
+//!            --decode switches to the incremental-decode bench: greedy
+//!            generation through the cluster-state cache vs full-forward
+//!            recompute per seq length [--kappa K --nc C --prompt N
+//!            --max-new N], parity-checked, appending
+//!            decode_tokens_per_sec rows under --append-json)
 //!   sweep   [--tasks text,listops --variants all --steps N --seed S
 //!           --bench-json PATH]
 //!           (variant bake-off: trains every variant × task combination
@@ -42,23 +47,39 @@
 //!   serve   [--addr H:P --dir <d1,d2,..> --ckpt PATH --max-batch N
 //!           --max-wait-us U --queue N --conn-workers N --infer-workers N
 //!           --deadline-ms MS --breaker-failures N --breaker-cooldown-ms MS
-//!           --seed S | size flags as in train]
+//!           --seed S --causal | size flags as in train]
 //!           (HTTP inference server with dynamic micro-batching; without
 //!            --dir it serves a synthetic config built from
 //!            --task/--variant/--seq/--nc/--kappa/--depth — zero
-//!            artifacts.  Endpoints: POST /predict, GET /models,
-//!            POST /models/reload, GET /healthz, GET /readyz,
-//!            GET /metrics, GET /debug/trace?n=K, POST /admin/shutdown.
+//!            artifacts, with --causal forcing the decoder extension so
+//!            /generate has a decode entry.  Endpoints: POST /predict,
+//!            POST /generate
+//!            (streaming NDJSON incremental decode for causal CAST
+//!            models), GET /models, POST /models/reload, GET /healthz,
+//!            GET /readyz, GET /metrics, GET /debug/trace?n=K,
+//!            POST /admin/shutdown.
 //!            SIGINT/SIGTERM drain gracefully; clients may bound queue
 //!            time with an X-Deadline-Ms header, capped by
 //!            --deadline-ms.  /metrics exposes parse/queue/batch/
 //!            compute/reply stage histograms; under CAST_TRACE=1
 //!            responses also carry an X-Stage-Timings header.)
+//!   generate [--dir <artifact-dir> --ckpt PATH | size flags as in train]
+//!           [--prompt TEXT | --tokens 1,2,3] [--max-new N
+//!           --temperature T --seed S --check]
+//!           (incremental decoding through the decode entry's
+//!            cluster-state cache — tokens stream to stdout as they are
+//!            produced.  Without --dir, synthesizes a causal CAST config
+//!            from the size flags.  --check re-runs the full causal
+//!            forward every step and asserts the incremental logits
+//!            match bit-for-bit; --temperature 0 is greedy argmax)
 //!   loadgen [--addr H:P --conns N --requests N --model KEY --seq N
-//!           --seed S --bench-json PATH --allow-errors]
+//!           --seed S --generate N --bench-json PATH --allow-errors]
 //!           (closed-loop client driving a running server; --bench-json
 //!            appends a serve_reqs_per_sec row, e.g. to BENCH_native.json
-//!            — `make bench-serve` records the batched/unbatched pair)
+//!            — `make bench-serve` records the batched/unbatched pair.
+//!            --generate N switches to streaming POST /generate requests
+//!            of N new tokens each, validating each NDJSON stream's
+//!            final {"done":…} line)
 //!   _job    (internal: isolated child for peak-RSS measurement)
 //!
 //! Backend selection: CAST_BACKEND=native (default, pure-Rust engine, no
@@ -75,7 +96,7 @@ use cast::coordinator::sweep::Sweep;
 use cast::coordinator::{Job, JobKind};
 use cast::data;
 use cast::model::{checkpoint, ModelState};
-use cast::runtime::{Engine, Manifest, ModelMeta};
+use cast::runtime::{Engine, Executable as _, Manifest, ModelMeta};
 use cast::train::{Schedule, TrainConfig, Trainer};
 use cast::util::cli::Args;
 use cast::util::rng::Rng;
@@ -105,6 +126,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "inspect" => cmd_inspect(args),
         "memmodel" => cmd_memmodel(args),
         "serve" => cmd_serve(args),
+        "generate" => cmd_generate(args),
         "loadgen" => cmd_loadgen(args),
         "_job" => cmd_job(args),
         "help" | "--help" => {
@@ -116,7 +138,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "cast — CAST reproduction coordinator
-  gen | train | eval | bench | sweep | viz | data | inspect | memmodel | serve | loadgen
+  gen | train | eval | bench | sweep | viz | data | inspect | memmodel | serve | generate | loadgen
 Quickstart (no artifacts needed — native backend):
   cast gen --out artifacts && cast train --dir artifacts/text_cast_topk_n64_b2_c4_k16
 Variant bake-off (Table-2 story; all variants come from the registry):
@@ -187,12 +209,16 @@ fn apply_size_flags(mut meta: ModelMeta, args: &Args) -> ModelMeta {
 
 /// Synthesize a native-runnable manifest from CLI size flags (the
 /// zero-artifact `cast train` path; same scaling rules as `cast gen`).
+/// `--causal` opts into the decoder extension (paper §5.5) — required
+/// for a zero-artifact `cast serve` to answer `POST /generate`.
 fn synthetic_manifest(args: &Args) -> Result<Manifest> {
     use cast::runtime::native::{spec, variants};
     let variant = args.str("variant", variants::DEFAULT.name());
     variants::AttnVariant::parse(&variant)?;
-    let meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
-    Ok(Manifest::synthetic(apply_size_flags(meta, args)))
+    let mut meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
+    meta = apply_size_flags(meta, args);
+    meta.causal = meta.causal || args.has("causal");
+    Ok(Manifest::synthetic(meta))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -290,6 +316,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     use cast::util::trace;
+    if args.has("decode") {
+        return cmd_bench_decode(args);
+    }
     let root = PathBuf::from(args.str("artifacts", "artifacts"));
     let table = args.usize("table", 1);
     let task = args.str("task", "text");
@@ -344,6 +373,78 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!(
             "appended {} bench row(s) -> {path} (simd={}, {} threads)",
             rows.len(),
+            cast::util::simd::enabled(),
+            Engine::threads()
+        );
+    }
+    Ok(())
+}
+
+/// `cast bench --decode`: incremental-decode throughput.  One greedy
+/// generation per sequence length through the decode entry's
+/// cluster-state cache, against the full-forward-recompute baseline
+/// (sampled, parity-checked), with the early-vs-late tokens/sec split as
+/// the constant-per-token evidence.  `--append-json` adds
+/// `decode_tokens_per_sec` rows to the cross-PR trajectory file.
+fn cmd_bench_decode(args: &Args) -> Result<()> {
+    use cast::runtime::native::{spec, variants};
+    let variant = args.str("variant", "cast_sa");
+    variants::AttnVariant::parse(&variant)?;
+    let seq_lens: Vec<usize> = match args.opt_str("seq") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().context("--seq expects comma-separated lengths"))
+            .collect::<Result<Vec<usize>>>()?,
+        None => vec![128, 256],
+    };
+    let kappa = args.usize("kappa", 32);
+    let engine = Engine::auto()?;
+    let mut points = Vec::new();
+    println!("# decode bench: incremental cluster-state cache vs full-forward recompute");
+    println!(
+        "config,seq,prompt,new,decode_tok_s,full_tok_s,speedup,early_tok_s,late_tok_s"
+    );
+    for &seq in &seq_lens {
+        let mut meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
+        meta.causal = true;
+        meta.seq_len = seq;
+        meta.kappa = args.usize("kappa", kappa);
+        // default Nc so the cluster capacity covers the sequence, the
+        // paper's N = Nc·kappa operating point
+        meta.n_c = if args.has("nc") {
+            args.usize("nc", meta.n_c)
+        } else {
+            seq.div_ceil(meta.kappa).max(1)
+        };
+        meta.depth = args.usize("depth", meta.depth);
+        meta.heads = args.usize("heads", meta.heads);
+        meta.d = args.usize("d", meta.d);
+        let prompt_len = args.usize("prompt", (seq / 2).max(2));
+        let new_tokens = args.usize("max-new", 64);
+        let p = cast::bench::decode_bench(&engine, meta, prompt_len, new_tokens)?;
+        println!(
+            "{},{},{},{},{:.2},{:.2},{:.2},{:.2},{:.2}",
+            p.config,
+            p.seq_len,
+            p.prompt_len,
+            p.new_tokens,
+            p.decode_tokens_per_sec,
+            p.full_tokens_per_sec,
+            p.decode_tokens_per_sec / p.full_tokens_per_sec.max(1e-12),
+            p.early_tokens_per_sec,
+            p.late_tokens_per_sec
+        );
+        points.push(p);
+    }
+    if let Some(path) = args.opt_str("append-json") {
+        let pb = PathBuf::from(&path);
+        cast::bench::append_bench_rows(
+            &pb,
+            points.iter().map(cast::bench::decode_row_json).collect(),
+        )?;
+        println!(
+            "appended {} decode row(s) -> {path} (simd={}, {} threads)",
+            points.len(),
             cast::util::simd::enabled(),
             Engine::threads()
         );
@@ -571,12 +672,106 @@ fn cmd_serve(args: &Args) -> Result<()> {
     install_signal_handlers();
     let server = Server::bind(cfg, registry)?;
     println!(
-        "serving on http://{} — endpoints: POST /predict, GET /models, POST /models/reload, \
-         GET /healthz, GET /readyz, GET /metrics, GET /debug/trace, POST /admin/shutdown \
-         (ctrl-c drains gracefully)",
+        "serving on http://{} — endpoints: POST /predict, POST /generate, GET /models, \
+         POST /models/reload, GET /healthz, GET /readyz, GET /metrics, GET /debug/trace, \
+         POST /admin/shutdown (ctrl-c drains gracefully)",
         server.local_addr()
     );
     server.run()
+}
+
+/// `cast generate`: incremental decoding at the CLI — stream tokens
+/// from a causal CAST model through the decode entry's cluster-state
+/// cache.  `--check` re-runs the full causal forward at every step and
+/// asserts the incremental logits match bit-for-bit (the CI parity
+/// smoke); without it, per-token cost stays O(α) regardless of how much
+/// history has accumulated.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use cast::runtime::native::decode;
+    use std::io::Write as _;
+    let manifest = match args.opt_str("dir") {
+        Some(dir) => Manifest::load(&PathBuf::from(dir))?,
+        None => {
+            // zero-artifact path: the size flags, forced causal (the
+            // decode entry only exists for causal CAST configs)
+            use cast::runtime::native::{spec, variants};
+            let variant = args.str("variant", "cast_sa");
+            variants::AttnVariant::parse(&variant)?;
+            let mut meta = spec::tiny_meta_for_task(&args.str("task", "text"), &variant)?;
+            meta = apply_size_flags(meta, args);
+            meta.causal = true;
+            Manifest::synthetic(meta)
+        }
+    };
+    let engine = Engine::auto()?;
+    let exe = engine.load(&manifest, "decode")?;
+    let state = if let Some(ckpt) = args.opt_str("ckpt") {
+        checkpoint::load(&PathBuf::from(&ckpt))?.0
+    } else {
+        ModelState::init(&engine, &manifest, args.u64("seed", 0) as u32)?
+    };
+    let params: Vec<&cast::runtime::HostTensor> = state.params.iter().collect();
+    let vocab = manifest.meta.vocab as i32;
+    let prompt: Vec<i32> = match args.opt_str("tokens") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<i32>().context("--tokens expects comma-separated ids"))
+            .collect::<Result<Vec<i32>>>()?,
+        None => args
+            .str("prompt", "the quick brown fox ")
+            .bytes()
+            .map(|b| (b as i32) % vocab.max(1))
+            .collect(),
+    };
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(
+        prompt.iter().all(|&t| t >= 0 && t < vocab),
+        "prompt tokens must be in 0..{vocab}"
+    );
+    let max_new = args.usize("max-new", 64);
+    let temperature = args.f32("temperature", 0.0);
+    let check = args.has("check");
+    let mut rng = Rng::new(args.u64("seed", 0) ^ 0x9E37);
+    let mut session = exe.decode_begin()?;
+    let t0 = std::time::Instant::now();
+    exe.decode_prefill(&params, session.as_mut(), &prompt[..prompt.len() - 1])?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut history = prompt.clone();
+    let mut next = *prompt.last().unwrap();
+    let is_text = manifest.meta.task == "text";
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let t1 = std::time::Instant::now();
+    for _ in 0..max_new {
+        let logits = exe.decode_step(&params, session.as_mut(), next)?;
+        if check {
+            let reference = decode::full_logits(&manifest, &params, &history)?;
+            anyhow::ensure!(
+                logits == reference,
+                "parity failure at history length {}: incremental decode diverged from the full causal forward",
+                history.len()
+            );
+        }
+        let tok = decode::sample(&logits, temperature, &mut rng) as i32;
+        if is_text {
+            write!(out, "{}", (tok as u8) as char)?;
+        } else {
+            write!(out, "{tok} ")?;
+        }
+        out.flush()?;
+        history.push(tok);
+        next = tok;
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    writeln!(out)?;
+    println!(
+        "generated {max_new} tokens (prompt {}) in {prefill_s:.2}s prefill + {decode_s:.2}s decode \
+         -> {:.2} tok/s{}",
+        prompt.len(),
+        max_new as f64 / decode_s.max(1e-9),
+        if check { "; parity check passed" } else { "" }
+    );
+    Ok(())
 }
 
 /// `cast loadgen`: drive a running server closed-loop and report
@@ -589,6 +784,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         model: args.opt_str("model"),
         seq: if args.has("seq") { Some(args.usize("seq", 0)) } else { None },
         seed: args.u64("seed", 0),
+        generate: if args.has("generate") { Some(args.usize("generate", 16)) } else { None },
     };
     let report = cast::serve::loadgen::run(&cfg)?;
     println!(

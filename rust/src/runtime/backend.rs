@@ -5,7 +5,7 @@
 //!
 //! A *program* is identified by `(manifest, entry)` where `entry` is one
 //! of the artifact contract's entry points (`init`, `predict`,
-//! `predict_ag`, `train_step`); loading yields an [`Executable`] that maps
+//! `predict_ag`, `train_step`, `decode`); loading yields an [`Executable`] that maps
 //! a flat `HostTensor` input list to a flat output list.  Everything above
 //! this seam (`ModelState`, the trainer, the bench harness, analysis) is
 //! backend-agnostic.
@@ -13,7 +13,7 @@
 use std::any::Any;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::artifacts::Manifest;
 use super::tensor::HostTensor;
@@ -70,6 +70,55 @@ pub trait Executable: Send + Sync {
         _scratch: &mut dyn Scratch,
     ) -> Result<Vec<HostTensor>> {
         self.run_refs(inputs)
+    }
+
+    /// Open an incremental-decode session for a `"decode"` executable.
+    /// The returned [`DecodeSession`] is CAST's analog of a KV cache: it
+    /// persists per-layer cluster assignments, per-cluster K/V slots, and
+    /// running cluster summaries across steps so each generated token
+    /// costs O(α) instead of a full O(αN) forward.  Backends that do not
+    /// implement decode keep the default and bail.
+    fn decode_begin(&self) -> Result<Box<dyn DecodeSession>> {
+        bail!("backend does not support incremental decode (entry `{}`)", self.entry())
+    }
+
+    /// Absorb `tokens` (the prompt, or a chunk of it) into the session
+    /// cache without sampling — the chunked prefill path.  May be called
+    /// repeatedly; chunking must not change the resulting state.
+    fn decode_prefill(
+        &self,
+        _params: &[&HostTensor],
+        _session: &mut dyn DecodeSession,
+        _tokens: &[i32],
+    ) -> Result<()> {
+        bail!("backend does not support incremental decode (entry `{}`)", self.entry())
+    }
+
+    /// Absorb one token and return next-token logits over the vocabulary
+    /// (length `meta.d_emb`-projected tied-embedding readout, `vocab`
+    /// entries).  Bit-identical to re-running the full causal forward
+    /// over the whole history — asserted by the parity suite.
+    fn decode_step(
+        &self,
+        _params: &[&HostTensor],
+        _session: &mut dyn DecodeSession,
+        _token: i32,
+    ) -> Result<Vec<f32>> {
+        bail!("backend does not support incremental decode (entry `{}`)", self.entry())
+    }
+}
+
+/// Opaque per-sequence decode state owned by the caller and threaded back
+/// into [`Executable::decode_step`], mirroring the [`Scratch`] hand-back
+/// pattern: the seam stays backend-agnostic, the native engine downcasts.
+pub trait DecodeSession: Send {
+    fn as_any(&mut self) -> &mut dyn Any;
+
+    /// Tokens absorbed so far (prompt + generated).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 

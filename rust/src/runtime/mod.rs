@@ -20,6 +20,6 @@ pub mod pjrt;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ModelMeta, ParamSpec};
-pub use backend::{Backend, Executable, Scratch};
+pub use backend::{Backend, DecodeSession, Executable, Scratch};
 pub use engine::Engine;
 pub use tensor::{DType, Data, HostTensor};

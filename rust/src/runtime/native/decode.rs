@@ -1,0 +1,575 @@
+//! Incremental decode for the causal CAST variant: the cluster-state
+//! cache behind the `Executable::decode_*` seam.
+//!
+//! CAST's analog of a KV cache is the per-layer cluster state — which
+//! tokens sit in which cluster slot, plus their K/V projections.  Causal
+//! clustering assigns tokens in *position* order (first non-full cluster
+//! in descending-affinity preference order), so a token's assignment is
+//! frozen the moment it is made: appending token `n` touches exactly one
+//! cluster per layer, and the per-token cost is O(α) — four 1-row
+//! projections, an Nc-wide gate, one κ-wide attention row, and an FFN —
+//! independent of the sequence length.
+//!
+//! **Bit-parity contract** (asserted by `tests/integration_decode.rs`):
+//! greedy generation through [`step`] is bit-identical to re-running the
+//! full causal forward over the whole history each step, for any
+//! `CAST_NUM_THREADS` and either SIMD mode.  Two properties make this
+//! hold:
+//! * every reduction in the engine is fixed-order and independent of row
+//!   blocking (`matmul_rows8`, `dot8`, `sum8` at fixed row width), so a
+//!   1-row dense equals the same row of an n-row dense bitwise;
+//! * masked attention-score slots underflow to exactly +0.0 under
+//!   `exp(score - max)`, so the *values* behind the mask never reach the
+//!   output — the incremental path can score empty slots as `NEG_INF`
+//!   without the (garbage) K rows the full kernel reads there.
+//!
+//! The one regime where widths differ is `n < κ`: `cast_layer` clamps
+//! `kappa = κ.min(n)`, so attention-row widths grow with the prefix and
+//! no fixed-width cache can be bit-stable.  Below κ the session therefore
+//! falls back to a full forward over the (short) prefix each step; the
+//! cache is built once `n ≥ κ` and every later token is O(α) incremental.
+//! Chunked prefill exploits the same split: one full forward over the
+//! first κ prompt tokens builds the cache, then each remaining prompt
+//! token is absorbed incrementally — peak scratch is O(κ²) per layer, no
+//! B×N slab is ever materialized for a long prompt.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::runtime::artifacts::{Manifest, ModelMeta};
+use crate::runtime::backend::DecodeSession;
+use crate::runtime::tensor::HostTensor;
+use crate::util::fault;
+use crate::util::rng::Rng;
+use crate::util::simd;
+use crate::util::trace;
+
+use super::layer::{CastParams, CastScratch};
+use super::model::{self, Params, Workspace};
+use super::ops::{self, AttnFn, NEG_INF};
+
+/// Per-layer cluster-state cache (B = 1): the frozen assignment plus the
+/// K/V rows of every placed token, laid out by `(cluster, slot)`.
+struct LayerCache {
+    /// Occupied slots per cluster (greedy fills them contiguously).
+    fill: Vec<usize>,
+    /// Sequence position held by each `(cluster, slot)` cell.
+    pos: Vec<usize>,
+    /// 1.0 where the slot holds a real token (mirrors `CastScratch::valid`).
+    valid: Vec<f32>,
+    /// Cached K rows, (Nc·κ, d).
+    k: Vec<f32>,
+    /// Cached V rows, (Nc·κ, d).
+    v: Vec<f32>,
+}
+
+impl LayerCache {
+    fn new(n_c: usize, kappa: usize, d: usize) -> LayerCache {
+        LayerCache {
+            fill: vec![0; n_c],
+            pos: vec![0; n_c * kappa],
+            valid: vec![0.0; n_c * kappa],
+            k: vec![0.0; n_c * kappa * d],
+            v: vec![0.0; n_c * kappa * d],
+        }
+    }
+}
+
+/// One decode session: the token history plus the per-layer cluster
+/// caches.  Owned by the caller (serve holds one per in-flight `/generate`
+/// request and drops it on completion, deadline, or disconnect — that IS
+/// the eviction policy) and threaded back through the
+/// `Executable::decode_step` seam.
+pub struct DecodeState {
+    meta: ModelMeta,
+    key: String,
+    /// Full token history (prompt + generated) — the below-κ fallback
+    /// recomputes from it, and the cache rebuild reads its prefix.
+    tokens: Vec<i32>,
+    /// `None` until the prefix reaches κ; `Some` = incremental regime.
+    layers: Option<Vec<LayerCache>>,
+    /// How many of `tokens` the cache has absorbed.
+    absorbed: usize,
+    /// Reusable forward workspace for the fallback / rebuild passes.
+    ws: Workspace,
+}
+
+impl DecodeState {
+    pub fn new(manifest: &Manifest) -> DecodeState {
+        DecodeState {
+            meta: manifest.meta.clone(),
+            key: manifest.key.clone(),
+            tokens: Vec::new(),
+            layers: None,
+            absorbed: 0,
+            ws: Workspace::default(),
+        }
+    }
+
+    /// Whether the session is past the κ threshold and running O(α)
+    /// incremental steps (vs. the below-κ full-forward fallback).
+    pub fn incremental(&self) -> bool {
+        self.layers.is_some()
+    }
+
+    /// The token history absorbed so far.
+    pub fn history(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// FNV-1a fingerprint of the entire cluster-state cache (fills, slot
+    /// positions, K/V bits).  Chunked and monolithic prefill must agree
+    /// on it exactly — the parity suite's cheap equality witness.
+    pub fn cache_digest(&self) -> u64 {
+        fn eat(h: &mut u64, byte: u8) {
+            *h ^= byte as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        fn eat_u64(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                eat(h, b);
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        eat_u64(&mut h, self.absorbed as u64);
+        if let Some(layers) = &self.layers {
+            for lc in layers {
+                for &f in &lc.fill {
+                    eat_u64(&mut h, f as u64);
+                }
+                for &p in &lc.pos {
+                    eat_u64(&mut h, p as u64);
+                }
+                for &x in lc.valid.iter().chain(&lc.k).chain(&lc.v) {
+                    for b in x.to_bits().to_le_bytes() {
+                        eat(&mut h, b);
+                    }
+                }
+            }
+        }
+        h
+    }
+}
+
+impl DecodeSession for DecodeState {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+fn check_manifest(manifest: &Manifest, st: &DecodeState) -> Result<()> {
+    ensure!(
+        manifest.key == st.key,
+        "decode session belongs to model {:?}, not {:?}",
+        st.key,
+        manifest.key
+    );
+    ensure!(
+        manifest.meta.causal && manifest.meta.is_cast() && !manifest.meta.dual,
+        "incremental decode needs a causal, non-dual CAST variant (got {:?})",
+        manifest.meta.variant
+    );
+    Ok(())
+}
+
+fn cast_params<'a>(p: &Params<'a>, prefix: &str) -> Result<CastParams<'a>> {
+    Ok(CastParams {
+        wq_w: p.f(&format!("{prefix}.wq.w"))?,
+        wq_b: p.f(&format!("{prefix}.wq.b"))?,
+        wk_w: p.f(&format!("{prefix}.wk.w"))?,
+        wk_b: p.f(&format!("{prefix}.wk.b"))?,
+        wv_w: p.f(&format!("{prefix}.wv.w"))?,
+        wv_b: p.f(&format!("{prefix}.wv.b"))?,
+        wo_w: p.f(&format!("{prefix}.wo.w"))?,
+        wo_b: p.f(&format!("{prefix}.wo.b"))?,
+        s: p.f(&format!("{prefix}.s"))?,
+        phi_w: p.f(&format!("{prefix}.phi.w"))?,
+        phi_b: p.f(&format!("{prefix}.phi.b"))?,
+    })
+}
+
+/// Tied-embedding next-token readout: the classifier head has no LM
+/// head, so logits come from the transposed input path — final-layer
+/// activations x (d) → `projᵀ` → (d_emb) → `embᵀ` → (vocab).  Shared by
+/// the incremental step, the below-κ fallback, and the parity reference,
+/// so parity tests exercise the transformer stack, not the readout.
+pub fn readout(p: &Params, meta: &ModelMeta, xrow: &[f32]) -> Result<Vec<f32>> {
+    let (d, d_emb) = (meta.d, meta.d_emb);
+    ensure!(xrow.len() == d, "readout row has {} dims, want {}", xrow.len(), d);
+    let proj = p.f("proj.w")?; // (d_emb, d) row-major
+    let emb = p.f("embed.emb")?; // (vocab, d_emb)
+    let e: Vec<f32> = (0..d_emb).map(|i| ops::dot(xrow, &proj[i * d..(i + 1) * d])).collect();
+    Ok((0..meta.vocab).map(|v| ops::dot(&e, &emb[v * d_emb..(v + 1) * d_emb])).collect())
+}
+
+/// Reference next-token logits: a full causal forward over the entire
+/// `tokens` prefix (B = 1, fresh workspace) followed by the same
+/// tied-embedding [`readout`] the incremental path uses.  O(αN) per call —
+/// this is the recompute baseline the parity suite and `bench --decode`
+/// hold [`step`] against.
+pub fn full_logits(manifest: &Manifest, params: &[&HostTensor], tokens: &[i32]) -> Result<Vec<f32>> {
+    ensure!(!tokens.is_empty(), "full_logits needs at least one token");
+    let p = Params::bind(&manifest.params, params)?;
+    let meta = &manifest.meta;
+    let n = tokens.len();
+    let d = meta.d;
+    let mut ws = Workspace::default();
+    let (x, _) = model::encode_x(&p, meta, tokens, 1, n, false, &mut ws, &mut |_, _| {})?;
+    readout(&p, meta, &x[(n - 1) * d..n * d])
+}
+
+/// Full causal forward over `st.tokens[..upto]` that (a) returns the
+/// final pre-pool activations and (b) rebuilds the per-layer cluster
+/// caches from the forward's own scratch.  Only called with `upto ≥ κ`,
+/// so the κ clamp is the identity and the cache widths are steady-state.
+fn rebuild(manifest: &Manifest, p: &Params, st: &mut DecodeState, upto: usize) -> Result<Vec<f32>> {
+    let meta = &manifest.meta;
+    let (d, n_c) = (meta.d, meta.n_c.max(1));
+    let kappa = meta.kappa.max(1);
+    ensure!(upto >= kappa, "cache rebuild needs a prefix of at least κ={kappa} tokens");
+    let mut layers: Vec<LayerCache> =
+        (0..meta.depth).map(|_| LayerCache::new(n_c, kappa, d)).collect();
+    let toks = &st.tokens[..upto];
+    let (x, _) = model::encode_x(
+        p,
+        meta,
+        toks,
+        1,
+        upto,
+        false,
+        &mut st.ws,
+        &mut |li: usize, cs: &CastScratch| {
+            let lc = &mut layers[li];
+            for c in 0..n_c {
+                let mut fill = 0usize;
+                for slot in 0..kappa {
+                    let base = c * kappa + slot;
+                    if cs.valid[base] > 0.0 {
+                        let t = cs.idx[base];
+                        lc.pos[base] = t;
+                        lc.valid[base] = 1.0;
+                        lc.k[base * d..(base + 1) * d].copy_from_slice(&cs.k[t * d..(t + 1) * d]);
+                        lc.v[base * d..(base + 1) * d].copy_from_slice(&cs.v[t * d..(t + 1) * d]);
+                        fill += 1;
+                    }
+                }
+                lc.fill[c] = fill;
+            }
+        },
+    )?;
+    st.layers = Some(layers);
+    st.absorbed = upto;
+    Ok(x)
+}
+
+/// One O(α) incremental attention row for the token at `pos`: assign it
+/// to a cluster (decode.assign), append its K/V to that cluster's cache
+/// (decode.summary), attend over the cluster's κ slots and apply the
+/// A_sum combination (decode.attn).  Mirrors `cast_layer` steps 1–6 for a
+/// single appended row, bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn attn_row(
+    cp: &CastParams,
+    x: &[f32],
+    lc: &mut LayerCache,
+    pos: usize,
+    meta: &ModelMeta,
+    attn: AttnFn,
+) -> Result<Vec<f32>> {
+    let (h, d_h) = (meta.heads, meta.d_h());
+    let d = meta.d;
+    let n_c = meta.n_c.max(1);
+    let kappa = meta.kappa.max(1);
+    let tau = (d_h as f32).sqrt();
+
+    // step 1: 1-row projections
+    let q = ops::dense(x, cp.wq_w, cp.wq_b, 1, d, d);
+    let k = ops::dense(x, cp.wk_w, cp.wk_b, 1, d, d);
+    let v = ops::dense(x, cp.wv_w, cp.wv_b, 1, d, d);
+    let phi = ops::dense(x, cp.phi_w, cp.phi_b, 1, d, 1)[0];
+
+    // step 2/3: surrogate affinities + head-summed gate (Nc-wide rows)
+    let mut a_q = vec![0.0f32; h * n_c];
+    let mut a_k = vec![0.0f32; h * n_c];
+    for hh in 0..h {
+        let qrow = &q[hh * d_h..][..d_h];
+        let krow = &k[hh * d_h..][..d_h];
+        for c in 0..n_c {
+            let srow = &cp.s[(c * h + hh) * d_h..][..d_h];
+            a_q[hh * n_c + c] = ops::dot(qrow, srow);
+            a_k[hh * n_c + c] = ops::dot(krow, srow);
+        }
+    }
+    let mut rq = vec![0.0f32; n_c];
+    let mut f2k = vec![0.0f32; n_c];
+    for hh in 0..h {
+        for c in 0..n_c {
+            rq[c] += a_q[hh * n_c + c];
+            f2k[c] += a_k[hh * n_c + c];
+        }
+    }
+    let mut f2q = rq.clone();
+    ops::attn_rows(&mut f2q, n_c, attn);
+    ops::attn_rows(&mut f2k, n_c, attn);
+    let g = ops::sigmoid(phi);
+    let mut agrow = vec![0.0f32; n_c];
+    for c in 0..n_c {
+        agrow[c] = g * f2q[c] + (1.0 - g) * f2k[c];
+    }
+
+    // step 4: causal greedy assignment — clusters in descending-affinity
+    // order (index tiebreak), first non-full wins; same comparator as
+    // `greedy_assign`, so the choice matches the full forward exactly
+    let t = trace::span("decode.assign");
+    let mut pref: Vec<usize> = (0..n_c).collect();
+    pref.sort_unstable_by(|&a, &b| {
+        agrow[b]
+            .partial_cmp(&agrow[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let assigned = pref.iter().copied().find(|&c| lc.fill[c] < kappa);
+    drop(t);
+
+    let mut r = vec![0.0f32; d];
+    if let Some(c) = assigned {
+        // update only this cluster's cached state: append the token's
+        // K/V into the next free slot
+        let t = trace::span("decode.summary");
+        let slot = lc.fill[c];
+        let base = c * kappa + slot;
+        lc.k[base * d..(base + 1) * d].copy_from_slice(&k);
+        lc.v[base * d..(base + 1) * d].copy_from_slice(&v);
+        lc.valid[base] = 1.0;
+        lc.pos[base] = pos;
+        lc.fill[c] += 1;
+        drop(t);
+
+        // step 5/6: one κ-wide masked attention row per head over the
+        // cluster's slots, then the A_sum combination (eq. 5).  Empty
+        // slots score NEG_INF — the full kernel reads garbage K rows
+        // there, but exp() underflows both to exactly +0.0, so the
+        // outputs agree bitwise.  Every cached member has position < pos
+        // (and the token itself ==), so the causal mask never fires.
+        let t = trace::span("decode.attn");
+        let mut scores = vec![0.0f32; kappa];
+        let mut intra = vec![0.0f32; d];
+        for hh in 0..h {
+            let qrow = &q[hh * d_h..][..d_h];
+            for (j, sv) in scores.iter_mut().enumerate() {
+                *sv = if lc.valid[c * kappa + j] != 0.0 {
+                    let krow = &lc.k[(c * kappa + j) * d + hh * d_h..][..d_h];
+                    ops::dot(qrow, krow) / tau
+                } else {
+                    NEG_INF
+                };
+            }
+            ops::attn_rows(&mut scores, kappa, attn);
+            for j in 0..kappa {
+                let pij = scores[j] * lc.valid[c * kappa + j];
+                if pij != 0.0 {
+                    let vrow = &lc.v[(c * kappa + j) * d + hh * d_h..][..d_h];
+                    simd::axpy8(&mut intra[hh * d_h..(hh + 1) * d_h], pij, vrow);
+                }
+            }
+        }
+        let sp = ops::softplus1(phi) / tau;
+        let mut a_sum: Vec<f32> = (0..n_c).map(|cc| rq[cc] * sp).collect();
+        ops::attn_rows(&mut a_sum, n_c, attn);
+        let wi = a_sum[c];
+        if wi != 0.0 {
+            simd::axpy8(&mut r, wi, &intra);
+        }
+        drop(t);
+    }
+    // unplaced token (every cluster full): r stays zero and the output is
+    // the wo bias row — exactly what the full forward produces
+    Ok(ops::dense(&r, cp.wo_w, cp.wo_b, 1, d, d))
+}
+
+/// Append one token at `pos` through every layer incrementally; returns
+/// the final pre-readout activation row (d).
+fn append_incremental(
+    p: &Params,
+    meta: &ModelMeta,
+    layers: &mut [LayerCache],
+    pos: usize,
+    token: i32,
+) -> Result<Vec<f32>> {
+    let (d, d_emb) = (meta.d, meta.d_emb);
+    let attn = AttnFn::parse(&meta.attn_fn)?;
+
+    // embed: token row + its sinusoidal position row, then the input proj
+    let emb = p.f("embed.emb")?;
+    let vocab_max = meta.vocab.saturating_sub(1);
+    let tok = (token.max(0) as usize).min(vocab_max);
+    let mut e = emb[tok * d_emb..(tok + 1) * d_emb].to_vec();
+    let pe = ops::sinusoidal_position_row(pos, d_emb);
+    simd::add8(&mut e, &pe);
+    let mut x = ops::dense(&e, p.f("proj.w")?, p.f("proj.b")?, 1, d_emb, d);
+
+    let mut hid: Vec<f32> = Vec::new();
+    let mut ffn_out: Vec<f32> = Vec::new();
+    for (i, lc) in layers.iter_mut().enumerate() {
+        let blk = format!("blocks.{i}");
+        let cp = cast_params(p, &format!("{blk}.attn"))?;
+        if meta.prenorm {
+            let mut xn = x.clone();
+            model::apply_norm(p, meta, &format!("{blk}.norm1"), &mut xn)?;
+            let a = attn_row(&cp, &xn, lc, pos, meta, attn)?;
+            simd::add8(&mut x, &a);
+            let mut xn2 = x.clone();
+            model::apply_norm(p, meta, &format!("{blk}.norm2"), &mut xn2)?;
+            model::ffn(p, &format!("{blk}.ffn"), &xn2, 1, d, meta.d_ff, &mut hid, &mut ffn_out)?;
+            simd::add8(&mut x, &ffn_out);
+        } else {
+            let a = attn_row(&cp, &x, lc, pos, meta, attn)?;
+            simd::add8(&mut x, &a);
+            model::apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
+            model::ffn(p, &format!("{blk}.ffn"), &x, 1, d, meta.d_ff, &mut hid, &mut ffn_out)?;
+            simd::add8(&mut x, &ffn_out);
+            model::apply_norm(p, meta, &format!("{blk}.norm2"), &mut x)?;
+        }
+    }
+    if meta.prenorm {
+        model::apply_norm(p, meta, "out_norm", &mut x)?;
+    }
+    Ok(x)
+}
+
+/// Absorb `tokens` (the prompt, or one chunk of it) into the session
+/// without sampling.  `monolithic = false` (the production path) builds
+/// the cache from a full forward over only the first κ tokens and absorbs
+/// the rest one-by-one — O(κ²) peak scratch for any prompt length.
+/// `monolithic = true` rebuilds from one full forward over the entire
+/// history — the reference the parity suite checks chunking against.
+pub fn prefill(
+    manifest: &Manifest,
+    params: &[&HostTensor],
+    st: &mut DecodeState,
+    tokens: &[i32],
+    monolithic: bool,
+) -> Result<()> {
+    check_manifest(manifest, st)?;
+    let p = Params::bind(&manifest.params, params)?;
+    st.tokens.extend_from_slice(tokens);
+    let meta = &manifest.meta;
+    let kappa = meta.kappa.max(1);
+    let n = st.tokens.len();
+    if st.layers.is_none() {
+        if n < kappa {
+            return Ok(()); // below κ: nothing to cache yet (fallback regime)
+        }
+        let upto = if monolithic { n } else { kappa };
+        rebuild(manifest, &p, st, upto)?;
+    }
+    while st.absorbed < st.tokens.len() {
+        let i = st.absorbed;
+        let tok = st.tokens[i];
+        let layers = st.layers.as_mut().expect("cache exists past κ");
+        append_incremental(&p, meta, layers, i, tok)?;
+        st.absorbed = i + 1;
+    }
+    Ok(())
+}
+
+/// Absorb one token and return the next-token logits (vocab).
+/// Bit-identical to a full causal forward over the whole history — the
+/// parity suite asserts it across the threads × SIMD matrix.
+pub fn step(
+    manifest: &Manifest,
+    params: &[&HostTensor],
+    st: &mut DecodeState,
+    token: i32,
+) -> Result<Vec<f32>> {
+    // decode-path fault point (chaos testing: a mid-stream `panic` plan
+    // must still answer the /generate request cleanly)
+    if fault::active() {
+        fault::check("engine.decode").map_err(|e| anyhow!("{e} (decode step)"))?;
+    }
+    check_manifest(manifest, st)?;
+    let p = Params::bind(&manifest.params, params)?;
+    let meta = &manifest.meta;
+    let d = meta.d;
+    let kappa = meta.kappa.max(1);
+    st.tokens.push(token);
+    let n = st.tokens.len();
+
+    if st.layers.is_none() {
+        if n < kappa {
+            // below the κ clamp no fixed-width cache is bit-stable (row
+            // widths still grow with the prefix): recompute the short
+            // forward outright
+            let toks = &st.tokens[..n];
+            let (x, _) =
+                model::encode_x(&p, meta, toks, 1, n, false, &mut st.ws, &mut |_, _| {})?;
+            return readout(&p, meta, &x[(n - 1) * d..n * d]);
+        }
+        // crossing κ: one full forward over the first κ tokens builds the
+        // cache; any backlog past it is absorbed incrementally below
+        let x = rebuild(manifest, &p, st, kappa)?;
+        if st.absorbed == n {
+            return readout(&p, meta, &x[(n - 1) * d..n * d]);
+        }
+    }
+    let mut last = Vec::new();
+    while st.absorbed < n {
+        let i = st.absorbed;
+        let tok = st.tokens[i];
+        let layers = st.layers.as_mut().expect("cache exists past κ");
+        last = append_incremental(&p, meta, layers, i, tok)?;
+        st.absorbed = i + 1;
+    }
+    ensure!(!last.is_empty(), "decode step absorbed nothing");
+    readout(&p, meta, &last)
+}
+
+/// Greedy next token: argmax with lowest-index tiebreak (matches the
+/// parity reference exactly).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut arg = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[arg] {
+            arg = i;
+        }
+    }
+    arg
+}
+
+/// Temperature sampling over softmax(logits / temp); `temp <= 0` falls
+/// back to greedy.  Deterministic given the caller's `Rng`.
+pub fn sample(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    if temp <= 0.0 || !temp.is_finite() || logits.is_empty() {
+        return argmax(logits);
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits.iter().map(|&v| (((v - mx) / temp) as f64).exp()).collect();
+    let z: f64 = weights.iter().sum();
+    if !(z > 0.0) || !z.is_finite() {
+        return argmax(logits);
+    }
+    let mut u = rng.f32() as f64 * z;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    logits.len() - 1
+}
+
+/// The support predicate for the `"decode"` entry: causal CAST, non-dual.
+pub fn supported(meta: &ModelMeta) -> bool {
+    meta.causal && meta.is_cast() && !meta.dual
+}
+
+/// Guard against misuse of the seam from a non-decode executable.
+pub fn ensure_entry(entry: &str) -> Result<()> {
+    if entry != "decode" {
+        bail!("decode sessions need a \"decode\" executable (this one is {entry:?})");
+    }
+    Ok(())
+}

@@ -2,7 +2,9 @@
 //! forward pass (surrogate-token affinities, Top-κ clustering,
 //! intra-cluster attention, cluster summaries, inter-cluster mixing —
 //! paper §3.1–3.3) plus the `init`/`predict`/`predict_ag`/`train_step`
-//! program entry points, shaped exactly like the AOT artifact manifests.
+//! program entry points, shaped exactly like the AOT artifact manifests,
+//! and the stateful `decode` entry (incremental generation through the
+//! [`decode`] cluster-state cache).
 //!
 //! This is the default [`Backend`](super::Backend): it needs no artifacts
 //! on disk, no Python, and no external crates — `Manifest::synthetic`
@@ -19,6 +21,7 @@
 //! head-only regression path.
 
 pub mod clustered;
+pub mod decode;
 pub mod grad;
 pub mod layer;
 pub mod model;
@@ -32,13 +35,13 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, Executable, Scratch};
+use super::backend::{Backend, DecodeSession, Executable, Scratch};
 use super::tensor::HostTensor;
 
 /// The model variants the engine implements — re-exported from the
 /// [`variants`] registry, the single source of truth for variant names.
 pub use variants::NAMES as VARIANTS;
-const ENTRIES: [&str; 4] = ["init", "predict", "predict_ag", "train_step"];
+const ENTRIES: [&str; 5] = ["init", "predict", "predict_ag", "train_step", "decode"];
 
 /// The pure-Rust CPU engine.
 pub struct NativeBackend;
@@ -52,6 +55,7 @@ impl Backend for NativeBackend {
         match entry {
             "init" | "predict" | "train_step" => true,
             "predict_ag" => manifest.meta.has_ag(),
+            "decode" => decode::supported(&manifest.meta),
             _ => false,
         }
     }
@@ -105,6 +109,10 @@ impl Executable for NativeExecutable {
             "predict" => model::run_predict(&self.manifest, inputs),
             "predict_ag" => model::run_predict_ag(&self.manifest, inputs),
             "train_step" => model::run_train_step(&self.manifest, inputs),
+            "decode" => bail!(
+                "the \"decode\" entry is stateful — drive it through \
+                 decode_begin/decode_prefill/decode_step, not run_refs"
+            ),
             other => bail!("unknown entry {other:?}"),
         }
     }
@@ -126,6 +134,39 @@ impl Executable for NativeExecutable {
             }
         }
         self.run_refs(inputs)
+    }
+
+    fn decode_begin(&self) -> Result<Box<dyn DecodeSession>> {
+        decode::ensure_entry(&self.entry)?;
+        Ok(Box::new(decode::DecodeState::new(&self.manifest)))
+    }
+
+    fn decode_prefill(
+        &self,
+        params: &[&HostTensor],
+        session: &mut dyn DecodeSession,
+        tokens: &[i32],
+    ) -> Result<()> {
+        decode::ensure_entry(&self.entry)?;
+        let st = session
+            .as_any()
+            .downcast_mut::<decode::DecodeState>()
+            .ok_or_else(|| anyhow::anyhow!("decode session is not a native DecodeState"))?;
+        decode::prefill(&self.manifest, params, st, tokens, false)
+    }
+
+    fn decode_step(
+        &self,
+        params: &[&HostTensor],
+        session: &mut dyn DecodeSession,
+        token: i32,
+    ) -> Result<Vec<f32>> {
+        decode::ensure_entry(&self.entry)?;
+        let st = session
+            .as_any()
+            .downcast_mut::<decode::DecodeState>()
+            .ok_or_else(|| anyhow::anyhow!("decode session is not a native DecodeState"))?;
+        decode::step(&self.manifest, params, st, token)
     }
 }
 

@@ -94,10 +94,16 @@ impl<'a> Params<'a> {
 }
 
 pub(crate) fn dims_for(meta: &ModelMeta, b: usize) -> Result<Dims> {
+    dims_for_n(meta, b, meta.seq_len)
+}
+
+/// [`dims_for`] with an explicit sequence length — the decode paths run
+/// the same layers over growing prefixes instead of `meta.seq_len`.
+pub(crate) fn dims_for_n(meta: &ModelMeta, b: usize, n: usize) -> Result<Dims> {
     ensure!(meta.heads > 0 && meta.d % meta.heads == 0, "d={} not divisible by h={}", meta.d, meta.heads);
     Ok(Dims {
         b,
-        n: meta.seq_len,
+        n,
         heads: meta.heads,
         d_h: meta.d_h(),
         n_c: meta.n_c.max(1),
@@ -158,7 +164,7 @@ pub(crate) fn apply_norm(p: &Params, meta: &ModelMeta, prefix: &str, x: &mut [f3
 /// FFN into `out`, with hidden activations in the reusable `hid` buffer
 /// (both owned by the caller's [`Workspace`]).
 #[allow(clippy::too_many_arguments)]
-fn ffn(
+pub(crate) fn ffn(
     p: &Params,
     prefix: &str,
     x: &[f32],
@@ -205,16 +211,22 @@ fn attn_apply(
     variants::attn_forward(v, p, prefix, x, dims, ws)
 }
 
-/// tokens (b·N,) int32 → pooled features (b, d) [+ per-layer A_g].
-fn encode(
+/// tokens (b·n,) int32 → final pre-pool activations x (b·n, d) [+ per-layer
+/// A_g].  `n` is explicit (the decode paths run growing prefixes, not
+/// `meta.seq_len`); `after_attn` fires right after each block's attention
+/// with the layer index and the attention scratch — the decode cache
+/// rebuild reads the per-layer K/V rows and cluster assignments out of it,
+/// everyone else passes a no-op.
+pub(crate) fn encode_x(
     p: &Params,
     meta: &ModelMeta,
     tokens: &[i32],
     b: usize,
+    n: usize,
     collect_ag: bool,
     ws: &mut Workspace,
+    after_attn: &mut dyn FnMut(usize, &CastScratch),
 ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-    let n = meta.seq_len;
     ensure!(tokens.len() == b * n, "tokens length {} != {}x{}", tokens.len(), b, n);
     let (d, d_emb) = (meta.d, meta.d_emb);
     let rows = b * n;
@@ -242,7 +254,7 @@ fn encode(
     let mut x = ops::dense(&x, p.f("proj.w")?, p.f("proj.b")?, rows, d_emb, d);
     drop(t);
 
-    let dims = dims_for(meta, b)?;
+    let dims = dims_for_n(meta, b, n)?;
     let mut ags = Vec::new();
     for i in 0..meta.depth {
         let li = i as i32;
@@ -256,6 +268,7 @@ fn encode(
             let t = trace::span_layer("attn", li);
             let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &ws.xn, &dims, &mut ws.cast)?;
             drop(t);
+            after_attn(i, &ws.cast);
             if collect_ag {
                 ags.push(ag);
             }
@@ -274,6 +287,7 @@ fn encode(
             let t = trace::span_layer("attn", li);
             let (a, ag) = attn_apply(p, meta, &format!("{blk}.attn"), &x, &dims, &mut ws.cast)?;
             drop(t);
+            after_attn(i, &ws.cast);
             if collect_ag {
                 ags.push(ag);
             }
@@ -293,6 +307,21 @@ fn encode(
     if meta.prenorm {
         apply_norm(p, meta, "out_norm", &mut x)?;
     }
+    Ok((x, ags))
+}
+
+/// tokens (b·N,) int32 → pooled features (b, d) [+ per-layer A_g].
+fn encode(
+    p: &Params,
+    meta: &ModelMeta,
+    tokens: &[i32],
+    b: usize,
+    collect_ag: bool,
+    ws: &mut Workspace,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let n = meta.seq_len;
+    let d = meta.d;
+    let (x, ags) = encode_x(p, meta, tokens, b, n, collect_ag, ws, &mut |_, _| {})?;
 
     // mean-pool over the sequence, one task per batch element
     let t = trace::span("pool");

@@ -93,8 +93,12 @@ pub fn dense_into(
 pub use crate::util::simd::dot8 as dot;
 
 /// Normalize every `cols`-wide row of `x` in place with the given weight
-/// function.  Rows that are entirely masked to `NEG_INF` become uniform
-/// (softmax) or ~zero (laplace) — callers multiply by the mask afterwards,
+/// function.  A row that is entirely masked to `NEG_INF` has zero valid
+/// slots — there is nothing to attend to, so it becomes all zeros rather
+/// than an arbitrary uniform distribution over masked columns.  (Reachable
+/// at decode step 0 when a fresh cluster has no members, and via all-masked
+/// rows in the fused kernels.)  Partially-masked rows still normalize to 1
+/// over the surviving columns; callers multiply by the mask afterwards,
 /// exactly like the reference kernel.
 pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
     debug_assert!(cols > 0 && x.len() % cols == 0);
@@ -105,6 +109,11 @@ pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
                 // rides the (scalar-libm) exp pass — elementwise, so still
                 // bit-identical across SIMD modes
                 let m = simd::max8(row);
+                if m <= NEG_INF * 0.5 {
+                    // every column masked: no valid slot, weight nothing
+                    row.fill(0.0);
+                    continue;
+                }
                 for v in row.iter_mut() {
                     *v = (*v - m).exp();
                 }
@@ -119,6 +128,11 @@ pub fn attn_rows(x: &mut [f32], cols: usize, f: AttnFn) {
             let sigma = (0.25 / std::f32::consts::PI).sqrt();
             let denom = sigma * 2.0f32.sqrt();
             for row in x.chunks_mut(cols) {
+                let m = simd::max8(row);
+                if m <= NEG_INF * 0.5 {
+                    row.fill(0.0);
+                    continue;
+                }
                 for v in row.iter_mut() {
                     *v = 0.5 * (1.0 + erf((*v - mu) / denom));
                 }
@@ -230,6 +244,25 @@ pub fn sinusoidal_positions(n: usize, d: usize) -> Vec<f32> {
             if cj < d {
                 pe[pos * d + cj] = ang.cos() as f32;
             }
+        }
+    }
+    pe
+}
+
+/// One row of [`sinusoidal_positions`] — bit-identical to row `pos` of
+/// the full table for any table length (a row depends only on `pos` and
+/// `d`), so the decode path embeds one appended token without building an
+/// O(n·d) table.
+pub fn sinusoidal_position_row(pos: usize, d: usize) -> Vec<f32> {
+    let half = d.div_ceil(2);
+    let mut pe = vec![0.0f32; d];
+    for j in 0..half {
+        let freq = (-(10000.0f64.ln()) * j as f64 / half as f64).exp();
+        let ang = pos as f64 * freq;
+        pe[j] = ang.sin() as f32;
+        let cj = half + j;
+        if cj < d {
+            pe[cj] = ang.cos() as f32;
         }
     }
     pe

@@ -171,6 +171,21 @@ impl<S: Read + Write> HttpConn<S> {
     ) -> io::Result<()> {
         write_response_ext(&mut self.stream, status, content_type, extra, body, keep_alive)
     }
+
+    /// Begin a close-delimited streaming response: write the head (no
+    /// `Content-Length`, `Connection: close`) and hand back the raw
+    /// stream for incremental body writes.  EOF is the only end-of-body
+    /// marker, so the caller must drop the connection when done — the
+    /// companion client reader is [`read_response_streaming`].
+    pub fn start_streaming(
+        &mut self,
+        status: u16,
+        content_type: &str,
+        extra: &[(&str, String)],
+    ) -> io::Result<&mut S> {
+        write_streaming_head(&mut self.stream, status, content_type, extra)?;
+        Ok(&mut self.stream)
+    }
 }
 
 /// Index of `\r\n\r\n` (start of the terminator) in `buf`, if present.
@@ -350,6 +365,28 @@ pub fn write_response_ext(
     w.flush()
 }
 
+/// Write the head of a close-delimited streaming response.  No
+/// `Content-Length` is emitted and the connection is marked `close`:
+/// the body is whatever bytes follow until EOF, which lets the server
+/// flush tokens as they are produced (`/generate`).
+pub fn write_streaming_head(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nConnection: close\r\n",
+        reason(status)
+    )?;
+    for (name, value) in extra {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
 /// Write one client request with a fixed-length body (the loadgen /
 /// integration-test side of the wire).
 pub fn write_request(
@@ -375,18 +412,27 @@ pub struct Response {
     pub body: Vec<u8>,
 }
 
-/// Blocking read of exactly one response (status line, headers,
-/// `Content-Length` body).  The server never pipelines responses, so no
-/// carry-over buffer is needed on the client side.
-pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
-    let bad = |msg: &str| io::Error::new(ErrorKind::InvalidData, msg.to_string());
-    let mut buf = Vec::new();
+/// Default client-side body cap, mirroring the server's `ServeConfig`
+/// default: a response claiming more than this is a protocol error, not
+/// an allocation request.
+pub const CLIENT_MAX_BODY: usize = 8 * 1024 * 1024;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(ErrorKind::InvalidData, msg)
+}
+
+/// Read into `buf` until it holds a complete head; returns the parsed
+/// status + headers and the head-terminator index.
+fn read_response_head(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> io::Result<(u16, BTreeMap<String, String>, usize)> {
     let head_end = loop {
-        if let Some(e) = find_head_end(&buf) {
+        if let Some(e) = find_head_end(buf) {
             break e;
         }
         if buf.len() > MAX_HEAD_BYTES {
-            return Err(bad("response head too large"));
+            return Err(bad("response head too large".into()));
         }
         let mut tmp = [0u8; 4096];
         match r.read(&mut tmp) {
@@ -399,45 +445,126 @@ pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
                     "connection closed before response head",
                 ))
             }
-            Ok(0) => return Err(bad("connection closed mid-head")),
+            Ok(0) => return Err(bad("connection closed mid-head".into())),
             Ok(n) => buf.extend_from_slice(&tmp[..n]),
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) => return Err(e),
         }
     };
-    let text = std::str::from_utf8(&buf[..head_end]).map_err(|_| bad("non-UTF-8 head"))?;
+    let text =
+        std::str::from_utf8(&buf[..head_end]).map_err(|_| bad("non-UTF-8 head".into()))?;
     let mut lines = text.split("\r\n");
     let status_line = lines.next().unwrap_or("");
     let mut parts = status_line.splitn(3, ' ');
     let proto = parts.next().unwrap_or("");
     if !proto.starts_with("HTTP/1.") {
-        return Err(bad("malformed status line"));
+        return Err(bad("malformed status line".into()));
     }
     let status: u16 = parts
         .next()
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| bad("malformed status code"))?;
+        .ok_or_else(|| bad("malformed status code".into()))?;
     let mut headers = BTreeMap::new();
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
         }
     }
-    let clen: usize = headers
-        .get("content-length")
-        .and_then(|v| v.trim().parse().ok())
-        .unwrap_or(0);
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < clen {
+    Ok((status, headers, head_end))
+}
+
+/// The response's declared body length: absent → 0, unparseable or over
+/// `max_body` → classified `InvalidData` (mirroring the server's own
+/// `content_length` checks — a garbage or hostile length must fail, not
+/// silently read 0 or allocate unboundedly).
+fn response_content_length(
+    headers: &BTreeMap<String, String>,
+    max_body: usize,
+) -> io::Result<usize> {
+    let Some(v) = headers.get("content-length") else {
+        return Ok(0);
+    };
+    let n: usize = v
+        .trim()
+        .parse()
+        .map_err(|_| bad(format!("invalid response content-length {v:?}")))?;
+    if n > max_body {
+        return Err(bad(format!(
+            "response body of {n} bytes exceeds the {max_body}-byte cap"
+        )));
+    }
+    Ok(n)
+}
+
+/// Blocking read of exactly one fixed-length response (status line,
+/// headers, `Content-Length` body).  `carry` is the connection's
+/// carry-over buffer: any bytes past this response's body (a pipelined
+/// follow-up already in flight) stay buffered there for the next call
+/// instead of being dropped on the floor — callers keep one `Vec` per
+/// connection and thread it through every read on that stream.
+pub fn read_response(
+    r: &mut impl Read,
+    carry: &mut Vec<u8>,
+    max_body: usize,
+) -> io::Result<Response> {
+    let mut buf = std::mem::take(carry);
+    let (status, headers, head_end) = read_response_head(r, &mut buf)?;
+    let clen = response_content_length(&headers, max_body)?;
+    let body_start = head_end + 4;
+    while buf.len() < body_start + clen {
         let mut tmp = [0u8; 4096];
         match r.read(&mut tmp) {
-            Ok(0) => return Err(bad("connection closed mid-body")),
+            Ok(0) => return Err(bad("connection closed mid-body".into())),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    *carry = buf.split_off(body_start + clen);
+    let body = buf.split_off(body_start);
+    Ok(Response { status, headers, body })
+}
+
+/// Blocking read of one **close-delimited** response — the `/generate`
+/// streaming wire format: no `Content-Length`, `Connection: close`, body
+/// runs until EOF (capped at `max_body`).  A response that does declare
+/// a length (the pre-stream error path) is completed normally instead.
+pub fn read_response_streaming(
+    r: &mut impl Read,
+    carry: &mut Vec<u8>,
+    max_body: usize,
+) -> io::Result<Response> {
+    let mut buf = std::mem::take(carry);
+    let (status, headers, head_end) = read_response_head(r, &mut buf)?;
+    let body_start = head_end + 4;
+    if headers.contains_key("content-length") {
+        let clen = response_content_length(&headers, max_body)?;
+        while buf.len() < body_start + clen {
+            let mut tmp = [0u8; 4096];
+            match r.read(&mut tmp) {
+                Ok(0) => return Err(bad("connection closed mid-body".into())),
+                Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        *carry = buf.split_off(body_start + clen);
+        let body = buf.split_off(body_start);
+        return Ok(Response { status, headers, body });
+    }
+    let mut body = buf.split_off(body_start);
+    loop {
+        if body.len() > max_body {
+            return Err(bad(format!("streamed body exceeds the {max_body}-byte cap")));
+        }
+        let mut tmp = [0u8; 4096];
+        match r.read(&mut tmp) {
+            Ok(0) => break,
             Ok(n) => body.extend_from_slice(&tmp[..n]),
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) => return Err(e),
         }
     }
-    body.truncate(clen);
     Ok(Response { status, headers, body })
 }
 
@@ -563,10 +690,96 @@ mod tests {
     fn response_roundtrip() {
         let mut wire = Vec::new();
         write_response(&mut wire, 200, "application/json", b"{\"ok\":true}", true).unwrap();
-        let resp = read_response(&mut wire.as_slice()).unwrap();
+        let mut carry = Vec::new();
+        let resp = read_response(&mut wire.as_slice(), &mut carry, 1024).unwrap();
         assert_eq!(resp.status, 200);
         assert_eq!(resp.body, b"{\"ok\":true}");
         assert_eq!(resp.headers.get("connection").map(|s| s.as_str()), Some("keep-alive"));
+        assert!(carry.is_empty());
+    }
+
+    #[test]
+    fn pipelined_response_bytes_survive_in_the_carry_buffer() {
+        // two responses land in one read: the bytes past the first
+        // body must stay in `carry` and parse as the second response
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "application/json", b"first", true).unwrap();
+        write_response(&mut wire, 404, "application/json", b"second!", false).unwrap();
+        let mut stream = ChunkStream::new(&[std::str::from_utf8(&wire).unwrap()], true);
+        let mut carry = Vec::new();
+        let a = read_response(&mut stream, &mut carry, 1024).unwrap();
+        assert_eq!((a.status, a.body.as_slice()), (200, b"first".as_slice()));
+        assert!(!carry.is_empty(), "second response must be carried, not dropped");
+        let b = read_response(&mut stream, &mut carry, 1024).unwrap();
+        assert_eq!((b.status, b.body.as_slice()), (404, b"second!".as_slice()));
+        assert!(carry.is_empty());
+    }
+
+    #[test]
+    fn response_content_length_is_capped_and_validated() {
+        let mut carry = Vec::new();
+        let huge = "HTTP/1.1 200 OK\r\nContent-Length: 99999\r\n\r\n";
+        let err = read_response(&mut ChunkStream::new(&[huge], true), &mut carry, 1024)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData, "over-cap length must fail: {err}");
+        assert!(err.to_string().contains("cap"), "classified message, got {err}");
+        let mut carry = Vec::new();
+        let garbage = "HTTP/1.1 200 OK\r\nContent-Length: nope\r\n\r\n";
+        let err = read_response(&mut ChunkStream::new(&[garbage], true), &mut carry, 1024)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData, "garbage length must fail, not read 0");
+    }
+
+    #[test]
+    fn streaming_reader_consumes_close_delimited_bodies() {
+        let wire = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n{\"token\":1}\n{\"done\":true}\n";
+        let mut carry = Vec::new();
+        let resp = read_response_streaming(
+            &mut ChunkStream::new(&[wire], true),
+            &mut carry,
+            1024,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"token\":1}\n{\"done\":true}\n");
+        // with a declared length it degrades to the fixed-length read
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, "application/json", b"{\"error\":\"busy\"}", false)
+            .unwrap();
+        let mut carry = Vec::new();
+        let resp = read_response_streaming(
+            &mut ChunkStream::new(&[std::str::from_utf8(&wire).unwrap()], true),
+            &mut carry,
+            1024,
+        )
+        .unwrap();
+        assert_eq!((resp.status, resp.body.as_slice()), (503, b"{\"error\":\"busy\"}".as_slice()));
+    }
+
+    #[test]
+    fn streaming_head_roundtrips_through_the_streaming_reader() {
+        let mut wire = Vec::new();
+        write_streaming_head(
+            &mut wire,
+            200,
+            "application/x-ndjson",
+            &[("X-Stage-Timings", "parse=1;queue=0;batch=0;compute=9;reply=0".to_string())],
+        )
+        .unwrap();
+        wire.extend_from_slice(b"{\"token\":5,\"pos\":3}\n{\"done\":true,\"tokens\":1}\n");
+        let text = String::from_utf8(wire).unwrap();
+        assert!(!text.to_ascii_lowercase().contains("content-length"));
+        let mut carry = Vec::new();
+        let resp = read_response_streaming(
+            &mut ChunkStream::new(&[text.as_str()], true),
+            &mut carry,
+            1024,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.headers.contains_key("x-stage-timings"));
+        assert_eq!(resp.body, b"{\"token\":5,\"pos\":3}\n{\"done\":true,\"tokens\":1}\n");
+        assert!(carry.is_empty(), "close-delimited stream leaves no pipelined leftovers");
     }
 
     #[test]

@@ -40,6 +40,10 @@ pub struct LoadgenConfig {
     /// Tokens per request (default: the model's full sequence length;
     /// shorter values exercise the padding path).
     pub seq: Option<usize>,
+    /// Drive `POST /generate` (streaming, close-delimited) instead of
+    /// `/predict`, generating this many tokens per request.  Each request
+    /// uses a fresh connection — the streaming protocol closes it.
+    pub generate: Option<usize>,
     pub seed: u64,
 }
 
@@ -51,6 +55,7 @@ impl Default for LoadgenConfig {
             requests: 25,
             model: None,
             seq: None,
+            generate: None,
             seed: 0,
         }
     }
@@ -104,8 +109,9 @@ pub struct LoadReport {
 fn discover(cfg: &LoadgenConfig) -> Result<(String, usize, usize, usize)> {
     let mut stream = TcpStream::connect(cfg.addr.as_str())
         .with_context(|| format!("connecting to {} (is `cast serve` running?)", cfg.addr))?;
+    let mut carry = Vec::new();
     http::write_request(&mut stream, "GET", "/models", b"")?;
-    let resp = http::read_response(&mut stream)?;
+    let resp = http::read_response(&mut stream, &mut carry, http::CLIENT_MAX_BODY)?;
     anyhow::ensure!(resp.status == 200, "GET /models returned {}", resp.status);
     let body = Json::parse(std::str::from_utf8(&resp.body)?)
         .map_err(|e| anyhow::anyhow!("bad /models JSON: {e}"))?;
@@ -123,7 +129,7 @@ fn discover(cfg: &LoadgenConfig) -> Result<(String, usize, usize, usize)> {
     let seq = cfg.seq.unwrap_or(model_seq).min(model_seq).max(1);
     // same keep-alive connection: the server's batching config
     http::write_request(&mut stream, "GET", "/healthz", b"")?;
-    let health = http::read_response(&mut stream)?;
+    let health = http::read_response(&mut stream, &mut carry, http::CLIENT_MAX_BODY)?;
     let max_batch = Json::parse(std::str::from_utf8(&health.body).unwrap_or(""))
         .ok()
         .and_then(|h| h.get("max_batch").and_then(Json::as_usize))
@@ -139,6 +145,31 @@ fn request_body(model: &str, rng: &mut Rng, seq: usize, vocab: usize) -> String 
         ("tokens", Json::Arr(vec![Json::arr_usize(&tokens)])),
     ])
     .to_string()
+}
+
+/// Deterministic `/generate` body: a prompt plus the generation budget.
+fn generate_body(model: &str, rng: &mut Rng, seq: usize, vocab: usize, max_new: usize) -> String {
+    let prompt: Vec<usize> = (0..seq).map(|_| rng.below(vocab)).collect();
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("prompt", Json::arr_usize(&prompt)),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+    ])
+    .to_string()
+}
+
+/// Whether a 200 streaming `/generate` body actually finished: the last
+/// NDJSON line must be the `"done"` summary, not a mid-stream `"error"`
+/// (the status line is long gone by the time a step can fail).
+fn stream_completed(body: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(body);
+    let Some(last) = text.lines().rev().find(|l| !l.trim().is_empty()) else {
+        return false;
+    };
+    match Json::parse(last) {
+        Ok(j) => j.get("done").is_some() && j.get("error").is_none(),
+        Err(_) => false,
+    }
 }
 
 /// Run the closed loop and aggregate the report.
@@ -178,6 +209,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         // failure on a *reused* connection may be the stale keep-alive
         // race; a failure on a fresh one is a real error
         let mut fresh = true;
+        // per-connection carry-over buffer: bytes a read pulls in past
+        // one response's body belong to the next response on the same
+        // stream, so the buffer lives exactly as long as the connection
+        let mut carry: Vec<u8> = Vec::new();
         let mut rng = Rng::new(cfg.seed).split(w as u64);
         let mut local = Vec::with_capacity(per_conn);
         for _ in 0..per_conn {
@@ -186,13 +221,27 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 // connection costs one request, not the whole tail
                 err_connect.fetch_add(1, Ordering::Relaxed);
                 stream = connect().ok();
+                carry.clear();
                 fresh = true;
                 continue;
             };
-            let body = request_body(&model, &mut rng, seq, vocab);
+            let (target, body) = match cfg.generate {
+                Some(max_new) => {
+                    ("/generate", generate_body(&model, &mut rng, seq, vocab, max_new))
+                }
+                None => ("/predict", request_body(&model, &mut rng, seq, vocab)),
+            };
+            let streaming = cfg.generate.is_some();
+            let read = |s: &mut TcpStream, carry: &mut Vec<u8>| {
+                if streaming {
+                    http::read_response_streaming(s, carry, http::CLIENT_MAX_BODY)
+                } else {
+                    http::read_response(s, carry, http::CLIENT_MAX_BODY)
+                }
+            };
             let t = Instant::now();
-            let mut result = http::write_request(s, "POST", "/predict", body.as_bytes())
-                .and_then(|()| http::read_response(s));
+            let mut result = http::write_request(s, "POST", target, body.as_bytes())
+                .and_then(|()| read(s, &mut carry));
             // a reused keep-alive connection can lose the race with a
             // server-side idle close: the request lands on a dead socket
             // and surfaces as ECONNRESET/EPIPE or an immediate EOF.
@@ -201,11 +250,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             if !fresh && result.as_ref().err().is_some_and(is_stale_conn) {
                 retried.fetch_add(1, Ordering::Relaxed);
                 stream = connect().ok();
+                carry.clear();
                 fresh = true;
                 match stream.as_mut() {
                     Some(s2) => {
-                        result = http::write_request(s2, "POST", "/predict", body.as_bytes())
-                            .and_then(|()| http::read_response(s2));
+                        result = http::write_request(s2, "POST", target, body.as_bytes())
+                            .and_then(|()| read(s2, &mut carry));
                     }
                     None => {
                         err_connect.fetch_add(1, Ordering::Relaxed);
@@ -214,6 +264,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 }
             }
             match result {
+                Ok(r) if r.status == 200 && streaming && !stream_completed(&r.body) => {
+                    // the stream opened but died mid-generation (the
+                    // status was already on the wire) — a served error
+                    err_status.fetch_add(1, Ordering::Relaxed);
+                    stream = connect().ok();
+                    carry.clear();
+                    fresh = true;
+                }
                 Ok(r) if r.status == 200 => {
                     fresh = false;
                     local.push(t.elapsed().as_secs_f64() * 1e3);
@@ -232,17 +290,31 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                         queue_us_sum.fetch_add(q_us, Ordering::Relaxed);
                         compute_us_sum.fetch_add(c_us, Ordering::Relaxed);
                     }
+                    if streaming {
+                        // the server closes every /generate stream
+                        stream = connect().ok();
+                        carry.clear();
+                        fresh = true;
+                    }
                 }
                 Ok(_) => {
                     // a served non-200 — the connection is still good
-                    fresh = false;
+                    // (unless this was a close-delimited stream)
                     err_status.fetch_add(1, Ordering::Relaxed);
+                    if streaming {
+                        stream = connect().ok();
+                        carry.clear();
+                        fresh = true;
+                    } else {
+                        fresh = false;
+                    }
                 }
                 Err(e) => {
                     let class =
                         if is_stale_conn(&e) { &err_stale } else { &err_transport };
                     class.fetch_add(1, Ordering::Relaxed);
                     stream = connect().ok();
+                    carry.clear();
                     fresh = true;
                 }
             }

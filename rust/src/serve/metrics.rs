@@ -125,6 +125,7 @@ fn trim_float(v: f64) -> String {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Endpoint {
     Predict,
+    Generate,
     Models,
     Metrics,
     Healthz,
@@ -134,8 +135,9 @@ pub enum Endpoint {
     Other,
 }
 
-const ENDPOINTS: [(Endpoint, &str); 8] = [
+const ENDPOINTS: [(Endpoint, &str); 9] = [
     (Endpoint::Predict, "predict"),
+    (Endpoint::Generate, "generate"),
     (Endpoint::Models, "models"),
     (Endpoint::Metrics, "metrics"),
     (Endpoint::Healthz, "healthz"),
@@ -156,7 +158,7 @@ pub const STAGES: [&str; 5] = ["parse", "queue", "batch", "compute", "reply"];
 /// All serve metrics, shared across every worker via `Arc`.
 pub struct Metrics {
     started: Instant,
-    requests: [AtomicU64; 8],
+    requests: [AtomicU64; 9],
     responses_2xx: AtomicU64,
     responses_4xx: AtomicU64,
     responses_5xx: AtomicU64,
@@ -169,6 +171,8 @@ pub struct Metrics {
     deadline_exceeded: AtomicU64,
     /// Panics caught and contained in serve workers (infer or conn).
     worker_panics: AtomicU64,
+    /// Tokens streamed out of `/generate` responses.
+    generate_tokens: AtomicU64,
     pub batch_rows: Histogram,
     pub latency: Histogram,
     /// Per-/predict pipeline stage wall time, indexed as [`STAGES`].
@@ -194,6 +198,7 @@ impl Metrics {
             shed: AtomicU64::new(0),
             deadline_exceeded: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
+            generate_tokens: AtomicU64::new(0),
             batch_rows: Histogram::new(&BATCH_BOUNDS),
             latency: Histogram::new(&LATENCY_BOUNDS),
             stages: std::array::from_fn(|_| Histogram::new(&LATENCY_BOUNDS)),
@@ -219,6 +224,15 @@ impl Metrics {
 
     pub fn inc_worker_panic(&self) {
         self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` tokens streamed from one `/generate` response.
+    pub fn observe_generate_tokens(&self, n: usize) {
+        self.generate_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn generate_tokens_total(&self) -> u64 {
+        self.generate_tokens.load(Ordering::Relaxed)
     }
 
     pub fn shed_total(&self) -> u64 {
@@ -314,6 +328,11 @@ impl Metrics {
                 "Panics caught and contained in serve workers.",
                 self.worker_panics.load(Ordering::Relaxed),
             ),
+            (
+                "cast_serve_generate_tokens_total",
+                "Tokens streamed from /generate responses.",
+                self.generate_tokens.load(Ordering::Relaxed),
+            ),
         ] {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
         }
@@ -403,11 +422,15 @@ mod tests {
         m.observe_request(Endpoint::Predict, 200, 0.004);
         m.observe_request(Endpoint::Healthz, 200, 0.0);
         m.observe_request(Endpoint::Predict, 500, 0.1);
+        m.observe_request(Endpoint::Generate, 200, 0.2);
+        m.observe_generate_tokens(17);
         m.observe_batch(4);
         let page = m.render(3, 2, &[]);
         for needle in [
             "cast_serve_requests_total{endpoint=\"predict\"} 2",
-            "cast_serve_responses_total{class=\"2xx\"} 2",
+            "cast_serve_requests_total{endpoint=\"generate\"} 1",
+            "cast_serve_generate_tokens_total 17",
+            "cast_serve_responses_total{class=\"2xx\"} 3",
             "cast_serve_responses_total{class=\"5xx\"} 1",
             "cast_serve_batch_rows_bucket{le=\"4\"} 1",
             "cast_serve_batch_rows_count 1",

@@ -14,10 +14,12 @@
 //!                                    demux logits ─→ reply channels
 //! ```
 //!
-//! Endpoints: `POST /predict` (JSON tokens → logits), `GET /models`,
-//! `POST /models/reload?model=`, `GET /healthz` (liveness), `GET
-//! /readyz` (readiness: `ok`/`degraded`, 503 while draining), `GET
-//! /metrics` (Prometheus text), `POST /admin/shutdown`.
+//! Endpoints: `POST /predict` (JSON tokens → logits), `POST /generate`
+//! (incremental decode streamed as close-delimited NDJSON — one line
+//! per token, then a `{"done":…}` summary; see DESIGN.md §Generation),
+//! `GET /models`, `POST /models/reload?model=`, `GET /healthz`
+//! (liveness), `GET /readyz` (readiness: `ok`/`degraded`, 503 while
+//! draining), `GET /metrics` (Prometheus text), `POST /admin/shutdown`.
 //!
 //! Resilience (DESIGN.md §Robustness): worker panics are caught and
 //! contained (a panicking batch answers its jobs with 500 and the
@@ -34,7 +36,7 @@
 //! off a socket gets its response before `run` returns.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::ErrorKind;
+use std::io::{ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
@@ -44,19 +46,29 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::data::batcher::pad_rows;
-use crate::runtime::Scratch;
+use crate::runtime::native::decode;
+use crate::runtime::{DecodeSession, Executable, HostTensor, Scratch};
 use crate::util::json::Json;
 use crate::util::parallel::Queue;
+use crate::util::rng::Rng;
 use crate::util::trace;
 
 use super::batcher::{run_batch, BatchFormer, PredictJob, ReplyErr};
 use super::http::{HttpConn, Recv, Request};
 use super::metrics::{Endpoint, Metrics};
-use super::registry::{Registry, BREAKER_OPEN};
+use super::registry::{ModelEntry, Registry, BREAKER_OPEN};
 
 /// How long a connection worker waits for its batch's reply before
 /// answering 504 (covers a deep queue on a slow box, not a hang).
 const PREDICT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Prompt tokens absorbed per `decode_prefill` call on `/generate`.
+/// Chunking bounds per-call latency; the resulting cluster cache is
+/// bit-identical to a monolithic prefill (see `integration_decode`).
+const PREFILL_CHUNK: usize = 64;
+
+/// Cap on one `/generate` request's `max_new_tokens`.
+const MAX_NEW_TOKENS: usize = 4096;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -331,6 +343,15 @@ impl Server {
                 Ok(Recv::Request(req)) => {
                     let t = Instant::now();
                     let endpoint = endpoint_of(&req);
+                    if req.method == "POST" && req.path == "/generate" {
+                        // streaming: writes its own close-delimited
+                        // response; EOF is the end-of-body marker, so
+                        // the connection never goes back to keep-alive
+                        let status = self.generate(&req, &mut conn);
+                        self.metrics
+                            .observe_request(endpoint, status, t.elapsed().as_secs_f64());
+                        return;
+                    }
                     // during a drain, answer and close
                     let keep = req.keep_alive && !self.shutting_down();
                     let (status, ctype, body, mut extra) = self.route(&req);
@@ -602,6 +623,240 @@ impl Server {
         Ok((body, extra))
     }
 
+    /// Parse, admit, and prefill one `/generate` request.  Everything
+    /// fallible happens here, before the response head is written, so
+    /// every rejection is an ordinary buffered JSON error: 400 malformed
+    /// body / undecodable model, 404 unknown model, 503 draining or
+    /// breaker-open, 500 prefill failure.
+    fn generate_setup(&self, req: &Request) -> Result<GenReady, (u16, String)> {
+        let t_parse = Instant::now();
+        let text = req.body_str().map_err(|e| (e.status, e.msg))?;
+        let body = Json::parse(text).map_err(|e| (400, format!("invalid JSON body: {e}")))?;
+        let model_name = req
+            .query
+            .get("model")
+            .map(|s| s.as_str())
+            .or_else(|| body.get("model").and_then(Json::as_str));
+        let entry =
+            self.registry.resolve(model_name).map_err(|e| (404, format!("{e:#}")))?;
+        if !entry.breaker.allow() {
+            self.metrics.inc_shed();
+            return Err((
+                503,
+                format!("model {:?} is failing; circuit breaker is open", entry.name),
+            ));
+        }
+        // same deadline contract as /predict, measured from arrival —
+        // generation stops mid-stream once the budget runs out
+        let deadline = match req.headers.get("x-deadline-ms") {
+            Some(v) if self.cfg.deadline_ms > 0 => {
+                let ms: u64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| (400, format!("invalid X-Deadline-Ms {v:?}")))?;
+                if ms == 0 {
+                    return Err((400, "X-Deadline-Ms must be at least 1".to_string()));
+                }
+                Some(Instant::now() + Duration::from_millis(ms.min(self.cfg.deadline_ms)))
+            }
+            _ => None,
+        };
+        let prompt = body
+            .get("prompt")
+            .ok_or((400, "body needs a \"prompt\" field".to_string()))?
+            .as_arr()
+            .ok_or((400, "\"prompt\" must be an array of token ids".to_string()))
+            .and_then(parse_row)?;
+        if prompt.is_empty() {
+            return Err((400, "\"prompt\" is empty".to_string()));
+        }
+        let vocab = entry.manifest.meta.vocab;
+        if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            return Err((400, format!("prompt token {t} outside vocab 0..{vocab}")));
+        }
+        let max_new = match body.get("max_new_tokens") {
+            Some(v) => v
+                .as_usize()
+                .ok_or((400, "\"max_new_tokens\" must be a non-negative integer".to_string()))?,
+            None => 32,
+        };
+        if max_new == 0 || max_new > MAX_NEW_TOKENS {
+            return Err((
+                400,
+                format!("\"max_new_tokens\" must be in 1..={MAX_NEW_TOKENS}"),
+            ));
+        }
+        let temperature = match body.get("temperature") {
+            Some(v) => {
+                let t = v.as_f64().ok_or((400, "\"temperature\" must be a number".to_string()))?;
+                if !(t.is_finite() && t >= 0.0) {
+                    return Err((400, format!("invalid temperature {t}")));
+                }
+                t as f32
+            }
+            None => 0.0,
+        };
+        let seed = match body.get("seed") {
+            Some(v) => {
+                v.as_usize().ok_or((400, "\"seed\" must be a non-negative integer".to_string()))?
+                    as u64
+            }
+            None => 0,
+        };
+        if self.shutting_down() {
+            return Err((503, "server is draining".to_string()));
+        }
+        // the decode entry comes from the same engine cache as predict;
+        // models without one (non-causal, non-CAST, dual) are rejected
+        let exe = self
+            .registry
+            .engine()
+            .load(&entry.manifest, "decode")
+            .map_err(|e| (400, format!("model {:?} cannot decode: {e:#}", entry.name)))?;
+        let parse_us = t_parse.elapsed().as_micros() as u64;
+
+        // chunked prefill of everything but the last prompt token (the
+        // first decode_step input), inside the panic fence
+        let t_prefill = Instant::now();
+        let mut session = exe.decode_begin().map_err(|e| (500, format!("{e:#}")))?;
+        {
+            let params: Vec<&HostTensor> = entry.params.iter().collect();
+            let (prefix, _) = prompt.split_at(prompt.len() - 1);
+            for chunk in prefix.chunks(PREFILL_CHUNK) {
+                engine_call(|| exe.decode_prefill(&params, session.as_mut(), chunk)).map_err(
+                    |(panicked, msg)| {
+                        if panicked {
+                            self.metrics.inc_worker_panic();
+                        }
+                        entry.breaker.record_failure();
+                        (500, format!("prefill failed: {msg}"))
+                    },
+                )?;
+            }
+        }
+        let prefill_us = t_prefill.elapsed().as_micros() as u64;
+        let next = *prompt.last().unwrap();
+        Ok(GenReady {
+            entry,
+            exe,
+            session,
+            next,
+            max_new,
+            temperature,
+            rng: Rng::new(seed),
+            deadline,
+            parse_us,
+            prefill_us,
+        })
+    }
+
+    /// `POST /generate`: incremental decode streamed as close-delimited
+    /// NDJSON — one `{"token":…,"pos":…}` line per generated token as it
+    /// is produced, then a final `{"done":…}` summary (or an in-band
+    /// `{"error":…}` line if the engine fails mid-stream).  Returns the
+    /// status recorded in the request metrics; the per-request
+    /// `DecodeState` session lives and dies with this call, so
+    /// completion, deadline expiry, and client disconnect all drop it.
+    fn generate(&self, req: &Request, conn: &mut HttpConn<TcpStream>) -> u16 {
+        let mut ready = match self.generate_setup(req) {
+            Ok(r) => r,
+            Err((status, msg)) => {
+                let mut extra = Vec::new();
+                if status == 503 {
+                    extra.push(("Retry-After", "1".to_string()));
+                }
+                let _ = conn.send_ext(
+                    status,
+                    "application/json",
+                    &extra,
+                    error_json(&msg).as_bytes(),
+                    false,
+                );
+                return status;
+            }
+        };
+        // the head commits us to 200: from here every failure is
+        // reported in-band on the stream
+        let mut extra = Vec::new();
+        if trace::active() {
+            extra.push((
+                "X-Stage-Timings",
+                format!(
+                    "parse={};queue=0;batch=0;compute={};reply=0",
+                    ready.parse_us, ready.prefill_us
+                ),
+            ));
+        }
+        let w = match conn.start_streaming(200, "application/x-ndjson", &extra) {
+            Ok(w) => w,
+            Err(_) => return 200, // client went away before the head
+        };
+        let params: Vec<&HostTensor> = ready.entry.params.iter().collect();
+        let t_stream = Instant::now();
+        let mut produced = 0usize;
+        let mut next = ready.next;
+        let mut status = 200;
+        let mut stop = "length";
+        for _ in 0..ready.max_new {
+            if ready.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+                self.metrics.inc_deadline_exceeded();
+                stop = "deadline";
+                break;
+            }
+            let logits =
+                match engine_call(|| ready.exe.decode_step(&params, ready.session.as_mut(), next))
+                {
+                    Ok(l) => l,
+                    Err((panicked, msg)) => {
+                        if panicked {
+                            self.metrics.inc_worker_panic();
+                        }
+                        ready.entry.breaker.record_failure();
+                        let line = Json::obj(vec![
+                            ("error", Json::str(&msg)),
+                            ("tokens", Json::num(produced as f64)),
+                        ]);
+                        let _ = write_ndjson_line(w, &line);
+                        status = 500; // metrics only — the head already went out as 200
+                        stop = "error";
+                        break;
+                    }
+                };
+            let tok = decode::sample(&logits, ready.temperature, &mut ready.rng) as i32;
+            // session.len() is the history length after absorbing `next`,
+            // i.e. the position the predicted token will occupy
+            let line = Json::obj(vec![
+                ("token", Json::num(tok as f64)),
+                ("pos", Json::num(ready.session.len() as f64)),
+            ]);
+            if write_ndjson_line(w, &line).is_err() {
+                stop = "disconnect";
+                break;
+            }
+            produced += 1;
+            next = tok;
+        }
+        if stop != "error" {
+            ready.entry.breaker.record_success();
+        }
+        if stop == "length" || stop == "deadline" {
+            let line = Json::obj(vec![
+                ("done", Json::Bool(true)),
+                ("model", Json::str(&ready.entry.name)),
+                ("version", Json::num(ready.entry.version as f64)),
+                ("tokens", Json::num(produced as f64)),
+                ("stop", Json::str(stop)),
+            ]);
+            let _ = write_ndjson_line(w, &line);
+        }
+        let compute_us = ready.prefill_us + t_stream.elapsed().as_micros() as u64;
+        let stages_us = [ready.parse_us, 0, 0, compute_us, 0];
+        self.metrics.observe_stages(stages_us.map(|us| us as f64 / 1e6));
+        self.metrics.observe_generate_tokens(produced);
+        self.push_trace(ready.entry.name.clone(), produced, status, stages_us);
+        status
+    }
+
     /// `/models/reload?model=NAME`: rebuild the named entry from its
     /// recorded source.  The old snapshot serves until the new one lands.
     fn reload(&self, req: &Request) -> Result<Vec<u8>, (u16, String)> {
@@ -626,9 +881,55 @@ impl Server {
     }
 }
 
+/// One admitted `/generate` request: model snapshot pinned, prompt
+/// prefilled into the decode session, sampler seeded — ready to stream.
+struct GenReady {
+    entry: Arc<ModelEntry>,
+    exe: Arc<dyn Executable>,
+    session: Box<dyn DecodeSession>,
+    /// Last prompt token — the first `decode_step` input.
+    next: i32,
+    max_new: usize,
+    /// 0 = greedy argmax, > 0 = softmax sampling at this temperature.
+    temperature: f32,
+    rng: Rng,
+    deadline: Option<Instant>,
+    parse_us: u64,
+    prefill_us: u64,
+}
+
+/// Run one decode engine call inside a panic fence so a mid-stream
+/// engine panic (fault injection, engine bug) is contained and answered
+/// in-band instead of tearing down the connection worker.  `Err` is
+/// `(panicked, message)`.
+fn engine_call<T>(f: impl FnOnce() -> Result<T>) -> Result<T, (bool, String)> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err((false, format!("{e:#}"))),
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err((true, format!("decode engine panicked: {msg}")))
+        }
+    }
+}
+
+/// Write one NDJSON line and flush, so the client sees each token as it
+/// is produced rather than on connection close.
+fn write_ndjson_line(w: &mut impl Write, line: &Json) -> std::io::Result<()> {
+    let mut s = line.to_string();
+    s.push('\n');
+    w.write_all(s.as_bytes())?;
+    w.flush()
+}
+
 fn endpoint_of(req: &Request) -> Endpoint {
     match req.path.as_str() {
         "/predict" => Endpoint::Predict,
+        "/generate" => Endpoint::Generate,
         "/models" => Endpoint::Models,
         "/models/reload" => Endpoint::Reload,
         "/metrics" => Endpoint::Metrics,

@@ -97,7 +97,7 @@ fn raw_request(
     head.push_str("\r\n");
     s.write_all(head.as_bytes()).unwrap();
     s.write_all(body).unwrap();
-    http::read_response(&mut s)
+    http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY)
 }
 
 fn predict_body(stream_id: u64, n: usize) -> String {

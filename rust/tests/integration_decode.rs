@@ -1,0 +1,190 @@
+//! Incremental-decode subsystem proof: greedy generation through the
+//! `decode` entry's cluster-state cache is **bit-identical** to
+//! re-running the full causal forward over the whole history at every
+//! step, across the `CAST_NUM_THREADS ∈ {1,4}` × SIMD {forced-on,
+//! forced-off} matrix; chunked prefill reaches exactly the same cache
+//! (and the same continuation) as monolithic prefill; and the entry's
+//! support gating + session sanity checks hold.
+//!
+//! The SIMD mode and thread count are process-global, so the matrix test
+//! serializes on one lock — this binary owns its process (each
+//! integration test file is a separate binary), so no other suite can
+//! observe the flips.
+
+use std::sync::Arc;
+
+use cast::model::ModelState;
+use cast::runtime::native::decode::{self, DecodeState};
+use cast::runtime::native::spec::tiny_meta;
+use cast::runtime::{DecodeSession, Engine, Executable, HostTensor, Manifest, ModelMeta};
+use cast::util::parallel;
+use cast::util::simd;
+
+static GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn with_settings<T>(lanes: Option<bool>, threads: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::set_forced(None);
+            parallel::set_threads(0);
+        }
+    }
+    let _guard = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = Restore;
+    simd::set_forced(lanes);
+    parallel::set_threads(threads);
+    f()
+}
+
+/// The decode model under test: tiny causal CAST (κ=16, Nc=4 — total
+/// cluster capacity 64, small enough that long generations overflow it
+/// and exercise the unplaced-token path).
+fn causal_meta(variant: &str) -> ModelMeta {
+    let mut meta = tiny_meta(variant);
+    meta.causal = true;
+    meta
+}
+
+fn setup(variant: &str) -> (Manifest, Vec<HostTensor>, Arc<dyn Executable>) {
+    let manifest = Manifest::synthetic(causal_meta(variant));
+    let engine = Engine::cpu().unwrap();
+    let state = ModelState::init(&engine, &manifest, 11).unwrap();
+    let exe = engine.load(&manifest, "decode").unwrap();
+    (manifest, state.params, exe)
+}
+
+/// Greedy generation through the decode seam, checking every step's
+/// logits bitwise against the full-forward recompute reference.  Returns
+/// the generated token ids.
+fn generate_checked(
+    manifest: &Manifest,
+    params: &[&HostTensor],
+    exe: &Arc<dyn Executable>,
+    prompt: &[i32],
+    steps: usize,
+) -> Vec<i32> {
+    let mut session = exe.decode_begin().unwrap();
+    exe.decode_prefill(params, session.as_mut(), &prompt[..prompt.len() - 1]).unwrap();
+    let mut history: Vec<i32> = prompt.to_vec();
+    let mut next = *prompt.last().unwrap();
+    let mut out = Vec::new();
+    for step in 0..steps {
+        let logits = exe.decode_step(params, session.as_mut(), next).unwrap();
+        assert_eq!(logits.len(), manifest.meta.vocab);
+        let reference = decode::full_logits(manifest, params, &history).unwrap();
+        assert_eq!(
+            logits, reference,
+            "step {step} (history {}): incremental logits diverge from full forward",
+            history.len()
+        );
+        assert_eq!(session.len(), history.len());
+        next = decode::argmax(&logits) as i32;
+        history.push(next);
+        out.push(next);
+    }
+    out
+}
+
+#[test]
+fn incremental_decode_matches_full_forward_bitwise_across_modes() {
+    let (manifest, params, exe) = setup("cast_sa");
+    let refs: Vec<&HostTensor> = params.iter().collect();
+    // prompt of 3 < κ=16: generation crosses fallback → cache-build →
+    // incremental; 67 steps push the history past the 64-slot cluster
+    // capacity into the unplaced-token regime
+    let prompt = [7i32, 3, 250];
+    let mut sequences = Vec::new();
+    for (lanes, threads) in [(Some(false), 1), (Some(false), 4), (Some(true), 1), (Some(true), 4)] {
+        let toks = with_settings(lanes, threads, || {
+            generate_checked(&manifest, &refs, &exe, &prompt, 67)
+        });
+        sequences.push((lanes, threads, toks));
+    }
+    let (_, _, first) = &sequences[0];
+    for (lanes, threads, toks) in &sequences {
+        assert_eq!(
+            toks, first,
+            "greedy sequence differs under simd={lanes:?} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_cache_and_continuation() {
+    let (manifest, params, exe) = setup("cast_sa");
+    let refs: Vec<&HostTensor> = params.iter().collect();
+    let prompt: Vec<i32> = (0..33).map(|i| (i * 37 + 5) % 256).collect();
+
+    // chunked, through the backend seam (uneven chunks straddling κ=16)
+    let mut chunked = exe.decode_begin().unwrap();
+    for chunk in [&prompt[..7], &prompt[7..20], &prompt[20..]] {
+        exe.decode_prefill(&refs, chunked.as_mut(), chunk).unwrap();
+    }
+    let chunked_st =
+        chunked.as_any().downcast_mut::<DecodeState>().expect("native decode session");
+
+    // monolithic reference: one full forward over the whole prompt
+    let mut mono_st = DecodeState::new(&manifest);
+    decode::prefill(&manifest, &refs, &mut mono_st, &prompt, true).unwrap();
+
+    assert!(chunked_st.incremental() && mono_st.incremental());
+    assert_eq!(chunked_st.history(), mono_st.history());
+    assert_eq!(
+        chunked_st.cache_digest(),
+        mono_st.cache_digest(),
+        "chunked prefill must rebuild the exact monolithic cluster state"
+    );
+
+    // and the continuations agree bitwise, step by step
+    let mut next = 42i32;
+    for step in 0..8 {
+        let a = decode::step(&manifest, &refs, chunked_st, next).unwrap();
+        let b = decode::step(&manifest, &refs, &mut mono_st, next).unwrap();
+        assert_eq!(a, b, "continuation step {step} diverges after chunked prefill");
+        next = decode::argmax(&a) as i32;
+    }
+}
+
+#[test]
+fn decode_entry_support_gating() {
+    let engine = Engine::cpu().unwrap();
+    // causal CAST (either clustering flavor): supported
+    for variant in ["cast_sa", "cast_topk"] {
+        let man = Manifest::synthetic(causal_meta(variant));
+        assert!(engine.load(&man, "decode").is_ok(), "{variant} causal should decode");
+    }
+    // non-causal CAST: no frozen assignment to cache
+    let man = Manifest::synthetic(tiny_meta("cast_sa"));
+    assert!(engine.load(&man, "decode").is_err(), "non-causal must not decode");
+    // non-CAST: no cluster state at all
+    let man = Manifest::synthetic(causal_meta("vanilla"));
+    assert!(engine.load(&man, "decode").is_err(), "vanilla must not decode");
+    // dual towers pool per tower — no single causal stream
+    let mut meta = causal_meta("cast_sa");
+    meta.dual = true;
+    assert!(engine.load(&Manifest::synthetic(meta), "decode").is_err(), "dual must not decode");
+}
+
+#[test]
+fn decode_seam_rejects_misuse() {
+    let (manifest, params, exe) = setup("cast_sa");
+    let refs: Vec<&HostTensor> = params.iter().collect();
+
+    // the stateful entry cannot be driven through run_refs
+    assert!(exe.run_refs(&refs).is_err());
+
+    // a non-decode executable has no sessions
+    let engine = Engine::cpu().unwrap();
+    let predict = engine.load(&manifest, "predict").unwrap();
+    assert!(predict.decode_begin().is_err());
+
+    // a session opened for one model is rejected by another
+    let other = Manifest::synthetic(causal_meta("cast_topk"));
+    let other_state = ModelState::init(&engine, &other, 11).unwrap();
+    let other_exe = engine.load(&other, "decode").unwrap();
+    let other_refs: Vec<&HostTensor> = other_state.params.iter().collect();
+    let mut session = exe.decode_begin().unwrap();
+    assert!(session.is_empty());
+    assert!(other_exe.decode_step(&other_refs, session.as_mut(), 1).is_err());
+}

@@ -348,6 +348,27 @@ fn dual_encoder_retrieval_config_predicts_natively() {
 }
 
 #[test]
+fn fully_masked_attention_rows_are_zero_not_uniform() {
+    // A row with zero valid slots (every score at NEG_INF — reachable at
+    // decode step 0 with a fresh empty cluster) must weight nothing: all
+    // zeros, never NaN and never a uniform distribution over masked slots.
+    use cast::runtime::native::ops::{self, AttnFn};
+    for f in [AttnFn::Softmax, AttnFn::Laplace] {
+        let mut x = vec![ops::NEG_INF; 8];
+        ops::attn_rows(&mut x, 4, f);
+        assert!(x.iter().all(|v| *v == 0.0), "{f:?}: fully-masked row must be zeros, got {x:?}");
+
+        // a partially-masked row still normalizes to 1 over survivors
+        let mut y = vec![0.3, ops::NEG_INF, 1.1, ops::NEG_INF];
+        ops::attn_rows(&mut y, 4, f);
+        let s: f32 = y.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "{f:?}: partial mask row sums to {s}");
+        assert_eq!(y[1], 0.0, "{f:?}: masked slot must carry zero weight");
+        assert_eq!(y[3], 0.0, "{f:?}: masked slot must carry zero weight");
+    }
+}
+
+#[test]
 fn synthetic_and_saved_manifests_agree_with_batcher_contract() {
     // The trainer's data path: generated batches satisfy the manifest the
     // native engine validates against.

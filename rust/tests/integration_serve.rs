@@ -54,6 +54,25 @@ impl Harness {
         )
     }
 
+    /// A server with a single causal CAST model (the /generate target).
+    fn causal() -> Harness {
+        let registry = Arc::new(Registry::new(Engine::cpu().unwrap()));
+        let mut meta = tiny_meta("cast_sa");
+        meta.causal = true;
+        registry.load(None, ModelSource::Synthetic { meta, seed: SEED }).unwrap();
+        let server = Arc::new(
+            Server::bind(
+                ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+                registry.clone(),
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr();
+        let runner = server.clone();
+        let join = std::thread::spawn(move || runner.run());
+        Harness { server, registry, addr, join: Some(join) }
+    }
+
     fn stop(&mut self) {
         self.server.shutdown_flag().store(true, Ordering::SeqCst);
         if let Some(join) = self.join.take() {
@@ -74,7 +93,7 @@ impl Drop for Harness {
 fn request(addr: SocketAddr, method: &str, target: &str, body: &[u8]) -> (u16, Vec<u8>) {
     let mut s = TcpStream::connect(addr).unwrap();
     http::write_request(&mut s, method, target, body).unwrap();
-    let resp = http::read_response(&mut s).unwrap();
+    let resp = http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
     (resp.status, resp.body)
 }
 
@@ -146,7 +165,7 @@ fn tcp_roundtrip_health_models_metrics_and_predict() {
     let mut s = TcpStream::connect(h.addr).unwrap();
     for tokens in [tokens_for(1, 17), tokens_for(2, 64)] {
         http::write_request(&mut s, "POST", "/predict", predict_body(&tokens).as_bytes()).unwrap();
-        let resp = http::read_response(&mut s).unwrap();
+        let resp = http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
         let parsed = json_of(&resp.body);
         assert_eq!(parsed.get("rows").and_then(Json::as_usize), Some(1));
@@ -210,14 +229,14 @@ fn malformed_requests_get_mapped_statuses() {
     use std::io::Write;
     write!(s, "POST /predict HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap();
     s.flush().unwrap();
-    let resp = http::read_response(&mut s).unwrap();
+    let resp = http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
     assert_eq!(resp.status, 413);
 
     // bad method over the raw socket -> 405
     let mut s = TcpStream::connect(h.addr).unwrap();
     write!(s, "DELETE /predict HTTP/1.1\r\n\r\n").unwrap();
     s.flush().unwrap();
-    let resp = http::read_response(&mut s).unwrap();
+    let resp = http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
     assert_eq!(resp.status, 405);
 
     h.stop();
@@ -294,7 +313,7 @@ fn concurrent_clients_match_sequential_predicts_exactly() {
                             predict_body(&tokens).as_bytes(),
                         )
                         .unwrap();
-                        let resp = http::read_response(&mut stream).unwrap();
+                        let resp = http::read_response(&mut stream, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
                         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
                         let parsed = json_of(&resp.body);
                         max_batch_rows = max_batch_rows
@@ -419,8 +438,97 @@ fn split_writes_over_tcp_still_parse() {
         s.flush().unwrap();
         std::thread::sleep(Duration::from_millis(if i == 0 { 130 } else { 15 }));
     }
-    let resp = http::read_response(&mut s).unwrap();
+    let resp = http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap();
     assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
     assert_exact(&response_logits(&resp.body)[0], &reference_logits(&h, &tokens));
+    h.stop();
+}
+
+// ---------------------------------------------------------------------------
+// streaming /generate
+// ---------------------------------------------------------------------------
+
+fn generate_request(addr: SocketAddr, body: &str) -> http::Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    http::write_request(&mut s, "POST", "/generate", body.as_bytes()).unwrap();
+    http::read_response_streaming(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap()
+}
+
+fn ndjson_lines(body: &[u8]) -> Vec<Json> {
+    std::str::from_utf8(body)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn generate_streams_tokens_matching_the_full_causal_forward() {
+    use cast::runtime::native::decode;
+    let mut h = Harness::causal();
+    let prompt: Vec<usize> = vec![7, 3, 250, 9];
+    let body = Json::obj(vec![
+        ("prompt", Json::arr_usize(&prompt)),
+        ("max_new_tokens", Json::num(6.0)),
+    ])
+    .to_string();
+    let resp = generate_request(h.addr, &body);
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(
+        resp.headers.get("content-type").map(|s| s.as_str()),
+        Some("application/x-ndjson")
+    );
+    assert!(
+        !resp.headers.contains_key("content-length"),
+        "streamed response must be close-delimited"
+    );
+    let lines = ndjson_lines(&resp.body);
+    assert_eq!(lines.len(), 7, "6 token lines + the done summary");
+    let done = lines.last().unwrap();
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+    assert_eq!(done.get("tokens").and_then(Json::as_usize), Some(6));
+    assert_eq!(done.get("stop").and_then(Json::as_str), Some("length"));
+    // greedy stream == full causal forward recomputed at every step
+    let entry = h.registry.resolve(None).unwrap();
+    let refs: Vec<&HostTensor> = entry.params.iter().collect();
+    let mut history: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+    for (i, line) in lines[..6].iter().enumerate() {
+        let logits = decode::full_logits(&entry.manifest, &refs, &history).unwrap();
+        let want = decode::argmax(&logits);
+        assert_eq!(line.get("token").and_then(Json::as_usize), Some(want), "token {i}");
+        assert_eq!(line.get("pos").and_then(Json::as_usize), Some(history.len()), "pos {i}");
+        history.push(want as i32);
+    }
+    h.stop();
+}
+
+#[test]
+fn generate_rejections_stay_buffered_json() {
+    let mut h = Harness::causal();
+    // malformed body: buffered 400, ordinary fixed-length response
+    let (status, body) = request(h.addr, "POST", "/generate", b"{\"prompt\":[]}");
+    assert_eq!(status, 400);
+    assert!(json_of(&body).get("error").is_some());
+    let (status, _) = request(h.addr, "POST", "/generate", b"not json");
+    assert_eq!(status, 400);
+    let (status, body) =
+        request(h.addr, "POST", "/generate", b"{\"prompt\":[1],\"max_new_tokens\":0}");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    // and the server still answers normal requests on fresh connections
+    let (status, _) = request(h.addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    h.stop();
+}
+
+#[test]
+fn generate_rejects_models_without_a_decode_entry() {
+    // non-causal cast_topk: predict works, /generate must 400
+    let mut h = Harness::tiny(2, Duration::from_millis(1));
+    let (status, body) =
+        request(h.addr, "POST", "/generate", b"{\"prompt\":[1,2,3],\"max_new_tokens\":2}");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let msg = json_of(&body).get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(msg.contains("cannot decode"), "{msg}");
     h.stop();
 }

@@ -190,7 +190,7 @@ impl Drop for Harness {
 fn request(addr: SocketAddr, method: &str, target: &str, body: &[u8]) -> http::Response {
     let mut s = TcpStream::connect(addr).unwrap();
     http::write_request(&mut s, method, target, body).unwrap();
-    http::read_response(&mut s).unwrap()
+    http::read_response(&mut s, &mut Vec::new(), http::CLIENT_MAX_BODY).unwrap()
 }
 
 fn predict_body(fill: i32) -> String {
