@@ -2,7 +2,7 @@
 # (native backend, zero artifacts).  The artifact targets require a
 # python environment with jax (the AOT / PJRT path).
 
-.PHONY: build test test-simd test-serve test-chaos test-trace gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve bench-profile bench-decode
+.PHONY: build test test-simd test-serve test-chaos test-trace test-memstats gen artifacts artifacts-efficiency artifacts-ablation artifacts-lra fmt clippy bench-json bench-simd serve bench-serve bench-profile bench-decode bench-memory
 
 build:
 	cargo build --release
@@ -54,6 +54,21 @@ test-chaos:
 # trees, serve stage histograms, Chrome export (DESIGN.md §Observability).
 test-trace:
 	cargo test -q --test integration_trace
+
+# Memory-observability suite: tracking-allocator accounting, disabled-
+# path no-heap-traffic guards, bit-identical instrumented outputs, and
+# the measured O(αN)-vs-O(N²) curve property test (DESIGN.md
+# §Observability — the suite installs its own #[global_allocator]).
+test-memstats:
+	cargo test -q --test integration_memstats
+
+# Measured attention-memory curves: the tracking allocator's peak-bytes
+# watermark over the materializing cast/vanilla reference kernels across
+# the paper's sequence sweep, appended as mem_peak_bytes rows to
+# BENCH_native.json and printed against the §3.4 analytic model.
+bench-memory: build
+	./target/release/cast bench --memory --seq 512,1024,2048,4096,8192 \
+	  --append-json BENCH_native.json
 
 # Per-op time-share profile of the seq-1024 CAST config, plus a Chrome
 # trace for Perfetto (see DESIGN.md §Observability for reading it).

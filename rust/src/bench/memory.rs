@@ -1,0 +1,330 @@
+//! Measured attention memory: the `cast bench --memory` sweep that
+//! turns the §3.4 analytic model (`memmodel`) into measured bytes via
+//! the tracking allocator (`util::memtrack`).
+//!
+//! Both sides run as *materializing reference kernels* that allocate
+//! exactly the tensors the §3.4 accounting charges — the vanilla side
+//! because the engine deliberately never materializes the N×N score
+//! matrix (it streams per-row scratch, see `ops::attend_windows`), so a
+//! materializing reference is the only faithful O(N²) baseline; the
+//! CAST side in the same style so the two measurements are comparable.
+//! Arithmetic inside the kernels is thinned to one MAC per cell: the
+//! measured quantity is bytes, not FLOPs.
+//!
+//! The measured peak therefore decomposes as `model_bytes` (the
+//! `memmodel::AttnShape` prediction) plus a shared base of
+//! `4·B·N·d` f32 for q/k/v/out — which is what the cross-validation in
+//! `tests/integration_memstats.rs` pins: CAST sub-quadratic, vanilla
+//! quadratic, measured-vs-model within a constant factor.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::memtrack;
+
+use super::memmodel::{kappa_memory_curve, AttnShape, BYTES_F32};
+
+/// One measured memory point (one variant at one sequence length).
+#[derive(Clone, Debug)]
+pub struct MemoryPoint {
+    /// Synthetic config key, e.g. `mem_cast_topk_n2048_c8_k256`.
+    pub config: String,
+    /// "cast_topk" or "vanilla".
+    pub variant: String,
+    pub seq_len: usize,
+    pub n_c: usize,
+    pub kappa: usize,
+    /// Peak allocator bytes over the reference kernel (tracking
+    /// allocator watermark).
+    pub measured_peak_bytes: usize,
+    /// The §3.4 analytic prediction for the same shape.
+    pub model_bytes: usize,
+    /// Process peak RSS (VmHWM) after the kernel, for the row's
+    /// `peak_rss_mb` field.
+    pub rss_mb: f64,
+    /// Checksum keeping the kernel's work observable (and honest).
+    pub checksum: f32,
+}
+
+/// Shared q/k/v/out base the reference kernels allocate on top of the
+/// model's attention terms: `4·B·N·d` f32 values.
+pub fn base_bytes(shape: &AttnShape) -> usize {
+    4 * shape.batch * shape.seq * shape.d * BYTES_F32
+}
+
+/// Deterministic pseudo-data without touching the global RNG.
+fn fill_vec(len: usize, salt: u32) -> Vec<f32> {
+    let mut v = Vec::with_capacity(len);
+    for i in 0..len {
+        let h = (i as u32).wrapping_add(salt).wrapping_mul(2654435761);
+        v.push(((h >> 16) & 0x3ff) as f32 / 1024.0 + 0.01);
+    }
+    v
+}
+
+fn softmax_inplace(row: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        if x > max {
+            max = x;
+        }
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// Materializing vanilla attention reference: q/k/v, the full
+/// `B·h·N·N` score slab (the §3.4 quadratic term), row softmax, and a
+/// thinned PV reduction into `out`.  Returns a checksum so the slabs
+/// stay observable.
+pub fn vanilla_attn_reference(shape: &AttnShape) -> f32 {
+    let (b, h, n, d) = (shape.batch, shape.heads, shape.seq, shape.d);
+    let rows = b * n;
+    let q = fill_vec(rows * d, 1);
+    let k = fill_vec(rows * d, 2);
+    let v = fill_vec(rows * d, 3);
+    let mut scores = vec![0.0f32; b * h * n * n];
+    for bh in 0..b * h {
+        let bi = bh / h;
+        let base = bh * n * n;
+        for i in 0..n {
+            let qi = q[(bi * n + i) * d];
+            for j in 0..n {
+                scores[base + i * n + j] = qi * k[(bi * n + j) * d];
+            }
+        }
+    }
+    for row in scores.chunks_mut(n) {
+        softmax_inplace(row);
+    }
+    let mut out = vec![0.0f32; rows * d];
+    for bh in 0..b * h {
+        let bi = bh / h;
+        let base = bh * n * n;
+        for i in 0..n {
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += scores[base + i * n + j] * v[(bi * n + j) * d];
+            }
+            out[(bi * n + i) * d] += acc;
+        }
+    }
+    std::hint::black_box(out.iter().sum())
+}
+
+/// Materializing CAST attention reference, tensor-for-tensor the §3.4
+/// accounting: three `B·N·Nc` affinity blocks (A_q, A_k, A_g), the
+/// `B·h·Nc·κ²` intra-cluster score tiles, the `B·N·Nc²` inter-cluster
+/// mixing block, plus the shared q/k/v/out base.
+pub fn cast_attn_reference(shape: &AttnShape) -> f32 {
+    let (b, h, n, d) = (shape.batch, shape.heads, shape.seq, shape.d);
+    let (n_c, kappa) = (shape.n_c, shape.kappa);
+    let rows = b * n;
+    let q = fill_vec(rows * d, 4);
+    let k = fill_vec(rows * d, 5);
+    let v = fill_vec(rows * d, 6);
+    let a_q = fill_vec(rows * n_c, 7);
+    let a_k = fill_vec(rows * n_c, 8);
+    // A_g = sigm(phi)·f2(ΣA_q) + (1-sigm(phi))·f2(ΣA_k), thinned to a
+    // fixed gate — the allocation, not the arithmetic, is the point
+    let mut a_g = vec![0.0f32; rows * n_c];
+    for (g, (aq, ak)) in a_g.iter_mut().zip(a_q.iter().zip(&a_k)) {
+        *g = 0.5 * aq + 0.5 * ak;
+    }
+    let mut intra = vec![0.0f32; b * h * n_c * kappa * kappa];
+    for bh in 0..b * h {
+        let bi = bh / h;
+        for c in 0..n_c {
+            let tile = (bh * n_c + c) * kappa * kappa;
+            for i in 0..kappa {
+                let qi = q[(bi * n + (c * kappa + i) % n) * d];
+                for j in 0..kappa {
+                    intra[tile + i * kappa + j] = qi * k[(bi * n + (c * kappa + j) % n) * d];
+                }
+            }
+        }
+    }
+    for row in intra.chunks_mut(kappa) {
+        softmax_inplace(row);
+    }
+    let mut inter = vec![0.0f32; rows * n_c * n_c];
+    for r in 0..rows {
+        for c in 0..n_c * n_c {
+            inter[r * n_c * n_c + c] = a_g[r * n_c + c % n_c] * a_g[r * n_c + c / n_c];
+        }
+    }
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let mut acc = 0.0f32;
+        for c in 0..n_c {
+            acc += a_g[r * n_c + c] * v[r * d];
+        }
+        acc += inter[r * n_c * n_c];
+        out[r * d] = acc;
+    }
+    std::hint::black_box(out.iter().sum::<f32>() + intra[0])
+}
+
+/// Measure one variant at one shape: run the reference kernel under a
+/// [`memtrack::Watermark`] and report peak bytes.  Errors when the
+/// tracking allocator is not installed in this binary (the `cast` CLI
+/// and the memstats integration tests install it; plain `cargo test`
+/// unit binaries do not).
+pub fn memory_point(variant: &str, shape: &AttnShape) -> Result<MemoryPoint> {
+    anyhow::ensure!(
+        memtrack::installed(),
+        "memory bench needs the tracking allocator (#[global_allocator] \
+         memtrack::TrackingAlloc) installed in this binary"
+    );
+    let wm = memtrack::Watermark::begin("bench.memory");
+    let (checksum, model_bytes) = match variant {
+        "vanilla" => (vanilla_attn_reference(shape), shape.vanilla_attn_bytes()),
+        _ => (cast_attn_reference(shape), shape.cast_attn_bytes()),
+    };
+    let measured_peak_bytes = wm.peak_delta();
+    drop(wm);
+    let config = if variant == "vanilla" {
+        format!("mem_vanilla_n{}_b{}", shape.seq, shape.batch)
+    } else {
+        format!("mem_{variant}_n{}_b{}_c{}_k{}", shape.seq, shape.batch, shape.n_c, shape.kappa)
+    };
+    Ok(MemoryPoint {
+        config,
+        variant: variant.to_string(),
+        seq_len: shape.seq,
+        n_c: shape.n_c,
+        kappa: shape.kappa,
+        measured_peak_bytes,
+        model_bytes,
+        rss_mb: crate::util::peak_rss_bytes().map(|b| b as f64 / 1e6).unwrap_or(0.0),
+        checksum,
+    })
+}
+
+/// Pick the balanced κ for one sequence length off the §3.4 curve: the
+/// power-of-two argmin of predicted CAST memory (lands near Nc² = κ).
+pub fn balanced_kappa(batch: usize, seq: usize, heads: usize, d: usize) -> usize {
+    let mut kappas = Vec::new();
+    let mut k = 16usize;
+    while k <= (seq / 2).max(16) {
+        kappas.push(k);
+        k *= 2;
+    }
+    kappa_memory_curve(batch, seq, heads, d, &kappas)
+        .into_iter()
+        .min_by_key(|&(_, bytes)| bytes)
+        .map(|(kappa, _)| kappa)
+        .unwrap_or(16)
+        .min(seq.max(1))
+}
+
+/// The `cast bench --memory` sweep: cast vs vanilla at each sequence
+/// length, CAST at its balanced κ.  Returns cast/vanilla point pairs in
+/// seq order.
+pub fn memory_sweep(
+    seqs: &[usize],
+    batch: usize,
+    heads: usize,
+    d: usize,
+) -> Result<Vec<MemoryPoint>> {
+    let mut points = Vec::new();
+    for &seq in seqs {
+        let kappa = balanced_kappa(batch, seq, heads, d);
+        let n_c = seq.div_ceil(kappa).max(1);
+        let shape = AttnShape { batch, seq, heads, d, n_c, kappa };
+        points.push(memory_point("cast_topk", &shape)?);
+        points.push(memory_point("vanilla", &shape)?);
+    }
+    Ok(points)
+}
+
+/// A `mem_peak_bytes` row in the `BENCH_native.json` schema — what
+/// `cast bench --memory --append-json` appends.  `peak_bytes` is the
+/// headline number; `steps_per_sec` is 0 so throughput tooling skips
+/// these rows, and `peak_rss_mb` finally carries a real VmHWM.
+pub fn memory_row_json(p: &MemoryPoint) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(&p.config)),
+        ("variant", Json::str(&p.variant)),
+        ("seq_len", Json::num(p.seq_len as f64)),
+        ("kind", Json::str("mem_peak_bytes")),
+        ("steps_per_sec", Json::num(0.0)),
+        ("peak_bytes", Json::num(p.measured_peak_bytes as f64)),
+        ("model_bytes", Json::num(p.model_bytes as f64)),
+        ("n_c", Json::num(p.n_c as f64)),
+        ("kappa", Json::num(p.kappa as f64)),
+        ("peak_rss_mb", Json::num(p.rss_mb)),
+        ("threads", Json::num(Engine::threads() as f64)),
+        ("simd", Json::Bool(crate::util::simd::enabled())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: peak-byte *measurements* are exercised in
+    // tests/integration_memstats.rs, which installs the tracking
+    // allocator in its own test binary; the lib unit-test binary has
+    // no #[global_allocator], so these tests cover shapes, kernel
+    // liveness, and the row schema.
+
+    #[test]
+    fn balanced_kappa_lands_near_nc2_eq_kappa() {
+        for seq in [512usize, 2048, 8192] {
+            let kappa = balanced_kappa(1, seq, 2, 64);
+            let n_c = seq.div_ceil(kappa).max(1);
+            let ratio = (n_c * n_c) as f64 / kappa as f64;
+            assert!(
+                (1.0 / 8.0..=8.0).contains(&ratio),
+                "N={seq}: κ={kappa} Nc={n_c} gives Nc²/κ={ratio:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn reference_kernels_produce_finite_checksums() {
+        let shape = AttnShape { batch: 1, seq: 64, heads: 2, d: 16, n_c: 4, kappa: 16 };
+        assert!(vanilla_attn_reference(&shape).is_finite());
+        assert!(cast_attn_reference(&shape).is_finite());
+    }
+
+    #[test]
+    fn memory_point_requires_the_tracking_allocator() {
+        // this binary has no #[global_allocator]; the point must refuse
+        // rather than report a bogus zero measurement
+        let shape = AttnShape { batch: 1, seq: 64, heads: 2, d: 16, n_c: 4, kappa: 16 };
+        let err = memory_point("vanilla", &shape).unwrap_err();
+        assert!(format!("{err:#}").contains("tracking allocator"), "{err:#}");
+    }
+
+    #[test]
+    fn memory_row_schema() {
+        let p = MemoryPoint {
+            config: "mem_cast_topk_n512_b1_c8_k64".to_string(),
+            variant: "cast_topk".to_string(),
+            seq_len: 512,
+            n_c: 8,
+            kappa: 64,
+            measured_peak_bytes: 1_000_000,
+            model_bytes: 900_000,
+            rss_mb: 42.0,
+            checksum: 1.0,
+        };
+        let row = memory_row_json(&p);
+        assert_eq!(row.get("kind").and_then(Json::as_str), Some("mem_peak_bytes"));
+        assert_eq!(row.get("peak_bytes").and_then(Json::as_f64), Some(1_000_000.0));
+        assert_eq!(row.get("model_bytes").and_then(Json::as_f64), Some(900_000.0));
+        assert_eq!(row.get("peak_rss_mb").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(row.get("steps_per_sec").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -1,9 +1,11 @@
 //! Benchmark infrastructure: the measurement harness behind every paper
 //! table/figure (`harness`), the analytic complexity model (`memmodel`),
-//! and paper-shaped report rendering (`tables`).
+//! the measured-bytes sweep over it (`memory`), and paper-shaped report
+//! rendering (`tables`).
 
 pub mod harness;
 pub mod memmodel;
+pub mod memory;
 pub mod tables;
 
 pub use harness::{
@@ -12,4 +14,5 @@ pub use harness::{
     serve_row_json, table_from_rows, train_row_json, write_bench_json, BenchRow, DecodePoint,
 };
 pub use memmodel::{kernel_estimate, AttnShape};
+pub use memory::{memory_row_json, memory_sweep, MemoryPoint};
 pub use tables::{AccuracyTable, RelativeTable};

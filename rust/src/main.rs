@@ -31,7 +31,13 @@
 //!            generation through the cluster-state cache vs full-forward
 //!            recompute per seq length [--kappa K --nc C --prompt N
 //!            --max-new N], parity-checked, appending
-//!            decode_tokens_per_sec rows under --append-json)
+//!            decode_tokens_per_sec rows under --append-json.
+//!            --memory switches to the measured-memory sweep: the
+//!            tracking allocator's peak-bytes watermark over the
+//!            materializing CAST and vanilla reference kernels per seq
+//!            length [--seq 512,1024,.. --batch B --heads H --d D],
+//!            printed against the §3.4 analytic model and appending
+//!            mem_peak_bytes rows under --append-json)
 //!   sweep   [--tasks text,listops --variants all --steps N --seed S
 //!           --bench-json PATH]
 //!           (variant bake-off: trains every variant × task combination
@@ -47,7 +53,7 @@
 //!   serve   [--addr H:P --dir <d1,d2,..> --ckpt PATH --max-batch N
 //!           --max-wait-us U --queue N --conn-workers N --infer-workers N
 //!           --deadline-ms MS --breaker-failures N --breaker-cooldown-ms MS
-//!           --seed S --causal | size flags as in train]
+//!           --trace-ring N --seed S --causal | size flags as in train]
 //!           (HTTP inference server with dynamic micro-batching; without
 //!            --dir it serves a synthetic config built from
 //!            --task/--variant/--seq/--nc/--kappa/--depth — zero
@@ -57,7 +63,11 @@
 //!            (streaming NDJSON incremental decode for causal CAST
 //!            models), GET /models, POST /models/reload, GET /healthz,
 //!            GET /readyz, GET /metrics, GET /debug/trace?n=K,
-//!            POST /admin/shutdown.
+//!            GET /debug/clusters, POST /admin/shutdown.
+//!            --trace-ring N sizes the /debug/trace ring buffer
+//!            (default 256 requests); under CAST_CLUSTER_STATS=1 the
+//!            /metrics page adds per-model cluster-health gauges and
+//!            /debug/clusters returns the same as JSON.
 //!            SIGINT/SIGTERM drain gracefully; clients may bound queue
 //!            time with an X-Deadline-Ms header, capped by
 //!            --deadline-ms.  /metrics exposes parse/queue/batch/
@@ -73,13 +83,17 @@
 //!            forward every step and asserts the incremental logits
 //!            match bit-for-bit; --temperature 0 is greedy argmax)
 //!   loadgen [--addr H:P --conns N --requests N --model KEY --seq N
-//!           --seed S --generate N --bench-json PATH --allow-errors]
+//!           --seed S --generate N --bench-json PATH --allow-errors
+//!           --client-faults]
 //!           (closed-loop client driving a running server; --bench-json
 //!            appends a serve_reqs_per_sec row, e.g. to BENCH_native.json
 //!            — `make bench-serve` records the batched/unbatched pair.
 //!            --generate N switches to streaming POST /generate requests
 //!            of N new tokens each, validating each NDJSON stream's
-//!            final {"done":…} line)
+//!            final {"done":…} line.  --client-faults turns a
+//!            deterministic residue of requests hostile — slow-loris
+//!            bodies and mid-body disconnects — and fails unless the
+//!            server sheds every one cleanly)
 //!   _job    (internal: isolated child for peak-RSS measurement)
 //!
 //! Backend selection: CAST_BACKEND=native (default, pure-Rust engine, no
@@ -100,6 +114,13 @@ use cast::runtime::{Engine, Executable as _, Manifest, ModelMeta};
 use cast::train::{Schedule, TrainConfig, Trainer};
 use cast::util::cli::Args;
 use cast::util::rng::Rng;
+
+/// Counting allocator (util::memtrack) — a pass-through over `System`
+/// whose per-phase peak watermarks power `cast bench --memory`.  The
+/// counters are two relaxed atomics per alloc/free; phase *recording*
+/// stays behind the CAST_MEMTRACK gate.
+#[global_allocator]
+static ALLOC: cast::util::memtrack::TrackingAlloc = cast::util::memtrack::TrackingAlloc;
 
 fn main() {
     let args = Args::parse();
@@ -147,6 +168,8 @@ Serving (zero-artifact smoke):
   cast serve --seq 128 --max-batch 8 &   then   cast loadgen --conns 16 --requests 25
 Profiling (per-op time shares + Chrome trace):
   cast bench --table 1 --seq 256 --steps 2 --profile --trace-out trace.json
+Memory curves (tracking-allocator peak bytes vs the §3.4 model):
+  cast bench --memory --seq 512,1024,2048,4096,8192
 See rust/src/main.rs header or DESIGN.md §Serving / §Observability for flags.";
 
 /// Write native-runnable artifact directories (manifest.json only) for
@@ -319,6 +342,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.has("decode") {
         return cmd_bench_decode(args);
     }
+    if args.has("memory") {
+        return cmd_bench_memory(args);
+    }
     let root = PathBuf::from(args.str("artifacts", "artifacts"));
     let table = args.usize("table", 1);
     let task = args.str("task", "text");
@@ -448,6 +474,72 @@ fn cmd_bench_decode(args: &Args) -> Result<()> {
             cast::util::simd::enabled(),
             Engine::threads()
         );
+    }
+    Ok(())
+}
+
+/// `cast bench --memory`: measured attention memory curves via the
+/// tracking allocator.  For each sequence length, runs the materializing
+/// CAST and vanilla reference kernels (bench::memory) under a
+/// `memtrack::Watermark` and reports the measured peak bytes next to
+/// the §3.4 analytic model — the empirical O(αN)-vs-O(N²) evidence.
+/// `--append-json` adds `mem_peak_bytes` rows to the trajectory file.
+fn cmd_bench_memory(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        cast::util::memtrack::installed(),
+        "the tracking allocator is not installed in this binary"
+    );
+    let seqs: Vec<usize> = match args.opt_str("seq") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().context("--seq expects comma-separated lengths"))
+            .collect::<Result<Vec<usize>>>()?,
+        None => vec![512, 1024, 2048, 4096, 8192],
+    };
+    let batch = args.usize("batch", 1);
+    let heads = args.usize("heads", 2);
+    let d = args.usize("d", 64);
+    let points = cast::bench::memory_sweep(&seqs, batch, heads, d)?;
+    println!("# memory bench: measured peak bytes (tracking allocator) vs the \u{a7}3.4 model");
+    println!("config,variant,seq,n_c,kappa,measured_peak_mb,model_mb,measured/model,rss_mb");
+    for p in &points {
+        println!(
+            "{},{},{},{},{},{:.2},{:.2},{:.3},{:.1}",
+            p.config,
+            p.variant,
+            p.seq_len,
+            p.n_c,
+            p.kappa,
+            p.measured_peak_bytes as f64 / 1e6,
+            p.model_bytes as f64 / 1e6,
+            p.measured_peak_bytes as f64 / (p.model_bytes as f64).max(1.0),
+            p.rss_mb
+        );
+    }
+    // doubling ratios: consecutive same-variant points show the growth
+    // exponent directly (vanilla -> 4.0, balanced CAST -> ~2^(5/3))
+    for variant in ["cast_topk", "vanilla"] {
+        let curve: Vec<&cast::bench::MemoryPoint> =
+            points.iter().filter(|p| p.variant == variant).collect();
+        for w in curve.windows(2) {
+            if w[1].seq_len == 2 * w[0].seq_len {
+                println!(
+                    "# {variant}: N {} -> {} grows peak bytes x{:.2}",
+                    w[0].seq_len,
+                    w[1].seq_len,
+                    w[1].measured_peak_bytes as f64
+                        / (w[0].measured_peak_bytes as f64).max(1.0)
+                );
+            }
+        }
+    }
+    if let Some(path) = args.opt_str("append-json") {
+        let pb = PathBuf::from(&path);
+        cast::bench::append_bench_rows(
+            &pb,
+            points.iter().map(cast::bench::memory_row_json).collect(),
+        )?;
+        println!("appended {} memory row(s) -> {path}", points.len());
     }
     Ok(())
 }
@@ -668,13 +760,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline_ms: args.u64("deadline-ms", 60_000),
         breaker_failures,
         breaker_cooldown,
+        trace_ring: args.usize("trace-ring", 256),
     };
     install_signal_handlers();
     let server = Server::bind(cfg, registry)?;
     println!(
         "serving on http://{} — endpoints: POST /predict, POST /generate, GET /models, \
          POST /models/reload, GET /healthz, GET /readyz, GET /metrics, GET /debug/trace, \
-         POST /admin/shutdown (ctrl-c drains gracefully)",
+         GET /debug/clusters, POST /admin/shutdown (ctrl-c drains gracefully)",
         server.local_addr()
     );
     server.run()
@@ -785,6 +878,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seq: if args.has("seq") { Some(args.usize("seq", 0)) } else { None },
         seed: args.u64("seed", 0),
         generate: if args.has("generate") { Some(args.usize("generate", 16)) } else { None },
+        client_faults: args.has("client-faults"),
     };
     let report = cast::serve::loadgen::run(&cfg)?;
     println!(
@@ -821,12 +915,25 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             report.retried
         );
     }
+    let faults = report.faults_slowloris + report.faults_disconnect;
+    if faults > 0 {
+        println!(
+            "client faults: {} slow-loris + {} mid-body disconnects injected, {} shed cleanly",
+            report.faults_slowloris, report.faults_disconnect, report.faults_shed
+        );
+    }
     if let Some(path) = args.opt_str("bench-json") {
         cast::bench::append_bench_row(&PathBuf::from(&path), cast::bench::serve_row_json(&report))?;
         println!("serve bench row -> {path}");
     }
     if report.errors > 0 && !args.has("allow-errors") {
         bail!("{} of {} requests failed", report.errors, report.ok + report.errors);
+    }
+    if faults > report.faults_shed && !args.has("allow-errors") {
+        bail!(
+            "{} of {faults} injected client faults were not shed cleanly",
+            faults - report.faults_shed
+        );
     }
     Ok(())
 }

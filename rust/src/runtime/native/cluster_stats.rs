@@ -1,0 +1,421 @@
+//! Cluster-health telemetry for the clustering attention variants:
+//! per-layer occupancy, affinity entropy, balance, and step-over-step
+//! assignment churn — the collapse signals clustered-attention work
+//! (arXiv 2007.04825) guards against and VCC (arXiv 2305.04241) watches
+//! when scaling context length.
+//!
+//! Gated exactly like `util::trace`: `CAST_CLUSTER_STATS` (any
+//! non-empty value other than `0`) or [`set_enabled`] turns recording
+//! on; when off, the tap in `variants::attn_forward` is a single
+//! relaxed atomic load — no locks, no allocation, no arithmetic.
+//!
+//! Assignments are derived from the returned A_g affinity block with
+//! the same argmax-first-max-wins rule as `analysis/clusters.rs`, so
+//! the telemetry agrees with the offline cluster visualization.
+//! Recording only *reads* `a_g` after the layer has computed it, so
+//! model outputs are bit-identical with stats on or off (pinned by
+//! `tests/integration_memstats.rs`).
+//!
+//! Metric definitions (DESIGN.md §Observability):
+//! * **occupancy** — tokens argmax-assigned per cluster, summed over
+//!   recorded forwards (the histogram behind `/debug/clusters`).
+//! * **entropy** — mean per-token affinity entropy, normalized by
+//!   `ln(n_c)` to `[0, 1]`: 1 = affinities spread evenly, 0 = all mass
+//!   on one cluster.
+//! * **balance_cv** — coefficient of variation (std/mean) of per-batch
+//!   cluster sizes: 0 = perfectly balanced, `sqrt(n_c - 1)` = collapsed.
+//! * **churn** — fraction of tokens whose assignment differs from the
+//!   previous recorded forward of the same layer and geometry (train
+//!   steps: how fast the clustering is still moving).
+//! * **collapsed** — early warning, latched per layer: the top cluster
+//!   held ≥ [`COLLAPSE_MAX_FRACTION`] of tokens (with `n_c ≥ 2`) or
+//!   mean entropy fell below [`COLLAPSE_MIN_ENTROPY`] on any forward.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Top-cluster token share that flags collapse (half the batch in one
+/// of ≥ 2 clusters means the others are starving).
+pub const COLLAPSE_MAX_FRACTION: f64 = 0.5;
+
+/// Normalized affinity entropy below which assignments are effectively
+/// deterministic into a single cluster.
+pub const COLLAPSE_MIN_ENTROPY: f64 = 0.05;
+
+const UNINIT: u8 = 0;
+const INACTIVE: u8 = 1;
+const ENABLED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// True when cluster-stats recording is on.  One relaxed load when not.
+#[inline]
+pub fn active() -> bool {
+    state() == ENABLED
+}
+
+/// Programmatically enable/disable recording (overrides
+/// `CAST_CLUSTER_STATS`).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ENABLED } else { INACTIVE }, Ordering::SeqCst);
+}
+
+#[inline]
+fn state() -> u8 {
+    let s = STATE.load(Ordering::Relaxed);
+    if s == UNINIT {
+        init_from_env()
+    } else {
+        s
+    }
+}
+
+#[cold]
+fn init_from_env() -> u8 {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let on = match std::env::var("CAST_CLUSTER_STATS") {
+            Ok(v) => !v.trim().is_empty() && v.trim() != "0",
+            Err(_) => false,
+        };
+        if on {
+            crate::info!("cluster_stats: enabled via CAST_CLUSTER_STATS");
+        }
+        let _ = STATE.compare_exchange(
+            UNINIT,
+            if on { ENABLED } else { INACTIVE },
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    });
+    STATE.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// per-layer accumulators
+// ---------------------------------------------------------------------------
+
+struct LayerAcc {
+    layer: i32,
+    n_c: usize,
+    forwards: u64,
+    tokens: u64,
+    /// Tokens argmax-assigned per cluster, summed over forwards.
+    occupancy: Vec<u64>,
+    sum_entropy: f64,
+    sum_balance_cv: f64,
+    sum_max_fraction: f64,
+    sum_churn: f64,
+    /// Forwards that had a comparable predecessor to churn against.
+    churn_samples: u64,
+    collapsed: bool,
+    /// Last forward's argmax assignments, for churn (compared only when
+    /// the geometry matches).
+    prev_assign: Vec<u32>,
+}
+
+static LAYERS: Mutex<Vec<LayerAcc>> = Mutex::new(Vec::new());
+
+/// One layer's aggregated health, as exported by [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct LayerSnapshot {
+    pub layer: i32,
+    pub n_c: usize,
+    pub forwards: u64,
+    pub tokens: u64,
+    pub occupancy: Vec<u64>,
+    pub entropy: f64,
+    pub balance_cv: f64,
+    pub max_fraction: f64,
+    pub churn: f64,
+    pub collapsed: bool,
+}
+
+/// Cross-layer roll-up for gauges (`/metrics`) and train JSONL.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub layers: usize,
+    /// Mean over layers of mean normalized affinity entropy.
+    pub entropy: f64,
+    /// Mean over layers of the cluster-size CV.
+    pub balance_cv: f64,
+    /// Mean over layers of assignment churn.
+    pub churn: f64,
+    /// Worst (largest) per-layer top-cluster share.
+    pub max_fraction: f64,
+    /// Layers whose collapse warning has latched.
+    pub collapsed_layers: usize,
+}
+
+/// Parse the layer index out of an attention parameter prefix
+/// (`"blocks.3.attn"` → 3); -1 when the prefix has another shape.
+pub fn layer_of_prefix(prefix: &str) -> i32 {
+    let rest = match prefix.strip_prefix("blocks.") {
+        Some(r) => r,
+        None => return -1,
+    };
+    match rest.split('.').next().and_then(|s| s.parse::<i32>().ok()) {
+        Some(i) => i,
+        None => -1,
+    }
+}
+
+/// Record one attention forward's affinity block.  `a_g` is row-major
+/// `(b·n, n_c)` — exactly what `cast_layer`/`clustered_layer` return.
+/// No-op (after the gate load in the caller) unless [`active`].
+pub fn record(layer: i32, b: usize, n: usize, n_c: usize, a_g: &[f32]) {
+    if !active() || n_c == 0 || b * n == 0 || a_g.len() < b * n * n_c {
+        return;
+    }
+    let rows = b * n;
+    // per-token argmax (first max wins — analysis/clusters.rs rule) and
+    // per-row normalized entropy, computed outside the lock
+    let mut assign = vec![0u32; rows];
+    let mut sizes = vec![0u64; n_c];
+    let mut entropy_sum = 0.0f64;
+    let ln_nc = (n_c as f64).ln();
+    for r in 0..rows {
+        let row = &a_g[r * n_c..(r + 1) * n_c];
+        let mut arg = 0usize;
+        let mut total = 0.0f64;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = c;
+            }
+            total += v.max(0.0) as f64;
+        }
+        assign[r] = arg as u32;
+        sizes[arg] += 1;
+        if n_c > 1 && total > 0.0 {
+            let mut h = 0.0f64;
+            for &v in row {
+                let p = v.max(0.0) as f64 / total;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            entropy_sum += h / ln_nc;
+        }
+    }
+    let entropy = if n_c > 1 { entropy_sum / rows as f64 } else { 1.0 };
+    let mean = rows as f64 / n_c as f64;
+    let var = sizes
+        .iter()
+        .map(|&s| {
+            let d = s as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n_c as f64;
+    let balance_cv = var.sqrt() / mean;
+    let max_fraction = sizes.iter().copied().max().unwrap_or(0) as f64 / rows as f64;
+    let collapsed_now = (n_c >= 2 && max_fraction >= COLLAPSE_MAX_FRACTION)
+        || (n_c >= 2 && entropy <= COLLAPSE_MIN_ENTROPY);
+
+    let mut layers = LAYERS.lock().unwrap_or_else(|p| p.into_inner());
+    let acc = match layers.iter_mut().find(|a| a.layer == layer && a.n_c == n_c) {
+        Some(a) => a,
+        None => {
+            layers.push(LayerAcc {
+                layer,
+                n_c,
+                forwards: 0,
+                tokens: 0,
+                occupancy: vec![0; n_c],
+                sum_entropy: 0.0,
+                sum_balance_cv: 0.0,
+                sum_max_fraction: 0.0,
+                sum_churn: 0.0,
+                churn_samples: 0,
+                collapsed: false,
+                prev_assign: Vec::new(),
+            });
+            layers.last_mut().unwrap()
+        }
+    };
+    acc.forwards += 1;
+    acc.tokens += rows as u64;
+    for (o, &s) in acc.occupancy.iter_mut().zip(&sizes) {
+        *o += s;
+    }
+    acc.sum_entropy += entropy;
+    acc.sum_balance_cv += balance_cv;
+    acc.sum_max_fraction += max_fraction;
+    acc.collapsed |= collapsed_now;
+    if acc.prev_assign.len() == rows {
+        let moved = assign.iter().zip(&acc.prev_assign).filter(|(a, b)| a != b).count();
+        acc.sum_churn += moved as f64 / rows as f64;
+        acc.churn_samples += 1;
+    }
+    acc.prev_assign = assign;
+}
+
+/// Aggregated per-layer health, sorted by layer index.
+pub fn snapshot() -> Vec<LayerSnapshot> {
+    let layers = LAYERS.lock().unwrap_or_else(|p| p.into_inner());
+    let mut out: Vec<LayerSnapshot> = layers
+        .iter()
+        .filter(|a| a.forwards > 0)
+        .map(|a| LayerSnapshot {
+            layer: a.layer,
+            n_c: a.n_c,
+            forwards: a.forwards,
+            tokens: a.tokens,
+            occupancy: a.occupancy.clone(),
+            entropy: a.sum_entropy / a.forwards as f64,
+            balance_cv: a.sum_balance_cv / a.forwards as f64,
+            max_fraction: a.sum_max_fraction / a.forwards as f64,
+            churn: if a.churn_samples > 0 {
+                a.sum_churn / a.churn_samples as f64
+            } else {
+                0.0
+            },
+            collapsed: a.collapsed,
+        })
+        .collect();
+    out.sort_by_key(|s| s.layer);
+    out
+}
+
+/// Roll a snapshot up into the cross-layer gauges.
+pub fn summarize(layers: &[LayerSnapshot]) -> Option<Summary> {
+    if layers.is_empty() {
+        return None;
+    }
+    let n = layers.len() as f64;
+    Some(Summary {
+        layers: layers.len(),
+        entropy: layers.iter().map(|l| l.entropy).sum::<f64>() / n,
+        balance_cv: layers.iter().map(|l| l.balance_cv).sum::<f64>() / n,
+        churn: layers.iter().map(|l| l.churn).sum::<f64>() / n,
+        max_fraction: layers.iter().map(|l| l.max_fraction).fold(0.0, f64::max),
+        collapsed_layers: layers.iter().filter(|l| l.collapsed).count(),
+    })
+}
+
+/// Snapshot, summarize, and clear in one step — the per-harvest shape
+/// the serve batcher and the train metrics sink use so each harvest
+/// covers only the forwards since the previous one.
+pub fn take_summary() -> Option<Summary> {
+    let snap = snapshot();
+    clear();
+    summarize(&snap)
+}
+
+/// Drop all accumulated state (assignments included, so the next churn
+/// sample starts fresh).
+pub fn clear() {
+    LAYERS.lock().unwrap_or_else(|p| p.into_inner()).clear();
+}
+
+/// Serialize in-process tests that toggle the gate: the accumulator
+/// store is process-global.  Not API.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// a_g with every row's mass on `hot`, for (rows, n_c).
+    fn one_hot_ag(rows: usize, n_c: usize, hot: usize) -> Vec<f32> {
+        let mut a = vec![0.0f32; rows * n_c];
+        for r in 0..rows {
+            a[r * n_c + hot] = 1.0;
+        }
+        a
+    }
+
+    /// a_g that spreads rows round-robin with uniform affinities.
+    fn uniform_ag(rows: usize, n_c: usize) -> Vec<f32> {
+        let mut a = vec![1.0f32 / n_c as f32; rows * n_c];
+        for r in 0..rows {
+            // tiny tilt so argmax round-robins instead of always-0
+            a[r * n_c + (r % n_c)] += 1e-3;
+        }
+        a
+    }
+
+    #[test]
+    fn disabled_record_is_a_no_op() {
+        let _g = test_guard();
+        set_enabled(false);
+        clear();
+        record(0, 1, 8, 4, &one_hot_ag(8, 4, 0));
+        assert!(snapshot().is_empty());
+        assert!(take_summary().is_none());
+    }
+
+    #[test]
+    fn uniform_affinities_are_healthy() {
+        let _g = test_guard();
+        set_enabled(true);
+        clear();
+        record(0, 2, 8, 4, &uniform_ag(16, 4));
+        let snap = snapshot();
+        set_enabled(false);
+        assert_eq!(snap.len(), 1);
+        let l = &snap[0];
+        assert_eq!((l.layer, l.n_c, l.forwards, l.tokens), (0, 4, 1, 16));
+        assert_eq!(l.occupancy, vec![4, 4, 4, 4], "round-robin argmax");
+        assert!(l.entropy > 0.95, "near-uniform rows ⇒ entropy ≈ 1, got {}", l.entropy);
+        assert!(l.balance_cv < 1e-9, "perfectly balanced, got {}", l.balance_cv);
+        assert!(!l.collapsed);
+        clear();
+    }
+
+    #[test]
+    fn one_hot_affinities_latch_collapse() {
+        let _g = test_guard();
+        set_enabled(true);
+        clear();
+        record(1, 1, 16, 4, &one_hot_ag(16, 4, 2));
+        let snap = snapshot();
+        let l = &snap[0];
+        assert_eq!(l.occupancy, vec![0, 0, 16, 0]);
+        assert!(l.entropy < COLLAPSE_MIN_ENTROPY);
+        assert!((l.max_fraction - 1.0).abs() < 1e-12);
+        assert!(l.collapsed, "all mass on one cluster must warn");
+        let sum = summarize(&snap).unwrap();
+        assert_eq!(sum.collapsed_layers, 1);
+        assert!((sum.max_fraction - 1.0).abs() < 1e-12);
+        set_enabled(false);
+        clear();
+    }
+
+    #[test]
+    fn churn_counts_reassigned_tokens_between_forwards() {
+        let _g = test_guard();
+        set_enabled(true);
+        clear();
+        record(0, 1, 8, 2, &one_hot_ag(8, 2, 0));
+        // second forward: every token flips cluster ⇒ churn 1.0
+        record(0, 1, 8, 2, &one_hot_ag(8, 2, 1));
+        // third forward: no movement ⇒ churn 0.0; mean is 0.5
+        record(0, 1, 8, 2, &one_hot_ag(8, 2, 1));
+        let snap = snapshot();
+        set_enabled(false);
+        assert!((snap[0].churn - 0.5).abs() < 1e-12, "got {}", snap[0].churn);
+        clear();
+    }
+
+    #[test]
+    fn take_summary_clears_and_prefix_parses() {
+        let _g = test_guard();
+        set_enabled(true);
+        clear();
+        record(0, 1, 4, 2, &uniform_ag(4, 2));
+        record(3, 1, 4, 2, &uniform_ag(4, 2));
+        let sum = take_summary().unwrap();
+        set_enabled(false);
+        assert_eq!(sum.layers, 2);
+        assert!(snapshot().is_empty(), "take_summary clears");
+        assert_eq!(layer_of_prefix("blocks.3.attn"), 3);
+        assert_eq!(layer_of_prefix("blocks.12.attn"), 12);
+        assert_eq!(layer_of_prefix("head.out"), -1);
+        assert_eq!(layer_of_prefix("blocks.x.attn"), -1);
+    }
+}

@@ -89,6 +89,10 @@ pub struct DecodeState {
     layers: Option<Vec<LayerCache>>,
     /// How many of `tokens` the cache has absorbed.
     absorbed: usize,
+    /// Tokens absorbed incrementally after every cluster filled — the
+    /// zero-attention passthrough dead-end (ROADMAP long-context item),
+    /// exported as `cast_decode_passthrough_tokens_total`.
+    passthrough: u64,
     /// Reusable forward workspace for the fallback / rebuild passes.
     ws: Workspace,
 }
@@ -101,6 +105,7 @@ impl DecodeState {
             tokens: Vec::new(),
             layers: None,
             absorbed: 0,
+            passthrough: 0,
             ws: Workspace::default(),
         }
     }
@@ -114,6 +119,25 @@ impl DecodeState {
     /// The token history absorbed so far.
     pub fn history(&self) -> &[i32] {
         &self.tokens
+    }
+
+    /// Tokens absorbed incrementally after every cluster slot filled
+    /// (zero-attention passthroughs — the Nc·κ capacity dead-end).
+    pub fn passthrough_tokens(&self) -> u64 {
+        self.passthrough
+    }
+
+    /// Cluster-cache fill: `(occupied_slots, capacity_slots)` summed
+    /// over layers.  Capacity is `depth · Nc · κ` whether or not the
+    /// cache has been built yet; occupancy is 0 in the below-κ regime.
+    pub fn cache_fill(&self) -> (usize, usize) {
+        let capacity = self.meta.depth * self.meta.n_c.max(1) * self.meta.kappa.max(1);
+        let filled = self
+            .layers
+            .as_ref()
+            .map(|ls| ls.iter().map(|lc| lc.fill.iter().sum::<usize>()).sum())
+            .unwrap_or(0);
+        (filled, capacity)
     }
 
     /// FNV-1a fingerprint of the entire cluster-state cache (fills, slot
@@ -269,7 +293,9 @@ fn rebuild(manifest: &Manifest, p: &Params, st: &mut DecodeState, upto: usize) -
 /// to a cluster (decode.assign), append its K/V to that cluster's cache
 /// (decode.summary), attend over the cluster's κ slots and apply the
 /// A_sum combination (decode.attn).  Mirrors `cast_layer` steps 1–6 for a
-/// single appended row, bit-for-bit.
+/// single appended row, bit-for-bit.  The second return is `true` when
+/// the token could not be placed (every cluster full) and rode through
+/// as a zero-attention passthrough.
 #[allow(clippy::too_many_arguments)]
 fn attn_row(
     cp: &CastParams,
@@ -278,7 +304,7 @@ fn attn_row(
     pos: usize,
     meta: &ModelMeta,
     attn: AttnFn,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, bool)> {
     let (h, d_h) = (meta.heads, meta.d_h());
     let d = meta.d;
     let n_c = meta.n_c.max(1);
@@ -387,18 +413,20 @@ fn attn_row(
     }
     // unplaced token (every cluster full): r stays zero and the output is
     // the wo bias row — exactly what the full forward produces
-    Ok(ops::dense(&r, cp.wo_w, cp.wo_b, 1, d, d))
+    Ok((ops::dense(&r, cp.wo_w, cp.wo_b, 1, d, d), assigned.is_none()))
 }
 
 /// Append one token at `pos` through every layer incrementally; returns
-/// the final pre-readout activation row (d).
+/// the final pre-readout activation row (d) and whether any layer had to
+/// pass the token through unplaced (all caches fill in lockstep, so
+/// "any" and "every" coincide — one flag per token).
 fn append_incremental(
     p: &Params,
     meta: &ModelMeta,
     layers: &mut [LayerCache],
     pos: usize,
     token: i32,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, bool)> {
     let (d, d_emb) = (meta.d, meta.d_emb);
     let attn = AttnFn::parse(&meta.attn_fn)?;
 
@@ -413,20 +441,23 @@ fn append_incremental(
 
     let mut hid: Vec<f32> = Vec::new();
     let mut ffn_out: Vec<f32> = Vec::new();
+    let mut passthrough = false;
     for (i, lc) in layers.iter_mut().enumerate() {
         let blk = format!("blocks.{i}");
         let cp = cast_params(p, &format!("{blk}.attn"))?;
         if meta.prenorm {
             let mut xn = x.clone();
             model::apply_norm(p, meta, &format!("{blk}.norm1"), &mut xn)?;
-            let a = attn_row(&cp, &xn, lc, pos, meta, attn)?;
+            let (a, unplaced) = attn_row(&cp, &xn, lc, pos, meta, attn)?;
+            passthrough |= unplaced;
             simd::add8(&mut x, &a);
             let mut xn2 = x.clone();
             model::apply_norm(p, meta, &format!("{blk}.norm2"), &mut xn2)?;
             model::ffn(p, &format!("{blk}.ffn"), &xn2, 1, d, meta.d_ff, &mut hid, &mut ffn_out)?;
             simd::add8(&mut x, &ffn_out);
         } else {
-            let a = attn_row(&cp, &x, lc, pos, meta, attn)?;
+            let (a, unplaced) = attn_row(&cp, &x, lc, pos, meta, attn)?;
+            passthrough |= unplaced;
             simd::add8(&mut x, &a);
             model::apply_norm(p, meta, &format!("{blk}.norm1"), &mut x)?;
             model::ffn(p, &format!("{blk}.ffn"), &x, 1, d, meta.d_ff, &mut hid, &mut ffn_out)?;
@@ -437,7 +468,7 @@ fn append_incremental(
     if meta.prenorm {
         model::apply_norm(p, meta, "out_norm", &mut x)?;
     }
-    Ok(x)
+    Ok((x, passthrough))
 }
 
 /// Absorb `tokens` (the prompt, or one chunk of it) into the session
@@ -470,7 +501,10 @@ pub fn prefill(
         let i = st.absorbed;
         let tok = st.tokens[i];
         let layers = st.layers.as_mut().expect("cache exists past κ");
-        append_incremental(&p, meta, layers, i, tok)?;
+        let (_, passthrough) = append_incremental(&p, meta, layers, i, tok)?;
+        if passthrough {
+            st.passthrough += 1;
+        }
         st.absorbed = i + 1;
     }
     Ok(())
@@ -520,7 +554,11 @@ pub fn step(
         let i = st.absorbed;
         let tok = st.tokens[i];
         let layers = st.layers.as_mut().expect("cache exists past κ");
-        last = append_incremental(&p, meta, layers, i, tok)?;
+        let (x, passthrough) = append_incremental(&p, meta, layers, i, tok)?;
+        if passthrough {
+            st.passthrough += 1;
+        }
+        last = x;
         st.absorbed = i + 1;
     }
     ensure!(!last.is_empty(), "decode step absorbed nothing");

@@ -20,6 +20,7 @@
 //! DESIGN.md §Autograd); `CAST_TRAIN_SCOPE=head` selects the PR-1
 //! head-only regression path.
 
+pub mod cluster_stats;
 pub mod clustered;
 pub mod decode;
 pub mod grad;

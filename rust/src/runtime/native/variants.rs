@@ -220,26 +220,39 @@ pub fn attn_forward(
             .map_err(|e| anyhow::anyhow!("{e} (layer {prefix})"))?;
     }
     let _t = crate::util::trace::span(attn_span_name(v));
-    match v {
+    let (out, a_g) = match v {
         AttnVariant::CastTopk | AttnVariant::CastSa => {
-            flayer::cast_layer(&cast_params(p, prefix)?, x, dims, ws)
+            flayer::cast_layer(&cast_params(p, prefix)?, x, dims, ws)?
         }
         AttnVariant::Vanilla => {
-            Ok((flayer::vanilla_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+            (flayer::vanilla_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims))
         }
         AttnVariant::Local => {
-            Ok((flayer::local_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+            (flayer::local_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims))
         }
         AttnVariant::Lsh => {
-            Ok((flayer::lsh_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+            (flayer::lsh_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims))
         }
         AttnVariant::Clustered => {
-            clustered::clustered_layer(&baseline_params(p, prefix)?, x, dims)
+            clustered::clustered_layer(&baseline_params(p, prefix)?, x, dims)?
         }
         AttnVariant::Tost => {
-            Ok((tost::tost_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims)))
+            (tost::tost_layer(&baseline_params(p, prefix)?, x, dims)?, zero_ag(dims))
         }
+    };
+    // cluster-health tap (one relaxed load when off): reads the affinity
+    // block only *after* the layer computed it, so logits are bit-identical
+    // with stats on or off; only variants with a real A_g are recorded
+    if super::cluster_stats::active() && v.supports_ag(false) {
+        super::cluster_stats::record(
+            super::cluster_stats::layer_of_prefix(prefix),
+            dims.b,
+            dims.n,
+            dims.n_c,
+            &a_g,
+        );
     }
+    Ok((out, a_g))
 }
 
 // ---------------------------------------------------------------------------
@@ -281,7 +294,18 @@ pub fn attn_forward_tape(
     match v {
         AttnVariant::CastTopk | AttnVariant::CastSa => {
             let cp = cast_params(p, prefix)?;
-            let (out, _ag) = flayer::cast_layer(&cp, x, dims, cast_fwd)?;
+            let (out, ag) = flayer::cast_layer(&cp, x, dims, cast_fwd)?;
+            // same cluster-health tap as attn_forward, so training steps
+            // feed the per-layer churn/collapse telemetry too
+            if super::cluster_stats::active() {
+                super::cluster_stats::record(
+                    super::cluster_stats::layer_of_prefix(prefix),
+                    dims.b,
+                    dims.n,
+                    dims.n_c,
+                    &ag,
+                );
+            }
             Ok((out, AttnTape::Cast(glayer::CastTape::capture(x, cast_fwd))))
         }
         AttnVariant::Vanilla => {

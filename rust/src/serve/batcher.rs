@@ -199,6 +199,14 @@ pub fn run_batch(batch: Vec<PredictJob>, scratch: &mut dyn Scratch, metrics: &Me
     match outcome {
         Ok(Ok(())) => {
             entry.breaker.record_success();
+            // harvest the cluster-health stats this batch's forwards
+            // accumulated into the per-model /metrics gauges (one
+            // relaxed load when the CAST_CLUSTER_STATS gate is off)
+            if crate::runtime::native::cluster_stats::active() {
+                if let Some(summary) = crate::runtime::native::cluster_stats::take_summary() {
+                    metrics.update_cluster_health(&entry.name, summary);
+                }
+            }
             true
         }
         Ok(Err(msg)) => {

@@ -404,6 +404,57 @@ pub fn write_request(
     w.flush()
 }
 
+/// [`write_request`], except the body dribbles out in `chunks` pieces
+/// with a `delay` sleep (and flush) between them — the slow-loris fault
+/// `cast loadgen --client-faults` injects.  The bytes on the wire are
+/// identical to a normal request; only their timing differs, so a
+/// server that tolerates split reads serves it and one with a body
+/// deadline sheds it — either way without poisoning the connection
+/// state machine.
+pub fn write_request_slowly(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    body: &[u8],
+    chunks: usize,
+    delay: std::time::Duration,
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {target} HTTP/1.1\r\nHost: cast-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )?;
+    w.flush()?;
+    let step = body.len().div_ceil(chunks.max(1)).max(1);
+    for piece in body.chunks(step) {
+        std::thread::sleep(delay);
+        w.write_all(piece)?;
+        w.flush()?;
+    }
+    Ok(())
+}
+
+/// Write the head with a full `Content-Length` declaration but only the
+/// first `n` body bytes — the mid-body-disconnect fault.  The caller
+/// drops the stream immediately after; the server sees EOF mid-request
+/// and must shed the carcass (400 path) without disturbing its other
+/// connections.
+pub fn write_request_truncated(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    body: &[u8],
+    n: usize,
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {target} HTTP/1.1\r\nHost: cast-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(&body[..n.min(body.len())])?;
+    w.flush()
+}
+
 /// One parsed client-side response.
 #[derive(Debug)]
 pub struct Response {
@@ -791,6 +842,37 @@ mod tests {
         let Ok(Recv::Request(req)) = conn.recv(1024) else { panic!("parse") };
         assert_eq!(req.method, "POST");
         assert_eq!(req.body, b"{}");
+    }
+
+    #[test]
+    fn slow_request_bytes_match_a_normal_request() {
+        let mut fast = Vec::new();
+        write_request(&mut fast, "POST", "/predict", b"{\"tokens\":[1,2]}").unwrap();
+        let mut slow = Vec::new();
+        write_request_slowly(
+            &mut slow,
+            "POST",
+            "/predict",
+            b"{\"tokens\":[1,2]}",
+            4,
+            std::time::Duration::ZERO,
+        )
+        .unwrap();
+        assert_eq!(fast, slow, "slow-loris differs only in timing, never in bytes");
+    }
+
+    #[test]
+    fn truncated_request_surfaces_as_mid_request_close() {
+        // the server-side parser must classify a mid-body disconnect as
+        // a 400 protocol error, not hang or panic
+        let mut wire = Vec::new();
+        write_request_truncated(&mut wire, "POST", "/predict", b"{\"tokens\":[1,2,3]}", 5)
+            .unwrap();
+        let text = std::str::from_utf8(&wire).unwrap().to_string();
+        assert!(text.contains("Content-Length: 18"), "full length declared: {text}");
+        let mut conn = HttpConn::new(ChunkStream::new(&[text.as_str()], true));
+        let err = conn.recv(1024).unwrap_err();
+        assert_eq!(err.status, 400, "mid-request EOF is the 400 path: {err}");
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! request's wall time and aggregate requests/sec, which `cast loadgen
 //! --bench-json` appends to `BENCH_native.json` as a
 //! `serve_reqs_per_sec` row (the batched-vs-unbatched acceptance pair).
+//!
+//! `--client-faults` turns a deterministic residue of each worker's
+//! requests into hostile clients: slow-loris bodies (the full request
+//! dribbled out in delayed chunks) and mid-body disconnects (full
+//! `Content-Length` declared, half the body sent, socket dropped).  The
+//! report counts how many of those the server shed cleanly — an orderly
+//! HTTP response or close for the slow-loris, a 200 `/healthz` probe on
+//! a fresh connection right after each disconnect — and `cast loadgen`
+//! fails if any fault was shed uncleanly.
 
 use std::io::{self, ErrorKind};
 use std::net::TcpStream;
@@ -45,6 +54,10 @@ pub struct LoadgenConfig {
     /// uses a fresh connection — the streaming protocol closes it.
     pub generate: Option<usize>,
     pub seed: u64,
+    /// Inject client-side faults (slow-loris bodies, mid-body
+    /// disconnects) on a deterministic residue of requests and verify
+    /// the server sheds them cleanly.
+    pub client_faults: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -57,6 +70,7 @@ impl Default for LoadgenConfig {
             seq: None,
             generate: None,
             seed: 0,
+            client_faults: false,
         }
     }
 }
@@ -102,6 +116,15 @@ pub struct LoadReport {
     pub stage_queue_ms: f64,
     /// Mean server-side compute (shared forward) over staged responses, ms.
     pub stage_compute_ms: f64,
+    /// Slow-loris faults injected (`--client-faults`); 0 otherwise.
+    pub faults_slowloris: usize,
+    /// Mid-body-disconnect faults injected (`--client-faults`).
+    pub faults_disconnect: usize,
+    /// Faults the server shed cleanly: an orderly HTTP response or
+    /// close for a slow-loris, a 200 `/healthz` on a fresh connection
+    /// right after a disconnect.  Fault requests never count in
+    /// `ok`/`errors` or the latency percentiles.
+    pub faults_shed: usize,
 }
 
 /// Ask the server what it serves and pick the target model.
@@ -193,6 +216,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let err_status = AtomicUsize::new(0);
     let err_transport = AtomicUsize::new(0);
     let batch_rows_max = AtomicUsize::new(0);
+    let faults_slowloris = AtomicUsize::new(0);
+    let faults_disconnect = AtomicUsize::new(0);
+    let faults_shed = AtomicUsize::new(0);
     let staged = AtomicUsize::new(0);
     let queue_us_sum = AtomicU64::new(0);
     let compute_us_sum = AtomicU64::new(0);
@@ -215,7 +241,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         let mut carry: Vec<u8> = Vec::new();
         let mut rng = Rng::new(cfg.seed).split(w as u64);
         let mut local = Vec::with_capacity(per_conn);
-        for _ in 0..per_conn {
+        for i in 0..per_conn {
             let Some(s) = stream.as_mut() else {
                 // reconnect after a transport error so one dropped
                 // connection costs one request, not the whole tail
@@ -239,6 +265,85 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                     http::read_response(s, carry, http::CLIENT_MAX_BODY)
                 }
             };
+            // client-side fault injection: deterministic request-index
+            // residues pick the victims, so two runs against the same
+            // server inject the same hostility in the same order
+            if cfg.client_faults && i % 5 == 1 {
+                // slow-loris: identical bytes to a normal request,
+                // dribbled out in delayed chunks.  Clean shed = an
+                // orderly HTTP response (any status) or an orderly
+                // server-side close — never a hang or a poisoned parse.
+                faults_slowloris.fetch_add(1, Ordering::Relaxed);
+                let r = http::write_request_slowly(
+                    s,
+                    "POST",
+                    target,
+                    body.as_bytes(),
+                    4,
+                    std::time::Duration::from_millis(20),
+                )
+                .and_then(|()| read(s, &mut carry));
+                match r {
+                    Ok(_) if !streaming => {
+                        faults_shed.fetch_add(1, Ordering::Relaxed);
+                        fresh = false;
+                    }
+                    Ok(_) => {
+                        faults_shed.fetch_add(1, Ordering::Relaxed);
+                        stream = connect().ok();
+                        carry.clear();
+                        fresh = true;
+                    }
+                    Err(ref e) if is_stale_conn(e) => {
+                        faults_shed.fetch_add(1, Ordering::Relaxed);
+                        stream = connect().ok();
+                        carry.clear();
+                        fresh = true;
+                    }
+                    Err(_) => {
+                        stream = connect().ok();
+                        carry.clear();
+                        fresh = true;
+                    }
+                }
+                continue;
+            }
+            if cfg.client_faults && i % 5 == 3 {
+                // mid-body disconnect: declare the full Content-Length,
+                // send half the body, drop the socket.  The shed probe
+                // is a 200 /healthz on a *fresh* connection — the
+                // server must bury the carcass without its other lanes
+                // noticing.
+                faults_disconnect.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_request_truncated(
+                    s,
+                    "POST",
+                    target,
+                    body.as_bytes(),
+                    body.len() / 2,
+                );
+                stream = connect().ok();
+                carry.clear();
+                fresh = true;
+                if let Some(s2) = stream.as_mut() {
+                    let probe = http::write_request(s2, "GET", "/healthz", b"")
+                        .and_then(|()| {
+                            http::read_response(s2, &mut carry, http::CLIENT_MAX_BODY)
+                        });
+                    match probe {
+                        Ok(r) if r.status == 200 => {
+                            faults_shed.fetch_add(1, Ordering::Relaxed);
+                            fresh = false;
+                        }
+                        _ => {
+                            stream = connect().ok();
+                            carry.clear();
+                            fresh = true;
+                        }
+                    }
+                }
+                continue;
+            }
             let t = Instant::now();
             let mut result = http::write_request(s, "POST", target, body.as_bytes())
                 .and_then(|()| read(s, &mut carry));
@@ -352,6 +457,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         staged: staged.load(Ordering::Relaxed),
         stage_queue_ms: stage_mean_ms(&queue_us_sum, &staged),
         stage_compute_ms: stage_mean_ms(&compute_us_sum, &staged),
+        faults_slowloris: faults_slowloris.load(Ordering::Relaxed),
+        faults_disconnect: faults_disconnect.load(Ordering::Relaxed),
+        faults_shed: faults_shed.load(Ordering::Relaxed),
     })
 }
 

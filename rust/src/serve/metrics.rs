@@ -9,7 +9,10 @@
 //! loadgen client reports exact client-side percentiles alongside.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::runtime::native::cluster_stats::Summary as ClusterSummary;
 
 /// Latency buckets in seconds (log-ish spacing, +Inf implied).
 const LATENCY_BOUNDS: [f64; 14] = [
@@ -132,10 +135,11 @@ pub enum Endpoint {
     Reload,
     Shutdown,
     DebugTrace,
+    DebugClusters,
     Other,
 }
 
-const ENDPOINTS: [(Endpoint, &str); 9] = [
+const ENDPOINTS: [(Endpoint, &str); 10] = [
     (Endpoint::Predict, "predict"),
     (Endpoint::Generate, "generate"),
     (Endpoint::Models, "models"),
@@ -144,6 +148,7 @@ const ENDPOINTS: [(Endpoint, &str); 9] = [
     (Endpoint::Reload, "reload"),
     (Endpoint::Shutdown, "shutdown"),
     (Endpoint::DebugTrace, "debug_trace"),
+    (Endpoint::DebugClusters, "debug_clusters"),
     (Endpoint::Other, "other"),
 ];
 
@@ -158,7 +163,7 @@ pub const STAGES: [&str; 5] = ["parse", "queue", "batch", "compute", "reply"];
 /// All serve metrics, shared across every worker via `Arc`.
 pub struct Metrics {
     started: Instant,
-    requests: [AtomicU64; 9],
+    requests: [AtomicU64; 10],
     responses_2xx: AtomicU64,
     responses_4xx: AtomicU64,
     responses_5xx: AtomicU64,
@@ -173,6 +178,18 @@ pub struct Metrics {
     worker_panics: AtomicU64,
     /// Tokens streamed out of `/generate` responses.
     generate_tokens: AtomicU64,
+    /// Decode tokens absorbed after every cluster slot filled — the
+    /// Nc·κ zero-attention passthrough dead-end made visible.
+    decode_passthrough: AtomicU64,
+    /// Last observed decode cluster-cache fill (occupied slots / total
+    /// slots across layers), updated as `/generate` sessions finish.
+    decode_cache_fill: AtomicU64,
+    decode_cache_capacity: AtomicU64,
+    /// Per-model cluster-health gauges, harvested from
+    /// `cluster_stats::take_summary()` after batches/streams complete.
+    /// The one non-atomic member: updated per *batch*, not per request,
+    /// so a Mutex off the hot path is fine.
+    cluster_health: Mutex<Vec<(String, ClusterSummary)>>,
     pub batch_rows: Histogram,
     pub latency: Histogram,
     /// Per-/predict pipeline stage wall time, indexed as [`STAGES`].
@@ -199,6 +216,10 @@ impl Metrics {
             deadline_exceeded: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
             generate_tokens: AtomicU64::new(0),
+            decode_passthrough: AtomicU64::new(0),
+            decode_cache_fill: AtomicU64::new(0),
+            decode_cache_capacity: AtomicU64::new(0),
+            cluster_health: Mutex::new(Vec::new()),
             batch_rows: Histogram::new(&BATCH_BOUNDS),
             latency: Histogram::new(&LATENCY_BOUNDS),
             stages: std::array::from_fn(|_| Histogram::new(&LATENCY_BOUNDS)),
@@ -233,6 +254,32 @@ impl Metrics {
 
     pub fn generate_tokens_total(&self) -> u64 {
         self.generate_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Record one finished decode session's cluster-cache health:
+    /// passthrough tokens it produced and its final cache fill level.
+    pub fn observe_decode_session(&self, passthrough: u64, fill: usize, capacity: usize) {
+        self.decode_passthrough.fetch_add(passthrough, Ordering::Relaxed);
+        self.decode_cache_fill.store(fill as u64, Ordering::Relaxed);
+        self.decode_cache_capacity.store(capacity as u64, Ordering::Relaxed);
+    }
+
+    pub fn decode_passthrough_total(&self) -> u64 {
+        self.decode_passthrough.load(Ordering::Relaxed)
+    }
+
+    /// Replace `model`'s cluster-health gauges with a fresh harvest.
+    pub fn update_cluster_health(&self, model: &str, summary: ClusterSummary) {
+        let mut table = self.cluster_health.lock().unwrap_or_else(|p| p.into_inner());
+        match table.iter_mut().find(|(name, _)| name == model) {
+            Some((_, s)) => *s = summary,
+            None => table.push((model.to_string(), summary)),
+        }
+    }
+
+    /// Current per-model cluster-health gauges (for `/debug/clusters`).
+    pub fn cluster_health_snapshot(&self) -> Vec<(String, ClusterSummary)> {
+        self.cluster_health.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     pub fn shed_total(&self) -> u64 {
@@ -333,6 +380,12 @@ impl Metrics {
                 "Tokens streamed from /generate responses.",
                 self.generate_tokens.load(Ordering::Relaxed),
             ),
+            (
+                "cast_decode_passthrough_tokens_total",
+                "Decode tokens absorbed with every cluster-cache slot full \
+                 (zero-attention passthrough).",
+                self.decode_passthrough.load(Ordering::Relaxed),
+            ),
         ] {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
         }
@@ -342,6 +395,60 @@ impl Metrics {
         );
         for (model, state) in breakers {
             out.push_str(&format!("cast_serve_breaker_state{{model=\"{model}\"}} {state}\n"));
+        }
+        for (name, help, v) in [
+            (
+                "cast_decode_cache_fill_slots",
+                "Occupied decode cluster-cache slots when the last /generate \
+                 session finished.",
+                self.decode_cache_fill.load(Ordering::Relaxed),
+            ),
+            (
+                "cast_decode_cache_capacity_slots",
+                "Total decode cluster-cache slots (depth * Nc * kappa) of that \
+                 session.",
+                self.decode_cache_capacity.load(Ordering::Relaxed),
+            ),
+        ] {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        let health = self.cluster_health_snapshot();
+        let cluster_families: [(&str, &str, fn(&ClusterSummary) -> f64); 5] = [
+            (
+                "cast_cluster_affinity_entropy",
+                "Mean normalized affinity entropy across layers (1 = uniform, \
+                 0 = one-hot).",
+                |s| s.entropy,
+            ),
+            (
+                "cast_cluster_balance_cv",
+                "Mean coefficient of variation of cluster sizes (0 = perfectly \
+                 balanced).",
+                |s| s.balance_cv,
+            ),
+            (
+                "cast_cluster_assignment_churn",
+                "Mean fraction of tokens whose cluster assignment changed \
+                 between forwards.",
+                |s| s.churn,
+            ),
+            (
+                "cast_cluster_max_fraction",
+                "Largest fraction of tokens captured by any single cluster.",
+                |s| s.max_fraction,
+            ),
+            (
+                "cast_cluster_collapsed_layers",
+                "Layers latched as collapsed (dominant cluster or degenerate \
+                 entropy).",
+                |s| s.collapsed_layers as f64,
+            ),
+        ];
+        for (name, help, pick) in cluster_families {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            for (model, s) in &health {
+                out.push_str(&format!("{name}{{model=\"{model}\"}} {}\n", pick(s)));
+            }
         }
         self.batch_rows.render(
             "cast_serve_batch_rows",
@@ -383,6 +490,114 @@ impl Metrics {
         }
         out
     }
+}
+
+/// Promtool-style lint of an exposition page.  Checks, per line:
+///
+/// * every sample series is preceded by `# HELP` and `# TYPE` lines for
+///   its family (histogram `_bucket`/`_sum`/`_count` series resolve to
+///   their base name when that base is a declared family);
+/// * metric names match `[a-zA-Z_:][a-zA-Z0-9_:]*` and label names
+///   match `[a-zA-Z_][a-zA-Z0-9_]*` with double-quoted values;
+/// * `# TYPE` kinds are ones Prometheus knows;
+/// * every sample carries exactly one parsable numeric value.
+///
+/// Returns the first violation with its line number, like
+/// `promtool check metrics` would.
+pub fn lint_exposition(page: &str) -> Result<(), String> {
+    use std::collections::HashSet;
+    fn valid_name(s: &str) -> bool {
+        let mut chars = s.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    fn valid_label(s: &str) -> bool {
+        let mut chars = s.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+    }
+    let mut helped: HashSet<&str> = HashSet::new();
+    let mut typed: HashSet<&str> = HashSet::new();
+    for (i, line) in page.lines().enumerate() {
+        let ln = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad metric name in HELP: {line:?}"));
+            }
+            helped.insert(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad metric name in TYPE: {line:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown TYPE kind {kind:?}"));
+            }
+            typed.insert(name);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        let name_end = line.find(|c: char| c == '{' || c == ' ').unwrap_or(line.len());
+        let name = &line[..name_end];
+        if !valid_name(name) {
+            return Err(format!("line {ln}: bad series name {name:?}"));
+        }
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|sfx| name.strip_suffix(sfx))
+            .filter(|base| typed.contains(base))
+            .unwrap_or(name);
+        if !helped.contains(family) {
+            return Err(format!("line {ln}: series {name:?} has no # HELP for {family:?}"));
+        }
+        if !typed.contains(family) {
+            return Err(format!("line {ln}: series {name:?} has no # TYPE for {family:?}"));
+        }
+        let rest = &line[name_end..];
+        let value_part = if let Some(r) = rest.strip_prefix('{') {
+            let close = r
+                .find('}')
+                .ok_or_else(|| format!("line {ln}: unclosed label set: {line:?}"))?;
+            for pair in r[..close].split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {ln}: label without '=': {pair:?}"))?;
+                if !valid_label(k) {
+                    return Err(format!("line {ln}: bad label name {k:?}"));
+                }
+                if v.len() < 2 || !v.starts_with('"') || !v.ends_with('"') {
+                    return Err(format!("line {ln}: label value not quoted: {pair:?}"));
+                }
+            }
+            &r[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        if value.is_empty() || value.split_whitespace().count() != 1 {
+            return Err(format!("line {ln}: expected exactly one value: {line:?}"));
+        }
+        if value.parse::<f64>().is_err() {
+            return Err(format!("line {ln}: unparsable sample value {value:?}"));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -439,6 +654,8 @@ mod tests {
             "cast_serve_request_latency_p99_seconds",
             "cast_serve_queue_depth 3",
             "cast_serve_models 2",
+            "cast_decode_passthrough_tokens_total 0",
+            "cast_decode_cache_fill_slots 0",
         ] {
             assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
         }
@@ -492,5 +709,94 @@ mod tests {
         ] {
             assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
         }
+    }
+
+    #[test]
+    fn cluster_and_decode_gauges_render_per_model() {
+        let m = Metrics::new();
+        m.observe_decode_session(3, 5, 24);
+        m.observe_decode_session(2, 7, 24);
+        assert_eq!(m.decode_passthrough_total(), 5);
+        m.update_cluster_health(
+            "tiny",
+            ClusterSummary {
+                layers: 2,
+                entropy: 0.875,
+                balance_cv: 0.25,
+                churn: 0.125,
+                max_fraction: 0.5,
+                collapsed_layers: 1,
+            },
+        );
+        let page = m.render(0, 1, &[]);
+        for needle in [
+            "cast_decode_passthrough_tokens_total 5",
+            "cast_decode_cache_fill_slots 7",
+            "cast_decode_cache_capacity_slots 24",
+            "cast_cluster_affinity_entropy{model=\"tiny\"} 0.875",
+            "cast_cluster_balance_cv{model=\"tiny\"} 0.25",
+            "cast_cluster_assignment_churn{model=\"tiny\"} 0.125",
+            "cast_cluster_max_fraction{model=\"tiny\"} 0.5",
+            "cast_cluster_collapsed_layers{model=\"tiny\"} 1",
+        ] {
+            assert!(page.contains(needle), "missing {needle:?} in:\n{page}");
+        }
+        // a second harvest replaces the model's row rather than stacking
+        m.update_cluster_health(
+            "tiny",
+            ClusterSummary {
+                layers: 2,
+                entropy: 0.5,
+                balance_cv: 0.25,
+                churn: 0.125,
+                max_fraction: 0.5,
+                collapsed_layers: 1,
+            },
+        );
+        let page = m.render(0, 1, &[]);
+        assert!(page.contains("cast_cluster_affinity_entropy{model=\"tiny\"} 0.5"));
+        assert!(!page.contains("cast_cluster_affinity_entropy{model=\"tiny\"} 0.875"));
+        assert_eq!(m.cluster_health_snapshot().len(), 1);
+    }
+
+    #[test]
+    fn exposition_passes_promtool_style_lint() {
+        let m = Metrics::new();
+        m.observe_request(Endpoint::Predict, 200, 0.004);
+        m.observe_request(Endpoint::DebugClusters, 200, 0.0);
+        m.observe_batch(2);
+        m.observe_stages([0.0001, 0.002, 0.0008, 0.02, 0.0001]);
+        m.observe_decode_session(3, 5, 24);
+        m.update_cluster_health(
+            "tiny",
+            ClusterSummary {
+                layers: 2,
+                entropy: 0.9,
+                balance_cv: 0.1,
+                churn: 0.05,
+                max_fraction: 0.3,
+                collapsed_layers: 0,
+            },
+        );
+        let page = m.render(1, 1, &[("tiny".to_string(), 0)]);
+        if let Err(e) = lint_exposition(&page) {
+            panic!("lint failed: {e}\n{page}");
+        }
+    }
+
+    #[test]
+    fn lint_rejects_malformed_pages() {
+        // series with no HELP/TYPE declaration
+        assert!(lint_exposition("loose_series 1\n").is_err());
+        // TYPE kind Prometheus doesn't know
+        assert!(lint_exposition("# HELP x y\n# TYPE x turbine\nx 1\n").is_err());
+        // label name starting with a digit
+        assert!(lint_exposition("# HELP x y\n# TYPE x counter\nx{9bad=\"v\"} 1\n").is_err());
+        // unquoted label value
+        assert!(lint_exposition("# HELP x y\n# TYPE x gauge\nx{a=unquoted} 1\n").is_err());
+        // non-numeric sample value
+        assert!(lint_exposition("# HELP x y\n# TYPE x counter\nx notanumber\n").is_err());
+        // a well-formed page passes
+        assert!(lint_exposition("# HELP x y\n# TYPE x counter\nx{a=\"b\"} 1\n").is_ok());
     }
 }

@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::data::batcher::pad_rows;
-use crate::runtime::native::decode;
+use crate::runtime::native::{cluster_stats, decode};
 use crate::runtime::{DecodeSession, Executable, HostTensor, Scratch};
 use crate::util::json::Json;
 use crate::util::parallel::Queue;
@@ -95,6 +95,9 @@ pub struct ServeConfig {
     /// Open-state cooldown before the breaker admits a probe
     /// (`--breaker-cooldown-ms`).
     pub breaker_cooldown: Duration,
+    /// How many completed /predict stage traces `/debug/trace` retains
+    /// (`--trace-ring`; clamped to at least 1).
+    pub trace_ring: usize,
 }
 
 impl Default for ServeConfig {
@@ -110,6 +113,7 @@ impl Default for ServeConfig {
             deadline_ms: 60_000,
             breaker_failures: 5,
             breaker_cooldown: Duration::from_secs(5),
+            trace_ring: 256,
         }
     }
 }
@@ -139,9 +143,6 @@ pub fn install_signal_handlers() {
 
 #[cfg(not(unix))]
 pub fn install_signal_handlers() {}
-
-/// How many completed /predict stage traces `/debug/trace` retains.
-const TRACE_RING: usize = 256;
 
 /// One completed /predict request's stage split, kept for `/debug/trace`.
 struct TraceRow {
@@ -178,7 +179,7 @@ pub struct Server {
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     jobs: Arc<Queue<PredictJob>>,
-    /// Ring of the last [`TRACE_RING`] completed /predict stage splits.
+    /// Ring of the last `cfg.trace_ring` completed /predict stage splits.
     recent: Mutex<VecDeque<TraceRow>>,
     trace_seq: AtomicU64,
 }
@@ -191,6 +192,7 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let trace_ring = cfg.trace_ring.max(1);
         Ok(Server {
             listener,
             local_addr,
@@ -199,7 +201,7 @@ impl Server {
             registry,
             metrics: Arc::new(Metrics::new()),
             shutdown: Arc::new(AtomicBool::new(false)),
-            recent: Mutex::new(VecDeque::with_capacity(TRACE_RING)),
+            recent: Mutex::new(VecDeque::with_capacity(trace_ring)),
             trace_seq: AtomicU64::new(0),
         })
     }
@@ -452,9 +454,12 @@ impl Server {
                     .get("n")
                     .and_then(|s| s.trim().parse::<usize>().ok())
                     .unwrap_or(32)
-                    .min(TRACE_RING);
+                    .min(self.cfg.trace_ring.max(1));
                 json_ok(self.debug_trace(n))
             }
+            // live cluster-health telemetry: per-model gauges harvested
+            // from the engine's cluster_stats taps + decode cache state
+            ("GET", "/debug/clusters") => json_ok(self.debug_clusters()),
             ("POST", "/models/reload") => match self.reload(req) {
                 Ok(body) => (200, "application/json", body),
                 Err((status, msg)) => (status, "application/json", error_json(&msg).into_bytes()),
@@ -486,11 +491,42 @@ impl Server {
     /// Record one completed /predict into the `/debug/trace` ring.
     fn push_trace(&self, model: String, rows: usize, status: u16, stages_us: [u64; 5]) {
         let seq = self.trace_seq.fetch_add(1, Ordering::Relaxed);
+        let cap = self.cfg.trace_ring.max(1);
         let mut ring = self.recent.lock().unwrap_or_else(|p| p.into_inner());
-        if ring.len() >= TRACE_RING {
+        while ring.len() >= cap {
             ring.pop_front();
         }
         ring.push_back(TraceRow { seq, model, rows, status, stages_us });
+    }
+
+    /// The `/debug/clusters` payload: whether the stats gate is on, the
+    /// per-model cluster-health summaries last harvested into the
+    /// metrics table, and the decode cluster-cache counters.
+    fn debug_clusters(&self) -> Json {
+        let models: Vec<Json> = self
+            .metrics
+            .cluster_health_snapshot()
+            .into_iter()
+            .map(|(name, s)| {
+                Json::obj(vec![
+                    ("model", Json::str(&name)),
+                    ("layers", Json::num(s.layers as f64)),
+                    ("entropy", Json::num(s.entropy)),
+                    ("balance_cv", Json::num(s.balance_cv)),
+                    ("churn", Json::num(s.churn)),
+                    ("max_fraction", Json::num(s.max_fraction)),
+                    ("collapsed_layers", Json::num(s.collapsed_layers as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("enabled", Json::Bool(cluster_stats::active())),
+            ("models", Json::Arr(models)),
+            (
+                "decode_passthrough_tokens",
+                Json::num(self.metrics.decode_passthrough_total() as f64),
+            ),
+        ])
     }
 
     /// `/predict`: parse → resolve model → enqueue → wait for the demuxed
@@ -853,6 +889,20 @@ impl Server {
         let stages_us = [ready.parse_us, 0, 0, compute_us, 0];
         self.metrics.observe_stages(stages_us.map(|us| us as f64 / 1e6));
         self.metrics.observe_generate_tokens(produced);
+        // harvest cluster-cache health from the finished session: fill
+        // level plus the Nc·κ passthrough counter (ROADMAP dead-end)
+        if let Some(st) = ready.session.as_any().downcast_mut::<decode::DecodeState>() {
+            let (fill, capacity) = st.cache_fill();
+            self.metrics.observe_decode_session(st.passthrough_tokens(), fill, capacity);
+        }
+        // opportunistically drain any cluster stats the engine
+        // accumulated since the last harvest (predict batches running
+        // concurrently feed the same accumulator)
+        if cluster_stats::active() {
+            if let Some(summary) = cluster_stats::take_summary() {
+                self.metrics.update_cluster_health(&ready.entry.name, summary);
+            }
+        }
         self.push_trace(ready.entry.name.clone(), produced, status, stages_us);
         status
     }
@@ -936,6 +986,7 @@ fn endpoint_of(req: &Request) -> Endpoint {
         "/healthz" | "/readyz" => Endpoint::Healthz,
         "/admin/shutdown" => Endpoint::Shutdown,
         "/debug/trace" => Endpoint::DebugTrace,
+        "/debug/clusters" => Endpoint::DebugClusters,
         _ => Endpoint::Other,
     }
 }

@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 use crate::data::batcher::Batcher;
 use crate::data::{self, Batch, TaskGen};
 use crate::model::{checkpoint, ModelState};
+use crate::runtime::native::cluster_stats;
 use crate::runtime::{Engine, Executable, HostTensor, Manifest};
 use crate::util::json::Json;
 use crate::util::{trace, Timer};
@@ -158,6 +159,52 @@ impl MetricsSink {
             ("kind", Json::str("op_shares")),
             ("step", Json::num(step as f64)),
             ("ops", Json::Arr(ops)),
+        ]));
+    }
+
+    /// Per-layer cluster-health record (CAST_CLUSTER_STATS on): drains
+    /// the accumulator so each record covers one window of
+    /// `metrics_every` steps, and logs a collapse early warning the
+    /// first window a layer latches it.
+    fn clusters_line(&mut self, step: usize) {
+        let snaps = cluster_stats::snapshot();
+        cluster_stats::clear();
+        if snaps.is_empty() {
+            return;
+        }
+        let collapsed: Vec<i32> =
+            snaps.iter().filter(|s| s.collapsed).map(|s| s.layer).collect();
+        if !collapsed.is_empty() {
+            crate::info!(
+                "cluster-collapse warning at step {step}: layer(s) {collapsed:?} dominated by \
+                 one cluster (max_fraction >= {} or entropy <= {})",
+                cluster_stats::COLLAPSE_MAX_FRACTION,
+                cluster_stats::COLLAPSE_MIN_ENTROPY
+            );
+        }
+        if self.out.is_none() {
+            return; // the warning above still fires without a stream
+        }
+        let layers: Vec<Json> = snaps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("layer", Json::num(s.layer as f64)),
+                    ("n_c", Json::num(s.n_c as f64)),
+                    ("forwards", Json::num(s.forwards as f64)),
+                    ("entropy", Json::num(s.entropy)),
+                    ("balance_cv", Json::num(s.balance_cv)),
+                    ("max_fraction", Json::num(s.max_fraction)),
+                    ("churn", Json::num(s.churn)),
+                    ("collapsed", Json::Bool(s.collapsed)),
+                ])
+            })
+            .collect();
+        self.write(&Json::obj(vec![
+            ("kind", Json::str("cluster_health")),
+            ("step", Json::num(step as f64)),
+            ("collapsed_layers", Json::num(collapsed.len() as f64)),
+            ("layers", Json::Arr(layers)),
         ]));
     }
 }
@@ -375,6 +422,12 @@ impl Trainer {
                 && (step + 1) % self.cfg.metrics_every == 0
             {
                 metrics.shares_line(step);
+            }
+            if cluster_stats::active()
+                && self.cfg.metrics_every > 0
+                && (step + 1) % self.cfg.metrics_every == 0
+            {
+                metrics.clusters_line(step);
             }
             if self.cfg.ckpt_every > 0 && (step + 1) % self.cfg.ckpt_every == 0 {
                 self.save_checkpoint_logged();

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod fault;
 pub mod json;
+pub mod memtrack;
 pub mod parallel;
 pub mod pgm;
 pub mod prop;

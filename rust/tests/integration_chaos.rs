@@ -195,6 +195,41 @@ fn injected_conn_worker_panics_drop_only_their_connection() {
     h.stop();
 }
 
+#[test]
+fn client_faults_are_shed_cleanly_while_honest_requests_succeed() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let mut h = Harness::tiny();
+
+    // `--client-faults`: residues 1 and 3 (mod 5) of each worker's 10
+    // requests turn hostile — 2 slow-loris + 2 mid-body disconnects per
+    // connection
+    let cfg = cast::serve::LoadgenConfig {
+        addr: h.addr.to_string(),
+        conns: 2,
+        requests: 10,
+        client_faults: true,
+        ..Default::default()
+    };
+    let report = cast::serve::loadgen::run(&cfg).unwrap();
+
+    assert_eq!(report.faults_slowloris, 4, "{report:?}");
+    assert_eq!(report.faults_disconnect, 4, "{report:?}");
+    assert_eq!(
+        report.faults_shed,
+        report.faults_slowloris + report.faults_disconnect,
+        "every fault must be shed cleanly: {report:?}"
+    );
+    // honest requests ride through untouched by their hostile neighbors
+    assert_eq!(report.ok, 2 * 10 - 8, "{report:?}");
+    assert_eq!(report.errors, 0, "{report:?}");
+
+    // and the server is still fully healthy afterwards
+    let resp = raw_request(h.addr, "GET", "/healthz", &[], b"").unwrap();
+    assert_eq!(resp.status, 200);
+    h.stop();
+}
+
 // ---------------------------------------------------------------------------
 // deadline budgets and the circuit breaker
 // ---------------------------------------------------------------------------

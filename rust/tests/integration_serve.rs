@@ -522,6 +522,71 @@ fn generate_rejections_stay_buffered_json() {
 }
 
 #[test]
+fn trace_ring_flag_caps_debug_trace_and_debug_clusters_reports_health() {
+    use cast::runtime::native::cluster_stats;
+    let _g = cluster_stats::test_guard();
+    cluster_stats::set_enabled(true);
+    cluster_stats::clear();
+    let mut h = Harness::start(
+        ServeConfig { addr: "127.0.0.1:0".to_string(), trace_ring: 3, ..ServeConfig::default() },
+        &["cast_topk"],
+    );
+    let n = tiny_meta("cast_topk").seq_len;
+    for i in 0..6u64 {
+        let (status, body) =
+            request(h.addr, "POST", "/predict", predict_body(&tokens_for(i, n)).as_bytes());
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    }
+
+    // --trace-ring 3: the replay ring keeps only the newest 3 requests
+    let (status, body) = request(h.addr, "GET", "/debug/trace?n=100", b"");
+    assert_eq!(status, 200);
+    let rows = json_of(&body).get("requests").and_then(Json::as_arr).unwrap().len();
+    assert_eq!(rows, 3, "--trace-ring must cap the replay buffer");
+
+    // /debug/clusters mirrors the health the batches harvested.  The
+    // accumulator is process-global and other tests in this binary may
+    // drain it concurrently, so drive more traffic until a harvest
+    // lands on *this* server instead of asserting on the first try.
+    let mut health = None;
+    for round in 0..5u64 {
+        let (status, body) = request(h.addr, "GET", "/debug/clusters", b"");
+        assert_eq!(status, 200);
+        let json = json_of(&body);
+        assert_eq!(json.get("enabled"), Some(&Json::Bool(true)));
+        assert!(json.get("decode_passthrough_tokens").is_some(), "{json:?}");
+        if json.get("models").and_then(Json::as_arr).is_some_and(|m| !m.is_empty()) {
+            health = Some(json);
+            break;
+        }
+        for i in 0..3u64 {
+            let tokens = tokens_for(100 + round * 10 + i, n);
+            let (status, _) =
+                request(h.addr, "POST", "/predict", predict_body(&tokens).as_bytes());
+            assert_eq!(status, 200);
+        }
+    }
+    let json = health.expect("cluster health must reach /debug/clusters");
+    let models = json.get("models").and_then(Json::as_arr).unwrap();
+    let m = &models[0];
+    assert!(m.get("layers").and_then(Json::as_usize).unwrap() >= 1, "{json:?}");
+    let entropy = m.get("entropy").and_then(Json::as_f64).unwrap();
+    assert!((0.0..=1.0).contains(&entropy), "normalized entropy: {json:?}");
+    assert!(m.get("collapsed_layers").and_then(Json::as_f64).is_some(), "{json:?}");
+
+    // the same health rides /metrics as per-model gauges
+    let (status, body) = request(h.addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let page = String::from_utf8(body).unwrap();
+    assert!(page.contains("cast_cluster_affinity_entropy{model="), "{page}");
+    assert!(page.contains("cast_decode_passthrough_tokens_total"), "{page}");
+
+    cluster_stats::set_enabled(false);
+    cluster_stats::clear();
+    h.stop();
+}
+
+#[test]
 fn generate_rejects_models_without_a_decode_entry() {
     // non-causal cast_topk: predict works, /generate must 400
     let mut h = Harness::tiny(2, Duration::from_millis(1));
